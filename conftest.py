@@ -1,0 +1,7 @@
+"""Allow `pytest python/tests/` from the repo root: the python build-path
+package (`compile`) lives under python/."""
+
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).parent / "python"))

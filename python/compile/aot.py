@@ -1,0 +1,182 @@
+"""AOT compile path: train on SynthDOTA, lower Pallas-kernel inference
+graphs, and emit HLO **text** artifacts for the rust runtime.
+
+HLO text — NOT ``lowered.compile()`` or serialized HloModuleProto — is the
+interchange format: jax >= 0.5 emits protos with 64-bit instruction ids
+that the xla crate's xla_extension 0.5.1 rejects (``proto.id() <=
+INT_MAX``); the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/gen_hlo.py).
+
+Emitted into ``artifacts/``:
+
+    tinydet_b{B}.hlo.txt      onboard detector  (B, 64, 64, 3) -> (B, 64, 13)
+    tinydet_v2_b{B}.hlo.txt   incrementally-retrained onboard detector
+    heavydet_b{B}.hlo.txt     ground detector   (same interface)
+    cloudscore_b{B}.hlo.txt   redundancy filter (B, 64, 64, 3) -> (B, 3)
+    weights_{model}.npz       raw trained weights (federated / incremental)
+    manifest.json             shapes, constants, dataset spec, training log
+
+Trained weights are baked into the HLO as constants, so the rust side
+feeds only image batches.  Python runs ONCE; never on the request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data as sdata
+from . import model as smodel
+from . import train as strain
+from .kernels import cloudscore as kcloud
+
+BATCH_SIZES = (1, 8)
+
+# Default training budgets.  tiny gets deliberately fewer steps than heavy:
+# the paper's onboard model is "lightweight, low-precision" — the accuracy
+# gap (Fig 7) is the phenomenon under study.  tiny_v2 is the same arch
+# trained longer: the IncrementalLearning artifact that the Sedna layer
+# hot-swaps onto the satellite (paper §3.4).
+# Calibrated so the onboard model is usable-but-clearly-weaker (paper:
+# YOLOv3-tiny vs YOLOv3 ⇒ collaborative inference improves mAP ≈50%).
+STEPS = {"tiny": 1000, "tiny_v2": 1800, "heavy": 900}
+FAST_STEPS = {"tiny": 12, "tiny_v2": 20, "heavy": 16}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants: baked weights must survive the text round-trip
+    # (default printing elides big literals as "{...}", which the rust-side
+    # HLO text parser cannot reconstruct).
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def export_detector(params, arch_name: str, batch: int) -> str:
+    """Lower the Pallas-kernel inference graph with baked weights."""
+    const_params = [(jnp.asarray(w), jnp.asarray(b)) for w, b in params]
+
+    def infer(x):
+        return (smodel.forward(const_params, x, arch_name, impl="pallas",
+                               interpret=True),)
+
+    spec = jax.ShapeDtypeStruct((batch, smodel.TILE, smodel.TILE, 3), jnp.float32)
+    return to_hlo_text(jax.jit(infer).lower(spec))
+
+
+def export_cloudscore(batch: int) -> str:
+    def score(x):
+        return (kcloud.cloud_score(x, interpret=True),)
+
+    spec = jax.ShapeDtypeStruct((batch, smodel.TILE, smodel.TILE, 3), jnp.float32)
+    return to_hlo_text(jax.jit(score).lower(spec))
+
+
+def save_weights(path: pathlib.Path, params) -> str:
+    arrs = {}
+    for i, (w, b) in enumerate(params):
+        arrs[f"w{i}"] = np.asarray(w)
+        arrs[f"b{i}"] = np.asarray(b)
+    np.savez(path, **arrs)
+    h = hashlib.sha256(path.read_bytes()).hexdigest()[:16]
+    return h
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--fast", action="store_true",
+                    help="tiny training budgets (CI / pytest smoke)")
+    ap.add_argument("--seed", type=int, default=7)
+    args = ap.parse_args()
+
+    out = pathlib.Path(args.out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    steps = FAST_STEPS if args.fast else STEPS
+
+    manifest = {
+        "tile": smodel.TILE,
+        "grid": smodel.GRID,
+        "stride": smodel.STRIDE,
+        "anchor": list(smodel.ANCHOR),
+        "classes": smodel.CLASSES,
+        "class_names": sdata.CLASS_NAMES,
+        "head_d": smodel.HEAD_D,
+        "batch_sizes": list(BATCH_SIZES),
+        "white_thresh": kcloud.WHITE_THRESH,
+        "redundant_white_frac": sdata.REDUNDANT_WHITE_FRAC,
+        "dataset_versions": sdata.VERSIONS,
+        "fast": args.fast,
+        "models": {},
+    }
+
+    # --- train ---------------------------------------------------------
+    trained = {}
+    for name, arch in (("tiny", "tiny"), ("tiny_v2", "tiny"), ("heavy", "heavy")):
+        # tiny_v2 continues from a different seed stream but is the same
+        # arch trained ~3x longer (the incremental-learning update).
+        params, final_loss, history = strain.train(
+            arch, steps[name], seed=args.seed + (1 if name == "tiny_v2" else 0)
+        )
+        trained[name] = (params, arch)
+        whash = save_weights(out / f"weights_{name}.npz", params)
+        manifest["models"][name] = {
+            "arch": arch,
+            "steps": steps[name],
+            "final_loss_ema": final_loss,
+            "param_count": smodel.param_count(params),
+            "weights_sha256_16": whash,
+            "loss_history": history,
+            "files": {},
+        }
+
+    # --- lower + emit ----------------------------------------------------
+    file_map = {"tiny": "tinydet", "tiny_v2": "tinydet_v2", "heavy": "heavydet"}
+    for name, (params, arch) in trained.items():
+        for b in BATCH_SIZES:
+            text = export_detector(params, arch, b)
+            fname = f"{file_map[name]}_b{b}.hlo.txt"
+            (out / fname).write_text(text)
+            manifest["models"][name]["files"][str(b)] = fname
+            print(f"wrote {fname} ({len(text)} chars)")
+
+    manifest["cloudscore_files"] = {}
+    for b in BATCH_SIZES:
+        text = export_cloudscore(b)
+        fname = f"cloudscore_b{b}.hlo.txt"
+        (out / fname).write_text(text)
+        manifest["cloudscore_files"][str(b)] = fname
+        print(f"wrote {fname} ({len(text)} chars)")
+
+    # --- numeric parity fixtures for the rust integration tests ---------
+    # A deterministic input batch + the python-side decoded outputs, dumped
+    # as raw little-endian f32.  rust/tests/runtime_parity.rs re-runs the
+    # HLO artifacts on PJRT and asserts allclose against these.
+    rng = np.random.default_rng(2024)
+    fix = rng.uniform(0, 1, size=(1, smodel.TILE, smodel.TILE, 3)).astype(np.float32)
+    (out / "fixture_input_b1.bin").write_bytes(fix.tobytes())
+    for name, (params, arch) in trained.items():
+        got = np.asarray(
+            smodel.forward([(jnp.asarray(w), jnp.asarray(b)) for w, b in params],
+                           jnp.asarray(fix), arch, impl="pallas")
+        ).astype(np.float32)
+        (out / f"fixture_{file_map[name]}_b1_out.bin").write_bytes(got.tobytes())
+    cs = np.asarray(kcloud.cloud_score(jnp.asarray(fix))).astype(np.float32)
+    (out / "fixture_cloudscore_b1_out.bin").write_bytes(cs.tobytes())
+
+    (out / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    print(f"wrote manifest.json; models: "
+          f"{ {k: v['param_count'] for k, v in manifest['models'].items()} }")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""L1 Pallas kernel: per-tile cloud-cover statistics.
+
+The onboard redundancy filter (paper §II: 80-90% of raw data over SW China
+is invalid due to cloud cover; Fig 6) scores each tile before any detector
+runs.  One grid step reduces one (T, T, 3) tile to three scalars:
+
+    lum        mean luminance (r+g+b)/3
+    var        luminance variance
+    white_frac fraction of pixels whose min-channel exceeds WHITE_THRESH
+               (clouds are bright AND desaturated — high min-channel)
+
+The rust coordinator thresholds ``white_frac`` to drop redundant tiles.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+WHITE_THRESH = 0.72
+N_STATS = 3
+
+
+def _cloudscore_kernel(x_ref, o_ref):
+    x = x_ref[...]  # (1, T, T, 3)
+    lum = jnp.mean(x, axis=-1)  # (1, T, T)
+    mean_lum = jnp.mean(lum)
+    var_lum = jnp.mean((lum - mean_lum) ** 2)
+    white = jnp.mean((jnp.min(x, axis=-1) > WHITE_THRESH).astype(jnp.float32))
+    o_ref[...] = jnp.stack([mean_lum, var_lum, white]).reshape(1, N_STATS)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def cloud_score(x: jax.Array, *, interpret: bool = True) -> jax.Array:
+    """(B, T, T, 3) f32 in [0,1] -> (B, 3) [mean_lum, var_lum, white_frac]."""
+    b, t, t2, c = x.shape
+    assert t == t2 and c == 3, f"expected (B,T,T,3), got {x.shape}"
+    return pl.pallas_call(
+        _cloudscore_kernel,
+        grid=(b,),
+        in_specs=[pl.BlockSpec((1, t, t, 3), lambda i: (i, 0, 0, 0))],
+        out_specs=pl.BlockSpec((1, N_STATS), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, N_STATS), jnp.float32),
+        interpret=interpret,
+    )(x)

@@ -1,0 +1,87 @@
+"""L1 Pallas kernel: YOLO-style detection-head decode.
+
+Transforms raw head activations t[..., 5+C] into image-space boxes +
+calibrated scores, fused in one elementwise pass:
+
+    cx, cy = (sigmoid(t[:, 0:2]) + cell_offset) * stride
+    w,  h  = exp(clip(t[:, 2:4])) * anchor
+    obj    = sigmoid(t[:, 4])
+    cls    = sigmoid(t[:, 5:])
+
+Rows are the flattened (B, G, G) cells; ``offsets`` carries the (gx, gy)
+cell coordinates so the kernel itself is position-independent and tiles
+cleanly over rows.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_R = 64
+WH_CLIP = 6.0  # exp clamp: keeps decoded boxes finite for wild logits
+
+
+def _decode_kernel(t_ref, off_ref, o_ref, *, stride: float, anchor_w: float, anchor_h: float):
+    t = t_ref[...]
+    off = off_ref[...]
+    xy = (jax.nn.sigmoid(t[:, 0:2]) + off) * stride
+    wh_log = jnp.clip(t[:, 2:4], -WH_CLIP, WH_CLIP)
+    # anchor_w/h are python-float compile-time constants (a captured jnp
+    # array would trip pallas's no-captured-consts rule).
+    w = jnp.exp(wh_log[:, 0:1]) * anchor_w
+    h = jnp.exp(wh_log[:, 1:2]) * anchor_h
+    rest = jax.nn.sigmoid(t[:, 4:])
+    o_ref[...] = jnp.concatenate([xy, w, h, rest], axis=-1)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("stride", "anchor_w", "anchor_h", "block_r", "interpret")
+)
+def decode_head(
+    t: jax.Array,
+    offsets: jax.Array,
+    *,
+    stride: float,
+    anchor_w: float,
+    anchor_h: float,
+    block_r: int = DEFAULT_BLOCK_R,
+    interpret: bool = True,
+) -> jax.Array:
+    """Decode (R, 5+C) raw head rows with (R, 2) cell offsets -> (R, 5+C)."""
+    r, d = t.shape
+    assert offsets.shape == (r, 2), f"offsets shape {offsets.shape} != ({r}, 2)"
+    br = min(block_r, max(8, r))
+    r_pad = (-r) % br
+    if r_pad:
+        t = jnp.pad(t, ((0, r_pad), (0, 0)))
+        offsets = jnp.pad(offsets, ((0, r_pad), (0, 0)))
+    grid = ((r + r_pad) // br,)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _decode_kernel, stride=stride, anchor_w=anchor_w, anchor_h=anchor_h
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((br, 2), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r + r_pad, d), jnp.float32),
+        interpret=interpret,
+    )(t, offsets)
+    return out[:r] if r_pad else out
+
+
+def make_offsets(grid_size: int) -> jnp.ndarray:
+    """(G*G, 2) array of (gx, gy) cell coordinates, row-major over (gy, gx)."""
+    gy, gx = jnp.meshgrid(
+        jnp.arange(grid_size, dtype=jnp.float32),
+        jnp.arange(grid_size, dtype=jnp.float32),
+        indexing="ij",
+    )
+    return jnp.stack([gx.reshape(-1), gy.reshape(-1)], axis=-1)

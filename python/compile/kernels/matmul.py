@@ -1,0 +1,103 @@
+"""L1 Pallas kernel: tiled matmul with fused bias + LeakyReLU epilogue.
+
+This is the hot-spot of both detectors: every conv layer is lowered to
+im2col + this kernel (M = B*H'*W' activation rows, K = kh*kw*Cin patch
+width, N = Cout).  BlockSpec tiles M into MXU-height panels while keeping
+the K-panel and the full weight matrix resident — on a TPU this maps the
+(M_blk x K) x (K x N) product onto the 128x128 systolic array; here it runs
+under ``interpret=True`` because the CPU PJRT plugin cannot execute Mosaic
+custom-calls (see DESIGN.md §Hardware-Adaptation).
+
+The epilogue (bias add + LeakyReLU) is fused so activations never
+round-trip to HBM between the matmul and the nonlinearity.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default MXU-shaped row-panel height.  K and N stay whole per block: for
+# our detector shapes (K <= 864, N <= 96) one weight panel fits comfortably
+# in a VMEM-scale budget (see vmem_footprint()).
+DEFAULT_BLOCK_M = 128
+LEAKY_SLOPE = 0.1
+
+
+def _fused_matmul_kernel(x_ref, w_ref, b_ref, o_ref, *, activation: str):
+    """One grid step: (block_m, K) @ (K, N) + b, then optional LeakyReLU."""
+    acc = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    acc = acc + b_ref[...]
+    if activation == "leaky_relu":
+        acc = jnp.where(acc >= 0.0, acc, LEAKY_SLOPE * acc)
+    elif activation != "none":
+        raise ValueError(f"unknown activation {activation!r}")
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("activation", "block_m", "interpret"))
+def fused_matmul(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    *,
+    activation: str = "leaky_relu",
+    block_m: int = DEFAULT_BLOCK_M,
+    interpret: bool = True,
+) -> jax.Array:
+    """Compute ``act(x @ w + b)`` with a Pallas row-tiled kernel.
+
+    x: (M, K) f32; w: (K, N) f32; b: (N,) f32 -> (M, N) f32.
+    M is padded up to a multiple of ``block_m``; the pad rows are sliced off
+    before returning, so callers see exact shapes.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    assert b.shape == (n,), f"bias shape {b.shape} != ({n},)"
+
+    bm = min(block_m, max(8, m))
+    m_pad = (-m) % bm
+    if m_pad:
+        x = jnp.pad(x, ((0, m_pad), (0, 0)))
+    grid = ((m + m_pad) // bm,)
+
+    out = pl.pallas_call(
+        functools.partial(_fused_matmul_kernel, activation=activation),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i: (i, 0)),
+            pl.BlockSpec((k, n), lambda i: (0, 0)),
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m + m_pad, n), jnp.float32),
+        interpret=interpret,
+    )(x, w, b.reshape(1, n))
+    return out[:m] if m_pad else out
+
+
+def vmem_footprint(block_m: int, k: int, n: int, bytes_per_el: int = 4) -> int:
+    """Bytes resident per grid step: x panel + weight panel + bias + out tile.
+
+    Used by the perf pass (EXPERIMENTS.md §Perf) to check the BlockSpec fits
+    a 16 MiB TPU VMEM budget — interpret-mode wallclock is NOT a TPU proxy,
+    so we optimise structure via this estimate instead.
+    """
+    return bytes_per_el * (block_m * k + k * n + n + block_m * n)
+
+
+def mxu_utilization_estimate(m: int, k: int, n: int, block_m: int = DEFAULT_BLOCK_M) -> float:
+    """Fraction of MXU lanes doing useful work for this problem shape.
+
+    The 128x128 MXU multiplies 128-row by 128-col panels; ragged edges in
+    M (pad rows) and small K/N waste lanes.  This is the structural
+    efficiency metric we optimise block shapes against.
+    """
+    m_eff = m / (((m + block_m - 1) // block_m) * block_m)
+    k_eff = min(k, 128) / 128 if k < 128 else 1.0
+    n_eff = min(n, 128) / 128 if n < 128 else 1.0
+    return m_eff * k_eff * n_eff

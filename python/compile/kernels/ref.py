@@ -1,0 +1,44 @@
+"""Pure-jnp correctness oracles for every Pallas kernel.
+
+pytest asserts kernel-vs-ref allclose (the CORE correctness signal), and
+``train.py`` uses these for the build-time training loop — the math is
+identical to the kernels, so trained weights transfer exactly to the
+Pallas inference path that gets AOT-exported.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .cloudscore import WHITE_THRESH
+from .decode import WH_CLIP
+from .matmul import LEAKY_SLOPE
+
+
+def ref_fused_matmul(x, w, b, *, activation: str = "leaky_relu"):
+    acc = jnp.dot(x, w, preferred_element_type=jnp.float32) + b.reshape(1, -1)
+    if activation == "leaky_relu":
+        acc = jnp.where(acc >= 0.0, acc, LEAKY_SLOPE * acc)
+    elif activation != "none":
+        raise ValueError(f"unknown activation {activation!r}")
+    return acc
+
+
+def ref_decode_head(t, offsets, *, stride: float, anchor_w: float, anchor_h: float):
+    xy = (jax.nn.sigmoid(t[:, 0:2]) + offsets) * stride
+    wh = jnp.exp(jnp.clip(t[:, 2:4], -WH_CLIP, WH_CLIP)) * jnp.array(
+        [anchor_w, anchor_h], dtype=jnp.float32
+    )
+    rest = jax.nn.sigmoid(t[:, 4:])
+    return jnp.concatenate([xy, wh, rest], axis=-1)
+
+
+def ref_cloud_score(x):
+    lum = jnp.mean(x, axis=-1)
+    mean_lum = jnp.mean(lum, axis=(1, 2))
+    var_lum = jnp.mean((lum - mean_lum[:, None, None]) ** 2, axis=(1, 2))
+    white = jnp.mean(
+        (jnp.min(x, axis=-1) > WHITE_THRESH).astype(jnp.float32), axis=(1, 2)
+    )
+    return jnp.stack([mean_lum, var_lum, white], axis=-1)

@@ -1,0 +1,129 @@
+"""L2 JAX models: TinyDet (onboard) and HeavyDet (ground).
+
+The paper deploys YOLOv3-tiny on the satellite and YOLOv3 on the ground
+(§IV).  We reproduce the *architectural relationship* — a lightweight
+low-precision detector vs a large high-precision one — with single-scale
+YOLO-style grid detectors sized for CPU-interpret Pallas:
+
+    TinyDet : 3 stride-2 3x3 convs  (12, 24, 48 ch)  + 1x1 head
+    HeavyDet: 6 3x3 convs, alternating stride 2/1 (24..96 ch) + 1x1 head
+
+Every conv is im2col + the L1 Pallas ``fused_matmul`` kernel (bias +
+LeakyReLU fused); the head is decoded by the L1 ``decode_head`` kernel.
+``impl="ref"`` swaps in the pure-jnp oracles — identical math — which is
+what the build-time training loop differentiates through.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import decode as kdecode
+from .kernels import matmul as kmatmul
+from .kernels import ref as kref
+
+TILE = 64
+CLASSES = 8
+GRID = 8
+STRIDE = float(TILE // GRID)  # 8 px per cell
+ANCHOR = (16.0, 16.0)
+HEAD_D = 5 + CLASSES  # [tx, ty, tw, th, obj, cls0..cls7]
+
+# (cin, cout, stride) per 3x3 conv layer.
+TINY_ARCH = [(3, 12, 2), (12, 24, 2), (24, 48, 2)]
+HEAVY_ARCH = [(3, 24, 2), (24, 24, 1), (24, 48, 2), (48, 48, 1), (48, 96, 2), (96, 96, 1)]
+ARCHS = {"tiny": TINY_ARCH, "heavy": HEAVY_ARCH}
+
+
+def init_params(key: jax.Array, arch_name: str):
+    """He-normal init. Conv weights are stored pre-flattened as (9*cin, cout)
+    in (dy, dx, cin) patch order — exactly the im2col layout — plus the
+    (feat, HEAD_D) 1x1 head."""
+    arch = ARCHS[arch_name]
+    params = []
+    for cin, cout, _stride in arch:
+        key, k1 = jax.random.split(key)
+        fan_in = 9 * cin
+        w = jax.random.normal(k1, (fan_in, cout), jnp.float32) * jnp.sqrt(2.0 / fan_in)
+        params.append((w, jnp.zeros((cout,), jnp.float32)))
+    feat = arch[-1][1]
+    key, k1 = jax.random.split(key)
+    wh = jax.random.normal(k1, (feat, HEAD_D), jnp.float32) * jnp.sqrt(1.0 / feat)
+    # Bias objectness negative so early training isn't drowned in false
+    # positives (standard focal/YOLO init trick).
+    bh = jnp.zeros((HEAD_D,), jnp.float32).at[4].set(-3.0)
+    params.append((wh, bh))
+    return params
+
+
+def im2col(x: jax.Array, stride: int):
+    """(B, H, W, C) -> ((B*Ho*Wo, 9C), (B, Ho, Wo)) for a SAME-padded 3x3.
+
+    Patch features are ordered (dy, dx, cin) to match ``init_params``.
+    """
+    b, h, w, c = x.shape
+    ho, wo = -(-h // stride), -(-w // stride)
+    xp = jnp.pad(x, ((0, 0), (1, 1), (1, 1), (0, 0)))
+    cols = []
+    for dy in range(3):
+        for dx in range(3):
+            cols.append(
+                xp[:, dy : dy + (ho - 1) * stride + 1 : stride,
+                   dx : dx + (wo - 1) * stride + 1 : stride, :]
+            )
+    patches = jnp.concatenate(cols, axis=-1)  # (B, Ho, Wo, 9C)
+    return patches.reshape(b * ho * wo, 9 * c), (b, ho, wo)
+
+
+def _mm(impl: str, interpret: bool):
+    if impl == "pallas":
+        def mm(x, w, b, activation="leaky_relu"):
+            return kmatmul.fused_matmul(x, w, b, activation=activation, interpret=interpret)
+        return mm
+    if impl == "ref":
+        return kref.ref_fused_matmul
+    raise ValueError(f"unknown impl {impl!r}")
+
+
+def forward_raw(params, x: jax.Array, arch_name: str, *, impl: str = "ref",
+                interpret: bool = True) -> jax.Array:
+    """Backbone + head, NO decode: (B, T, T, 3) -> raw (B*G*G, HEAD_D) rows.
+
+    This is what the training loss consumes (targets live in t-space).
+    """
+    arch = ARCHS[arch_name]
+    mm = _mm(impl, interpret)
+    for (w, b), (_cin, cout, stride) in zip(params[:-1], arch):
+        cols, (bb, ho, wo) = im2col(x, stride)
+        y = mm(cols, w, b)
+        x = y.reshape(bb, ho, wo, cout)
+    bsz, g, g2, feat = x.shape
+    assert g == GRID and g2 == GRID, f"head grid {g}x{g2} != {GRID}"
+    wh, bh = params[-1]
+    return mm(x.reshape(bsz * g * g, feat), wh, bh, activation="none")
+
+
+def forward(params, x: jax.Array, arch_name: str, *, impl: str = "ref",
+            interpret: bool = True) -> jax.Array:
+    """Full inference: (B, T, T, 3) -> decoded (B, G*G, HEAD_D).
+
+    Row layout: [cx, cy, w, h, obj, p_cls0..p_cls7] in tile pixel coords.
+    """
+    bsz = x.shape[0]
+    t = forward_raw(params, x, arch_name, impl=impl, interpret=interpret)
+    offsets = jnp.tile(kdecode.make_offsets(GRID), (bsz, 1))
+    if impl == "pallas":
+        d = kdecode.decode_head(
+            t, offsets, stride=STRIDE, anchor_w=ANCHOR[0], anchor_h=ANCHOR[1],
+            interpret=interpret,
+        )
+    else:
+        d = kref.ref_decode_head(
+            t, offsets, stride=STRIDE, anchor_w=ANCHOR[0], anchor_h=ANCHOR[1]
+        )
+    return d.reshape(bsz, GRID * GRID, HEAD_D)
+
+
+def param_count(params) -> int:
+    return sum(int(w.size + b.size) for w, b in params)

@@ -1,0 +1,60 @@
+"""L1 perf-pass analysis: BlockSpec sweep for the fused matmul kernel.
+
+interpret=True wallclock is CPU-numpy time, NOT a TPU proxy — so the L1
+optimization target is structural: per-step VMEM residency must fit the
+16 MiB budget and MXU lane utilization should be maximal for the
+detectors' actual conv shapes (DESIGN.md §Hardware-Adaptation).
+
+    cd python && python -m compile.perf_sweep
+
+Prints, per conv layer of both detectors and per candidate block_m, the
+VMEM footprint and MXU utilization estimate, and the chosen block.  The
+result (block_m=128 for every layer) is recorded in EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+from . import model as smodel
+from .kernels import matmul as km
+
+VMEM_BUDGET = 16 * 1024 * 1024
+CANDIDATES = (32, 64, 128, 256, 512)
+
+
+def layer_shapes(arch_name: str, batch: int):
+    """Yield (label, M, K, N) for each im2col matmul in the forward pass."""
+    h = smodel.TILE
+    for i, (cin, cout, stride) in enumerate(smodel.ARCHS[arch_name]):
+        ho = -(-h // stride)
+        yield f"{arch_name}/conv{i}", batch * ho * ho, 9 * cin, cout
+        h = ho
+    feat = smodel.ARCHS[arch_name][-1][1]
+    yield f"{arch_name}/head", batch * smodel.GRID * smodel.GRID, feat, smodel.HEAD_D
+
+
+def main() -> None:
+    print(f"{'layer':<14} {'M':>6} {'K':>5} {'N':>4} | " +
+          " | ".join(f"bm={c:<4}" for c in CANDIDATES) + " | chosen")
+    for arch in ("tiny", "heavy"):
+        for label, m, k, n in layer_shapes(arch, batch=8):
+            cells = []
+            best, best_score = None, -1.0
+            for bm in CANDIDATES:
+                vmem = km.vmem_footprint(bm, k, n)
+                util = km.mxu_utilization_estimate(m, k, n, bm)
+                fits = vmem <= VMEM_BUDGET
+                # prefer max utilization among fitting blocks; break ties
+                # toward larger blocks (fewer grid steps = less loop
+                # overhead in the lowered while-loop)
+                score = util + (bm / 1e6) if fits else -1.0
+                if score > best_score:
+                    best, best_score = bm, score
+                cells.append(f"{util:4.2f}{'*' if not fits else ' '}")
+            print(f"{label:<14} {m:>6} {k:>5} {n:>4} | " +
+                  " | ".join(f"{c:<7}" for c in cells) + f" | {best}")
+    print("(* = exceeds 16 MiB VMEM budget; util = MXU lane utilization estimate)")
+    print(f"default block_m = {km.DEFAULT_BLOCK_M}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,144 @@
+"""Build-time training of TinyDet / HeavyDet on SynthDOTA.
+
+Runs ONCE inside ``make artifacts`` (never on the request path).  The loss
+is a single-anchor YOLO objective:
+
+    L = w_obj * BCE(obj) + w_noobj * BCE(noobj)
+      + w_coord * [ MSE(sigmoid(txy), frac_offset) + MSE(twh, log(wh/anchor)) ]
+      + w_cls * BCE(class one-hot)                       (object cells only)
+
+Training differentiates through the pure-jnp ``impl="ref"`` forward — the
+oracle math is bit-compatible with the Pallas kernels (pytest enforces
+allclose), so the trained weights transfer exactly to the Pallas inference
+graph that aot.py exports.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as sdata
+from . import model as smodel
+
+W_OBJ = 1.0
+W_NOOBJ = 0.35
+W_COORD = 5.0
+W_CLS = 1.0
+
+
+def build_targets(all_boxes, grid: int = smodel.GRID, stride: float = smodel.STRIDE):
+    """List-of-box-lists -> (B, G*G, HEAD_D) target tensor + obj mask.
+
+    Target layout matches the raw head: [tx*, ty*, tw*, th*, obj, onehot...]
+    where tx*,ty* are fractional cell offsets (compared to sigmoid(t)) and
+    tw*,th* are log(wh / anchor) (compared to raw t).
+    """
+    b = len(all_boxes)
+    tgt = np.zeros((b, grid * grid, smodel.HEAD_D), np.float32)
+    for i, boxes in enumerate(all_boxes):
+        for cx, cy, w, h, cls in boxes:
+            gx = min(int(cx / stride), grid - 1)
+            gy = min(int(cy / stride), grid - 1)
+            cell = gy * grid + gx
+            tgt[i, cell, 0] = cx / stride - gx
+            tgt[i, cell, 1] = cy / stride - gy
+            tgt[i, cell, 2] = np.log(max(w, 2.0) / smodel.ANCHOR[0])
+            tgt[i, cell, 3] = np.log(max(h, 2.0) / smodel.ANCHOR[1])
+            tgt[i, cell, 4] = 1.0
+            tgt[i, cell, 5:] = 0.0
+            tgt[i, cell, 5 + cls] = 1.0
+    return jnp.asarray(tgt)
+
+
+def _bce(logits, labels):
+    # Numerically-stable sigmoid BCE.
+    return jnp.maximum(logits, 0) - logits * labels + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+
+
+def yolo_loss(params, x, tgt, arch_name: str):
+    bsz = x.shape[0]
+    t = smodel.forward_raw(params, x, arch_name, impl="ref")
+    t = t.reshape(bsz, smodel.GRID * smodel.GRID, smodel.HEAD_D)
+    obj = tgt[..., 4]
+    noobj = 1.0 - obj
+
+    obj_bce = _bce(t[..., 4], obj)
+    l_obj = W_OBJ * jnp.sum(obj_bce * obj) / (jnp.sum(obj) + 1.0)
+    l_noobj = W_NOOBJ * jnp.sum(obj_bce * noobj) / (jnp.sum(noobj) + 1.0)
+
+    xy = jax.nn.sigmoid(t[..., 0:2])
+    l_xy = jnp.sum(obj[..., None] * (xy - tgt[..., 0:2]) ** 2)
+    l_wh = jnp.sum(obj[..., None] * (t[..., 2:4] - tgt[..., 2:4]) ** 2)
+    l_coord = W_COORD * (l_xy + l_wh) / (jnp.sum(obj) + 1.0)
+
+    cls_bce = _bce(t[..., 5:], tgt[..., 5:])
+    l_cls = W_CLS * jnp.sum(obj[..., None] * cls_bce) / (jnp.sum(obj) + 1.0)
+    return l_obj + l_noobj + l_coord + l_cls
+
+
+def adam_init(params):
+    zeros = lambda p: [(jnp.zeros_like(w), jnp.zeros_like(b)) for w, b in p]
+    return {"m": zeros(params), "v": zeros(params), "t": jnp.zeros((), jnp.int32)}
+
+
+def adam_update(params, grads, state, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    new_p, new_m, new_v = [], [], []
+    for (w, b), (gw, gb), (mw, mb), (vw, vb) in zip(
+        params, grads, state["m"], state["v"]
+    ):
+        out_wb, out_m, out_v = [], [], []
+        for p, g, m, v in ((w, gw, mw, vw), (b, gb, mb, vb)):
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            mhat = m / (1 - b1 ** t.astype(jnp.float32))
+            vhat = v / (1 - b2 ** t.astype(jnp.float32))
+            out_wb.append(p - lr * mhat / (jnp.sqrt(vhat) + eps))
+            out_m.append(m)
+            out_v.append(v)
+        new_p.append(tuple(out_wb))
+        new_m.append(tuple(out_m))
+        new_v.append(tuple(out_v))
+    return new_p, {"m": new_m, "v": new_v, "t": t}
+
+
+def train(
+    arch_name: str,
+    steps: int,
+    *,
+    seed: int = 7,
+    batch: int = 32,
+    lr: float = 1.5e-3,
+    log_every: int = 50,
+    log=print,
+):
+    """Train one detector; returns (params, final_loss_estimate, history)."""
+    rng = np.random.default_rng(seed)
+    key = jax.random.PRNGKey(seed)
+    params = smodel.init_params(key, arch_name)
+    opt = adam_init(params)
+
+    @jax.jit
+    def step(params, opt, x, tgt):
+        loss, grads = jax.value_and_grad(yolo_loss)(params, x, tgt, arch_name)
+        params, opt = adam_update(params, grads, opt, lr=lr)
+        return params, opt, loss
+
+    history = []
+    t0 = time.time()
+    ema = None
+    for i in range(steps):
+        imgs, boxes = sdata.gen_training_batch(rng, batch)
+        tgt = build_targets(boxes)
+        params, opt, loss = step(params, opt, jnp.asarray(imgs), tgt)
+        loss = float(loss)
+        ema = loss if ema is None else 0.95 * ema + 0.05 * loss
+        if i % log_every == 0 or i == steps - 1:
+            history.append((i, ema))
+            log(f"[train {arch_name}] step {i:4d}/{steps} loss={loss:.4f} ema={ema:.4f} "
+                f"({time.time()-t0:.0f}s)")
+    return params, ema, history

@@ -1,0 +1,81 @@
+"""SynthDOTA python twin: determinism, ground-truth validity, and the
+Fig-6 calibration (v1 ≈ 90% redundant, v2 ≈ 40%)."""
+
+import numpy as np
+
+from compile import data as d
+from compile.kernels import cloudscore as kc
+
+
+def test_tile_shape_and_range():
+    rng = np.random.default_rng(0)
+    img, boxes, cover = d.gen_tile(rng)
+    assert img.shape == (d.TILE, d.TILE, 3)
+    assert img.dtype == np.float32
+    assert img.min() >= 0.0 and img.max() <= 1.0
+
+
+def test_boxes_within_tile():
+    rng = np.random.default_rng(1)
+    for _ in range(50):
+        _, boxes, _ = d.gen_tile(rng, objects_lam=2.5)
+        for cx, cy, w, h, cls in boxes:
+            assert 0 <= cx <= d.TILE and 0 <= cy <= d.TILE
+            assert 0 < w <= d.TILE and 0 < h <= d.TILE
+            assert 0 <= cls < d.CLASSES
+
+
+def test_deterministic_given_seed():
+    a, _, _ = d.gen_tile(np.random.default_rng(123))
+    b, _, _ = d.gen_tile(np.random.default_rng(123))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_objects_change_pixels():
+    rng = np.random.default_rng(7)
+    img = d.draw_background(rng)
+    before = img.copy()
+    d.draw_object(img, 0, rng)
+    assert np.abs(img - before).max() > 0.1
+
+
+def test_cloud_raises_white_fraction():
+    rng = np.random.default_rng(11)
+    img = d.draw_background(rng)
+    clear_white = float(np.mean(np.min(img, axis=-1) > kc.WHITE_THRESH))
+    cover = d.draw_cloud(img, np.random.default_rng(12), density=1.2)
+    cloudy_white = float(np.mean(np.min(img, axis=-1) > kc.WHITE_THRESH))
+    assert cloudy_white > clear_white
+    assert cover > 0.0
+
+
+def _redundancy_rate(version: str, n: int = 300) -> float:
+    spec = d.VERSIONS[version]
+    rng = np.random.default_rng(42)
+    red = 0
+    for _ in range(n):
+        img, _, _ = d.gen_tile(
+            rng,
+            objects_lam=spec["objects_lam"],
+            cloud_prob=spec["cloud_prob"],
+            cloud_density=spec["cloud_density"],
+        )
+        white = float(np.mean(np.min(img, axis=-1) > kc.WHITE_THRESH))
+        red += white > d.REDUNDANT_WHITE_FRAC
+    return red / n
+
+
+def test_v1_redundancy_near_90pct():
+    rate = _redundancy_rate("v1")
+    assert 0.75 <= rate <= 0.99, f"v1 redundancy {rate}"
+
+
+def test_v2_redundancy_near_40pct():
+    rate = _redundancy_rate("v2")
+    assert 0.25 <= rate <= 0.55, f"v2 redundancy {rate}"
+
+
+def test_training_batch_shapes():
+    imgs, boxes = d.gen_training_batch(np.random.default_rng(0), 8)
+    assert imgs.shape == (8, d.TILE, d.TILE, 3)
+    assert len(boxes) == 8

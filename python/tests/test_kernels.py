@@ -1,0 +1,131 @@
+"""L1 kernel correctness: Pallas (interpret) vs pure-jnp oracle.
+
+Hypothesis sweeps shapes so block-edge padding paths (M not a multiple of
+block_m, R not a multiple of block_r) are exercised, not just happy sizes.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import cloudscore as kc
+from compile.kernels import decode as kd
+from compile.kernels import matmul as km
+from compile.kernels import ref as kr
+
+settings.register_profile("kernels", max_examples=25, deadline=None)
+settings.load_profile("kernels")
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape).astype(np.float32))
+
+
+# ---------------------------------------------------------------- matmul
+@given(
+    m=st.integers(1, 300),
+    k=st.integers(1, 96),
+    n=st.integers(1, 64),
+    act=st.sampled_from(["leaky_relu", "none"]),
+    block_m=st.sampled_from([8, 32, 128]),
+)
+def test_fused_matmul_matches_ref(m, k, n, act, block_m):
+    rng = np.random.default_rng(m * 1000 + k * 10 + n)
+    x, w, b = rand(rng, m, k), rand(rng, k, n), rand(rng, n)
+    got = km.fused_matmul(x, w, b, activation=act, block_m=block_m)
+    want = kr.ref_fused_matmul(x, w, b, activation=act)
+    assert got.shape == (m, n)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_fused_matmul_rejects_bad_activation():
+    rng = np.random.default_rng(0)
+    with pytest.raises(ValueError):
+        km.fused_matmul(rand(rng, 4, 4), rand(rng, 4, 4), rand(rng, 4),
+                        activation="gelu")
+
+
+def test_fused_matmul_negative_slope_is_leaky():
+    x = jnp.asarray([[-1.0]])
+    w = jnp.asarray([[1.0]])
+    b = jnp.asarray([0.0])
+    out = km.fused_matmul(x, w, b, activation="leaky_relu")
+    np.testing.assert_allclose(out, [[-km.LEAKY_SLOPE]], rtol=1e-6)
+
+
+def test_vmem_footprint_within_tpu_budget():
+    # The detector's worst conv shape must fit a 16 MiB VMEM with the
+    # default BlockSpec (see DESIGN.md §Hardware-Adaptation).
+    worst = km.vmem_footprint(km.DEFAULT_BLOCK_M, k=864, n=96)
+    assert worst < 16 * 1024 * 1024
+
+
+def test_mxu_utilization_monotone_in_m_alignment():
+    aligned = km.mxu_utilization_estimate(256, 128, 128)
+    ragged = km.mxu_utilization_estimate(129, 128, 128)
+    assert aligned > ragged
+
+
+# ---------------------------------------------------------------- decode
+@given(
+    rows=st.integers(1, 200),
+    c=st.integers(1, 12),
+    block_r=st.sampled_from([8, 64]),
+)
+def test_decode_matches_ref(rows, c, block_r):
+    rng = np.random.default_rng(rows * 37 + c)
+    t = rand(rng, rows, 5 + c)
+    off = jnp.asarray(rng.uniform(0, 8, size=(rows, 2)).astype(np.float32))
+    got = kd.decode_head(t, off, stride=8.0, anchor_w=16.0, anchor_h=12.0,
+                         block_r=block_r)
+    want = kr.ref_decode_head(t, off, stride=8.0, anchor_w=16.0, anchor_h=12.0)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_decode_clips_extreme_wh():
+    t = jnp.full((1, 13), 100.0)
+    off = jnp.zeros((1, 2))
+    out = kd.decode_head(t, off, stride=8.0, anchor_w=16.0, anchor_h=16.0)
+    assert np.isfinite(np.asarray(out)).all()
+    assert float(out[0, 2]) <= 16.0 * np.exp(kd.WH_CLIP) + 1
+
+
+def test_decode_scores_are_probabilities():
+    rng = np.random.default_rng(3)
+    t = rand(rng, 64, 13)
+    off = kd.make_offsets(8)
+    out = np.asarray(kd.decode_head(t, off, stride=8.0, anchor_w=16.0, anchor_h=16.0))
+    assert (out[:, 4:] >= 0).all() and (out[:, 4:] <= 1).all()
+
+
+def test_make_offsets_layout_row_major():
+    off = np.asarray(kd.make_offsets(3))
+    assert off.shape == (9, 2)
+    # row-major over (gy, gx): second row is gx=1, gy=0
+    np.testing.assert_array_equal(off[1], [1, 0])
+    np.testing.assert_array_equal(off[3], [0, 1])
+
+
+# ------------------------------------------------------------ cloudscore
+@given(b=st.integers(1, 6), t=st.sampled_from([16, 32, 64]))
+def test_cloudscore_matches_ref(b, t):
+    rng = np.random.default_rng(b * 100 + t)
+    x = jnp.asarray(rng.uniform(0, 1, size=(b, t, t, 3)).astype(np.float32))
+    got = kc.cloud_score(x)
+    want = kr.ref_cloud_score(x)
+    assert got.shape == (b, 3)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_cloudscore_white_image_is_fully_cloudy():
+    x = jnp.ones((1, 32, 32, 3))
+    out = np.asarray(kc.cloud_score(x))
+    assert out[0, 2] == 1.0  # white_frac
+    assert abs(out[0, 1]) < 1e-6  # zero variance
+
+
+def test_cloudscore_dark_image_is_clear():
+    x = jnp.zeros((1, 32, 32, 3)) + 0.1
+    out = np.asarray(kc.cloud_score(x))
+    assert out[0, 2] == 0.0

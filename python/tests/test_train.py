@@ -1,0 +1,64 @@
+"""Build-time training: loss decreases, targets well-formed, grads finite."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import data as d
+from compile import model as m
+from compile import train as t
+
+
+def test_build_targets_layout():
+    boxes = [[(12.0, 20.0, 8.0, 8.0, 3)]]  # cell gx=1, gy=2
+    tgt = np.asarray(t.build_targets(boxes))
+    assert tgt.shape == (1, m.GRID * m.GRID, m.HEAD_D)
+    cell = 2 * m.GRID + 1
+    assert tgt[0, cell, 4] == 1.0
+    assert tgt[0, cell, 5 + 3] == 1.0
+    np.testing.assert_allclose(tgt[0, cell, 0], 12.0 / 8.0 - 1.0)
+    assert tgt[0].sum() == tgt[0, cell].sum()  # only one live cell
+
+
+def test_build_targets_clamps_edge_boxes():
+    boxes = [[(63.9, 63.9, 4.0, 4.0, 0)]]
+    tgt = np.asarray(t.build_targets(boxes))
+    assert tgt[0, m.GRID * m.GRID - 1, 4] == 1.0
+
+
+def test_bce_matches_naive():
+    logits = jnp.asarray([-3.0, 0.0, 2.0])
+    labels = jnp.asarray([0.0, 1.0, 1.0])
+    p = jax.nn.sigmoid(logits)
+    naive = -(labels * jnp.log(p) + (1 - labels) * jnp.log(1 - p))
+    np.testing.assert_allclose(t._bce(logits, labels), naive, rtol=1e-5)
+
+
+def test_loss_finite_and_grads_flow():
+    rng = np.random.default_rng(0)
+    imgs, boxes = d.gen_training_batch(rng, 4)
+    tgt = t.build_targets(boxes)
+    params = m.init_params(jax.random.PRNGKey(0), "tiny")
+    loss, grads = jax.value_and_grad(t.yolo_loss)(
+        params, jnp.asarray(imgs), tgt, "tiny"
+    )
+    assert np.isfinite(float(loss))
+    for gw, gb in grads:
+        assert np.isfinite(np.asarray(gw)).all()
+        assert np.abs(np.asarray(gw)).max() > 0
+
+
+def test_short_training_reduces_loss():
+    _, final_ema, history = t.train("tiny", 30, seed=3, batch=16, log_every=29,
+                                    log=lambda *_: None)
+    first = history[0][1]
+    assert final_ema < first, f"loss did not decrease: {first} -> {final_ema}"
+
+
+def test_adam_moves_params():
+    params = m.init_params(jax.random.PRNGKey(0), "tiny")
+    opt = t.adam_init(params)
+    grads = [(jnp.ones_like(w), jnp.ones_like(b)) for w, b in params]
+    new_params, _ = t.adam_update(params, grads, opt, lr=0.01)
+    delta = float(jnp.abs(new_params[0][0] - params[0][0]).max())
+    assert delta > 1e-4

@@ -1,0 +1,32 @@
+//! Fig 6 — "The filter rate of redundant data in orbit on DOTA."
+//!
+//! Regenerates the figure's series: filter rate for the two dataset
+//! versions across fragment sizes {32, 64, 128}, plus wallclock for the
+//! split+filter stage (the onboard preprocessing budget).
+
+use tiansuan::config::Config;
+use tiansuan::coordinator::Pipeline;
+use tiansuan::data::Version;
+use tiansuan::runtime::Runtime;
+use tiansuan::util::bench;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::open("artifacts")?;
+    println!("=== Fig 6: filter rate of redundant data in orbit ===");
+    println!("{:<8} {:>8} {:>8} {:>12}  (paper: v1 ≈90%, v2 ≈40%, flat in frag)",
+             "version", "frag", "tiles", "filter rate");
+    for version in [Version::V1, Version::V2] {
+        for frag in [32usize, 64, 128] {
+            let mut cfg = Config::default();
+            cfg.fragment_px = frag;
+            let pipeline = Pipeline::new(&rt, cfg);
+            let (r, dt) = bench::once(
+                &format!("fig6/{}/frag{}", version.name(), frag),
+                || pipeline.run_scenario(version, 6).unwrap(),
+            );
+            println!("{:<8} {:>8} {:>8} {:>11.1}%   ({:.2}s)",
+                     r.version, frag, r.tiles_total, 100.0 * r.filter_rate(), dt.as_secs_f64());
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,41 @@
+//! Perf: end-to-end pipeline throughput (tiles/s) — the headline serving
+//! metric for the whole stack, per dataset version, plus a breakdown of
+//! where the time goes (PJRT vs everything else).
+
+use tiansuan::config::Config;
+use tiansuan::coordinator::Pipeline;
+use tiansuan::data::Version;
+use tiansuan::runtime::Runtime;
+use tiansuan::util::bench;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::open("artifacts")?;
+    rt.warmup()?;
+    println!("=== perf: end-to-end pipeline (before/after batch-plan calibration) ===");
+    for phase in ["baseline(pad-to-batch)", "calibrated(batch-plan)"] {
+        if phase.starts_with("calibrated") {
+            rt.calibrate()?; // L3 perf-pass change: cost-based batch plans
+        }
+        for version in [Version::V1, Version::V2] {
+            let pipeline = Pipeline::new(&rt, Config::default());
+            let (r, dt) = bench::once(&format!("pipeline/{}/{}", phase, version.name()), || {
+                pipeline.run_scenario(version, 8).unwrap()
+            });
+            let wall = dt.as_secs_f64();
+            let kept = r.tiles_total - r.tiles_filtered;
+            println!(
+                "{} {}: {} tiles ({} kept) in {:.2}s -> {:.1} tiles/s e2e; PJRT {:.2}s ({:.0}% of wall, {:.1} kept-tiles/s)",
+                phase,
+                r.version,
+                r.tiles_total,
+                kept,
+                wall,
+                r.tiles_total as f64 / wall,
+                r.wall_infer_s,
+                100.0 * r.wall_infer_s / wall,
+                kept as f64 / r.wall_infer_s.max(1e-9),
+            );
+        }
+    }
+    Ok(())
+}

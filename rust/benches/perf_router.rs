@@ -1,0 +1,45 @@
+//! Perf: L3 hot-path pieces that run per tile — decode, NMS, routing,
+//! scene split, and the cloud-score threshold.  The coordinator must
+//! never be the bottleneck relative to PJRT inference (DESIGN.md §Perf).
+
+use std::time::Duration;
+
+use tiansuan::config::Config;
+use tiansuan::coordinator::router::{route, RouterPolicy, RouterStats};
+use tiansuan::data::{split_scene, SceneGen, Version};
+use tiansuan::detect::{decode_rows, nms};
+use tiansuan::util::bench;
+use tiansuan::util::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(3);
+    let head_d = 13;
+    let rows: Vec<f32> = (0..64 * head_d).map(|_| rng.f32()).collect();
+
+    bench::run("router/decode_rows_64cells", 100, Duration::from_millis(400), || {
+        std::hint::black_box(decode_rows(&rows, head_d, 0.2));
+    });
+
+    let dets = decode_rows(&rows, head_d, 0.01); // dense: worst case for NMS
+    println!("  (nms input: {} detections)", dets.len());
+    bench::run("router/nms_dense", 100, Duration::from_millis(400), || {
+        std::hint::black_box(nms(dets.clone(), 0.45));
+    });
+
+    let policy = RouterPolicy::default();
+    let kept = nms(dets.clone(), 0.45);
+    bench::run("router/route", 100, Duration::from_millis(200), || {
+        let mut stats = RouterStats::default();
+        std::hint::black_box(route(&policy, &kept, 0.7, &mut stats));
+    });
+
+    let cfg = Config::default();
+    let scene = SceneGen::new(cfg.seed, Version::V2.spec(), 8, 8).capture();
+    bench::run("router/split_scene_512px_frag64", 20, Duration::from_millis(600), || {
+        std::hint::black_box(split_scene(&scene, 64));
+    });
+    bench::run("router/scene_capture_512px", 5, Duration::from_millis(800), || {
+        let mut g = SceneGen::new(1, Version::V2.spec(), 8, 8);
+        std::hint::black_box(g.capture());
+    });
+}

@@ -1,0 +1,37 @@
+//! Perf: PJRT execution layer — per-call latency and batch-sweep
+//! throughput for every artifact.  This is the L3-side measurement of the
+//! L1/L2 stack (EXPERIMENTS.md §Perf).
+
+use std::time::Duration;
+
+use tiansuan::runtime::{Model, Runtime};
+use tiansuan::util::bench;
+use tiansuan::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::open("artifacts")?;
+    rt.warmup()?;
+    rt.calibrate()?; // cost-based batch planning (EXPERIMENTS.md §Perf)
+    let t = rt.manifest.tile;
+    let mut rng = Rng::new(7);
+
+    println!("=== perf: PJRT runtime ({} / batches {:?}) ===", rt.platform(), rt.manifest.batch_sizes);
+    for model in [Model::CloudScore, Model::Tiny, Model::TinyV2, Model::Heavy] {
+        for &b in &rt.manifest.batch_sizes {
+            let input: Vec<f32> = (0..b * t * t * 3).map(|_| rng.f32()).collect();
+            let stats = bench::run(
+                &format!("{}/b{}", model.stem(), b),
+                10,
+                Duration::from_millis(800),
+                || {
+                    rt.execute_exact(model, b, &input).unwrap();
+                },
+            );
+            println!(
+                "  -> {:>8.1} tiles/s at batch {b}",
+                b as f64 / stats.median.as_secs_f64()
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,41 @@
+//! Table 1 — satellite platform specifications, validated against the
+//! link + orbit models: the configured downlink/uplink rates must be the
+//! rates the simulated links actually achieve, and the 500 km orbit must
+//! produce the pass structure the paper's handover model assumes.
+
+use tiansuan::config::{baoyun_platform, chuangxingleishen_platform};
+use tiansuan::link::{Link, LinkConfig, LossProfile};
+use tiansuan::orbit::{baoyun, beijing_station, contact_windows};
+use tiansuan::util::bench;
+
+fn main() {
+    println!("=== Table 1: platform specifications (validated) ===");
+    for p in [baoyun_platform(), chuangxingleishen_platform()] {
+        println!("{:<20} alt {}±50 km  mass {} kg  load {} U  size {} U  {}",
+                 p.name, p.orbital_altitude_km, p.mass_kg, p.load_size_u, p.size_u,
+                 p.operating_system);
+    }
+
+    // downlink rate envelope: lossless 40 Mbps link must move 5 MB in ~1 s
+    let stats = bench::run("table1/downlink_5MB", 5, std::time::Duration::from_millis(200), || {
+        let mut link = Link::new(
+            LinkConfig { rate_bps: 40e6, mtu: 1400, loss: LossProfile::stable(), max_tries: 8 },
+            1,
+        );
+        let t = link.transmit(5_000_000, 10.0);
+        assert!(t.completed);
+        assert!((0.9..1.3).contains(&t.elapsed_s), "5 MB at 40 Mbps took {}s", t.elapsed_s);
+    });
+    let _ = stats;
+
+    // orbit: 500 km period + daily pass structure over Beijing
+    let sat = baoyun();
+    println!("orbital period {:.1} s ({:.1} min)", sat.period_s(), sat.period_s() / 60.0);
+    let (windows, _) = bench::once("table1/contact_windows_24h", || {
+        contact_windows(&sat, &beijing_station(), 0.0, 86_400.0, 10.0)
+    });
+    let total: f64 = windows.iter().map(|w| w.duration_s()).sum();
+    println!("{} passes/day over Beijing, {:.0} s total contact — the scarcity that motivates onboard filtering",
+             windows.len(), total);
+    assert!(!windows.is_empty());
+}

@@ -1,0 +1,38 @@
+//! Table 3 — "The power of payloads subsystem of Baoyun satellite," plus
+//! the two derived headlines: computing ≈33% of payload energy and ≈17%
+//! of total onboard energy (H2).
+
+use tiansuan::config::Config;
+use tiansuan::coordinator::Pipeline;
+use tiansuan::data::Version;
+use tiansuan::energy::{EnergyMeter, Payload};
+use tiansuan::orbit::{baoyun, beijing_station, contact_windows};
+use tiansuan::runtime::Runtime;
+use tiansuan::util::bench;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::open("artifacts")?;
+    let pipeline = Pipeline::new(&rt, Config::default());
+    let (r, _) = bench::once("table3/measure_duty", || {
+        pipeline.run_scenario(Version::V2, 6).unwrap()
+    });
+
+    let windows = contact_windows(&baoyun(), &beijing_station(), 0.0, 86_400.0, 10.0);
+    let comm_duty = windows.iter().map(|w| w.duration_s()).sum::<f64>() / 86_400.0;
+    let mut m = EnergyMeter::new();
+    m.advance(2.0 * baoyun().period_s(), r.compute_duty, comm_duty, 0.1);
+
+    println!("=== Table 3: payload power (W), simulated vs paper ===");
+    let paper = [0.09, 6.26, 5.68, 0.95, 6.12, 8.78];
+    for (p, want) in Payload::all().iter().zip(paper) {
+        let got = m.payload_j(*p) / m.elapsed_s;
+        println!("{:<14} {:>8.2}   paper {:>6.2}", p.name(), got, want);
+    }
+    println!(
+        "computing share: {:.1}% of payloads (paper ≈33%), {:.1}% of total (paper ≈17%)",
+        100.0 * m.compute_share_of_payloads(),
+        100.0 * m.compute_share()
+    );
+    assert!((0.10..0.25).contains(&m.compute_share()), "17%-band violated: {}", m.compute_share());
+    Ok(())
+}

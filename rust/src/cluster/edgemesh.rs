@@ -1,0 +1,172 @@
+//! EdgeMesh — service discovery + traffic proxy/relay selection.
+//!
+//! Paper §3.1/§3.2: EdgeMesh "provides simple service discovery and
+//! traffic proxy functions for satellite service, thereby shielding the
+//! complex network structure", and "EdgeMesh-Agent with relay capability
+//! can automatically become a relay server, providing other nodes with
+//! the functions of assisting hole punching and relaying".
+//!
+//! Model: services register endpoints on nodes; resolution prefers local
+//! endpoints, then direct remote, then a relay-capable agent.
+
+use std::collections::BTreeMap;
+
+use super::NodeId;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Endpoint {
+    pub node: NodeId,
+    pub service: String,
+    pub port: u16,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Route {
+    /// Endpoint on the caller's own node.
+    Local(Endpoint),
+    /// Direct connection to the endpoint's node.
+    Direct(Endpoint),
+    /// Via a relay agent (hole-punching assisted).
+    Relayed { via: NodeId, endpoint: Endpoint },
+}
+
+#[derive(Default)]
+pub struct EdgeMesh {
+    endpoints: BTreeMap<String, Vec<Endpoint>>,
+    /// node -> node reachability (true = direct connection possible)
+    reachable: BTreeMap<(NodeId, NodeId), bool>,
+    relays: Vec<NodeId>,
+}
+
+impl EdgeMesh {
+    pub fn new() -> EdgeMesh {
+        EdgeMesh::default()
+    }
+
+    pub fn register(&mut self, service: &str, node: NodeId, port: u16) {
+        self.endpoints.entry(service.to_string()).or_default().push(Endpoint {
+            node,
+            service: service.to_string(),
+            port,
+        });
+    }
+
+    pub fn deregister_node(&mut self, node: &NodeId) {
+        for eps in self.endpoints.values_mut() {
+            eps.retain(|e| &e.node != node);
+        }
+        self.relays.retain(|r| r != node);
+    }
+
+    pub fn set_reachable(&mut self, a: NodeId, b: NodeId, ok: bool) {
+        self.reachable.insert((a.clone(), b.clone()), ok);
+        self.reachable.insert((b, a), ok);
+    }
+
+    fn is_reachable(&self, a: &NodeId, b: &NodeId) -> bool {
+        *self.reachable.get(&(a.clone(), b.clone())).unwrap_or(&false)
+    }
+
+    /// Promote a node to relay (the merged EdgeMesh-Server capability).
+    pub fn promote_relay(&mut self, node: NodeId) {
+        if !self.relays.contains(&node) {
+            self.relays.push(node);
+        }
+    }
+
+    /// Resolve `service` from `caller`: local > direct > relayed.
+    pub fn resolve(&self, caller: &NodeId, service: &str) -> Option<Route> {
+        let eps = self.endpoints.get(service)?;
+        if let Some(e) = eps.iter().find(|e| &e.node == caller) {
+            return Some(Route::Local(e.clone()));
+        }
+        if let Some(e) = eps.iter().find(|e| self.is_reachable(caller, &e.node)) {
+            return Some(Route::Direct(e.clone()));
+        }
+        for relay in &self.relays {
+            if !self.is_reachable(caller, relay) {
+                continue;
+            }
+            if let Some(e) = eps.iter().find(|e| self.is_reachable(relay, &e.node)) {
+                return Some(Route::Relayed { via: relay.clone(), endpoint: e.clone() });
+            }
+        }
+        None
+    }
+
+    pub fn endpoints(&self, service: &str) -> &[Endpoint] {
+        self.endpoints.get(service).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn n(s: &str) -> NodeId {
+        NodeId::new(s)
+    }
+
+    fn mesh() -> EdgeMesh {
+        let mut m = EdgeMesh::new();
+        m.register("inference", n("baoyun"), 8080);
+        m.register("inference", n("ground"), 8080);
+        m.register("aggregator", n("ground"), 9090);
+        m
+    }
+
+    #[test]
+    fn prefers_local_endpoint() {
+        let m = mesh();
+        match m.resolve(&n("baoyun"), "inference") {
+            Some(Route::Local(e)) => assert_eq!(e.node, n("baoyun")),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn direct_when_reachable() {
+        let mut m = mesh();
+        m.set_reachable(n("baoyun"), n("ground"), true);
+        match m.resolve(&n("baoyun"), "aggregator") {
+            Some(Route::Direct(e)) => assert_eq!(e.node, n("ground")),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn relayed_when_no_direct_path() {
+        let mut m = mesh();
+        // baoyun <-> cxls <-> ground, no direct baoyun<->ground
+        m.promote_relay(n("cxls"));
+        m.set_reachable(n("baoyun"), n("cxls"), true);
+        m.set_reachable(n("cxls"), n("ground"), true);
+        match m.resolve(&n("baoyun"), "aggregator") {
+            Some(Route::Relayed { via, endpoint }) => {
+                assert_eq!(via, n("cxls"));
+                assert_eq!(endpoint.node, n("ground"));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn unresolvable_when_partitioned() {
+        let m = mesh();
+        assert_eq!(m.resolve(&n("baoyun"), "aggregator"), None);
+    }
+
+    #[test]
+    fn deregister_removes_endpoints() {
+        let mut m = mesh();
+        m.deregister_node(&n("ground"));
+        assert!(m.endpoints("aggregator").is_empty());
+        assert_eq!(m.endpoints("inference").len(), 1);
+    }
+
+    #[test]
+    fn unknown_service_none() {
+        let m = mesh();
+        assert_eq!(m.resolve(&n("baoyun"), "nope"), None);
+    }
+}

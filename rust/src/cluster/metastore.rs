@@ -1,0 +1,196 @@
+//! MetaManager — versioned metadata store with offline autonomy.
+//!
+//! Paper §3.2: "A lightweight management component named MetaManager
+//! stores metadata. When edge nodes go offline, applications are managed
+//! and restored based on storage metadata."
+//!
+//! Model: the cloud store is the source of truth; each edge node holds a
+//! snapshot replica.  While connected, edge pulls deltas by version;
+//! while disconnected, edge reads (and locally stages writes) against its
+//! snapshot; on reconnect, staged writes are pushed and deltas pulled.
+
+use std::collections::BTreeMap;
+
+/// Monotone version counter per store.
+pub type Version = u64;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Entry {
+    pub value: String,
+    pub version: Version,
+}
+
+#[derive(Default, Clone)]
+pub struct MetaStore {
+    data: BTreeMap<String, Entry>,
+    version: Version,
+}
+
+impl MetaStore {
+    pub fn new() -> MetaStore {
+        MetaStore::default()
+    }
+
+    pub fn put(&mut self, key: impl Into<String>, value: impl Into<String>) -> Version {
+        self.version += 1;
+        self.data.insert(key.into(), Entry { value: value.into(), version: self.version });
+        self.version
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.data.get(key).map(|e| e.value.as_str())
+    }
+
+    pub fn version(&self) -> Version {
+        self.version
+    }
+
+    /// All entries newer than `since` (the sync delta).
+    pub fn delta_since(&self, since: Version) -> Vec<(String, Entry)> {
+        self.data
+            .iter()
+            .filter(|(_, e)| e.version > since)
+            .map(|(k, e)| (k.clone(), e.clone()))
+            .collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+}
+
+/// Edge-side replica with staged offline writes.
+pub struct EdgeReplica {
+    snapshot: MetaStore,
+    /// Last cloud version incorporated.
+    synced_version: Version,
+    /// Writes made while offline, applied to the cloud on reconnect.
+    staged: Vec<(String, String)>,
+    pub connected: bool,
+}
+
+impl EdgeReplica {
+    pub fn new() -> EdgeReplica {
+        EdgeReplica { snapshot: MetaStore::new(), synced_version: 0, staged: Vec::new(), connected: false }
+    }
+
+    /// Offline-autonomous read: always served locally.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.snapshot.get(key)
+    }
+
+    /// Write: applied locally immediately; staged for the cloud if
+    /// disconnected.
+    pub fn put(&mut self, cloud: Option<&mut MetaStore>, key: &str, value: &str) {
+        self.snapshot.put(key, value);
+        match (self.connected, cloud) {
+            (true, Some(c)) => {
+                c.put(key, value);
+                self.synced_version = c.version();
+            }
+            _ => self.staged.push((key.to_string(), value.to_string())),
+        }
+    }
+
+    pub fn staged_count(&self) -> usize {
+        self.staged.len()
+    }
+
+    /// Reconnect: push staged writes, pull the delta.
+    pub fn sync(&mut self, cloud: &mut MetaStore) {
+        self.connected = true;
+        for (k, v) in self.staged.drain(..) {
+            cloud.put(k, v);
+        }
+        for (k, e) in cloud.delta_since(self.synced_version) {
+            self.snapshot.put(k, e.value);
+        }
+        self.synced_version = cloud.version();
+    }
+
+    pub fn disconnect(&mut self) {
+        self.connected = false;
+    }
+}
+
+impl Default for EdgeReplica {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn put_bumps_version() {
+        let mut s = MetaStore::new();
+        let v1 = s.put("a", "1");
+        let v2 = s.put("b", "2");
+        assert!(v2 > v1);
+        assert_eq!(s.get("a"), Some("1"));
+    }
+
+    #[test]
+    fn delta_only_newer() {
+        let mut s = MetaStore::new();
+        s.put("a", "1");
+        let v = s.version();
+        s.put("b", "2");
+        let d = s.delta_since(v);
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].0, "b");
+    }
+
+    #[test]
+    fn offline_reads_served_from_snapshot() {
+        let mut cloud = MetaStore::new();
+        cloud.put("app/detector", "v1");
+        let mut edge = EdgeReplica::new();
+        edge.sync(&mut cloud);
+        edge.disconnect();
+        // cloud moves on; edge still answers from its snapshot
+        cloud.put("app/detector", "v2");
+        assert_eq!(edge.get("app/detector"), Some("v1"));
+    }
+
+    #[test]
+    fn offline_writes_staged_and_pushed_on_reconnect() {
+        let mut cloud = MetaStore::new();
+        let mut edge = EdgeReplica::new();
+        edge.sync(&mut cloud);
+        edge.disconnect();
+        edge.put(None, "telemetry/last_map", "0.41");
+        assert_eq!(edge.staged_count(), 1);
+        assert_eq!(edge.get("telemetry/last_map"), Some("0.41")); // local apply
+        edge.sync(&mut cloud);
+        assert_eq!(cloud.get("telemetry/last_map"), Some("0.41"));
+        assert_eq!(edge.staged_count(), 0);
+    }
+
+    #[test]
+    fn reconnect_pulls_cloud_changes() {
+        let mut cloud = MetaStore::new();
+        let mut edge = EdgeReplica::new();
+        edge.sync(&mut cloud);
+        edge.disconnect();
+        cloud.put("app/detector", "v2");
+        edge.sync(&mut cloud);
+        assert_eq!(edge.get("app/detector"), Some("v2"));
+    }
+
+    #[test]
+    fn connected_writes_go_straight_through() {
+        let mut cloud = MetaStore::new();
+        let mut edge = EdgeReplica::new();
+        edge.sync(&mut cloud);
+        edge.put(Some(&mut cloud), "k", "v");
+        assert_eq!(cloud.get("k"), Some("v"));
+        assert_eq!(edge.staged_count(), 0);
+    }
+}

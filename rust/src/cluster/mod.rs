@@ -1,0 +1,54 @@
+//! KubeEdge-like cluster substrate (paper §3.2).
+//!
+//! The paper manages the satellite with KubeEdge: a CloudCore in the
+//! ground cloud and a lightweight EdgeCore on the satellite, connected by
+//! an unreliable space link.  We reproduce the behaviours the paper
+//! claims, each in its own module:
+//!
+//! * [`registry`]     — node registration + heartbeat health (Ready /
+//!                      NotReady / Offline).
+//! * [`metastore`]    — MetaManager: versioned metadata KV with local
+//!                      snapshots ("offline autonomous": apps are managed
+//!                      and restored from storage metadata while offline).
+//! * [`msgbus`]       — reliable cloud↔edge delivery over the lossy link
+//!                      ("the data is still reliably transmitted in weak
+//!                      network scenarios").
+//! * [`orchestrator`] — containerized app orchestration: desired-state
+//!                      reconcile, restart policy, rolling update
+//!                      ("automatically scaled, fault-tolerant").
+//! * [`edgemesh`]     — EdgeMesh service discovery + relay selection.
+//!
+//! Time is virtual everywhere (`Millis`), so failure-injection tests are
+//! deterministic and instant.
+
+pub mod edgemesh;
+pub mod metastore;
+pub mod msgbus;
+pub mod orchestrator;
+pub mod registry;
+
+/// Virtual time in milliseconds since sim epoch.
+pub type Millis = u64;
+
+/// Node identity. Cloud nodes live in the ground segment, edge nodes on
+/// satellites.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum NodeRole {
+    Cloud,
+    Edge,
+}
+
+#[derive(Clone, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct NodeId(pub String);
+
+impl NodeId {
+    pub fn new(s: impl Into<String>) -> NodeId {
+        NodeId(s.into())
+    }
+}
+
+impl std::fmt::Display for NodeId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}

@@ -1,0 +1,285 @@
+//! Containerized-app orchestration with desired-state reconciliation.
+//!
+//! Paper §3.1 "Safe and reliable": "With container orchestration for
+//! microservices, onboard applications can be automatically scaled,
+//! fault-tolerant which copes with the complex environment of space and
+//! keeps onboard applications available at all times."
+//!
+//! A deliberately small Kubernetes: AppSpec (desired replicas + placement
+//! + image), PodInstance (actual), and a reconcile step that starts
+//! missing pods, restarts failed ones, and performs rolling image
+//! updates.  Placement respects node readiness *as known locally* — the
+//! edge keeps reconciling its own pods while offline (offline autonomy).
+
+use std::collections::BTreeMap;
+
+use super::registry::{NodeStatus, Registry};
+use super::{Millis, NodeId, NodeRole};
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Placement {
+    Edge,
+    Cloud,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct AppSpec {
+    pub name: String,
+    pub image: String,
+    pub replicas: usize,
+    pub placement: Placement,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PodPhase {
+    Running,
+    Failed,
+}
+
+#[derive(Clone, Debug)]
+pub struct PodInstance {
+    pub app: String,
+    pub image: String,
+    pub node: NodeId,
+    pub phase: PodPhase,
+    pub started_at: Millis,
+    pub restarts: u32,
+}
+
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct ReconcileActions {
+    pub started: usize,
+    pub restarted: usize,
+    pub updated: usize,
+    pub removed: usize,
+}
+
+pub struct Orchestrator {
+    specs: BTreeMap<String, AppSpec>,
+    pods: Vec<PodInstance>,
+}
+
+impl Default for Orchestrator {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Orchestrator {
+    pub fn new() -> Orchestrator {
+        Orchestrator { specs: BTreeMap::new(), pods: Vec::new() }
+    }
+
+    pub fn apply(&mut self, spec: AppSpec) {
+        self.specs.insert(spec.name.clone(), spec);
+    }
+
+    pub fn delete(&mut self, app: &str) {
+        self.specs.remove(app);
+    }
+
+    pub fn pods(&self, app: &str) -> Vec<&PodInstance> {
+        self.pods.iter().filter(|p| p.app == app).collect()
+    }
+
+    pub fn running(&self, app: &str) -> usize {
+        self.pods.iter().filter(|p| p.app == app && p.phase == PodPhase::Running).count()
+    }
+
+    /// Inject a pod failure (radiation upset, OOM, …) — test hook and
+    /// simulation event.
+    pub fn fail_pod(&mut self, app: &str, idx: usize) -> bool {
+        let mut i = 0;
+        for p in self.pods.iter_mut() {
+            if p.app == app {
+                if i == idx {
+                    p.phase = PodPhase::Failed;
+                    return true;
+                }
+                i += 1;
+            }
+        }
+        false
+    }
+
+    /// One reconcile pass: drive actual state toward every spec.
+    pub fn reconcile(&mut self, registry: &Registry, now: Millis) -> ReconcileActions {
+        let mut acts = ReconcileActions::default();
+
+        // remove pods whose app was deleted
+        let before = self.pods.len();
+        let specs = &self.specs;
+        self.pods.retain(|p| specs.contains_key(&p.app));
+        acts.removed += before - self.pods.len();
+
+        let candidates: Vec<(NodeId, NodeRole)> = registry
+            .nodes()
+            .filter(|n| registry.status(&n.id, now) == Some(NodeStatus::Ready))
+            .map(|n| (n.id.clone(), n.role))
+            .collect();
+
+        for spec in self.specs.values() {
+            let want_role = match spec.placement {
+                Placement::Edge => NodeRole::Edge,
+                Placement::Cloud => NodeRole::Cloud,
+            };
+            // restart failed pods in place
+            for p in self.pods.iter_mut().filter(|p| p.app == spec.name) {
+                if p.phase == PodPhase::Failed {
+                    p.phase = PodPhase::Running;
+                    p.restarts += 1;
+                    p.started_at = now;
+                    acts.restarted += 1;
+                }
+                // rolling update: replace image on mismatch
+                if p.image != spec.image {
+                    p.image = spec.image.clone();
+                    p.started_at = now;
+                    acts.updated += 1;
+                }
+            }
+            // scale up onto ready nodes of the right role (round-robin)
+            let mut nodes: Vec<&NodeId> =
+                candidates.iter().filter(|(_, r)| *r == want_role).map(|(id, _)| id).collect();
+            nodes.sort();
+            if nodes.is_empty() {
+                continue; // no placement target: stay pending
+            }
+            let mut have = self.pods.iter().filter(|p| p.app == spec.name).count();
+            let mut rr = have;
+            while have < spec.replicas {
+                let node = nodes[rr % nodes.len()].clone();
+                self.pods.push(PodInstance {
+                    app: spec.name.clone(),
+                    image: spec.image.clone(),
+                    node,
+                    phase: PodPhase::Running,
+                    started_at: now,
+                    restarts: 0,
+                });
+                acts.started += 1;
+                have += 1;
+                rr += 1;
+            }
+            // scale down
+            while have > spec.replicas {
+                if let Some(pos) = self.pods.iter().rposition(|p| p.app == spec.name) {
+                    self.pods.remove(pos);
+                    acts.removed += 1;
+                }
+                have -= 1;
+            }
+        }
+        acts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup() -> (Orchestrator, Registry) {
+        let mut reg = Registry::new(10_000, 60_000);
+        reg.register(NodeId::new("baoyun"), NodeRole::Edge, 4000, 8192, 0);
+        reg.register(NodeId::new("ground-1"), NodeRole::Cloud, 64_000, 262_144, 0);
+        (Orchestrator::new(), reg)
+    }
+
+    fn detector_spec(image: &str, replicas: usize) -> AppSpec {
+        AppSpec {
+            name: "detector".into(),
+            image: image.into(),
+            replicas,
+            placement: Placement::Edge,
+        }
+    }
+
+    #[test]
+    fn starts_missing_pods() {
+        let (mut o, reg) = setup();
+        o.apply(detector_spec("tinydet:v1", 2));
+        let acts = o.reconcile(&reg, 0);
+        assert_eq!(acts.started, 2);
+        assert_eq!(o.running("detector"), 2);
+        assert!(o.pods("detector").iter().all(|p| p.node == NodeId::new("baoyun")));
+    }
+
+    #[test]
+    fn restarts_failed_pods() {
+        let (mut o, reg) = setup();
+        o.apply(detector_spec("tinydet:v1", 1));
+        o.reconcile(&reg, 0);
+        assert!(o.fail_pod("detector", 0));
+        assert_eq!(o.running("detector"), 0);
+        let acts = o.reconcile(&reg, 1000);
+        assert_eq!(acts.restarted, 1);
+        assert_eq!(o.running("detector"), 1);
+        assert_eq!(o.pods("detector")[0].restarts, 1);
+    }
+
+    #[test]
+    fn rolling_update_swaps_image() {
+        let (mut o, reg) = setup();
+        o.apply(detector_spec("tinydet:v1", 1));
+        o.reconcile(&reg, 0);
+        o.apply(detector_spec("tinydet:v2", 1));
+        let acts = o.reconcile(&reg, 5000);
+        assert_eq!(acts.updated, 1);
+        assert_eq!(o.pods("detector")[0].image, "tinydet:v2");
+    }
+
+    #[test]
+    fn no_ready_node_keeps_pending() {
+        let (mut o, reg) = setup();
+        o.apply(detector_spec("tinydet:v1", 1));
+        // edge node silent long enough to be Offline
+        let acts = o.reconcile(&reg, 10_000_000);
+        assert_eq!(acts.started, 0);
+        assert_eq!(o.running("detector"), 0);
+    }
+
+    #[test]
+    fn edge_keeps_reconciling_while_cloud_view_offline() {
+        // Offline autonomy: the *edge's own* registry still sees itself.
+        let (mut o, mut edge_reg) = setup();
+        o.apply(detector_spec("tinydet:v1", 1));
+        edge_reg.heartbeat(&NodeId::new("baoyun"), 10_000_000);
+        let acts = o.reconcile(&edge_reg, 10_000_001);
+        assert_eq!(acts.started, 1);
+    }
+
+    #[test]
+    fn scale_down_removes_pods() {
+        let (mut o, reg) = setup();
+        o.apply(detector_spec("tinydet:v1", 3));
+        o.reconcile(&reg, 0);
+        o.apply(detector_spec("tinydet:v1", 1));
+        let acts = o.reconcile(&reg, 100);
+        assert_eq!(acts.removed, 2);
+        assert_eq!(o.running("detector"), 1);
+    }
+
+    #[test]
+    fn deleted_app_pods_removed() {
+        let (mut o, reg) = setup();
+        o.apply(detector_spec("tinydet:v1", 2));
+        o.reconcile(&reg, 0);
+        o.delete("detector");
+        let acts = o.reconcile(&reg, 100);
+        assert_eq!(acts.removed, 2);
+        assert!(o.pods("detector").is_empty());
+    }
+
+    #[test]
+    fn cloud_placement_targets_cloud_nodes() {
+        let (mut o, reg) = setup();
+        o.apply(AppSpec {
+            name: "heavydet".into(),
+            image: "heavydet:v1".into(),
+            replicas: 1,
+            placement: Placement::Cloud,
+        });
+        o.reconcile(&reg, 0);
+        assert_eq!(o.pods("heavydet")[0].node, NodeId::new("ground-1"));
+    }
+}

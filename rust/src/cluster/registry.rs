@@ -1,0 +1,143 @@
+//! Node registry + heartbeat health tracking.
+//!
+//! CloudCore's view of the cluster: edge nodes (satellites) miss
+//! heartbeats whenever the link is down, transitioning Ready → NotReady →
+//! Offline.  The paper's EdgeCore keeps the node itself running; the
+//! registry is only the *cloud-side* belief, which is exactly what makes
+//! offline autonomy necessary.
+
+use std::collections::BTreeMap;
+
+use super::{Millis, NodeId, NodeRole};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NodeStatus {
+    Ready,
+    /// Heartbeats missed beyond the grace period.
+    NotReady,
+    /// Declared gone after the eviction period.
+    Offline,
+}
+
+#[derive(Clone, Debug)]
+pub struct NodeRecord {
+    pub id: NodeId,
+    pub role: NodeRole,
+    pub cpu_millicores: u32,
+    pub memory_mb: u32,
+    pub last_heartbeat: Millis,
+    pub registered_at: Millis,
+}
+
+pub struct Registry {
+    nodes: BTreeMap<NodeId, NodeRecord>,
+    /// Ready → NotReady after this silence.
+    pub grace_ms: Millis,
+    /// NotReady → Offline after this silence.
+    pub eviction_ms: Millis,
+}
+
+impl Registry {
+    pub fn new(grace_ms: Millis, eviction_ms: Millis) -> Registry {
+        assert!(eviction_ms >= grace_ms);
+        Registry { nodes: BTreeMap::new(), grace_ms, eviction_ms }
+    }
+
+    pub fn register(&mut self, id: NodeId, role: NodeRole, cpu_millicores: u32, memory_mb: u32, now: Millis) {
+        self.nodes.insert(
+            id.clone(),
+            NodeRecord { id, role, cpu_millicores, memory_mb, last_heartbeat: now, registered_at: now },
+        );
+    }
+
+    pub fn heartbeat(&mut self, id: &NodeId, now: Millis) -> bool {
+        match self.nodes.get_mut(id) {
+            Some(n) => {
+                n.last_heartbeat = now;
+                true
+            }
+            None => false,
+        }
+    }
+
+    pub fn status(&self, id: &NodeId, now: Millis) -> Option<NodeStatus> {
+        self.nodes.get(id).map(|n| {
+            let silence = now.saturating_sub(n.last_heartbeat);
+            if silence <= self.grace_ms {
+                NodeStatus::Ready
+            } else if silence <= self.eviction_ms {
+                NodeStatus::NotReady
+            } else {
+                NodeStatus::Offline
+            }
+        })
+    }
+
+    pub fn nodes(&self) -> impl Iterator<Item = &NodeRecord> {
+        self.nodes.values()
+    }
+
+    pub fn ready_nodes(&self, now: Millis) -> Vec<NodeId> {
+        self.nodes
+            .keys()
+            .filter(|id| self.status(id, now) == Some(NodeStatus::Ready))
+            .cloned()
+            .collect()
+    }
+
+    pub fn get(&self, id: &NodeId) -> Option<&NodeRecord> {
+        self.nodes.get(id)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn edge(name: &str) -> NodeId {
+        NodeId::new(name)
+    }
+
+    fn reg() -> Registry {
+        let mut r = Registry::new(10_000, 60_000);
+        r.register(edge("baoyun"), NodeRole::Edge, 4000, 8192, 0);
+        r.register(edge("ground"), NodeRole::Cloud, 64_000, 262_144, 0);
+        r
+    }
+
+    #[test]
+    fn fresh_node_is_ready() {
+        let r = reg();
+        assert_eq!(r.status(&edge("baoyun"), 5_000), Some(NodeStatus::Ready));
+    }
+
+    #[test]
+    fn silence_degrades_to_notready_then_offline() {
+        let r = reg();
+        assert_eq!(r.status(&edge("baoyun"), 30_000), Some(NodeStatus::NotReady));
+        assert_eq!(r.status(&edge("baoyun"), 100_000), Some(NodeStatus::Offline));
+    }
+
+    #[test]
+    fn heartbeat_restores_ready() {
+        let mut r = reg();
+        assert_eq!(r.status(&edge("baoyun"), 100_000), Some(NodeStatus::Offline));
+        assert!(r.heartbeat(&edge("baoyun"), 100_000));
+        assert_eq!(r.status(&edge("baoyun"), 100_001), Some(NodeStatus::Ready));
+    }
+
+    #[test]
+    fn unknown_node_heartbeat_rejected() {
+        let mut r = reg();
+        assert!(!r.heartbeat(&edge("ghost"), 0));
+        assert_eq!(r.status(&edge("ghost"), 0), None);
+    }
+
+    #[test]
+    fn ready_nodes_filters() {
+        let mut r = reg();
+        r.heartbeat(&edge("ground"), 50_000);
+        let ready = r.ready_nodes(55_000);
+        assert_eq!(ready, vec![edge("ground")]);
+    }
+}

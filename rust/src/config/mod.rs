@@ -1,0 +1,241 @@
+//! Config system: JSON files under `configs/` describing satellite
+//! platforms (Table 1), ground segment, link, policy, and workload.
+//!
+//! Everything an experiment varies is a config field, so benches and
+//! examples share one loader and the CLI can override single keys.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::link::LossProfile;
+use crate::util::json::Json;
+
+/// Satellite platform (Table 1 row).
+#[derive(Clone, Debug)]
+pub struct PlatformConfig {
+    pub name: String,
+    pub launch: String,
+    pub orbital_altitude_km: f64,
+    pub mass_kg: f64,
+    pub load_size_u: f64,
+    pub size_u: f64,
+    pub operating_system: String,
+    pub uplink_mbps: (f64, f64),
+    pub downlink_mbps: f64,
+}
+
+/// Collaborative-inference policy (§IV workflow).
+#[derive(Clone, Debug)]
+pub struct PolicyConfig {
+    /// Detection score below which a tile is offloaded to the ground.
+    pub confidence_threshold: f32,
+    /// Cloud white-fraction above which a tile is dropped as redundant.
+    pub redundancy_threshold: f32,
+    /// NMS IoU threshold.
+    pub nms_iou: f32,
+    /// Detection score threshold applied before NMS.
+    pub score_threshold: f32,
+    /// Onboard batch target (matches an exported artifact batch size).
+    pub batch_size: usize,
+}
+
+impl Default for PolicyConfig {
+    fn default() -> PolicyConfig {
+        PolicyConfig {
+            confidence_threshold: 0.90,
+            redundancy_threshold: 0.5,
+            nms_iou: 0.45,
+            score_threshold: 0.20,
+            batch_size: 8,
+        }
+    }
+}
+
+/// Full experiment config.
+#[derive(Clone, Debug)]
+pub struct Config {
+    pub platform: PlatformConfig,
+    pub policy: PolicyConfig,
+    /// Scene size in 64-px cells.
+    pub scene_cells: usize,
+    /// Fragment edge length in px for the splitter.
+    pub fragment_px: usize,
+    pub loss_profile: String,
+    pub seed: u64,
+}
+
+impl Config {
+    pub fn loss(&self) -> LossProfile {
+        match self.loss_profile.as_str() {
+            "weak" => LossProfile::weak(),
+            "makersat" => LossProfile::makersat_incident(),
+            _ => LossProfile::stable(),
+        }
+    }
+}
+
+impl Default for Config {
+    fn default() -> Config {
+        Config {
+            platform: baoyun_platform(),
+            policy: PolicyConfig::default(),
+            scene_cells: 8,
+            fragment_px: 64,
+            loss_profile: "stable".into(),
+            seed: 20231207, // Baoyun launch date
+        }
+    }
+}
+
+/// Table 1, Baoyun row.
+pub fn baoyun_platform() -> PlatformConfig {
+    PlatformConfig {
+        name: "Baoyun".into(),
+        launch: "2021-12-07".into(),
+        orbital_altitude_km: 500.0,
+        mass_kg: 20.0,
+        load_size_u: 0.25,
+        size_u: 12.0,
+        operating_system: "Ubuntu Server 20.04 arm".into(),
+        uplink_mbps: (0.1, 1.0),
+        downlink_mbps: 40.0,
+    }
+}
+
+/// Table 1, Chuangxingleishen row.
+pub fn chuangxingleishen_platform() -> PlatformConfig {
+    PlatformConfig {
+        name: "Chuangxingleishen".into(),
+        launch: "2022-02-27".into(),
+        orbital_altitude_km: 500.0,
+        mass_kg: 20.0,
+        load_size_u: 0.25,
+        size_u: 6.0,
+        operating_system: "Debian Buster with Raspberry Pi".into(),
+        uplink_mbps: (0.1, 1.0),
+        downlink_mbps: 40.0,
+    }
+}
+
+fn platform_from_json(j: &Json) -> Result<PlatformConfig> {
+    let s = |k: &str| -> Result<String> {
+        Ok(j.req(k)?.as_str().context(k.to_string())?.to_string())
+    };
+    let n = |k: &str| -> Result<f64> { j.req(k)?.as_f64().context(k.to_string()) };
+    let up = j.req("uplink_mbps")?.as_arr().context("uplink_mbps")?;
+    Ok(PlatformConfig {
+        name: s("name")?,
+        launch: s("launch")?,
+        orbital_altitude_km: n("orbital_altitude_km")?,
+        mass_kg: n("mass_kg")?,
+        load_size_u: n("load_size_u")?,
+        size_u: n("size_u")?,
+        operating_system: s("operating_system")?,
+        uplink_mbps: (
+            up[0].as_f64().context("uplink lo")?,
+            up[1].as_f64().context("uplink hi")?,
+        ),
+        downlink_mbps: n("downlink_mbps")?,
+    })
+}
+
+impl Config {
+    /// Load from a JSON file; missing sections fall back to defaults.
+    pub fn load(path: impl AsRef<Path>) -> Result<Config> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Config> {
+        let j = Json::parse(text).context("config json")?;
+        let mut cfg = Config::default();
+        if let Some(p) = j.get("platform") {
+            cfg.platform = platform_from_json(p)?;
+        }
+        if let Some(p) = j.get("policy") {
+            let f = |k: &str, d: f32| p.get(k).and_then(|v| v.as_f64()).map(|x| x as f32).unwrap_or(d);
+            cfg.policy = PolicyConfig {
+                confidence_threshold: f("confidence_threshold", cfg.policy.confidence_threshold),
+                redundancy_threshold: f("redundancy_threshold", cfg.policy.redundancy_threshold),
+                nms_iou: f("nms_iou", cfg.policy.nms_iou),
+                score_threshold: f("score_threshold", cfg.policy.score_threshold),
+                batch_size: p
+                    .get("batch_size")
+                    .and_then(|v| v.as_usize())
+                    .unwrap_or(cfg.policy.batch_size),
+            };
+        }
+        if let Some(v) = j.get("scene_cells").and_then(|v| v.as_usize()) {
+            cfg.scene_cells = v;
+        }
+        if let Some(v) = j.get("fragment_px").and_then(|v| v.as_usize()) {
+            cfg.fragment_px = v;
+        }
+        if let Some(v) = j.get("loss_profile").and_then(|v| v.as_str()) {
+            cfg.loss_profile = v.to_string();
+        }
+        if let Some(v) = j.get("seed").and_then(|v| v.as_f64()) {
+            cfg.seed = v as u64;
+        }
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_baoyun() {
+        let c = Config::default();
+        assert_eq!(c.platform.name, "Baoyun");
+        assert_eq!(c.platform.downlink_mbps, 40.0);
+    }
+
+    #[test]
+    fn parse_overrides() {
+        let c = Config::parse(
+            r#"{"policy": {"confidence_threshold": 0.6, "batch_size": 1},
+                "fragment_px": 32, "loss_profile": "weak", "seed": 7}"#,
+        )
+        .unwrap();
+        assert_eq!(c.policy.confidence_threshold, 0.6);
+        assert_eq!(c.policy.batch_size, 1);
+        assert_eq!(c.fragment_px, 32);
+        assert_eq!(c.seed, 7);
+        assert!((c.loss().loss_bad - LossProfile::weak().loss_bad).abs() < 1e-12);
+    }
+
+    #[test]
+    fn parse_full_platform() {
+        let c = Config::parse(
+            r#"{"platform": {"name": "X", "launch": "2022-01-01",
+                 "orbital_altitude_km": 550, "mass_kg": 10, "load_size_u": 0.5,
+                 "size_u": 6, "operating_system": "linux",
+                 "uplink_mbps": [0.1, 1.0], "downlink_mbps": 80}}"#,
+        )
+        .unwrap();
+        assert_eq!(c.platform.name, "X");
+        assert_eq!(c.platform.downlink_mbps, 80.0);
+    }
+
+    #[test]
+    fn repo_config_files_parse() {
+        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/configs");
+        for f in ["baoyun.json", "chuangxingleishen.json"] {
+            let p = std::path::Path::new(dir).join(f);
+            if p.exists() {
+                let c = Config::load(&p).unwrap_or_else(|e| panic!("{f}: {e}"));
+                assert_eq!(c.platform.downlink_mbps, 40.0);
+            }
+        }
+    }
+
+    #[test]
+    fn cxls_differs_from_baoyun_in_size() {
+        assert_eq!(baoyun_platform().size_u, 12.0);
+        assert_eq!(chuangxingleishen_platform().size_u, 6.0);
+    }
+}

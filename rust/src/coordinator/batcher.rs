@@ -1,0 +1,129 @@
+//! Dynamic batcher for onboard inference.
+//!
+//! The Pi-class payload amortizes per-invocation overhead by batching up
+//! to the largest exported artifact batch; a deadline bounds the latency
+//! a tile can sit in the queue (the vLLM-style trade-off, scaled down).
+
+use std::collections::VecDeque;
+
+use crate::data::Tile;
+
+pub struct Batcher {
+    queue: VecDeque<(Tile, f64)>, // (tile, enqueue time)
+    pub max_batch: usize,
+    /// Max seconds a tile may wait before the batch is forced out.
+    pub max_wait_s: f64,
+}
+
+impl Batcher {
+    pub fn new(max_batch: usize, max_wait_s: f64) -> Batcher {
+        assert!(max_batch >= 1);
+        Batcher { queue: VecDeque::new(), max_batch, max_wait_s }
+    }
+
+    pub fn push(&mut self, tile: Tile, now: f64) {
+        self.queue.push_back((tile, now));
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Pop a batch if (a) a full batch is available, or (b) the oldest
+    /// tile has waited past the deadline, or (c) `flush` is set.
+    /// Returns (tiles, queue_delays).
+    pub fn pop(&mut self, now: f64, flush: bool) -> Option<(Vec<Tile>, Vec<f64>)> {
+        if self.queue.is_empty() {
+            return None;
+        }
+        let oldest_wait = now - self.queue.front().unwrap().1;
+        if self.queue.len() >= self.max_batch || oldest_wait >= self.max_wait_s || flush {
+            let n = self.queue.len().min(self.max_batch);
+            let mut tiles = Vec::with_capacity(n);
+            let mut delays = Vec::with_capacity(n);
+            for _ in 0..n {
+                let (t, at) = self.queue.pop_front().unwrap();
+                tiles.push(t);
+                delays.push(now - at);
+            }
+            Some((tiles, delays))
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tile() -> Tile {
+        Tile { scene_id: 0, x0: 0, y0: 0, frag: 64, pixels: vec![0.0; 64 * 64 * 3], gt: vec![] }
+    }
+
+    #[test]
+    fn full_batch_pops_immediately() {
+        let mut b = Batcher::new(4, 10.0);
+        for _ in 0..4 {
+            b.push(tile(), 0.0);
+        }
+        let (tiles, _) = b.pop(0.0, false).unwrap();
+        assert_eq!(tiles.len(), 4);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn partial_batch_waits() {
+        let mut b = Batcher::new(4, 10.0);
+        b.push(tile(), 0.0);
+        assert!(b.pop(1.0, false).is_none());
+        assert_eq!(b.pending(), 1);
+    }
+
+    #[test]
+    fn deadline_forces_partial_batch() {
+        let mut b = Batcher::new(4, 10.0);
+        b.push(tile(), 0.0);
+        let (tiles, delays) = b.pop(11.0, false).unwrap();
+        assert_eq!(tiles.len(), 1);
+        assert!(delays[0] >= 10.0);
+    }
+
+    #[test]
+    fn flush_drains_regardless() {
+        let mut b = Batcher::new(4, 10.0);
+        b.push(tile(), 0.0);
+        b.push(tile(), 0.0);
+        let (tiles, _) = b.pop(0.1, true).unwrap();
+        assert_eq!(tiles.len(), 2);
+    }
+
+    #[test]
+    fn never_exceeds_max_batch() {
+        let mut b = Batcher::new(4, 10.0);
+        for _ in 0..9 {
+            b.push(tile(), 0.0);
+        }
+        let (t1, _) = b.pop(0.0, false).unwrap();
+        assert_eq!(t1.len(), 4);
+        assert_eq!(b.pending(), 5);
+        let (t2, _) = b.pop(0.0, false).unwrap();
+        assert_eq!(t2.len(), 4);
+        let (t3, _) = b.pop(0.0, true).unwrap();
+        assert_eq!(t3.len(), 1);
+    }
+
+    #[test]
+    fn fifo_order_preserved() {
+        let mut b = Batcher::new(2, 10.0);
+        let mut t1 = tile();
+        t1.scene_id = 1;
+        let mut t2 = tile();
+        t2.scene_id = 2;
+        b.push(t1, 0.0);
+        b.push(t2, 0.0);
+        let (tiles, _) = b.pop(0.0, false).unwrap();
+        assert_eq!(tiles[0].scene_id, 1);
+        assert_eq!(tiles[1].scene_id, 2);
+    }
+}

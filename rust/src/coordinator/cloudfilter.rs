@@ -1,0 +1,122 @@
+//! Onboard redundancy filter (paper §II: "80%-90% of raw data is invalid
+//! due to cloud cover … redundant information such as cloud cover area
+//! can be eliminated in advance").
+//!
+//! Thin wrapper over the CloudScore artifact: batches tiles through the
+//! kernel and thresholds the white-fraction statistic.
+
+use anyhow::Result;
+
+use crate::data::Tile;
+use crate::runtime::{Model, Runtime};
+
+/// Per-tile cloud statistics (mirrors the kernel output row).
+#[derive(Clone, Copy, Debug)]
+pub struct CloudStats {
+    pub mean_lum: f32,
+    pub var_lum: f32,
+    pub white_frac: f32,
+}
+
+pub struct CloudFilter<'rt> {
+    rt: &'rt Runtime,
+    /// white_frac above this ⇒ redundant.
+    pub threshold: f32,
+}
+
+impl<'rt> CloudFilter<'rt> {
+    pub fn new(rt: &'rt Runtime, threshold: f32) -> CloudFilter<'rt> {
+        CloudFilter { rt, threshold }
+    }
+
+    /// Score a batch of tiles (any count; internally padded).
+    pub fn score(&self, tiles: &[Tile]) -> Result<Vec<CloudStats>> {
+        let t = self.rt.manifest.tile;
+        let max_b = self.rt.max_batch();
+        let mut out = Vec::with_capacity(tiles.len());
+        for chunk in tiles.chunks(max_b) {
+            let mut input = Vec::with_capacity(chunk.len() * t * t * 3);
+            for tile in chunk {
+                input.extend_from_slice(&tile.pixels);
+            }
+            let rows = self.rt.execute(Model::CloudScore, chunk.len(), &input)?;
+            for r in rows.chunks_exact(3) {
+                out.push(CloudStats { mean_lum: r[0], var_lum: r[1], white_frac: r[2] });
+            }
+        }
+        Ok(out)
+    }
+
+    /// Partition tiles into (kept, redundant) preserving order.
+    pub fn filter(&self, tiles: Vec<Tile>) -> Result<(Vec<Tile>, Vec<Tile>)> {
+        let stats = self.score(&tiles)?;
+        let mut kept = Vec::new();
+        let mut redundant = Vec::new();
+        for (tile, s) in tiles.into_iter().zip(stats) {
+            if s.white_frac > self.threshold {
+                redundant.push(tile);
+            } else {
+                kept.push(tile);
+            }
+        }
+        Ok((kept, redundant))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{split_scene, SceneGen, Version};
+
+    fn rt() -> Option<Runtime> {
+        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+        if !std::path::Path::new(dir).join("manifest.json").exists() {
+            eprintln!("skipping: artifacts/ not built");
+            return None;
+        }
+        Some(Runtime::open(dir).unwrap())
+    }
+
+    #[test]
+    fn v1_filters_most_tiles() {
+        let Some(rt) = rt() else { return };
+        let f = CloudFilter::new(&rt, rt.manifest.redundant_white_frac);
+        let scene = SceneGen::new(42, Version::V1.spec(), 8, 8).capture();
+        let tiles = split_scene(&scene, 64);
+        let n = tiles.len();
+        let (kept, redundant) = f.filter(tiles).unwrap();
+        assert_eq!(kept.len() + redundant.len(), n);
+        let rate = redundant.len() as f64 / n as f64;
+        assert!(rate > 0.7, "v1 filter rate {rate}");
+    }
+
+    #[test]
+    fn v2_filters_less() {
+        let Some(rt) = rt() else { return };
+        let f = CloudFilter::new(&rt, rt.manifest.redundant_white_frac);
+        let scene = SceneGen::new(43, Version::V2.spec(), 8, 8).capture();
+        let n = 64;
+        let (_, redundant) = f.filter(split_scene(&scene, 64)).unwrap();
+        let rate = redundant.len() as f64 / n as f64;
+        assert!((0.1..0.75).contains(&rate), "v2 filter rate {rate}");
+    }
+
+    #[test]
+    fn scores_match_cpu_recompute() {
+        // kernel white_frac == straightforward rust recompute
+        let Some(rt) = rt() else { return };
+        let f = CloudFilter::new(&rt, 0.5);
+        let scene = SceneGen::new(44, Version::V2.spec(), 2, 2).capture();
+        let tiles = split_scene(&scene, 64);
+        let stats = f.score(&tiles).unwrap();
+        for (tile, s) in tiles.iter().zip(&stats) {
+            let white = tile
+                .pixels
+                .chunks_exact(3)
+                .filter(|p| p[0].min(p[1]).min(p[2]) > rt.manifest.white_thresh)
+                .count() as f32
+                / (64.0 * 64.0);
+            assert!((white - s.white_frac).abs() < 1e-4, "{white} vs {}", s.white_frac);
+        }
+    }
+}

@@ -1,0 +1,247 @@
+//! Contact-window-gated downlink queue.
+//!
+//! "The handover between them only occurs during the contact time between
+//! the satellite and the ground" (§IV).  Items (compact results or raw
+//! tiles) queue onboard; during each window the queue drains through the
+//! lossy [`crate::link::Link`], results first (they're small and
+//! time-critical), then images.
+
+use std::collections::VecDeque;
+
+use crate::link::Link;
+use crate::orbit::ContactWindow;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ItemKind {
+    /// Compact detection results (16 B per box + 8 B tile header).
+    Results,
+    /// Raw tile imagery for ground re-inference.
+    Image,
+}
+
+#[derive(Clone, Debug)]
+pub struct DownlinkItem {
+    pub kind: ItemKind,
+    pub bytes: u64,
+    /// Virtual time when the item became ready onboard.
+    pub ready_at: f64,
+    /// Tile tag for latency attribution.
+    pub tag: u64,
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DownlinkStats {
+    pub results_bytes: u64,
+    pub image_bytes: u64,
+    pub items_delivered: u64,
+    pub items_dropped: u64,
+    /// Sum + count of (delivery - ready) latencies for delivered items.
+    pub latency_sum_s: f64,
+    pub latency_count: u64,
+}
+
+impl DownlinkStats {
+    pub fn total_bytes(&self) -> u64 {
+        self.results_bytes + self.image_bytes
+    }
+
+    pub fn mean_latency_s(&self) -> f64 {
+        if self.latency_count == 0 {
+            0.0
+        } else {
+            self.latency_sum_s / self.latency_count as f64
+        }
+    }
+}
+
+/// Delivered item (handed to the ground segment).
+#[derive(Clone, Debug)]
+pub struct Delivered {
+    pub item: DownlinkItem,
+    pub at: f64,
+}
+
+pub struct DownlinkQueue {
+    results: VecDeque<DownlinkItem>,
+    images: VecDeque<DownlinkItem>,
+    pub stats: DownlinkStats,
+    /// Give up on an item after this many failed windows (paper's systems
+    /// drop stale observations rather than stall the queue).
+    pub max_window_failures: u32,
+    failures: u32,
+}
+
+impl DownlinkQueue {
+    pub fn new() -> DownlinkQueue {
+        DownlinkQueue {
+            results: VecDeque::new(),
+            images: VecDeque::new(),
+            stats: DownlinkStats::default(),
+            max_window_failures: 3,
+            failures: 0,
+        }
+    }
+
+    pub fn push(&mut self, item: DownlinkItem) {
+        match item.kind {
+            ItemKind::Results => self.results.push_back(item),
+            ItemKind::Image => self.images.push_back(item),
+        }
+    }
+
+    pub fn pending(&self) -> usize {
+        self.results.len() + self.images.len()
+    }
+
+    pub fn pending_bytes(&self) -> u64 {
+        self.results.iter().chain(self.images.iter()).map(|i| i.bytes).sum()
+    }
+
+    /// Drain through `link` during `window`.  Only items ready before the
+    /// window closes are eligible.  Returns delivered items.
+    pub fn drain_window(&mut self, link: &mut Link, window: &ContactWindow) -> Vec<Delivered> {
+        let mut now = window.aos;
+        let mut out = Vec::new();
+        loop {
+            // results before images; within a class, FIFO
+            let queue_is_results = !self.results.is_empty();
+            let item = if queue_is_results {
+                self.results.front()
+            } else {
+                self.images.front()
+            };
+            let Some(item) = item else { break };
+            if item.ready_at > window.los {
+                break; // not yet captured when this window closes
+            }
+            let start = now.max(item.ready_at);
+            let budget = window.los - start;
+            if budget <= 0.0 {
+                break;
+            }
+            let t = link.transmit(item.bytes, budget);
+            now = start + t.elapsed_s;
+            if t.completed {
+                let item = if queue_is_results {
+                    self.results.pop_front().unwrap()
+                } else {
+                    self.images.pop_front().unwrap()
+                };
+                match item.kind {
+                    ItemKind::Results => self.stats.results_bytes += item.bytes,
+                    ItemKind::Image => self.stats.image_bytes += item.bytes,
+                }
+                self.stats.items_delivered += 1;
+                self.stats.latency_sum_s += now - item.ready_at;
+                self.stats.latency_count += 1;
+                self.failures = 0;
+                out.push(Delivered { item, at: now });
+            } else {
+                // window exhausted or link hopeless for this item
+                self.failures += 1;
+                if self.failures >= self.max_window_failures {
+                    let item = if queue_is_results {
+                        self.results.pop_front().unwrap()
+                    } else {
+                        self.images.pop_front().unwrap()
+                    };
+                    let _ = item;
+                    self.stats.items_dropped += 1;
+                    self.failures = 0;
+                }
+                break;
+            }
+        }
+        out
+    }
+}
+
+impl Default for DownlinkQueue {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::link::{LinkConfig, LossProfile};
+
+    fn win(aos: f64, los: f64) -> ContactWindow {
+        ContactWindow { aos, los, max_elevation_deg: 45.0 }
+    }
+
+    fn link(seed: u64) -> Link {
+        Link::new(LinkConfig::downlink(LossProfile::stable()), seed)
+    }
+
+    fn item(kind: ItemKind, bytes: u64, ready: f64, tag: u64) -> DownlinkItem {
+        DownlinkItem { kind, bytes, ready_at: ready, tag }
+    }
+
+    #[test]
+    fn results_drain_before_images() {
+        let mut q = DownlinkQueue::new();
+        q.push(item(ItemKind::Image, 10_000, 0.0, 1));
+        q.push(item(ItemKind::Results, 100, 0.0, 2));
+        let got = q.drain_window(&mut link(1), &win(100.0, 200.0));
+        assert_eq!(got[0].item.tag, 2, "results first");
+        assert_eq!(got[1].item.tag, 1);
+    }
+
+    #[test]
+    fn item_not_ready_waits_for_next_window() {
+        let mut q = DownlinkQueue::new();
+        q.push(item(ItemKind::Results, 100, 500.0, 1));
+        let got = q.drain_window(&mut link(2), &win(100.0, 200.0));
+        assert!(got.is_empty());
+        assert_eq!(q.pending(), 1);
+        let got = q.drain_window(&mut link(2), &win(600.0, 700.0));
+        assert_eq!(got.len(), 1);
+        // latency counted from ready_at, not from push
+        assert!(got[0].at >= 600.0);
+    }
+
+    #[test]
+    fn window_capacity_limits_bytes() {
+        let mut q = DownlinkQueue::new();
+        // 40 Mbps * 1 s = 5 MB; queue 20 MB of images
+        for i in 0..20 {
+            q.push(item(ItemKind::Image, 1_000_000, 0.0, i));
+        }
+        let got = q.drain_window(&mut link(3), &win(0.0, 1.0));
+        assert!(got.len() < 20, "only part of the queue fits one window");
+        assert!(!got.is_empty());
+        assert!(q.pending() > 0);
+    }
+
+    #[test]
+    fn repeated_failures_drop_item() {
+        let mut q = DownlinkQueue::new();
+        q.push(item(ItemKind::Image, 100_000_000, 0.0, 1)); // never fits
+        for k in 0..3 {
+            q.drain_window(&mut link(4 + k), &win(k as f64 * 100.0, k as f64 * 100.0 + 1.0));
+        }
+        assert_eq!(q.pending(), 0);
+        assert_eq!(q.stats.items_dropped, 1);
+    }
+
+    #[test]
+    fn byte_accounting_by_kind() {
+        let mut q = DownlinkQueue::new();
+        q.push(item(ItemKind::Results, 160, 0.0, 1));
+        q.push(item(ItemKind::Image, 12_288, 0.0, 2));
+        q.drain_window(&mut link(5), &win(0.0, 60.0));
+        assert_eq!(q.stats.results_bytes, 160);
+        assert_eq!(q.stats.image_bytes, 12_288);
+        assert_eq!(q.stats.items_delivered, 2);
+    }
+
+    #[test]
+    fn latency_accumulates() {
+        let mut q = DownlinkQueue::new();
+        q.push(item(ItemKind::Results, 100, 0.0, 1));
+        q.drain_window(&mut link(6), &win(50.0, 60.0));
+        assert!(q.stats.mean_latency_s() >= 50.0);
+    }
+}

@@ -1,0 +1,38 @@
+//! The paper's system contribution: satellite-ground collaborative
+//! inference (Fig 5 workflow).
+//!
+//! Stages, each its own module:
+//!
+//! 1. capture      — `data::SceneGen` (the camera)
+//! 2. split        — `data::split_scene` (onboard image splitting, Fig 6)
+//! 3. [`cloudfilter`] — redundancy filter over the CloudScore artifact
+//! 4. [`batcher`]  — dynamic batching up to the exported batch size
+//! 5. onboard inference — TinyDet via [`crate::runtime`]
+//! 6. [`router`]   — confidence-threshold routing: results go straight
+//!                   down; low-confidence tiles are queued for image
+//!                   downlink and ground re-inference (HeavyDet)
+//! 7. [`downlink`] — contact-window-gated transfer over the lossy link
+//! 8. evaluation   — mAP of in-orbit vs collaborative + byte accounting
+//!
+//! [`pipeline`] wires the stages; everything above it is unit-testable
+//! without artifacts.
+
+pub mod batcher;
+pub mod cloudfilter;
+pub mod downlink;
+pub mod pipeline;
+pub mod router;
+
+pub use pipeline::{Pipeline, ScenarioResult};
+
+/// Where a tile ended up — the router's conservation invariant is that
+/// every split tile is assigned exactly one of these.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TileFate {
+    /// Dropped by the redundancy filter (cloud-covered).
+    Filtered,
+    /// Onboard detections were confident; only results downlinked.
+    OnboardFinal,
+    /// Low confidence; raw tile downlinked for ground inference.
+    Offloaded,
+}

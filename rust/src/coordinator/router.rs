@@ -1,0 +1,146 @@
+//! Confidence-threshold router (Fig 5 decision point).
+//!
+//! "If confidence threshold in the results is high, the processed results
+//! are sent back to the ground directly. However, if confidence threshold
+//! is low, the satellite transmits the images to the ground, where the
+//! high-precision detection model is used for exact detection."
+//!
+//! Decision statistic: the maximum detection score on the tile.  Empty
+//! tiles (no detections at all) are treated as *confidently empty* when
+//! the best objectness anywhere is very low — otherwise offloaded, since
+//! a weak model failing to see anything is exactly the uncertain case.
+
+use crate::detect::Detection;
+
+use super::TileFate;
+
+#[derive(Clone, Copy, Debug)]
+pub struct RouterPolicy {
+    /// Max-score at or above this ⇒ results are final onboard.
+    pub confidence_threshold: f32,
+    /// Best raw objectness below this on an empty tile ⇒ confidently
+    /// empty (no offload, nothing to send).
+    pub empty_objectness: f32,
+}
+
+impl Default for RouterPolicy {
+    fn default() -> RouterPolicy {
+        RouterPolicy { confidence_threshold: 0.90, empty_objectness: 0.25 }
+    }
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RouterStats {
+    pub onboard_final: u64,
+    pub offloaded: u64,
+    pub confidently_empty: u64,
+}
+
+impl RouterStats {
+    pub fn total(&self) -> u64 {
+        self.onboard_final + self.offloaded
+    }
+
+    pub fn offload_fraction(&self) -> f64 {
+        let t = self.total();
+        if t == 0 {
+            0.0
+        } else {
+            self.offloaded as f64 / t as f64
+        }
+    }
+}
+
+/// Route one tile given its NMS'd onboard detections and the best raw
+/// objectness over all grid cells.
+pub fn route(
+    policy: &RouterPolicy,
+    dets: &[Detection],
+    best_objectness: f32,
+    stats: &mut RouterStats,
+) -> TileFate {
+    let max_score = dets.iter().map(|d| d.score).fold(f32::MIN, f32::max);
+    if dets.is_empty() {
+        if best_objectness < policy.empty_objectness {
+            stats.onboard_final += 1;
+            stats.confidently_empty += 1;
+            TileFate::OnboardFinal
+        } else {
+            stats.offloaded += 1;
+            TileFate::Offloaded
+        }
+    } else if max_score >= policy.confidence_threshold {
+        stats.onboard_final += 1;
+        TileFate::OnboardFinal
+    } else {
+        stats.offloaded += 1;
+        TileFate::Offloaded
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn det(score: f32) -> Detection {
+        Detection { cx: 10.0, cy: 10.0, w: 8.0, h: 8.0, score, class: 0 }
+    }
+
+    fn policy() -> RouterPolicy {
+        RouterPolicy { confidence_threshold: 0.45, empty_objectness: 0.25 }
+    }
+
+    #[test]
+    fn confident_detection_stays_onboard() {
+        let mut s = RouterStats::default();
+        assert_eq!(route(&policy(), &[det(0.9)], 0.9, &mut s), TileFate::OnboardFinal);
+        assert_eq!(s.onboard_final, 1);
+    }
+
+    #[test]
+    fn weak_detection_offloads() {
+        let mut s = RouterStats::default();
+        assert_eq!(route(&policy(), &[det(0.3)], 0.3, &mut s), TileFate::Offloaded);
+        assert_eq!(s.offloaded, 1);
+    }
+
+    #[test]
+    fn confidently_empty_stays_onboard() {
+        let mut s = RouterStats::default();
+        assert_eq!(route(&policy(), &[], 0.05, &mut s), TileFate::OnboardFinal);
+        assert_eq!(s.confidently_empty, 1);
+    }
+
+    #[test]
+    fn uncertain_empty_offloads() {
+        let mut s = RouterStats::default();
+        assert_eq!(route(&policy(), &[], 0.4, &mut s), TileFate::Offloaded);
+    }
+
+    #[test]
+    fn threshold_is_inclusive() {
+        let mut s = RouterStats::default();
+        assert_eq!(route(&policy(), &[det(0.45)], 0.45, &mut s), TileFate::OnboardFinal);
+    }
+
+    #[test]
+    fn stats_conserve_tiles() {
+        let mut s = RouterStats::default();
+        for score in [0.1, 0.5, 0.9, 0.2] {
+            route(&policy(), &[det(score)], score, &mut s);
+        }
+        route(&policy(), &[], 0.01, &mut s);
+        assert_eq!(s.total(), 5);
+        assert_eq!(s.onboard_final + s.offloaded, 5);
+    }
+
+    #[test]
+    fn max_score_drives_decision() {
+        let mut s = RouterStats::default();
+        // one weak + one strong detection: the strong one wins
+        assert_eq!(
+            route(&policy(), &[det(0.2), det(0.8)], 0.8, &mut s),
+            TileFate::OnboardFinal
+        );
+    }
+}

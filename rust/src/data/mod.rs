@@ -1,0 +1,42 @@
+//! SynthDOTA — procedural Earth-Observation scenes (rust serving twin).
+//!
+//! Mirrors python/compile/data.py: same 8 class signatures, same cloud
+//! model, same calibration constants (via artifacts/manifest.json where it
+//! matters).  The rust side generates *scenes* (large images the satellite
+//! camera captures, as in DOTA) which the coordinator splits into tiles —
+//! the python side only ever generated training tiles.
+//!
+//! Determinism: everything flows from [`crate::util::rng::Rng`] seeds, so
+//! experiments are exactly reproducible.
+
+mod scene;
+mod tiler;
+
+pub use scene::{Scene, SceneGen, SceneSpec, GtBox, CLASS_NAMES, NUM_CLASSES};
+pub use tiler::{split_scene, Tile};
+
+/// A dataset "version" as in Fig 6: v1 ≈ 90% cloud-redundant, v2 ≈ 40%.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Version {
+    V1,
+    V2,
+}
+
+impl Version {
+    pub fn spec(self) -> SceneSpec {
+        match self {
+            // Mirrors python VERSIONS: v1 cloud_prob .93 / lam .9,
+            // v2 cloud_prob .45 / lam 1.6 (per-tile equivalents; scenes
+            // apply the probability per tile-sized region).
+            Version::V1 => SceneSpec { cloud_prob: 0.93, cloud_density: 1.0, objects_lam: 0.9 },
+            Version::V2 => SceneSpec { cloud_prob: 0.45, cloud_density: 0.9, objects_lam: 1.6 },
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Version::V1 => "v1",
+            Version::V2 => "v2",
+        }
+    }
+}

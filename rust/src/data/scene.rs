@@ -1,0 +1,329 @@
+//! Scene generation — the satellite camera.
+//!
+//! A scene is an H×W×3 f32 image assembled from a grid of 64-px cells,
+//! each drawn from the same distribution as the python training twin
+//! (python/compile/data.py): land/sea background, 0–4 objects from the 8
+//! class signatures, and (version-dependent) a dense cloud layer.
+
+use crate::util::rng::Rng;
+
+pub const CELL: usize = 64;
+pub const NUM_CLASSES: usize = 8;
+pub const CLASS_NAMES: [&str; NUM_CLASSES] = [
+    "plane", "ship", "storage-tank", "vehicle", "harbor", "bridge", "court", "pool",
+];
+
+/// Per-class signature mirrored from python CLASS_SPECS.
+struct ClassSpec {
+    shape: Shape,
+    rgb: [f32; 3],
+    size_lo: f32,
+    size_hi: f32,
+    aspect: f32,
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum Shape {
+    Cross,
+    Rect,
+    Disk,
+}
+
+const SPECS: [ClassSpec; NUM_CLASSES] = [
+    ClassSpec { shape: Shape::Cross, rgb: [0.92, 0.92, 0.95], size_lo: 10.0, size_hi: 18.0, aspect: 1.0 },
+    ClassSpec { shape: Shape::Rect, rgb: [0.13, 0.13, 0.18], size_lo: 5.0, size_hi: 7.0, aspect: 3.0 },
+    ClassSpec { shape: Shape::Disk, rgb: [0.78, 0.78, 0.74], size_lo: 8.0, size_hi: 14.0, aspect: 1.0 },
+    ClassSpec { shape: Shape::Rect, rgb: [0.75, 0.12, 0.10], size_lo: 4.0, size_hi: 7.0, aspect: 1.2 },
+    ClassSpec { shape: Shape::Rect, rgb: [0.35, 0.30, 0.28], size_lo: 6.0, size_hi: 9.0, aspect: 2.2 },
+    ClassSpec { shape: Shape::Rect, rgb: [0.55, 0.55, 0.58], size_lo: 3.0, size_hi: 4.0, aspect: 6.0 },
+    ClassSpec { shape: Shape::Rect, rgb: [0.15, 0.55, 0.20], size_lo: 10.0, size_hi: 16.0, aspect: 1.1 },
+    ClassSpec { shape: Shape::Disk, rgb: [0.15, 0.65, 0.80], size_lo: 8.0, size_hi: 14.0, aspect: 1.0 },
+];
+
+/// Ground-truth box in scene pixel coordinates.
+#[derive(Clone, Debug, PartialEq)]
+pub struct GtBox {
+    pub cx: f32,
+    pub cy: f32,
+    pub w: f32,
+    pub h: f32,
+    pub class: usize,
+}
+
+/// Generation knobs (per dataset version — see [`super::Version`]).
+#[derive(Clone, Copy, Debug)]
+pub struct SceneSpec {
+    /// Probability that a 64-px cell is hit by a cloud event.
+    pub cloud_prob: f64,
+    /// Cloud blob scale multiplier.
+    pub cloud_density: f32,
+    /// Poisson mean of objects per cell.
+    pub objects_lam: f64,
+}
+
+/// One captured scene.
+pub struct Scene {
+    pub width: usize,
+    pub height: usize,
+    /// Row-major H×W×3, f32 in [0, 1].
+    pub pixels: Vec<f32>,
+    pub boxes: Vec<GtBox>,
+    /// Scene id (capture counter) for tracing through the pipeline.
+    pub id: u64,
+}
+
+impl Scene {
+    #[inline]
+    pub fn px(&self, x: usize, y: usize) -> [f32; 3] {
+        let i = (y * self.width + x) * 3;
+        [self.pixels[i], self.pixels[i + 1], self.pixels[i + 2]]
+    }
+
+    #[inline]
+    fn px_mut(&mut self, x: usize, y: usize) -> &mut [f32] {
+        let i = (y * self.width + x) * 3;
+        &mut self.pixels[i..i + 3]
+    }
+
+    pub fn size_bytes(&self) -> u64 {
+        // The downlink models raw 8-bit RGB capture (3 bytes per pixel),
+        // which is what a bent-pipe satellite would transmit.
+        (self.width * self.height * 3) as u64
+    }
+}
+
+/// Scene generator: deterministic stream of captures.
+pub struct SceneGen {
+    rng: Rng,
+    pub spec: SceneSpec,
+    /// Scene dimensions in cells (e.g. 8×8 cells = 512×512 px).
+    pub cells_x: usize,
+    pub cells_y: usize,
+    counter: u64,
+}
+
+impl SceneGen {
+    pub fn new(seed: u64, spec: SceneSpec, cells_x: usize, cells_y: usize) -> SceneGen {
+        SceneGen { rng: Rng::new(seed), spec, cells_x, cells_y, counter: 0 }
+    }
+
+    /// Capture the next scene.
+    pub fn capture(&mut self) -> Scene {
+        let (w, h) = (self.cells_x * CELL, self.cells_y * CELL);
+        let id = self.counter;
+        self.counter += 1;
+        let mut scene = Scene { width: w, height: h, pixels: vec![0.0; w * h * 3], boxes: Vec::new(), id };
+        for cy in 0..self.cells_y {
+            for cx in 0..self.cells_x {
+                let mut cell_rng = self.rng.fork((cy * self.cells_x + cx) as u64 + 1);
+                draw_cell(&mut scene, cx * CELL, cy * CELL, &self.spec, &mut cell_rng);
+            }
+        }
+        scene
+    }
+}
+
+fn draw_cell(scene: &mut Scene, x0: usize, y0: usize, spec: &SceneSpec, rng: &mut Rng) {
+    draw_background(scene, x0, y0, rng);
+    let n = (rng.poisson(spec.objects_lam) as usize).min(4);
+    for _ in 0..n {
+        let class = rng.below(NUM_CLASSES as u64) as usize;
+        if let Some(b) = draw_object(scene, x0, y0, class, rng) {
+            scene.boxes.push(b);
+        }
+    }
+    if rng.bool(spec.cloud_prob) {
+        draw_cloud(scene, x0, y0, spec.cloud_density, rng);
+    }
+}
+
+fn draw_background(scene: &mut Scene, x0: usize, y0: usize, rng: &mut Rng) {
+    let base: [f32; 3] = if rng.bool(0.5) {
+        [0.32, 0.38, 0.22] // land
+    } else {
+        [0.10, 0.22, 0.38] // sea
+    };
+    let fy = rng.range_f32(0.02, 0.08);
+    let fx = rng.range_f32(0.02, 0.08);
+    let p0 = rng.range_f32(0.0, std::f32::consts::TAU);
+    let p1 = rng.range_f32(0.0, std::f32::consts::TAU);
+    for dy in 0..CELL {
+        for dx in 0..CELL {
+            let tex = 0.05 * ((fy * dy as f32 + p0).sin() + (fx * dx as f32 + p1).cos());
+            let px = scene.px_mut(x0 + dx, y0 + dy);
+            for c in 0..3 {
+                px[c] = (base[c] + tex + rng.normal_f32(0.0, 0.035)).clamp(0.0, 1.0);
+            }
+        }
+    }
+}
+
+fn draw_object(scene: &mut Scene, x0: usize, y0: usize, class: usize, rng: &mut Rng) -> Option<GtBox> {
+    let s = &SPECS[class];
+    let mut w = rng.range_f32(s.size_lo, s.size_hi);
+    let mut h = (w * s.aspect * rng.range_f32(0.8, 1.25)).clamp(3.0, CELL as f32 * 0.55);
+    if s.shape == Shape::Rect && rng.bool(0.5) {
+        std::mem::swap(&mut w, &mut h);
+    }
+    if w / 2.0 + 1.0 >= CELL as f32 - w / 2.0 - 1.0 || h / 2.0 + 1.0 >= CELL as f32 - h / 2.0 - 1.0 {
+        return None;
+    }
+    let cx = rng.range_f32(w / 2.0 + 1.0, CELL as f32 - w / 2.0 - 1.0);
+    let cy = rng.range_f32(h / 2.0 + 1.0, CELL as f32 - h / 2.0 - 1.0);
+    let color = [
+        s.rgb[0] + rng.normal_f32(0.0, 0.02),
+        s.rgb[1] + rng.normal_f32(0.0, 0.02),
+        s.rgb[2] + rng.normal_f32(0.0, 0.02),
+    ];
+    for dy in 0..CELL {
+        for dx in 0..CELL {
+            let (fx, fy) = (dx as f32, dy as f32);
+            let hit = match s.shape {
+                Shape::Disk => {
+                    let nx = (fx - cx) / (w / 2.0);
+                    let ny = (fy - cy) / (h / 2.0);
+                    nx * nx + ny * ny <= 1.0
+                }
+                Shape::Rect => (fx - cx).abs() <= w / 2.0 && (fy - cy).abs() <= h / 2.0,
+                Shape::Cross => {
+                    let arm = (w / 5.0).max(2.0);
+                    ((fx - cx).abs() <= w / 2.0 && (fy - cy).abs() <= arm / 2.0)
+                        || ((fx - cx).abs() <= arm / 2.0 && (fy - cy).abs() <= h / 2.0)
+                }
+            };
+            if hit {
+                let px = scene.px_mut(x0 + dx, y0 + dy);
+                for c in 0..3 {
+                    px[c] = (0.75 * color[c] + 0.25 * px[c]).clamp(0.0, 1.0);
+                }
+            }
+        }
+    }
+    Some(GtBox { cx: x0 as f32 + cx, cy: y0 as f32 + cy, w, h, class })
+}
+
+fn draw_cloud(scene: &mut Scene, x0: usize, y0: usize, density: f32, rng: &mut Rng) {
+    let t = CELL as f32;
+    let n_blobs = rng.range_usize(6, 12);
+    let blobs: Vec<(f32, f32, f32, f32, f32)> = (0..n_blobs)
+        .map(|_| {
+            (
+                rng.range_f32(-0.1 * t, 1.1 * t),
+                rng.range_f32(-0.1 * t, 1.1 * t),
+                rng.range_f32(t * 0.25, t * 0.7) * density,
+                rng.range_f32(t * 0.25, t * 0.7) * density,
+                rng.range_f32(1.0, 1.8),
+            )
+        })
+        .collect();
+    // Separable Gaussian: exp(-(nx²+ny²)) = exp(-nx²)·exp(-ny²).
+    // Precomputing per-blob row/column factors removes the exp() from the
+    // inner loop (perf pass: scene capture was the v1 pipeline bottleneck
+    // after batch-plan calibration — see EXPERIMENTS.md §Perf).
+    let col_f: Vec<[f32; CELL]> = blobs
+        .iter()
+        .map(|&(cx, _, sx, _, amp)| {
+            std::array::from_fn(|dx| {
+                let nx = (dx as f32 - cx) / sx;
+                amp * (-(nx * nx)).exp()
+            })
+        })
+        .collect();
+    let row_f: Vec<[f32; CELL]> = blobs
+        .iter()
+        .map(|&(_, cy, _, sy, _)| {
+            std::array::from_fn(|dy| {
+                let ny = (dy as f32 - cy) / sy;
+                (-(ny * ny)).exp()
+            })
+        })
+        .collect();
+    for dy in 0..CELL {
+        for dx in 0..CELL {
+            let mut alpha = 0.0f32;
+            for b in 0..blobs.len() {
+                alpha += col_f[b][dx] * row_f[b][dy];
+            }
+            let alpha = alpha.clamp(0.0, 1.0);
+            if alpha > 0.01 {
+                let cloud = (0.92 + rng.normal_f32(0.0, 0.02)).clamp(0.0, 1.0);
+                let px = scene.px_mut(x0 + dx, y0 + dy);
+                for c in px.iter_mut() {
+                    *c = alpha * cloud + (1.0 - alpha) * *c;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Version;
+
+    fn gen(version: Version, seed: u64) -> Scene {
+        SceneGen::new(seed, version.spec(), 4, 4).capture()
+    }
+
+    #[test]
+    fn scene_dimensions_and_range() {
+        let s = gen(Version::V2, 1);
+        assert_eq!(s.width, 256);
+        assert_eq!(s.height, 256);
+        assert_eq!(s.pixels.len(), 256 * 256 * 3);
+        assert!(s.pixels.iter().all(|&p| (0.0..=1.0).contains(&p)));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = gen(Version::V1, 7);
+        let b = gen(Version::V1, 7);
+        assert_eq!(a.pixels, b.pixels);
+        assert_eq!(a.boxes, b.boxes);
+    }
+
+    #[test]
+    fn successive_captures_differ() {
+        let mut g = SceneGen::new(3, Version::V2.spec(), 2, 2);
+        let a = g.capture();
+        let b = g.capture();
+        assert_eq!(a.id, 0);
+        assert_eq!(b.id, 1);
+        assert_ne!(a.pixels, b.pixels);
+    }
+
+    #[test]
+    fn boxes_inside_scene() {
+        let s = gen(Version::V2, 5);
+        for b in &s.boxes {
+            assert!(b.cx >= 0.0 && b.cx <= s.width as f32);
+            assert!(b.cy >= 0.0 && b.cy <= s.height as f32);
+            assert!(b.class < NUM_CLASSES);
+        }
+    }
+
+    #[test]
+    fn v2_has_objects() {
+        let s = gen(Version::V2, 11);
+        assert!(!s.boxes.is_empty(), "v2 scene should contain objects");
+    }
+
+    #[test]
+    fn v1_is_cloudier_than_v2() {
+        // Proxy: mean luminance is higher under heavy cloud.
+        let lum = |s: &Scene| s.pixels.iter().sum::<f32>() / s.pixels.len() as f32;
+        let mut v1 = 0.0;
+        let mut v2 = 0.0;
+        for seed in 0..8 {
+            v1 += lum(&gen(Version::V1, seed));
+            v2 += lum(&gen(Version::V2, seed));
+        }
+        assert!(v1 > v2, "v1 lum {v1} should exceed v2 {v2}");
+    }
+
+    #[test]
+    fn size_bytes_is_raw_rgb() {
+        let s = gen(Version::V2, 1);
+        assert_eq!(s.size_bytes(), 256 * 256 * 3);
+    }
+}

@@ -1,0 +1,187 @@
+//! Onboard image splitting (paper §IV, Fig 6).
+//!
+//! "We propose a strategy to split the images into smaller images before
+//! performing in-orbit inference … due to the limited computing power of
+//! the satellite, which cannot handle high-resolution images."
+//!
+//! `split_scene` cuts a captured scene into `frag`-pixel fragments and
+//! resamples each to the model's 64-px input (nearest-neighbor up, box
+//! filter down) — fragment size is the Fig 6 sweep variable.
+
+use super::scene::{GtBox, Scene};
+
+pub const MODEL_TILE: usize = 64;
+
+/// One fragment, resampled to the 64-px model input.
+#[derive(Clone)]
+pub struct Tile {
+    /// Scene id this tile came from.
+    pub scene_id: u64,
+    /// Fragment origin in scene pixels.
+    pub x0: usize,
+    pub y0: usize,
+    /// Fragment edge length in scene pixels (before resampling).
+    pub frag: usize,
+    /// 64×64×3 f32 model input.
+    pub pixels: Vec<f32>,
+    /// Ground truth whose centers fall inside the fragment, in *model
+    /// input* coordinates (scaled by 64/frag).
+    pub gt: Vec<GtBox>,
+}
+
+impl Tile {
+    /// Downlink cost of shipping this tile's raw imagery (8-bit RGB at the
+    /// original fragment resolution — what a bent-pipe would transmit).
+    pub fn raw_bytes(&self) -> u64 {
+        (self.frag * self.frag * 3) as u64
+    }
+
+    /// Scale from model coords back to scene coords.
+    pub fn to_scene_xy(&self, cx: f32, cy: f32) -> (f32, f32) {
+        let s = self.frag as f32 / MODEL_TILE as f32;
+        (self.x0 as f32 + cx * s, self.y0 as f32 + cy * s)
+    }
+}
+
+/// Split `scene` into frag×frag fragments (frag must divide the scene).
+pub fn split_scene(scene: &Scene, frag: usize) -> Vec<Tile> {
+    assert!(frag > 0 && scene.width % frag == 0 && scene.height % frag == 0,
+            "fragment {frag} must divide scene {}x{}", scene.width, scene.height);
+    let mut tiles = Vec::with_capacity((scene.width / frag) * (scene.height / frag));
+    for y0 in (0..scene.height).step_by(frag) {
+        for x0 in (0..scene.width).step_by(frag) {
+            tiles.push(cut(scene, x0, y0, frag));
+        }
+    }
+    tiles
+}
+
+fn cut(scene: &Scene, x0: usize, y0: usize, frag: usize) -> Tile {
+    let scale = frag as f32 / MODEL_TILE as f32;
+    let mut pixels = vec![0.0f32; MODEL_TILE * MODEL_TILE * 3];
+    if frag >= MODEL_TILE {
+        // Box-filter downsample (frag = k * 64 for integer k).
+        let k = frag / MODEL_TILE;
+        let norm = 1.0 / (k * k) as f32;
+        for ty in 0..MODEL_TILE {
+            for tx in 0..MODEL_TILE {
+                let mut acc = [0.0f32; 3];
+                for sy in 0..k {
+                    for sx in 0..k {
+                        let p = scene.px(x0 + tx * k + sx, y0 + ty * k + sy);
+                        for c in 0..3 {
+                            acc[c] += p[c];
+                        }
+                    }
+                }
+                let i = (ty * MODEL_TILE + tx) * 3;
+                for c in 0..3 {
+                    pixels[i + c] = acc[c] * norm;
+                }
+            }
+        }
+    } else {
+        // Nearest-neighbor upsample (frag = 64 / k).
+        let k = MODEL_TILE / frag;
+        for ty in 0..MODEL_TILE {
+            for tx in 0..MODEL_TILE {
+                let p = scene.px(x0 + tx / k, y0 + ty / k);
+                let i = (ty * MODEL_TILE + tx) * 3;
+                pixels[i..i + 3].copy_from_slice(&p);
+            }
+        }
+    }
+    let gt = scene
+        .boxes
+        .iter()
+        .filter(|b| {
+            b.cx >= x0 as f32 && b.cx < (x0 + frag) as f32
+                && b.cy >= y0 as f32 && b.cy < (y0 + frag) as f32
+        })
+        .map(|b| GtBox {
+            cx: (b.cx - x0 as f32) / scale,
+            cy: (b.cy - y0 as f32) / scale,
+            w: b.w / scale,
+            h: b.h / scale,
+            class: b.class,
+        })
+        .collect();
+    Tile { scene_id: scene.id, x0, y0, frag, pixels, gt }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{SceneGen, Version};
+
+    fn scene() -> Scene {
+        SceneGen::new(9, Version::V2.spec(), 4, 4).capture() // 256x256
+    }
+
+    #[test]
+    fn tile_count_matches_fragment_size() {
+        let s = scene();
+        assert_eq!(split_scene(&s, 64).len(), 16);
+        assert_eq!(split_scene(&s, 32).len(), 64);
+        assert_eq!(split_scene(&s, 128).len(), 4);
+    }
+
+    #[test]
+    fn identity_fragment_copies_pixels() {
+        let s = scene();
+        let tiles = split_scene(&s, 64);
+        let t = &tiles[0];
+        assert_eq!(t.pixels.len(), 64 * 64 * 3);
+        let want = s.px(5, 7);
+        let i = (7 * 64 + 5) * 3;
+        assert_eq!(&t.pixels[i..i + 3], &want);
+    }
+
+    #[test]
+    fn gt_conservation_across_split() {
+        // Every scene GT box lands in exactly one tile, at every frag size.
+        let s = scene();
+        for frag in [32, 64, 128] {
+            let total: usize = split_scene(&s, frag).iter().map(|t| t.gt.len()).sum();
+            assert_eq!(total, s.boxes.len(), "frag={frag}");
+        }
+    }
+
+    #[test]
+    fn gt_coordinates_rescaled_to_model_input() {
+        let s = scene();
+        for frag in [32, 64, 128] {
+            for t in split_scene(&s, frag) {
+                for b in &t.gt {
+                    assert!(b.cx >= 0.0 && b.cx <= MODEL_TILE as f32, "frag={frag} cx={}", b.cx);
+                    assert!(b.cy >= 0.0 && b.cy <= MODEL_TILE as f32);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn to_scene_roundtrip() {
+        let s = scene();
+        let tiles = split_scene(&s, 128);
+        let t = &tiles[3];
+        let (sx, sy) = t.to_scene_xy(32.0, 32.0);
+        // center of model tile = center of fragment
+        assert_eq!(sx, t.x0 as f32 + 64.0);
+        assert_eq!(sy, t.y0 as f32 + 64.0);
+    }
+
+    #[test]
+    fn raw_bytes_scale_with_fragment() {
+        let s = scene();
+        assert_eq!(split_scene(&s, 32)[0].raw_bytes(), 32 * 32 * 3);
+        assert_eq!(split_scene(&s, 128)[0].raw_bytes(), 128 * 128 * 3);
+    }
+
+    #[test]
+    #[should_panic]
+    fn non_divisible_fragment_panics() {
+        let s = scene();
+        split_scene(&s, 48);
+    }
+}

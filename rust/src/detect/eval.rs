@@ -1,0 +1,232 @@
+//! mAP evaluation (PASCAL VOC all-point interpolation, IoU 0.5).
+//!
+//! The paper scores in-orbit vs collaborative inference with mAP over the
+//! DOTA classes (Fig 7).  The evaluator accumulates (detections, ground
+//! truth) pairs per image, then computes per-class AP and the mean.
+
+use std::collections::HashMap;
+
+use super::Detection;
+use crate::data::GtBox;
+
+/// Accumulates matched detections across many images.
+pub struct Evaluator {
+    iou_thresh: f32,
+    classes: usize,
+    /// per class: (score, is_true_positive)
+    records: Vec<Vec<(f32, bool)>>,
+    /// per class: number of ground-truth boxes
+    gt_counts: Vec<usize>,
+    images: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct MapReport {
+    pub map: f64,
+    pub per_class_ap: Vec<f64>,
+    pub images: usize,
+    pub gt_total: usize,
+    pub det_total: usize,
+}
+
+impl Evaluator {
+    pub fn new(classes: usize, iou_thresh: f32) -> Evaluator {
+        Evaluator {
+            iou_thresh,
+            classes,
+            records: vec![Vec::new(); classes],
+            gt_counts: vec![0; classes],
+            images: 0,
+        }
+    }
+
+    /// Add one image's detections + ground truth.  Greedy matching in
+    /// descending score order; each GT matches at most one detection.
+    pub fn add_image(&mut self, dets: &[Detection], gt: &[GtBox]) {
+        self.images += 1;
+        for g in gt {
+            self.gt_counts[g.class] += 1;
+        }
+        let mut order: Vec<usize> = (0..dets.len()).collect();
+        order.sort_by(|&a, &b| {
+            dets[b].score.partial_cmp(&dets[a].score).unwrap_or(std::cmp::Ordering::Equal)
+        });
+        let mut used = vec![false; gt.len()];
+        for &di in &order {
+            let d = &dets[di];
+            if d.class >= self.classes {
+                continue;
+            }
+            let mut best: Option<(usize, f32)> = None;
+            for (gi, g) in gt.iter().enumerate() {
+                if used[gi] || g.class != d.class {
+                    continue;
+                }
+                let iou = d.iou_gt(g);
+                if iou >= self.iou_thresh && best.map(|(_, b)| iou > b).unwrap_or(true) {
+                    best = Some((gi, iou));
+                }
+            }
+            match best {
+                Some((gi, _)) => {
+                    used[gi] = true;
+                    self.records[d.class].push((d.score, true));
+                }
+                None => self.records[d.class].push((d.score, false)),
+            }
+        }
+    }
+
+    pub fn report(&self) -> MapReport {
+        let mut aps = Vec::with_capacity(self.classes);
+        for c in 0..self.classes {
+            aps.push(average_precision(&self.records[c], self.gt_counts[c]));
+        }
+        // Mean over classes that appear in the ground truth (VOC style:
+        // absent classes don't dilute the mean).
+        let present: Vec<f64> = (0..self.classes)
+            .filter(|&c| self.gt_counts[c] > 0)
+            .map(|c| aps[c])
+            .collect();
+        let map = if present.is_empty() {
+            0.0
+        } else {
+            present.iter().sum::<f64>() / present.len() as f64
+        };
+        MapReport {
+            map,
+            per_class_ap: aps,
+            images: self.images,
+            gt_total: self.gt_counts.iter().sum(),
+            det_total: self.records.iter().map(|r| r.len()).sum(),
+        }
+    }
+}
+
+/// AP for one class given (score, tp) records and the GT count.
+/// All-point interpolation: area under the precision envelope.
+pub fn average_precision(records: &[(f32, bool)], gt_count: usize) -> f64 {
+    if gt_count == 0 {
+        return 0.0;
+    }
+    let mut recs: Vec<(f32, bool)> = records.to_vec();
+    recs.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap_or(std::cmp::Ordering::Equal));
+    let mut tp = 0usize;
+    let mut fp = 0usize;
+    let mut pr: Vec<(f64, f64)> = Vec::with_capacity(recs.len()); // (recall, precision)
+    for (_, is_tp) in recs {
+        if is_tp {
+            tp += 1;
+        } else {
+            fp += 1;
+        }
+        pr.push((tp as f64 / gt_count as f64, tp as f64 / (tp + fp) as f64));
+    }
+    // precision envelope (monotone non-increasing from the right)
+    let mut env = pr.clone();
+    for i in (0..env.len().saturating_sub(1)).rev() {
+        env[i].1 = env[i].1.max(env[i + 1].1);
+    }
+    let mut ap = 0.0;
+    let mut prev_r = 0.0;
+    for (r, p) in env {
+        ap += (r - prev_r).max(0.0) * p;
+        prev_r = r;
+    }
+    ap
+}
+
+/// Convenience one-shot: mAP of a single (dets, gt) set.
+pub fn map_score(per_image: &[(Vec<Detection>, Vec<GtBox>)], classes: usize, iou: f32) -> f64 {
+    let mut ev = Evaluator::new(classes, iou);
+    for (dets, gt) in per_image {
+        ev.add_image(dets, gt);
+    }
+    ev.report().map
+}
+
+#[allow(dead_code)]
+fn _type_check(_: HashMap<(), ()>) {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn det(cx: f32, cy: f32, score: f32, class: usize) -> Detection {
+        Detection { cx, cy, w: 8.0, h: 8.0, score, class }
+    }
+
+    fn gt(cx: f32, cy: f32, class: usize) -> GtBox {
+        GtBox { cx, cy, w: 8.0, h: 8.0, class }
+    }
+
+    #[test]
+    fn perfect_detection_ap_is_one() {
+        let mut ev = Evaluator::new(2, 0.5);
+        ev.add_image(&[det(10.0, 10.0, 0.9, 0)], &[gt(10.0, 10.0, 0)]);
+        let r = ev.report();
+        assert!((r.map - 1.0).abs() < 1e-9, "map {}", r.map);
+    }
+
+    #[test]
+    fn missed_gt_lowers_recall() {
+        let mut ev = Evaluator::new(1, 0.5);
+        ev.add_image(&[det(10.0, 10.0, 0.9, 0)], &[gt(10.0, 10.0, 0), gt(40.0, 40.0, 0)]);
+        let r = ev.report();
+        assert!((r.map - 0.5).abs() < 1e-9, "map {}", r.map);
+    }
+
+    #[test]
+    fn false_positive_lowers_precision() {
+        let mut ev = Evaluator::new(1, 0.5);
+        ev.add_image(
+            &[det(10.0, 10.0, 0.9, 0), det(40.0, 40.0, 0.95, 0)],
+            &[gt(10.0, 10.0, 0)],
+        );
+        let r = ev.report();
+        // envelope: the TP comes second at precision 1/2, recall 1
+        assert!((r.map - 0.5).abs() < 1e-9, "map {}", r.map);
+    }
+
+    #[test]
+    fn wrong_class_never_matches() {
+        let mut ev = Evaluator::new(2, 0.5);
+        ev.add_image(&[det(10.0, 10.0, 0.9, 1)], &[gt(10.0, 10.0, 0)]);
+        assert_eq!(ev.report().map, 0.0);
+    }
+
+    #[test]
+    fn one_gt_matches_at_most_once() {
+        let mut ev = Evaluator::new(1, 0.5);
+        ev.add_image(
+            &[det(10.0, 10.0, 0.9, 0), det(10.5, 10.0, 0.85, 0)],
+            &[gt(10.0, 10.0, 0)],
+        );
+        let r = ev.report();
+        // second det is a FP at full recall -> AP stays 1.0 under the
+        // envelope (precision drop occurs after recall 1.0).
+        assert!((r.map - 1.0).abs() < 1e-9);
+        assert_eq!(r.det_total, 2);
+    }
+
+    #[test]
+    fn absent_classes_dont_dilute() {
+        let mut ev = Evaluator::new(8, 0.5);
+        ev.add_image(&[det(10.0, 10.0, 0.9, 0)], &[gt(10.0, 10.0, 0)]);
+        assert!((ev.report().map - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ap_zero_when_no_gt() {
+        assert_eq!(average_precision(&[(0.9, false)], 0), 0.0);
+    }
+
+    #[test]
+    fn envelope_interpolation() {
+        // records: TP(0.9), FP(0.8), TP(0.7); gt=2
+        let ap = average_precision(&[(0.9, true), (0.8, false), (0.7, true)], 2);
+        // recalls: .5, .5, 1.0; precisions: 1, .5, .667; envelope: 1, .667, .667
+        let want = 0.5 * 1.0 + 0.5 * (2.0 / 3.0);
+        assert!((ap - want).abs() < 1e-9, "{ap} vs {want}");
+    }
+}

@@ -1,0 +1,134 @@
+//! Detection post-processing and evaluation.
+//!
+//! The AOT graphs emit decoded rows `[cx, cy, w, h, obj, p_cls0..]` per
+//! grid cell; this module turns them into detections (confidence
+//! threshold + class argmax + NMS) and scores them against ground truth
+//! with the paper's metric, mAP (mean average precision over classes,
+//! PASCAL-style all-point interpolation at IoU 0.5 — ref [30]).
+
+mod eval;
+mod nms;
+
+pub use eval::{average_precision, map_score, Evaluator, MapReport};
+pub use nms::nms;
+
+use crate::data::GtBox;
+
+/// One detection in tile/model coordinates.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Detection {
+    pub cx: f32,
+    pub cy: f32,
+    pub w: f32,
+    pub h: f32,
+    /// obj * best-class probability.
+    pub score: f32,
+    pub class: usize,
+}
+
+impl Detection {
+    pub fn iou(&self, other: &Detection) -> f32 {
+        iou_xywh(
+            (self.cx, self.cy, self.w, self.h),
+            (other.cx, other.cy, other.w, other.h),
+        )
+    }
+
+    pub fn iou_gt(&self, gt: &GtBox) -> f32 {
+        iou_xywh((self.cx, self.cy, self.w, self.h), (gt.cx, gt.cy, gt.w, gt.h))
+    }
+
+    /// Compact downlink encoding: the collaborative system returns
+    /// *results*, not imagery, for confident tiles.  16 bytes per box
+    /// (4×f32-quantized fields: cx, cy, w, h as u16 halves + score u8 +
+    /// class u8 + tile tag) — we model it as a flat 16 B.
+    pub const WIRE_BYTES: u64 = 16;
+}
+
+/// IoU of two (cx, cy, w, h) boxes.
+pub fn iou_xywh(a: (f32, f32, f32, f32), b: (f32, f32, f32, f32)) -> f32 {
+    let (ax0, ay0, ax1, ay1) = (a.0 - a.2 / 2.0, a.1 - a.3 / 2.0, a.0 + a.2 / 2.0, a.1 + a.3 / 2.0);
+    let (bx0, by0, bx1, by1) = (b.0 - b.2 / 2.0, b.1 - b.3 / 2.0, b.0 + b.2 / 2.0, b.1 + b.3 / 2.0);
+    let ix = (ax1.min(bx1) - ax0.max(bx0)).max(0.0);
+    let iy = (ay1.min(by1) - ay0.max(by0)).max(0.0);
+    let inter = ix * iy;
+    let union = (ax1 - ax0) * (ay1 - ay0) + (bx1 - bx0) * (by1 - by0) - inter;
+    if union <= 0.0 {
+        0.0
+    } else {
+        inter / union
+    }
+}
+
+/// Decode raw model rows for one image into thresholded detections.
+///
+/// `rows` is `G*G * head_d` f32s; `head_d = 5 + classes`.
+pub fn decode_rows(rows: &[f32], head_d: usize, conf_thresh: f32) -> Vec<Detection> {
+    assert_eq!(rows.len() % head_d, 0);
+    let classes = head_d - 5;
+    let mut dets = Vec::new();
+    for r in rows.chunks_exact(head_d) {
+        let obj = r[4];
+        if obj < conf_thresh {
+            continue; // cheap reject before argmax
+        }
+        let (mut best_c, mut best_p) = (0usize, f32::MIN);
+        for c in 0..classes {
+            if r[5 + c] > best_p {
+                best_p = r[5 + c];
+                best_c = c;
+            }
+        }
+        let score = obj * best_p;
+        if score >= conf_thresh {
+            dets.push(Detection { cx: r[0], cy: r[1], w: r[2], h: r[3], score, class: best_c });
+        }
+    }
+    dets
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn iou_identical_is_one() {
+        assert!((iou_xywh((10.0, 10.0, 4.0, 4.0), (10.0, 10.0, 4.0, 4.0)) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn iou_disjoint_is_zero() {
+        assert_eq!(iou_xywh((0.0, 0.0, 2.0, 2.0), (10.0, 10.0, 2.0, 2.0)), 0.0);
+    }
+
+    #[test]
+    fn iou_half_overlap() {
+        // two 2x2 boxes offset by 1 in x: inter 2, union 6
+        let v = iou_xywh((1.0, 1.0, 2.0, 2.0), (2.0, 1.0, 2.0, 2.0));
+        assert!((v - 2.0 / 6.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn decode_rows_filters_by_confidence() {
+        let head_d = 13;
+        let mut rows = vec![0.0f32; 2 * head_d];
+        // row 0: strong detection of class 3
+        rows[0..5].copy_from_slice(&[10.0, 12.0, 8.0, 8.0, 0.9]);
+        rows[5 + 3] = 0.8;
+        // row 1: weak
+        rows[head_d + 4] = 0.05;
+        let dets = decode_rows(&rows, head_d, 0.25);
+        assert_eq!(dets.len(), 1);
+        assert_eq!(dets[0].class, 3);
+        assert!((dets[0].score - 0.72).abs() < 1e-6);
+    }
+
+    #[test]
+    fn decode_rows_obj_gate_before_class() {
+        let head_d = 13;
+        let mut rows = vec![0.0f32; head_d];
+        rows[4] = 0.5;
+        rows[5] = 0.3; // score 0.15 < 0.25
+        assert!(decode_rows(&rows, head_d, 0.25).is_empty());
+    }
+}

@@ -1,0 +1,62 @@
+//! Greedy per-class non-maximum suppression.
+
+use super::Detection;
+
+/// Standard greedy NMS: sort by score desc, drop boxes overlapping a kept
+/// box of the *same class* above `iou_thresh`.  Returns kept detections
+/// sorted by descending score.
+pub fn nms(mut dets: Vec<Detection>, iou_thresh: f32) -> Vec<Detection> {
+    dets.sort_by(|a, b| b.score.partial_cmp(&a.score).unwrap_or(std::cmp::Ordering::Equal));
+    let mut kept: Vec<Detection> = Vec::with_capacity(dets.len());
+    'outer: for d in dets {
+        for k in &kept {
+            if k.class == d.class && k.iou(&d) > iou_thresh {
+                continue 'outer;
+            }
+        }
+        kept.push(d);
+    }
+    kept
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn det(cx: f32, score: f32, class: usize) -> Detection {
+        Detection { cx, cy: 10.0, w: 8.0, h: 8.0, score, class }
+    }
+
+    #[test]
+    fn suppresses_overlapping_same_class() {
+        let kept = nms(vec![det(10.0, 0.9, 0), det(11.0, 0.8, 0)], 0.5);
+        assert_eq!(kept.len(), 1);
+        assert_eq!(kept[0].score, 0.9);
+    }
+
+    #[test]
+    fn keeps_overlapping_different_class() {
+        let kept = nms(vec![det(10.0, 0.9, 0), det(11.0, 0.8, 1)], 0.5);
+        assert_eq!(kept.len(), 2);
+    }
+
+    #[test]
+    fn keeps_distant_same_class() {
+        let kept = nms(vec![det(10.0, 0.9, 0), det(40.0, 0.8, 0)], 0.5);
+        assert_eq!(kept.len(), 2);
+    }
+
+    #[test]
+    fn output_sorted_by_score() {
+        let kept = nms(vec![det(40.0, 0.5, 0), det(10.0, 0.9, 0), det(25.0, 0.7, 1)], 0.5);
+        let scores: Vec<f32> = kept.iter().map(|d| d.score).collect();
+        let mut sorted = scores.clone();
+        sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        assert_eq!(scores, sorted);
+    }
+
+    #[test]
+    fn empty_input_ok() {
+        assert!(nms(Vec::new(), 0.5).is_empty());
+    }
+}

@@ -1,0 +1,44 @@
+//! # tiansuan — space-ground collaborative intelligence, reproduced
+//!
+//! Rust L3 coordinator for the Tiansuan cloud-native-satellite case study
+//! (Wang et al., China Communications 2023).  The request path is pure
+//! rust: AOT-compiled JAX/Pallas detector graphs are loaded from
+//! `artifacts/*.hlo.txt` and executed through the PJRT C API ([`runtime`]);
+//! python never runs at serving time.
+//!
+//! Module map (see DESIGN.md for the paper-to-module index):
+//!
+//! * [`runtime`]   — PJRT client wrapper: load HLO text, execute, marshal.
+//! * [`data`]      — SynthDOTA procedural Earth-Observation scenes + tiler.
+//! * [`detect`]    — box decode post-processing, NMS, AP/mAP evaluation.
+//! * [`orbit`]     — Keplerian propagation and contact-window computation.
+//! * [`link`]      — space-ground link: rate limits, burst loss, ARQ.
+//! * [`energy`]    — Baoyun power model (Tables 2–3), duty-cycle integration.
+//! * [`cluster`]   — KubeEdge-like substrate: registry, metastore, message
+//!                   bus, orchestrator, edgemesh.
+//! * [`sedna`]     — collaborative-AI task layer: GlobalManager, workers,
+//!                   joint inference / federated / incremental learning.
+//! * [`coordinator`] — the paper's contribution: the satellite-ground
+//!                   collaborative inference pipeline (Fig 5).
+//! * [`telemetry`] — counters, gauges, histograms, report rendering.
+//! * [`config`]    — JSON config system + `configs/*.json` platform files.
+//! * [`util`]      — deterministic RNG, mini-JSON, CLI, bench harness,
+//!                   thread pool (offline substitutes for rand / serde /
+//!                   clap / criterion / tokio).
+
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod detect;
+pub mod energy;
+pub mod link;
+pub mod orbit;
+pub mod runtime;
+pub mod sedna;
+pub mod telemetry;
+pub mod util;
+// coordinator lands last (depends on everything above).
+
+/// Shared result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,215 @@
+//! Orbital mechanics substrate: Keplerian propagation + contact windows.
+//!
+//! The paper's handover "only occurs during the contact time between the
+//! satellite and the ground" (§IV).  The coordinator therefore needs
+//! satellite↔ground-station visibility as a function of time.  A circular
+//! Keplerian orbit at the Baoyun altitude (500 km, Table 1) reproduces
+//! window cadence and duration to minutes-level fidelity — sufficient
+//! because the offload policy only observes windows + rates (DESIGN.md
+//! substitution table).
+
+mod window;
+
+pub use window::{contact_windows, ContactWindow};
+
+/// Earth constants (km, s).
+pub const EARTH_RADIUS_KM: f64 = 6371.0;
+pub const MU_KM3_S2: f64 = 398_600.441_8;
+pub const EARTH_ROT_RAD_S: f64 = 7.292_115_9e-5;
+
+/// Circular-orbit satellite.
+#[derive(Clone, Debug)]
+pub struct Satellite {
+    pub name: String,
+    /// Orbit altitude above mean Earth radius, km (Table 1: 500±50).
+    pub altitude_km: f64,
+    /// Inclination, radians (SSO ≈ 97.4°).
+    pub inclination_rad: f64,
+    /// Right ascension of ascending node, radians.
+    pub raan_rad: f64,
+    /// Phase (argument of latitude) at t = 0, radians.
+    pub phase_rad: f64,
+}
+
+impl Satellite {
+    pub fn semi_major_axis_km(&self) -> f64 {
+        EARTH_RADIUS_KM + self.altitude_km
+    }
+
+    /// Orbital period, seconds (≈ 5677 s at 500 km).
+    pub fn period_s(&self) -> f64 {
+        let a = self.semi_major_axis_km();
+        2.0 * std::f64::consts::PI * (a * a * a / MU_KM3_S2).sqrt()
+    }
+
+    /// ECI position at time t (seconds since epoch), km.
+    pub fn position_eci(&self, t: f64) -> [f64; 3] {
+        let a = self.semi_major_axis_km();
+        let n = (MU_KM3_S2 / (a * a * a)).sqrt(); // mean motion
+        let u = self.phase_rad + n * t; // argument of latitude
+        let (su, cu) = u.sin_cos();
+        let (si, ci) = self.inclination_rad.sin_cos();
+        let (so, co) = self.raan_rad.sin_cos();
+        // r = Rz(Ω) Rx(i) [a cos u, a sin u, 0]
+        [
+            a * (co * cu - so * su * ci),
+            a * (so * cu + co * su * ci),
+            a * (su * si),
+        ]
+    }
+}
+
+/// Ground station (paper: control center + downlink stations).
+#[derive(Clone, Debug)]
+pub struct GroundStation {
+    pub name: String,
+    pub lat_deg: f64,
+    pub lon_deg: f64,
+    /// Minimum usable elevation, degrees (terrain + RF mask).
+    pub min_elevation_deg: f64,
+}
+
+impl GroundStation {
+    /// ECI position at time t (Earth rotates under the orbit), km.
+    pub fn position_eci(&self, t: f64) -> [f64; 3] {
+        let lat = self.lat_deg.to_radians();
+        let lon = self.lon_deg.to_radians() + EARTH_ROT_RAD_S * t;
+        let (slat, clat) = lat.sin_cos();
+        let (slon, clon) = lon.sin_cos();
+        [
+            EARTH_RADIUS_KM * clat * clon,
+            EARTH_RADIUS_KM * clat * slon,
+            EARTH_RADIUS_KM * slat,
+        ]
+    }
+
+    /// Elevation angle of `sat` above this station's horizon at t, radians.
+    pub fn elevation_rad(&self, sat: &Satellite, t: f64) -> f64 {
+        let s = sat.position_eci(t);
+        let g = self.position_eci(t);
+        let rel = [s[0] - g[0], s[1] - g[1], s[2] - g[2]];
+        let g_norm = norm(&g);
+        let rel_norm = norm(&rel);
+        // elevation = 90° - angle(up, rel); up == g/|g| for a sphere
+        let cosz = dot(&g, &rel) / (g_norm * rel_norm);
+        std::f64::consts::FRAC_PI_2 - cosz.clamp(-1.0, 1.0).acos()
+    }
+
+    pub fn visible(&self, sat: &Satellite, t: f64) -> bool {
+        self.elevation_rad(sat, t) >= self.min_elevation_deg.to_radians()
+    }
+
+    /// Slant range to the satellite, km (drives free-space path loss and
+    /// thus the achievable downlink rate).
+    pub fn slant_range_km(&self, sat: &Satellite, t: f64) -> f64 {
+        let s = sat.position_eci(t);
+        let g = self.position_eci(t);
+        norm(&[s[0] - g[0], s[1] - g[1], s[2] - g[2]])
+    }
+}
+
+fn dot(a: &[f64; 3], b: &[f64; 3]) -> f64 {
+    a[0] * b[0] + a[1] * b[1] + a[2] * b[2]
+}
+
+fn norm(a: &[f64; 3]) -> f64 {
+    dot(a, a).sqrt()
+}
+
+/// The two Tiansuan experimental satellites (Table 1).
+pub fn baoyun() -> Satellite {
+    Satellite {
+        name: "Baoyun".into(),
+        altitude_km: 500.0,
+        inclination_rad: 97.4f64.to_radians(),
+        raan_rad: 0.0,
+        phase_rad: 0.0,
+    }
+}
+
+pub fn chuangxingleishen() -> Satellite {
+    Satellite {
+        name: "Chuangxingleishen".into(),
+        altitude_km: 500.0,
+        inclination_rad: 97.4f64.to_radians(),
+        raan_rad: 0.35,
+        phase_rad: std::f64::consts::PI,
+    }
+}
+
+/// BUPT-ish ground station (Beijing).
+pub fn beijing_station() -> GroundStation {
+    GroundStation { name: "Beijing".into(), lat_deg: 39.96, lon_deg: 116.35, min_elevation_deg: 10.0 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn period_at_500km_is_about_94_minutes() {
+        let p = baoyun().period_s();
+        assert!((5600.0..5760.0).contains(&p), "period {p}");
+    }
+
+    #[test]
+    fn orbit_radius_constant() {
+        let sat = baoyun();
+        for t in [0.0, 1000.0, 4321.0] {
+            let r = sat.position_eci(t);
+            let n = (r[0] * r[0] + r[1] * r[1] + r[2] * r[2]).sqrt();
+            assert!((n - sat.semi_major_axis_km()).abs() < 1e-6, "t={t} r={n}");
+        }
+    }
+
+    #[test]
+    fn orbit_returns_after_one_period() {
+        let sat = baoyun();
+        // Position repeats in the inertial frame after one period.
+        let a = sat.position_eci(0.0);
+        let b = sat.position_eci(sat.period_s());
+        for i in 0..3 {
+            assert!((a[i] - b[i]).abs() < 1.0, "axis {i}: {} vs {}", a[i], b[i]);
+        }
+    }
+
+    #[test]
+    fn station_on_surface() {
+        let gs = beijing_station();
+        let p = gs.position_eci(0.0);
+        let n = (p[0] * p[0] + p[1] * p[1] + p[2] * p[2]).sqrt();
+        assert!((n - EARTH_RADIUS_KM).abs() < 1e-6);
+    }
+
+    #[test]
+    fn elevation_bounded() {
+        let sat = baoyun();
+        let gs = beijing_station();
+        for i in 0..200 {
+            let e = gs.elevation_rad(&sat, i as f64 * 60.0);
+            assert!((-std::f64::consts::FRAC_PI_2..=std::f64::consts::FRAC_PI_2).contains(&e));
+        }
+    }
+
+    #[test]
+    fn satellite_sometimes_visible_over_a_day() {
+        let sat = baoyun();
+        let gs = beijing_station();
+        let visible = (0..8640).any(|i| gs.visible(&sat, i as f64 * 10.0));
+        assert!(visible, "no visibility in 24h is implausible for a 97° LEO");
+    }
+
+    #[test]
+    fn slant_range_at_horizon_exceeds_altitude() {
+        let sat = baoyun();
+        let gs = beijing_station();
+        // whenever visible, slant range is between altitude and ~2831 km
+        for i in 0..8640 {
+            let t = i as f64 * 10.0;
+            if gs.visible(&sat, t) {
+                let r = gs.slant_range_km(&sat, t);
+                assert!(r >= sat.altitude_km - 1.0 && r < 3200.0, "range {r}");
+            }
+        }
+    }
+}

@@ -1,0 +1,145 @@
+//! Contact-window computation: coarse scan + bisection refinement.
+
+use super::{GroundStation, Satellite};
+
+/// One AOS→LOS visibility interval.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ContactWindow {
+    /// Acquisition of signal, seconds since epoch.
+    pub aos: f64,
+    /// Loss of signal.
+    pub los: f64,
+    /// Peak elevation during the pass, degrees.
+    pub max_elevation_deg: f64,
+}
+
+impl ContactWindow {
+    pub fn duration_s(&self) -> f64 {
+        self.los - self.aos
+    }
+
+    pub fn contains(&self, t: f64) -> bool {
+        t >= self.aos && t < self.los
+    }
+}
+
+/// Compute all contact windows in [t0, t1].
+///
+/// Coarse scan at `step_s` (10 s catches every >20 s pass at LEO angular
+/// rates), then bisect each boundary to ±0.1 s.
+pub fn contact_windows(
+    sat: &Satellite,
+    gs: &GroundStation,
+    t0: f64,
+    t1: f64,
+    step_s: f64,
+) -> Vec<ContactWindow> {
+    assert!(t1 > t0 && step_s > 0.0);
+    let mut windows = Vec::new();
+    let mut t = t0;
+    let mut prev_vis = gs.visible(sat, t0);
+    let mut aos = if prev_vis { Some(t0) } else { None };
+    while t < t1 {
+        let tn = (t + step_s).min(t1);
+        let vis = gs.visible(sat, tn);
+        if vis && !prev_vis {
+            aos = Some(bisect(sat, gs, t, tn));
+        } else if !vis && prev_vis {
+            let los = bisect(sat, gs, t, tn);
+            if let Some(a) = aos.take() {
+                windows.push(finish(sat, gs, a, los));
+            }
+        }
+        prev_vis = vis;
+        t = tn;
+    }
+    if let Some(a) = aos {
+        windows.push(finish(sat, gs, a, t1));
+    }
+    windows
+}
+
+fn bisect(sat: &Satellite, gs: &GroundStation, mut lo: f64, mut hi: f64) -> f64 {
+    // invariant: visibility differs at lo and hi
+    let lo_vis = gs.visible(sat, lo);
+    while hi - lo > 0.1 {
+        let mid = 0.5 * (lo + hi);
+        if gs.visible(sat, mid) == lo_vis {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    0.5 * (lo + hi)
+}
+
+fn finish(sat: &Satellite, gs: &GroundStation, aos: f64, los: f64) -> ContactWindow {
+    let mut max_el = f64::MIN;
+    let n = 64;
+    for i in 0..=n {
+        let t = aos + (los - aos) * i as f64 / n as f64;
+        max_el = max_el.max(gs.elevation_rad(sat, t).to_degrees());
+    }
+    ContactWindow { aos, los, max_elevation_deg: max_el }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::orbit::{baoyun, beijing_station};
+
+    const DAY: f64 = 86_400.0;
+
+    fn day_windows() -> Vec<ContactWindow> {
+        contact_windows(&baoyun(), &beijing_station(), 0.0, DAY, 10.0)
+    }
+
+    #[test]
+    fn some_passes_per_day() {
+        let w = day_windows();
+        // A 97° 500 km orbit sees a mid-latitude station ~2-6 times/day.
+        assert!((1..=10).contains(&w.len()), "passes {}", w.len());
+    }
+
+    #[test]
+    fn windows_disjoint_and_ordered() {
+        let w = day_windows();
+        for pair in w.windows(2) {
+            assert!(pair[0].los <= pair[1].aos, "{pair:?}");
+        }
+        for win in &w {
+            assert!(win.duration_s() > 0.0);
+        }
+    }
+
+    #[test]
+    fn pass_durations_realistic() {
+        // LEO passes above a 10° mask last roughly 1-12 minutes.
+        for win in day_windows() {
+            assert!(
+                (20.0..800.0).contains(&win.duration_s()),
+                "duration {}",
+                win.duration_s()
+            );
+        }
+    }
+
+    #[test]
+    fn visibility_holds_inside_window() {
+        let sat = baoyun();
+        let gs = beijing_station();
+        for win in day_windows() {
+            let mid = 0.5 * (win.aos + win.los);
+            assert!(gs.visible(&sat, mid));
+            assert!(!gs.visible(&sat, win.aos - 5.0));
+            assert!(!gs.visible(&sat, win.los + 5.0));
+        }
+    }
+
+    #[test]
+    fn max_elevation_above_mask() {
+        for win in day_windows() {
+            assert!(win.max_elevation_deg >= 10.0 - 0.2, "{}", win.max_elevation_deg);
+        }
+    }
+}

@@ -1,0 +1,129 @@
+//! Typed view of `artifacts/manifest.json` (written by python/compile/aot.py).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct ModelInfo {
+    pub arch: String,
+    pub steps: usize,
+    pub final_loss_ema: f64,
+    pub param_count: usize,
+    /// batch size -> artifact file name
+    pub files: BTreeMap<usize, String>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub tile: usize,
+    pub grid: usize,
+    pub stride: f32,
+    pub anchor: (f32, f32),
+    pub classes: usize,
+    pub class_names: Vec<String>,
+    pub head_d: usize,
+    pub batch_sizes: Vec<usize>,
+    pub white_thresh: f32,
+    pub redundant_white_frac: f32,
+    pub fast: bool,
+    pub models: BTreeMap<String, ModelInfo>,
+}
+
+impl Manifest {
+    pub fn load(path: impl AsRef<Path>) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).context("parsing manifest.json")?;
+        let num = |k: &str| -> Result<f64> {
+            Ok(j.req(k)?.as_f64().ok_or_else(|| anyhow::anyhow!("{k} not a number"))?)
+        };
+        let anchor = j.req("anchor")?.as_arr().context("anchor")?;
+        let mut models = BTreeMap::new();
+        for (name, m) in j.req("models")?.as_obj().context("models")? {
+            let mut files = BTreeMap::new();
+            for (b, f) in m.req("files")?.as_obj().context("files")? {
+                files.insert(b.parse::<usize>()?, f.as_str().context("file")?.to_string());
+            }
+            models.insert(
+                name.clone(),
+                ModelInfo {
+                    arch: m.req("arch")?.as_str().context("arch")?.to_string(),
+                    steps: m.req("steps")?.as_usize().context("steps")?,
+                    final_loss_ema: m.req("final_loss_ema")?.as_f64().context("loss")?,
+                    param_count: m.req("param_count")?.as_usize().context("params")?,
+                    files,
+                },
+            );
+        }
+        Ok(Manifest {
+            tile: num("tile")? as usize,
+            grid: num("grid")? as usize,
+            stride: num("stride")? as f32,
+            anchor: (
+                anchor[0].as_f64().context("anchor[0]")? as f32,
+                anchor[1].as_f64().context("anchor[1]")? as f32,
+            ),
+            classes: num("classes")? as usize,
+            class_names: j
+                .req("class_names")?
+                .as_arr()
+                .context("class_names")?
+                .iter()
+                .map(|s| s.as_str().unwrap_or("?").to_string())
+                .collect(),
+            head_d: num("head_d")? as usize,
+            batch_sizes: j
+                .req("batch_sizes")?
+                .as_arr()
+                .context("batch_sizes")?
+                .iter()
+                .filter_map(|v| v.as_usize())
+                .collect(),
+            white_thresh: num("white_thresh")? as f32,
+            redundant_white_frac: num("redundant_white_frac")? as f32,
+            fast: j.get("fast").and_then(|v| v.as_bool()).unwrap_or(false),
+            models,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "tile": 64, "grid": 8, "stride": 8.0, "anchor": [16.0, 16.0],
+        "classes": 8, "class_names": ["a","b","c","d","e","f","g","h"],
+        "head_d": 13, "batch_sizes": [1, 8],
+        "white_thresh": 0.72, "redundant_white_frac": 0.5, "fast": false,
+        "models": {
+            "tiny": {"arch": "tiny", "steps": 260, "final_loss_ema": 1.5,
+                      "param_count": 14005,
+                      "files": {"1": "tinydet_b1.hlo.txt", "8": "tinydet_b8.hlo.txt"}}
+        }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.tile, 64);
+        assert_eq!(m.grid, 8);
+        assert_eq!(m.batch_sizes, vec![1, 8]);
+        assert_eq!(m.models["tiny"].param_count, 14005);
+        assert_eq!(m.models["tiny"].files[&8], "tinydet_b8.hlo.txt");
+        assert_eq!(m.class_names.len(), 8);
+    }
+
+    #[test]
+    fn missing_key_is_error() {
+        assert!(Manifest::parse("{}").is_err());
+    }
+}

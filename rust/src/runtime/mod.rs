@@ -1,0 +1,373 @@
+//! PJRT runtime: load AOT artifacts (HLO text) and execute them from the
+//! rust request path.
+//!
+//! Python/JAX runs only at build time (`make artifacts`); this module is
+//! everything the serving binary needs: a CPU PJRT client, one compiled
+//! executable per (model, batch-size) variant, literal marshalling, and
+//! batch padding so callers can submit ragged batches.
+//!
+//! Interchange is HLO **text** (see python/compile/aot.py): jax ≥ 0.5
+//! emits 64-bit-id protos that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids.
+
+mod manifest;
+
+pub use manifest::{Manifest, ModelInfo};
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Context, Result};
+
+/// Names of the detector artifacts (file stem prefix in artifacts/).
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum Model {
+    /// Onboard lightweight detector (YOLOv3-tiny stand-in).
+    Tiny,
+    /// Incrementally-retrained onboard detector (Sedna hot-swap target).
+    TinyV2,
+    /// Ground high-precision detector (YOLOv3 stand-in).
+    Heavy,
+    /// Redundancy (cloud-cover) filter.
+    CloudScore,
+}
+
+impl Model {
+    pub fn stem(self) -> &'static str {
+        match self {
+            Model::Tiny => "tinydet",
+            Model::TinyV2 => "tinydet_v2",
+            Model::Heavy => "heavydet",
+            Model::CloudScore => "cloudscore",
+        }
+    }
+
+    pub fn all() -> [Model; 4] {
+        [Model::Tiny, Model::TinyV2, Model::Heavy, Model::CloudScore]
+    }
+}
+
+struct LoadedExe {
+    exe: xla::PjRtLoadedExecutable,
+    out_cols: usize, // per-image f32s in the output
+}
+
+/// A PJRT CPU client plus lazily-compiled executables per (model, batch).
+///
+/// Thread-safe: executables compile under a mutex once, execute afterwards
+/// without contention (PJRT execution itself is internally synchronized).
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    exes: Mutex<HashMap<(Model, usize), &'static LoadedExe>>,
+    /// Measured per-call seconds per (model, batch), filled by
+    /// [`Runtime::calibrate`].  Perf finding (EXPERIMENTS.md §Perf): the
+    /// interpret-lowered b8 artifacts run *slower per tile* than b1 on
+    /// CPU-PJRT, so `execute` picks the cheapest plan instead of blindly
+    /// padding to the largest exported batch.
+    costs: Mutex<HashMap<(Model, usize), f64>>,
+}
+
+impl Runtime {
+    /// Open `artifacts/` (built by `make artifacts`).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(dir.join("manifest.json"))
+            .with_context(|| format!("loading manifest from {}", dir.display()))?;
+        let client = xla::PjRtClient::cpu().map_err(wrap_xla)?;
+        Ok(Runtime {
+            client,
+            dir,
+            manifest,
+            exes: Mutex::new(HashMap::new()),
+            costs: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Per-image output width: G*G*HEAD_D for detectors, 3 for cloudscore.
+    fn out_cols(&self, model: Model) -> usize {
+        match model {
+            Model::CloudScore => 3,
+            _ => self.manifest.grid * self.manifest.grid * self.manifest.head_d,
+        }
+    }
+
+    fn artifact_path(&self, model: Model, batch: usize) -> PathBuf {
+        self.dir.join(format!("{}_b{}.hlo.txt", model.stem(), batch))
+    }
+
+    /// Compile (once) and cache the executable for (model, batch).
+    fn exe(&self, model: Model, batch: usize) -> Result<&'static LoadedExe> {
+        if !self.manifest.batch_sizes.contains(&batch) {
+            return Err(anyhow!(
+                "batch {batch} not exported; available: {:?}",
+                self.manifest.batch_sizes
+            ));
+        }
+        let mut guard = self.exes.lock().unwrap();
+        if let Some(e) = guard.get(&(model, batch)) {
+            return Ok(e);
+        }
+        let path = self.artifact_path(model, batch);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(wrap_xla)
+        .with_context(|| format!("parsing {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(wrap_xla)?;
+        let loaded = Box::leak(Box::new(LoadedExe { exe, out_cols: self.out_cols(model) }));
+        guard.insert((model, batch), loaded);
+        Ok(loaded)
+    }
+
+    /// Eagerly compile every (model, batch) pair — serving startup path.
+    pub fn warmup(&self) -> Result<()> {
+        for model in Model::all() {
+            for &b in &self.manifest.batch_sizes.clone() {
+                self.exe(model, b)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Measure per-call cost of every (model, batch) variant so `execute`
+    /// can choose the cheapest batching plan.  Cheap (a few dummy calls);
+    /// run once at startup after [`Runtime::warmup`].
+    pub fn calibrate(&self) -> Result<()> {
+        let t = self.manifest.tile;
+        for model in Model::all() {
+            for &b in &self.manifest.batch_sizes.clone() {
+                let input = vec![0.5f32; b * t * t * 3];
+                self.execute_exact(model, b, &input)?; // warm
+                let reps = 3;
+                let t0 = std::time::Instant::now();
+                for _ in 0..reps {
+                    self.execute_exact(model, b, &input)?;
+                }
+                let per_call = t0.elapsed().as_secs_f64() / reps as f64;
+                self.costs.lock().unwrap().insert((model, b), per_call);
+            }
+        }
+        Ok(())
+    }
+
+    /// Cheapest sequence of exported batch sizes covering `n` tiles.
+    /// Uncalibrated fallback: one padded call at the smallest fitting (or
+    /// largest) batch — the pre-perf-pass behaviour.
+    fn plan(&self, model: Model, n: usize) -> Vec<usize> {
+        let sizes = &self.manifest.batch_sizes;
+        let costs = self.costs.lock().unwrap();
+        if !sizes.iter().all(|b| costs.contains_key(&(model, *b))) {
+            let b = sizes.iter().copied().filter(|&b| b >= n).min()
+                .unwrap_or_else(|| sizes.iter().copied().max().unwrap_or(1));
+            let mut plan = Vec::new();
+            let mut left = n;
+            loop {
+                plan.push(b);
+                if left <= b {
+                    return plan;
+                }
+                left -= b;
+            }
+        }
+        // DP over remaining tiles (n is small: <= a few hundred)
+        let mut best: Vec<(f64, Option<usize>)> = vec![(0.0, None); n + 1];
+        for left in 1..=n {
+            let mut b_cost = f64::INFINITY;
+            let mut b_choice = None;
+            for &b in sizes {
+                let c = costs[&(model, b)] + best[left.saturating_sub(b)].0;
+                if c < b_cost {
+                    b_cost = c;
+                    b_choice = Some(b);
+                }
+            }
+            best[left] = (b_cost, b_choice);
+        }
+        let mut plan = Vec::new();
+        let mut left = n;
+        while left > 0 {
+            let b = best[left].1.expect("plan");
+            plan.push(b);
+            left = left.saturating_sub(b);
+        }
+        plan
+    }
+
+    /// Execute `model` on exactly `batch` images (`batch * tile * tile * 3`
+    /// f32s, NHWC) and return the raw output rows
+    /// (`batch * out_cols` f32s).
+    pub fn execute_exact(&self, model: Model, batch: usize, input: &[f32]) -> Result<Vec<f32>> {
+        let t = self.manifest.tile;
+        let want = batch * t * t * 3;
+        if input.len() != want {
+            return Err(anyhow!("input len {} != {want}", input.len()));
+        }
+        let loaded: &LoadedExe = self.exe(model, batch)?;
+        let lit = xla::Literal::vec1(input)
+            .reshape(&[batch as i64, t as i64, t as i64, 3])
+            .map_err(wrap_xla)?;
+        let result = loaded.exe.execute::<xla::Literal>(&[lit]).map_err(wrap_xla)?;
+        let out = result[0][0].to_literal_sync().map_err(wrap_xla)?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = out.to_tuple1().map_err(wrap_xla)?;
+        let v = out.to_vec::<f32>().map_err(wrap_xla)?;
+        debug_assert_eq!(v.len(), batch * loaded.out_cols);
+        Ok(v)
+    }
+
+    /// Execute `model` on `n` images (any count), splitting/padding across
+    /// the exported batch variants along the cheapest calibrated plan.
+    pub fn execute(&self, model: Model, n: usize, input: &[f32]) -> Result<Vec<f32>> {
+        let t = self.manifest.tile;
+        let px = t * t * 3;
+        assert_eq!(input.len(), n * px, "input length mismatch");
+        let cols = self.out_cols(model);
+        let mut out = Vec::with_capacity(n * cols);
+        let mut done = 0usize;
+        for b in self.plan(model, n) {
+            let take = b.min(n - done);
+            if take == b {
+                out.extend_from_slice(&self.execute_exact(
+                    model,
+                    b,
+                    &input[done * px..(done + b) * px],
+                )?);
+            } else {
+                // pad the tail call
+                let mut padded = input[done * px..].to_vec();
+                padded.resize(b * px, 0.0);
+                let full = self.execute_exact(model, b, &padded)?;
+                out.extend_from_slice(&full[..take * cols]);
+            }
+            done += take;
+            if done >= n {
+                break;
+            }
+        }
+        debug_assert_eq!(out.len(), n * cols);
+        Ok(out)
+    }
+
+    /// Largest exported batch — the coordinator's batcher targets this.
+    pub fn max_batch(&self) -> usize {
+        self.manifest.batch_sizes.iter().copied().max().unwrap_or(1)
+    }
+}
+
+/// The xla crate's error type doesn't implement std::error::Error for all
+/// variants ergonomically; normalize through strings once, here.
+fn wrap_xla<E: std::fmt::Debug>(e: E) -> anyhow::Error {
+    anyhow!("xla: {e:?}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // These tests need `make artifacts` to have run; they are the rust half
+    // of the kernel-parity story (see also rust/tests/runtime_parity.rs).
+    fn artifacts() -> Option<Runtime> {
+        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+        if !std::path::Path::new(dir).join("manifest.json").exists() {
+            eprintln!("skipping: artifacts/ not built");
+            return None;
+        }
+        Some(Runtime::open(dir).expect("open artifacts"))
+    }
+
+    #[test]
+    fn manifest_loaded() {
+        let Some(rt) = artifacts() else { return };
+        assert_eq!(rt.manifest.tile, 64);
+        assert_eq!(rt.manifest.grid, 8);
+        assert!(rt.manifest.batch_sizes.contains(&1));
+    }
+
+    #[test]
+    fn cloudscore_white_image() {
+        let Some(rt) = artifacts() else { return };
+        let t = rt.manifest.tile;
+        let input = vec![1.0f32; t * t * 3];
+        let out = rt.execute(Model::CloudScore, 1, &input).expect("exec");
+        assert_eq!(out.len(), 3);
+        assert!((out[0] - 1.0).abs() < 1e-5, "mean lum {}", out[0]);
+        assert!(out[1].abs() < 1e-5, "variance {}", out[1]);
+        assert!((out[2] - 1.0).abs() < 1e-5, "white frac {}", out[2]);
+    }
+
+    #[test]
+    fn execute_rejects_unknown_batch() {
+        let Some(rt) = artifacts() else { return };
+        let t = rt.manifest.tile;
+        let err = rt.execute_exact(Model::Tiny, 3, &vec![0.0; 3 * t * t * 3]);
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn plan_covers_n_and_prefers_cheap_variant() {
+        let Some(rt) = artifacts() else { return };
+        // uncalibrated: single padded call
+        assert_eq!(rt.plan(Model::Tiny, 3).iter().sum::<usize>() >= 3, true);
+        rt.calibrate().unwrap();
+        for n in [1usize, 3, 8, 11, 40] {
+            let plan = rt.plan(Model::Tiny, n);
+            assert!(plan.iter().sum::<usize>() >= n, "plan {plan:?} for n={n}");
+            assert!(plan.iter().all(|b| rt.manifest.batch_sizes.contains(b)));
+        }
+        // execute still correct after calibration for an awkward n
+        let t = rt.manifest.tile;
+        let mut rng = crate::util::rng::Rng::new(2);
+        let input: Vec<f32> = (0..5 * t * t * 3).map(|_| rng.f32()).collect();
+        let cols = rt.manifest.grid * rt.manifest.grid * rt.manifest.head_d;
+        let batched = rt.execute(Model::Tiny, 5, &input).unwrap();
+        for i in 0..5 {
+            let one = rt
+                .execute_exact(Model::Tiny, 1, &input[i * t * t * 3..(i + 1) * t * t * 3])
+                .unwrap();
+            for (a, b) in batched[i * cols..(i + 1) * cols].iter().zip(&one) {
+                assert!((a - b).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn execute_handles_n_beyond_max_batch() {
+        let Some(rt) = artifacts() else { return };
+        let t = rt.manifest.tile;
+        let n = rt.max_batch() + 3;
+        let input = vec![0.25f32; n * t * t * 3];
+        let out = rt.execute(Model::CloudScore, n, &input).unwrap();
+        assert_eq!(out.len(), n * 3);
+    }
+
+    #[test]
+    fn padding_matches_exact() {
+        let Some(rt) = artifacts() else { return };
+        let t = rt.manifest.tile;
+        let n = 3; // pads to 8
+        let mut input = Vec::with_capacity(n * t * t * 3);
+        let mut rng = crate::util::rng::Rng::new(1);
+        for _ in 0..input.capacity() {
+            input.push(rng.f32());
+        }
+        let padded = rt.execute(Model::Tiny, n, &input).expect("padded");
+        // same tiles run through b1 one at a time
+        let cols = rt.manifest.grid * rt.manifest.grid * rt.manifest.head_d;
+        for i in 0..n {
+            let one = rt
+                .execute_exact(Model::Tiny, 1, &input[i * t * t * 3..(i + 1) * t * t * 3])
+                .expect("b1");
+            for (a, b) in padded[i * cols..(i + 1) * cols].iter().zip(&one) {
+                assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+            }
+        }
+    }
+}

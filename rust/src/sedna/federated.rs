@@ -1,0 +1,228 @@
+//! FederatedLearning protocol (paper §3.4).
+//!
+//! "The satellite trains the model and transmits the parameters (i.e.,
+//! training weights) to the cloud responsible for parameter aggregation."
+//!
+//! Real math, rust-native: each satellite worker holds a private,
+//! non-IID synthetic dataset and trains a logistic-regression classifier
+//! by local SGD; the cloud aggregates with FedAvg (weighted by sample
+//! count).  Raw data never leaves the workers — only weights move, which
+//! is the privacy property the paper motivates.  The uplink cost of one
+//! round is `dim * 4` bytes per worker (weights as f32), which examples
+//! account against the 0.1–1 Mbps uplink.
+
+use crate::util::rng::Rng;
+
+/// Logistic-regression model: w (dim) + bias.
+#[derive(Clone, Debug)]
+pub struct LinearModel {
+    pub w: Vec<f32>,
+    pub b: f32,
+}
+
+impl LinearModel {
+    pub fn zeros(dim: usize) -> LinearModel {
+        LinearModel { w: vec![0.0; dim], b: 0.0 }
+    }
+
+    pub fn predict(&self, x: &[f32]) -> f32 {
+        let z: f32 = self.w.iter().zip(x).map(|(w, x)| w * x).sum::<f32>() + self.b;
+        1.0 / (1.0 + (-z).exp())
+    }
+
+    pub fn wire_bytes(&self) -> u64 {
+        (self.w.len() as u64 + 1) * 4
+    }
+}
+
+/// A worker's private shard.
+pub struct Shard {
+    pub xs: Vec<Vec<f32>>,
+    pub ys: Vec<f32>,
+}
+
+impl Shard {
+    pub fn len(&self) -> usize {
+        self.ys.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ys.is_empty()
+    }
+}
+
+/// Generate `n` samples of a `dim`-D two-class problem.  `skew` shifts the
+/// class balance and feature means per worker — the non-IID-ness the
+/// paper attributes to "satellite data are inconsistently in spatial and
+/// temporal distribution".
+pub fn make_shard(seed: u64, n: usize, dim: usize, skew: f32) -> Shard {
+    let mut rng = Rng::new(seed);
+    // Common ground-truth separator shared by every worker's distribution.
+    let mut truth = Rng::new(424242);
+    let w_true: Vec<f32> = (0..dim).map(|_| truth.normal_f32(0.0, 1.0)).collect();
+    let mut xs = Vec::with_capacity(n);
+    let mut ys = Vec::with_capacity(n);
+    let p_pos = (0.5 + 0.35 * skew).clamp(0.1, 0.9) as f64;
+    for _ in 0..n {
+        let y = if rng.bool(p_pos) { 1.0f32 } else { 0.0 };
+        let x: Vec<f32> = w_true
+            .iter()
+            .map(|&wt| {
+                let mu = if y > 0.5 { 0.8 * wt } else { -0.8 * wt };
+                // per-worker covariate shift
+                mu + 0.4 * skew + rng.normal_f32(0.0, 1.0)
+            })
+            .collect();
+        xs.push(x);
+        ys.push(y);
+    }
+    Shard { xs, ys }
+}
+
+/// One worker's local training: `epochs` of SGD from the global weights.
+pub fn local_train(global: &LinearModel, shard: &Shard, epochs: usize, lr: f32, seed: u64) -> LinearModel {
+    let mut m = global.clone();
+    let mut rng = Rng::new(seed);
+    let n = shard.len();
+    let mut order: Vec<usize> = (0..n).collect();
+    for _ in 0..epochs {
+        rng.shuffle(&mut order);
+        for &i in &order {
+            let x = &shard.xs[i];
+            let err = m.predict(x) - shard.ys[i];
+            for (w, &xi) in m.w.iter_mut().zip(x) {
+                *w -= lr * err * xi;
+            }
+            m.b -= lr * err;
+        }
+    }
+    m
+}
+
+/// FedAvg: sample-count-weighted average of worker models.
+pub fn fedavg(models: &[(LinearModel, usize)]) -> LinearModel {
+    assert!(!models.is_empty());
+    let dim = models[0].0.w.len();
+    let total: f32 = models.iter().map(|(_, n)| *n as f32).sum();
+    let mut out = LinearModel::zeros(dim);
+    for (m, n) in models {
+        let a = *n as f32 / total;
+        for (o, w) in out.w.iter_mut().zip(&m.w) {
+            *o += a * w;
+        }
+        out.b += a * m.b;
+    }
+    out
+}
+
+pub fn accuracy(m: &LinearModel, shard: &Shard) -> f64 {
+    if shard.is_empty() {
+        return 0.0;
+    }
+    let correct = shard
+        .xs
+        .iter()
+        .zip(&shard.ys)
+        .filter(|(x, &y)| (m.predict(x) > 0.5) == (y > 0.5))
+        .count();
+    correct as f64 / shard.len() as f64
+}
+
+/// Run `rounds` of federated training over `n_workers` non-IID shards.
+/// Returns (model, per-round test accuracy, total uplink bytes).
+pub fn run_federated(
+    n_workers: usize,
+    rounds: usize,
+    samples_per_worker: usize,
+    dim: usize,
+    seed: u64,
+) -> (LinearModel, Vec<f64>, u64) {
+    let shards: Vec<Shard> = (0..n_workers)
+        .map(|i| {
+            let skew = if n_workers == 1 {
+                0.0
+            } else {
+                -1.0 + 2.0 * i as f32 / (n_workers - 1) as f32
+            };
+            make_shard(seed + i as u64, samples_per_worker, dim, skew)
+        })
+        .collect();
+    let test = make_shard(seed + 10_000, 2000, dim, 0.0);
+    let mut global = LinearModel::zeros(dim);
+    let mut acc_history = Vec::with_capacity(rounds);
+    let mut uplink_bytes = 0u64;
+    for r in 0..rounds {
+        let locals: Vec<(LinearModel, usize)> = shards
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                let m = local_train(&global, s, 2, 0.05, seed + 100 + (r * n_workers + i) as u64);
+                uplink_bytes += m.wire_bytes();
+                (m, s.len())
+            })
+            .collect();
+        global = fedavg(&locals);
+        acc_history.push(accuracy(&global, &test));
+    }
+    (global, acc_history, uplink_bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fedavg_weighted_mean() {
+        let a = LinearModel { w: vec![1.0, 0.0], b: 1.0 };
+        let b = LinearModel { w: vec![0.0, 1.0], b: 0.0 };
+        let m = fedavg(&[(a, 100), (b, 300)]);
+        assert!((m.w[0] - 0.25).abs() < 1e-6);
+        assert!((m.w[1] - 0.75).abs() < 1e-6);
+        assert!((m.b - 0.25).abs() < 1e-6);
+    }
+
+    #[test]
+    fn shards_are_non_iid() {
+        let a = make_shard(1, 500, 8, -1.0);
+        let b = make_shard(2, 500, 8, 1.0);
+        let pos_a = a.ys.iter().filter(|&&y| y > 0.5).count() as f64 / 500.0;
+        let pos_b = b.ys.iter().filter(|&&y| y > 0.5).count() as f64 / 500.0;
+        assert!(pos_b - pos_a > 0.3, "{pos_a} vs {pos_b}");
+    }
+
+    #[test]
+    fn federated_training_converges() {
+        let (_m, acc, _bytes) = run_federated(4, 12, 400, 8, 7);
+        let final_acc = *acc.last().unwrap();
+        assert!(final_acc > 0.85, "final accuracy {final_acc}");
+        // logistic regression can already converge in round 1 on this
+        // problem; require non-degradation rather than strict improvement
+        assert!(final_acc >= acc[0] - 0.02, "regressed: {acc:?}");
+    }
+
+    #[test]
+    fn federated_beats_single_skewed_worker() {
+        let (global, _, _) = run_federated(4, 12, 400, 8, 7);
+        // a single worker trained only on its skewed shard
+        let shard = make_shard(7, 400, 8, -1.0);
+        let solo = local_train(&LinearModel::zeros(8), &shard, 24, 0.05, 99);
+        let test = make_shard(7 + 10_000, 2000, 8, 0.0);
+        assert!(accuracy(&global, &test) > accuracy(&solo, &test));
+    }
+
+    #[test]
+    fn uplink_accounting() {
+        let (_, _, bytes) = run_federated(3, 5, 100, 8, 1);
+        // 3 workers * 5 rounds * (8+1)*4 bytes
+        assert_eq!(bytes, 3 * 5 * 36);
+    }
+
+    #[test]
+    fn only_weights_cross_the_wire() {
+        let m = LinearModel::zeros(16);
+        assert_eq!(m.wire_bytes(), 17 * 4);
+        // raw shard would be orders of magnitude larger
+        let shard_bytes = 400 * 16 * 4;
+        assert!(m.wire_bytes() * 100 < shard_bytes);
+    }
+}

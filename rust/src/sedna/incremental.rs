@@ -1,0 +1,154 @@
+//! IncrementalLearning protocol (paper §3.4).
+//!
+//! "Satellites continuously collect newly generated data and train models
+//! in the cloud. The satellite nodes regularly fine-tune the model from
+//! the cloud to improve accuracy."
+//!
+//! The heavy lifting (retraining) happened at build time: `tinydet_v2` is
+//! the same onboard architecture trained ~3x longer (python/compile/
+//! aot.py).  This module is the *protocol*: a drift monitor watches the
+//! onboard detector's confidence statistics; when quality degrades below
+//! a threshold, it requests a model update; the update "downlinks" the
+//! new weights over the uplink channel and hot-swaps the serving model.
+
+use crate::runtime::Model;
+
+/// Exponentially-weighted confidence monitor.
+pub struct DriftMonitor {
+    /// EMA of mean top-detection confidence per batch.
+    ema: f64,
+    alpha: f64,
+    /// Below this, request an update.
+    pub threshold: f64,
+    observations: u64,
+    /// Minimum observations before a trigger is considered valid.
+    pub min_obs: u64,
+}
+
+impl DriftMonitor {
+    pub fn new(threshold: f64) -> DriftMonitor {
+        DriftMonitor { ema: 1.0, alpha: 0.1, threshold, observations: 0, min_obs: 10 }
+    }
+
+    pub fn observe(&mut self, mean_confidence: f64) {
+        self.observations += 1;
+        self.ema = if self.observations == 1 {
+            mean_confidence
+        } else {
+            (1.0 - self.alpha) * self.ema + self.alpha * mean_confidence
+        };
+    }
+
+    pub fn ema(&self) -> f64 {
+        self.ema
+    }
+
+    pub fn should_update(&self) -> bool {
+        self.observations >= self.min_obs && self.ema < self.threshold
+    }
+}
+
+/// The onboard model slot: which artifact currently serves.
+pub struct ModelSlot {
+    pub current: Model,
+    pub version: u32,
+    pub updates_applied: u32,
+}
+
+impl ModelSlot {
+    pub fn new() -> ModelSlot {
+        ModelSlot { current: Model::Tiny, version: 1, updates_applied: 0 }
+    }
+
+    /// Hot-swap to the incrementally-trained artifact.  Returns the bytes
+    /// that must cross the uplink (the weight file size) so callers can
+    /// account link cost.
+    pub fn apply_update(&mut self, weight_bytes: u64) -> u64 {
+        self.current = Model::TinyV2;
+        self.version += 1;
+        self.updates_applied += 1;
+        weight_bytes
+    }
+}
+
+impl Default for ModelSlot {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// One protocol step: observe a batch, maybe trigger + apply an update.
+/// Returns Some(uplink_bytes) when an update fired.
+pub fn step(
+    monitor: &mut DriftMonitor,
+    slot: &mut ModelSlot,
+    mean_confidence: f64,
+    weight_bytes: u64,
+) -> Option<u64> {
+    monitor.observe(mean_confidence);
+    if slot.current == Model::Tiny && monitor.should_update() {
+        Some(slot.apply_update(weight_bytes))
+    } else {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn no_trigger_before_min_obs() {
+        let mut m = DriftMonitor::new(0.9);
+        for _ in 0..5 {
+            m.observe(0.1);
+        }
+        assert!(!m.should_update(), "needs min_obs");
+    }
+
+    #[test]
+    fn sustained_low_confidence_triggers() {
+        let mut m = DriftMonitor::new(0.5);
+        for _ in 0..20 {
+            m.observe(0.2);
+        }
+        assert!(m.should_update());
+    }
+
+    #[test]
+    fn high_confidence_never_triggers() {
+        let mut m = DriftMonitor::new(0.5);
+        for _ in 0..100 {
+            m.observe(0.8);
+        }
+        assert!(!m.should_update());
+    }
+
+    #[test]
+    fn ema_tracks_recent() {
+        let mut m = DriftMonitor::new(0.5);
+        for _ in 0..30 {
+            m.observe(0.9);
+        }
+        for _ in 0..60 {
+            m.observe(0.1);
+        }
+        assert!(m.ema() < 0.2);
+    }
+
+    #[test]
+    fn swap_applies_once() {
+        let mut mon = DriftMonitor::new(0.5);
+        let mut slot = ModelSlot::new();
+        let mut total_up = 0;
+        for _ in 0..50 {
+            if let Some(b) = step(&mut mon, &mut slot, 0.2, 57_930) {
+                total_up += b;
+            }
+        }
+        assert_eq!(slot.current, Model::TinyV2);
+        assert_eq!(slot.updates_applied, 1, "update must be idempotent");
+        assert_eq!(total_up, 57_930);
+        assert_eq!(slot.version, 2);
+    }
+}

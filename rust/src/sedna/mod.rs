@@ -1,0 +1,205 @@
+//! Sedna-like collaborative-AI task layer (paper §3.3–3.4).
+//!
+//! Components mirror the paper: **GlobalManager** (cloud-side edge-AI
+//! controller managing task CRDs), **LocalController** (edge-side process
+//! control + state sync), **Worker** (runs the AI task), and **Lib** (the
+//! API the application calls — here, the typed rust interfaces).
+//!
+//! Task kinds implemented: JointInference (drives the coordinator
+//! pipeline), FederatedLearning ([`federated`]: FedAvg over rust-native
+//! logistic-regression workers), IncrementalLearning ([`incremental`]:
+//! drift-triggered onboard model hot-swap).  LifelongLearning is modeled
+//! as IncrementalLearning with a persistent knowledge key in the
+//! metastore.
+
+pub mod federated;
+pub mod incremental;
+
+use std::collections::BTreeMap;
+
+use crate::cluster::NodeId;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TaskKind {
+    JointInference,
+    FederatedLearning,
+    IncrementalLearning,
+    LifelongLearning,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TaskPhase {
+    Pending,
+    Running,
+    Completed,
+    Failed,
+}
+
+/// A Sedna task CRD.
+#[derive(Clone, Debug)]
+pub struct TaskSpec {
+    pub name: String,
+    pub kind: TaskKind,
+    /// Worker placements (edge nodes and/or cloud nodes).
+    pub workers: Vec<NodeId>,
+    /// Free-form parameters (mirrors CRD spec fields).
+    pub params: BTreeMap<String, String>,
+}
+
+#[derive(Clone, Debug)]
+pub struct TaskStatus {
+    pub phase: TaskPhase,
+    /// Per-worker phase as last reported by LocalControllers.
+    pub worker_phase: BTreeMap<NodeId, TaskPhase>,
+    pub message: String,
+}
+
+/// Cloud-side controller: owns task specs + aggregated status.
+#[derive(Default)]
+pub struct GlobalManager {
+    tasks: BTreeMap<String, (TaskSpec, TaskStatus)>,
+}
+
+impl GlobalManager {
+    pub fn new() -> GlobalManager {
+        GlobalManager::default()
+    }
+
+    pub fn create(&mut self, spec: TaskSpec) -> anyhow::Result<()> {
+        if self.tasks.contains_key(&spec.name) {
+            anyhow::bail!("task {} already exists", spec.name);
+        }
+        let status = TaskStatus {
+            phase: TaskPhase::Pending,
+            worker_phase: spec.workers.iter().map(|w| (w.clone(), TaskPhase::Pending)).collect(),
+            message: String::new(),
+        };
+        self.tasks.insert(spec.name.clone(), (spec, status));
+        Ok(())
+    }
+
+    pub fn get(&self, name: &str) -> Option<(&TaskSpec, &TaskStatus)> {
+        self.tasks.get(name).map(|(s, st)| (s, st))
+    }
+
+    /// LocalController reports a worker-phase transition; the task phase
+    /// aggregates: any Failed -> Failed, all Completed -> Completed,
+    /// any Running -> Running.
+    pub fn report(&mut self, task: &str, worker: &NodeId, phase: TaskPhase) -> anyhow::Result<()> {
+        let (_, status) =
+            self.tasks.get_mut(task).ok_or_else(|| anyhow::anyhow!("unknown task {task}"))?;
+        if !status.worker_phase.contains_key(worker) {
+            anyhow::bail!("worker {worker} not in task {task}");
+        }
+        status.worker_phase.insert(worker.clone(), phase);
+        let phases: Vec<TaskPhase> = status.worker_phase.values().copied().collect();
+        status.phase = if phases.iter().any(|p| *p == TaskPhase::Failed) {
+            TaskPhase::Failed
+        } else if phases.iter().all(|p| *p == TaskPhase::Completed) {
+            TaskPhase::Completed
+        } else if phases.iter().any(|p| *p == TaskPhase::Running) {
+            TaskPhase::Running
+        } else {
+            TaskPhase::Pending
+        };
+        Ok(())
+    }
+
+    pub fn tasks(&self) -> impl Iterator<Item = (&TaskSpec, &TaskStatus)> {
+        self.tasks.values().map(|(s, st)| (s, st))
+    }
+}
+
+/// Edge-side controller: local state machine for the tasks this node runs.
+pub struct LocalController {
+    pub node: NodeId,
+    local: BTreeMap<String, TaskPhase>,
+}
+
+impl LocalController {
+    pub fn new(node: NodeId) -> LocalController {
+        LocalController { node, local: BTreeMap::new() }
+    }
+
+    pub fn start(&mut self, task: &str) -> TaskPhase {
+        self.local.insert(task.to_string(), TaskPhase::Running);
+        TaskPhase::Running
+    }
+
+    pub fn finish(&mut self, task: &str, ok: bool) -> TaskPhase {
+        let p = if ok { TaskPhase::Completed } else { TaskPhase::Failed };
+        self.local.insert(task.to_string(), p);
+        p
+    }
+
+    pub fn phase(&self, task: &str) -> Option<TaskPhase> {
+        self.local.get(task).copied()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(name: &str, workers: &[&str]) -> TaskSpec {
+        TaskSpec {
+            name: name.into(),
+            kind: TaskKind::JointInference,
+            workers: workers.iter().map(|w| NodeId::new(*w)).collect(),
+            params: BTreeMap::new(),
+        }
+    }
+
+    #[test]
+    fn create_and_get() {
+        let mut gm = GlobalManager::new();
+        gm.create(spec("ji", &["baoyun", "ground"])).unwrap();
+        let (s, st) = gm.get("ji").unwrap();
+        assert_eq!(s.kind, TaskKind::JointInference);
+        assert_eq!(st.phase, TaskPhase::Pending);
+    }
+
+    #[test]
+    fn duplicate_create_rejected() {
+        let mut gm = GlobalManager::new();
+        gm.create(spec("ji", &["baoyun"])).unwrap();
+        assert!(gm.create(spec("ji", &["baoyun"])).is_err());
+    }
+
+    #[test]
+    fn phase_aggregation() {
+        let mut gm = GlobalManager::new();
+        gm.create(spec("ji", &["baoyun", "ground"])).unwrap();
+        let (b, g) = (NodeId::new("baoyun"), NodeId::new("ground"));
+        gm.report("ji", &b, TaskPhase::Running).unwrap();
+        assert_eq!(gm.get("ji").unwrap().1.phase, TaskPhase::Running);
+        gm.report("ji", &b, TaskPhase::Completed).unwrap();
+        assert_eq!(gm.get("ji").unwrap().1.phase, TaskPhase::Pending); // g pending
+        gm.report("ji", &g, TaskPhase::Completed).unwrap();
+        assert_eq!(gm.get("ji").unwrap().1.phase, TaskPhase::Completed);
+    }
+
+    #[test]
+    fn any_failure_fails_task() {
+        let mut gm = GlobalManager::new();
+        gm.create(spec("ji", &["baoyun", "ground"])).unwrap();
+        gm.report("ji", &NodeId::new("ground"), TaskPhase::Failed).unwrap();
+        assert_eq!(gm.get("ji").unwrap().1.phase, TaskPhase::Failed);
+    }
+
+    #[test]
+    fn unknown_worker_report_rejected() {
+        let mut gm = GlobalManager::new();
+        gm.create(spec("ji", &["baoyun"])).unwrap();
+        assert!(gm.report("ji", &NodeId::new("ghost"), TaskPhase::Running).is_err());
+    }
+
+    #[test]
+    fn local_controller_state_machine() {
+        let mut lc = LocalController::new(NodeId::new("baoyun"));
+        assert_eq!(lc.phase("ji"), None);
+        assert_eq!(lc.start("ji"), TaskPhase::Running);
+        assert_eq!(lc.finish("ji", true), TaskPhase::Completed);
+        assert_eq!(lc.phase("ji"), Some(TaskPhase::Completed));
+    }
+}

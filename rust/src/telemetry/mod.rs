@@ -1,0 +1,223 @@
+//! Telemetry: counters, gauges, histograms + fixed-format report text.
+//!
+//! The paper's satellites "monitor and manage the operational status and
+//! applications" (§3.1); every pipeline stage and substrate reports here.
+//! Thread-safe via atomics/mutex so worker threads can record freely.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Monotone counter.
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Streaming histogram with fixed log-spaced buckets (µs-scale latencies
+/// up to minutes) plus exact count/sum for means.
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    bounds: Vec<f64>,
+    count: AtomicU64,
+    sum_micros: AtomicU64,
+    max_micros: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        // 1µs .. ~17min in 31 log2 buckets
+        let bounds: Vec<f64> = (0..31).map(|i| 1.0_f64 * 2f64.powi(i)).collect();
+        Histogram {
+            buckets: (0..bounds.len() + 1).map(|_| AtomicU64::new(0)).collect(),
+            bounds,
+            count: AtomicU64::new(0),
+            sum_micros: AtomicU64::new(0),
+            max_micros: AtomicU64::new(0),
+        }
+    }
+
+    pub fn observe_secs(&self, secs: f64) {
+        let us = (secs * 1e6).max(0.0);
+        let idx = self.bounds.partition_point(|&b| b < us);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_micros.fetch_add(us as u64, Ordering::Relaxed);
+        self.max_micros.fetch_max(us as u64, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_secs(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            0.0
+        } else {
+            self.sum_micros.load(Ordering::Relaxed) as f64 / c as f64 / 1e6
+        }
+    }
+
+    pub fn max_secs(&self) -> f64 {
+        self.max_micros.load(Ordering::Relaxed) as f64 / 1e6
+    }
+
+    /// Approximate quantile from bucket boundaries (upper bound).
+    pub fn quantile_secs(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * total as f64).ceil() as u64;
+        let mut acc = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            acc += b.load(Ordering::Relaxed);
+            if acc >= target {
+                let upper = self.bounds.get(i).copied().unwrap_or(f64::INFINITY);
+                return upper.min(self.max_secs() * 1e6) / 1e6;
+            }
+        }
+        self.max_secs()
+    }
+}
+
+/// Named metric registry.
+#[derive(Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, std::sync::Arc<Counter>>>,
+    histograms: Mutex<BTreeMap<String, std::sync::Arc<Histogram>>>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    pub fn counter(&self, name: &str) -> std::sync::Arc<Counter> {
+        self.counters
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
+    pub fn histogram(&self, name: &str) -> std::sync::Arc<Histogram> {
+        self.histograms
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_insert_with(|| std::sync::Arc::new(Histogram::new()))
+            .clone()
+    }
+
+    /// Render all metrics as stable, sorted text (for logs + tests).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for (name, c) in self.counters.lock().unwrap().iter() {
+            out.push_str(&format!("counter {name} {}\n", c.get()));
+        }
+        for (name, h) in self.histograms.lock().unwrap().iter() {
+            out.push_str(&format!(
+                "histogram {name} count={} mean={:.6}s p50={:.6}s p99={:.6}s max={:.6}s\n",
+                h.count(),
+                h.mean_secs(),
+                h.quantile_secs(0.5),
+                h.quantile_secs(0.99),
+                h.max_secs()
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_accumulates() {
+        let c = Counter::default();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+    }
+
+    #[test]
+    fn histogram_mean_and_max() {
+        let h = Histogram::new();
+        h.observe_secs(0.001);
+        h.observe_secs(0.003);
+        assert_eq!(h.count(), 2);
+        assert!((h.mean_secs() - 0.002).abs() < 1e-6);
+        assert!((h.max_secs() - 0.003).abs() < 1e-6);
+    }
+
+    #[test]
+    fn quantiles_monotone() {
+        let h = Histogram::new();
+        for i in 1..100 {
+            h.observe_secs(i as f64 * 0.001);
+        }
+        assert!(h.quantile_secs(0.5) <= h.quantile_secs(0.9));
+        assert!(h.quantile_secs(0.9) <= h.quantile_secs(0.99) + 1e-9);
+    }
+
+    #[test]
+    fn registry_same_name_same_counter() {
+        let r = Registry::new();
+        r.counter("x").inc();
+        r.counter("x").inc();
+        assert_eq!(r.counter("x").get(), 2);
+    }
+
+    #[test]
+    fn render_is_sorted_and_stable() {
+        let r = Registry::new();
+        r.counter("b").inc();
+        r.counter("a").inc();
+        r.histogram("lat").observe_secs(0.5);
+        let text = r.render();
+        let a_pos = text.find("counter a").unwrap();
+        let b_pos = text.find("counter b").unwrap();
+        assert!(a_pos < b_pos);
+        assert!(text.contains("histogram lat count=1"));
+    }
+
+    #[test]
+    fn concurrent_counters() {
+        let r = std::sync::Arc::new(Registry::new());
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let r = r.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..1000 {
+                    r.counter("hits").inc();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(r.counter("hits").get(), 8000);
+    }
+}

@@ -1,0 +1,99 @@
+//! Micro-benchmark harness (offline substitute for criterion).
+//!
+//! Used by the `harness = false` targets under `rust/benches/`.  Gives
+//! warmup, timed iterations, and robust summary stats (median + p10/p90),
+//! printed in a fixed format that EXPERIMENTS.md records.
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub iters: usize,
+    pub median: Duration,
+    pub p10: Duration,
+    pub p90: Duration,
+    pub mean: Duration,
+}
+
+impl Stats {
+    pub fn per_sec(&self) -> f64 {
+        1.0 / self.median.as_secs_f64()
+    }
+}
+
+/// Time `f` for at least `min_iters` iterations and ~`budget` wall time.
+pub fn run<F: FnMut()>(name: &str, min_iters: usize, budget: Duration, mut f: F) -> Stats {
+    // Warmup: a few runs so lazily-initialized state (PJRT executables,
+    // caches) doesn't pollute the first sample.
+    let warmups = 2.min(min_iters);
+    for _ in 0..warmups {
+        f();
+    }
+    let mut samples = Vec::new();
+    let t0 = Instant::now();
+    while samples.len() < min_iters || (t0.elapsed() < budget && samples.len() < 10_000) {
+        let s = Instant::now();
+        f();
+        samples.push(s.elapsed());
+    }
+    samples.sort();
+    let pick = |q: f64| samples[((samples.len() - 1) as f64 * q) as usize];
+    let mean = samples.iter().sum::<Duration>() / samples.len() as u32;
+    let stats = Stats {
+        iters: samples.len(),
+        median: pick(0.5),
+        p10: pick(0.1),
+        p90: pick(0.9),
+        mean,
+    };
+    println!(
+        "bench {name:<42} iters={:<5} median={:>12?} p10={:>12?} p90={:>12?} ({:.1}/s)",
+        stats.iters, stats.median, stats.p10, stats.p90, stats.per_sec()
+    );
+    stats
+}
+
+/// One-shot measurement for expensive end-to-end runs.
+pub fn once<T, F: FnOnce() -> T>(name: &str, f: F) -> (T, Duration) {
+    let t0 = Instant::now();
+    let out = f();
+    let dt = t0.elapsed();
+    println!("bench {name:<42} once            elapsed={dt:>12?}");
+    (out, dt)
+}
+
+/// Render a paper-style table row: fixed-width columns.
+pub fn table_row(cols: &[&str], widths: &[usize]) -> String {
+    let mut s = String::new();
+    for (c, w) in cols.iter().zip(widths) {
+        s.push_str(&format!("{:<width$}", c, width = w));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_collects_at_least_min_iters() {
+        let mut n = 0;
+        let stats = run("noop", 5, Duration::from_millis(1), || n += 1);
+        assert!(stats.iters >= 5);
+        assert!(n >= stats.iters); // warmup runs extra
+    }
+
+    #[test]
+    fn percentiles_ordered() {
+        let stats = run("sleepless", 10, Duration::from_millis(5), || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(stats.p10 <= stats.median && stats.median <= stats.p90);
+    }
+
+    #[test]
+    fn table_row_pads() {
+        let row = table_row(&["a", "bb"], &[4, 4]);
+        assert_eq!(row, "a   bb  ");
+    }
+}

@@ -1,0 +1,108 @@
+//! Tiny argv parser (offline substitute for clap).
+//!
+//! Grammar: `prog <subcommand> [--flag] [--key value] [positional...]`.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit token list (testable) — `tokens` excludes argv[0].
+    pub fn parse_from(tokens: &[String]) -> Args {
+        let mut a = Args::default();
+        let mut it = tokens.iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    a.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    a.options.insert(name.to_string(), it.next().unwrap().clone());
+                } else {
+                    a.flags.push(name.to_string());
+                }
+            } else if a.subcommand.is_none() && a.positional.is_empty() {
+                a.subcommand = Some(tok.clone());
+            } else {
+                a.positional.push(tok.clone());
+            }
+        }
+        a
+    }
+
+    pub fn parse() -> Args {
+        let tokens: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse_from(&tokens)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.opt(name).unwrap_or(default)
+    }
+
+    pub fn opt_usize(&self, name: &str, default: usize) -> usize {
+        self.opt(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn opt_u64(&self, name: &str, default: u64) -> u64 {
+        self.opt(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn opt_f64(&self, name: &str, default: f64) -> f64 {
+        self.opt(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_options_flags() {
+        // `--verbose` is last (or would need `=`-form): a bare `--name v`
+        // pair is always read as an option, the grammar has no flag
+        // registry.
+        let a = Args::parse_from(&toks("serve --port 8080 extra --verbose"));
+        assert_eq!(a.subcommand.as_deref(), Some("serve"));
+        assert_eq!(a.opt("port"), Some("8080"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = Args::parse_from(&toks("run --steps=50"));
+        assert_eq!(a.opt_usize("steps", 0), 50);
+    }
+
+    #[test]
+    fn typed_defaults() {
+        let a = Args::parse_from(&toks("run"));
+        assert_eq!(a.opt_usize("n", 7), 7);
+        assert_eq!(a.opt_f64("thr", 0.5), 0.5);
+        assert!(!a.flag("x"));
+    }
+
+    #[test]
+    fn flag_before_value_option() {
+        let a = Args::parse_from(&toks("x --fast --seed 9"));
+        assert!(a.flag("fast"));
+        assert_eq!(a.opt_u64("seed", 0), 9);
+    }
+}

@@ -1,0 +1,8 @@
+//! Small self-contained utilities standing in for crates that are not in
+//! the offline vendor set (rand, serde_json, clap, criterion, tokio).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod pool;
+pub mod rng;

@@ -1,0 +1,141 @@
+//! Failure-injection integration tests for the cluster substrate (P1 in
+//! DESIGN.md): the §3.2 claims under disconnection, the ref-[12] 80%%
+//! packet-loss incident, and pod crashes during an outage.
+
+use tiansuan::cluster::metastore::{EdgeReplica, MetaStore};
+use tiansuan::cluster::msgbus::Channel;
+use tiansuan::cluster::orchestrator::{AppSpec, Orchestrator, Placement};
+use tiansuan::cluster::registry::{NodeStatus, Registry};
+use tiansuan::cluster::{NodeId, NodeRole};
+use tiansuan::link::{Link, LinkConfig, LossProfile};
+
+fn two_node_cluster() -> (Registry, NodeId, NodeId) {
+    let mut reg = Registry::new(30_000, 300_000);
+    let edge = NodeId::new("baoyun");
+    let cloud = NodeId::new("ground");
+    reg.register(edge.clone(), NodeRole::Edge, 4000, 8192, 0);
+    reg.register(cloud.clone(), NodeRole::Cloud, 64_000, 262_144, 0);
+    (reg, edge, cloud)
+}
+
+#[test]
+fn full_outage_and_recovery_cycle() {
+    // A complete contact-gap cycle: connected -> 90 min silent -> contact.
+    let (mut reg, edge, _) = two_node_cluster();
+    let mut cloud_meta = MetaStore::new();
+    let mut edge_meta = EdgeReplica::new();
+    cloud_meta.put("app/detector/image", "tinydet:v1");
+    edge_meta.sync(&mut cloud_meta);
+
+    // outage begins
+    edge_meta.disconnect();
+    let outage_end = 90 * 60 * 1000u64;
+    assert_eq!(reg.status(&edge, outage_end), Some(NodeStatus::Offline));
+
+    // edge keeps serving from its snapshot and staging telemetry
+    assert_eq!(edge_meta.get("app/detector/image"), Some("tinydet:v1"));
+    for i in 0..50 {
+        edge_meta.put(None, &format!("telemetry/{i}"), "ok");
+    }
+    assert_eq!(edge_meta.staged_count(), 50);
+
+    // meanwhile the cloud rolls the app forward
+    cloud_meta.put("app/detector/image", "tinydet:v2");
+
+    // contact: heartbeat + bidirectional sync
+    assert!(reg.heartbeat(&edge, outage_end));
+    edge_meta.sync(&mut cloud_meta);
+    assert_eq!(reg.status(&edge, outage_end + 1), Some(NodeStatus::Ready));
+    assert_eq!(edge_meta.get("app/detector/image"), Some("tinydet:v2"));
+    assert_eq!(cloud_meta.get("telemetry/49"), Some("ok"));
+    assert_eq!(edge_meta.staged_count(), 0);
+}
+
+#[test]
+fn pods_survive_cloud_side_outage() {
+    // Cloud can't see the edge; the EDGE's own reconcile (its own
+    // registry view, kept fresh by local heartbeats) keeps pods running.
+    let (mut cloud_reg, edge, _) = two_node_cluster();
+    let mut edge_reg = Registry::new(30_000, 300_000);
+    edge_reg.register(edge.clone(), NodeRole::Edge, 4000, 8192, 0);
+
+    let mut orch = Orchestrator::new();
+    orch.apply(AppSpec {
+        name: "detector".into(),
+        image: "tinydet:v1".into(),
+        replicas: 1,
+        placement: Placement::Edge,
+    });
+    orch.reconcile(&edge_reg, 0);
+    assert_eq!(orch.running("detector"), 1);
+
+    // deep into the outage, the pod crashes (radiation upset)
+    let t = 60 * 60 * 1000u64;
+    assert_eq!(cloud_reg.status(&edge, t), Some(NodeStatus::Offline));
+    orch.fail_pod("detector", 0);
+    edge_reg.heartbeat(&edge, t); // local kubelet-equivalent is alive
+    let acts = orch.reconcile(&edge_reg, t + 1);
+    assert_eq!(acts.restarted, 1, "offline autonomy must restart the pod locally");
+    assert_eq!(orch.running("detector"), 1);
+    let _ = cloud_reg;
+}
+
+#[test]
+fn makersat_80pct_loss_still_delivers_messages() {
+    // ref [12]: a mission lost 80% of packets; §3.2 claims reliable
+    // delivery regardless.  ARQ + queueing must deliver everything
+    // (albeit slowly) as long as windows keep coming.
+    let mut ch = Channel::new();
+    let mut link = Link::new(LinkConfig::downlink(LossProfile::makersat_incident()), 99);
+    for i in 0..30 {
+        ch.send("telemetry", vec![0u8; 2_000], i);
+    }
+    let mut windows = 0;
+    while ch.pending() > 0 && windows < 500 {
+        ch.pump(&mut link, 2.0);
+        windows += 1;
+    }
+    assert_eq!(ch.pending(), 0, "undelivered after {windows} windows");
+    assert_eq!(ch.stats.delivered, 30);
+    assert!(link.stats.loss_rate() > 0.4, "incident profile should actually lose packets: {}", link.stats.loss_rate());
+    assert!(link.stats.retransmissions > 20);
+}
+
+#[test]
+fn rolling_update_waits_for_contact() {
+    // Image update applied cloud-side mid-outage reaches the edge's
+    // orchestrator only after metadata sync, then a reconcile swaps it.
+    let (_, _edge, _) = two_node_cluster();
+    let mut cloud_meta = MetaStore::new();
+    let mut edge_meta = EdgeReplica::new();
+    cloud_meta.put("app/detector/image", "tinydet:v1");
+    edge_meta.sync(&mut cloud_meta);
+    edge_meta.disconnect();
+
+    let mut edge_reg = Registry::new(30_000, 300_000);
+    edge_reg.register(NodeId::new("baoyun"), NodeRole::Edge, 4000, 8192, 0);
+    let mut orch = Orchestrator::new();
+    let spec_of = |edge_meta: &EdgeReplica| AppSpec {
+        name: "detector".into(),
+        image: edge_meta.get("app/detector/image").unwrap().to_string(),
+        replicas: 1,
+        placement: Placement::Edge,
+    };
+    orch.apply(spec_of(&edge_meta));
+    orch.reconcile(&edge_reg, 0);
+
+    cloud_meta.put("app/detector/image", "tinydet:v2");
+    // still offline: reconcile keeps v1
+    edge_reg.heartbeat(&NodeId::new("baoyun"), 1000);
+    orch.apply(spec_of(&edge_meta));
+    orch.reconcile(&edge_reg, 1001);
+    assert_eq!(orch.pods("detector")[0].image, "tinydet:v1");
+
+    // contact: sync + reconcile applies the update
+    edge_meta.sync(&mut cloud_meta);
+    orch.apply(spec_of(&edge_meta));
+    edge_reg.heartbeat(&NodeId::new("baoyun"), 2000);
+    let acts = orch.reconcile(&edge_reg, 2001);
+    assert_eq!(acts.updated, 1);
+    assert_eq!(orch.pods("detector")[0].image, "tinydet:v2");
+}

@@ -1,0 +1,129 @@
+//! End-to-end pipeline integration tests over the real artifacts:
+//! cross-cutting invariants that only hold when all layers compose.
+
+use tiansuan::config::Config;
+use tiansuan::coordinator::router::RouterStats;
+use tiansuan::coordinator::{Pipeline, TileFate};
+use tiansuan::data::{SceneGen, Version};
+use tiansuan::runtime::{Model, Runtime};
+
+fn rt() -> Option<Runtime> {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    if !std::path::Path::new(dir).join("manifest.json").exists() {
+        eprintln!("skipping: artifacts/ not built");
+        return None;
+    }
+    Some(Runtime::open(dir).unwrap())
+}
+
+fn small_cfg() -> Config {
+    let mut cfg = Config::default();
+    cfg.scene_cells = 4;
+    cfg
+}
+
+#[test]
+fn every_offloaded_tile_gets_ground_detections() {
+    let Some(rt) = rt() else { return };
+    let p = Pipeline::new(&rt, small_cfg());
+    let mut stats = RouterStats::default();
+    let mut gen = SceneGen::new(77, Version::V2.spec(), 4, 4);
+    for _ in 0..3 {
+        let scene = gen.capture();
+        let (processed, _, _) = p.process_scene(&scene, &mut stats).unwrap();
+        for t in &processed {
+            match t.fate {
+                TileFate::Offloaded => assert!(t.ground_dets.is_some()),
+                _ => assert!(t.ground_dets.is_none()),
+            }
+        }
+    }
+}
+
+#[test]
+fn higher_confidence_threshold_offloads_more() {
+    let Some(rt) = rt() else { return };
+    let mut lo = small_cfg();
+    lo.policy.confidence_threshold = 0.2;
+    let mut hi = small_cfg();
+    hi.policy.confidence_threshold = 0.9;
+    let r_lo = Pipeline::new(&rt, lo).run_scenario(Version::V2, 3).unwrap();
+    let r_hi = Pipeline::new(&rt, hi).run_scenario(Version::V2, 3).unwrap();
+    assert!(
+        r_hi.router.offload_fraction() >= r_lo.router.offload_fraction(),
+        "{} < {}",
+        r_hi.router.offload_fraction(),
+        r_lo.router.offload_fraction()
+    );
+    // more offload -> more bytes downlinked
+    assert!(r_hi.collab_bytes >= r_lo.collab_bytes);
+}
+
+#[test]
+fn offload_everything_equals_heavy_everywhere() {
+    // threshold > 1.0 forces every kept tile to the ground model; the
+    // collaborative mAP must then equal a heavy-only pipeline's mAP.
+    let Some(rt) = rt() else { return };
+    let mut cfg = small_cfg();
+    cfg.policy.confidence_threshold = 1.1;
+    let mut p = Pipeline::new(&rt, cfg.clone());
+    p.policy.empty_objectness = -1.0; // empty tiles offload too
+    let r = p.run_scenario(Version::V2, 3).unwrap();
+    assert_eq!(r.router.onboard_final, 0);
+
+    let mut p_heavy = Pipeline::new(&rt, cfg);
+    p_heavy.onboard_model = Model::Heavy;
+    p_heavy.policy.confidence_threshold = -1.0; // nothing offloads
+    let r_heavy = p_heavy.run_scenario(Version::V2, 3).unwrap();
+    assert!(
+        (r.map_collab - r_heavy.map_inorbit).abs() < 1e-9,
+        "{} vs {}",
+        r.map_collab,
+        r_heavy.map_inorbit
+    );
+}
+
+#[test]
+fn incremental_model_improves_onboard_map() {
+    let Some(rt) = rt() else { return };
+    let cfg = small_cfg();
+    let mut p1 = Pipeline::new(&rt, cfg.clone());
+    p1.onboard_model = Model::Tiny;
+    let mut p2 = Pipeline::new(&rt, cfg);
+    p2.onboard_model = Model::TinyV2;
+    let r1 = p1.run_scenario(Version::V2, 5).unwrap();
+    let r2 = p2.run_scenario(Version::V2, 5).unwrap();
+    assert!(
+        r2.map_inorbit > r1.map_inorbit,
+        "tiny_v2 {} should beat tiny {}",
+        r2.map_inorbit,
+        r1.map_inorbit
+    );
+}
+
+#[test]
+fn fragment_size_sweep_preserves_conservation() {
+    let Some(rt) = rt() else { return };
+    for frag in [32usize, 64, 128] {
+        let mut cfg = small_cfg();
+        cfg.fragment_px = frag;
+        let p = Pipeline::new(&rt, cfg);
+        let r = p.run_scenario(Version::V1, 2).unwrap();
+        assert_eq!(
+            r.tiles_total,
+            r.tiles_filtered + r.router.total() as usize,
+            "frag {frag}"
+        );
+        assert!(r.collab_bytes <= r.bentpipe_bytes, "frag {frag}");
+    }
+}
+
+#[test]
+fn deterministic_given_seed() {
+    let Some(rt) = rt() else { return };
+    let a = Pipeline::new(&rt, small_cfg()).run_scenario(Version::V1, 2).unwrap();
+    let b = Pipeline::new(&rt, small_cfg()).run_scenario(Version::V1, 2).unwrap();
+    assert_eq!(a.map_collab, b.map_collab);
+    assert_eq!(a.collab_bytes, b.collab_bytes);
+    assert_eq!(a.tiles_filtered, b.tiles_filtered);
+}

@@ -1,0 +1,248 @@
+//! Property-based tests over coordinator + substrate invariants.
+//!
+//! proptest is not in the offline vendor set, so these use the repo's
+//! deterministic RNG with many random cases per property (shrinking is
+//! traded for a printed failing seed).
+
+use tiansuan::coordinator::batcher::Batcher;
+use tiansuan::coordinator::router::{route, RouterPolicy, RouterStats};
+use tiansuan::coordinator::TileFate;
+use tiansuan::data::{split_scene, GtBox, SceneGen, Tile, Version};
+use tiansuan::detect::{average_precision, iou_xywh, nms, Detection};
+use tiansuan::link::{Link, LinkConfig, LossProfile};
+use tiansuan::orbit::{baoyun, contact_windows, GroundStation, Satellite};
+use tiansuan::util::json::Json;
+use tiansuan::util::rng::Rng;
+
+const CASES: usize = 200;
+
+fn rand_det(rng: &mut Rng) -> Detection {
+    Detection {
+        cx: rng.range_f32(0.0, 64.0),
+        cy: rng.range_f32(0.0, 64.0),
+        w: rng.range_f32(1.0, 30.0),
+        h: rng.range_f32(1.0, 30.0),
+        score: rng.f32(),
+        class: rng.below(8) as usize,
+    }
+}
+
+#[test]
+fn prop_iou_bounds_and_symmetry() {
+    let mut rng = Rng::new(1);
+    for case in 0..CASES {
+        let a = rand_det(&mut rng);
+        let b = rand_det(&mut rng);
+        let ab = iou_xywh((a.cx, a.cy, a.w, a.h), (b.cx, b.cy, b.w, b.h));
+        let ba = iou_xywh((b.cx, b.cy, b.w, b.h), (a.cx, a.cy, a.w, a.h));
+        assert!((0.0..=1.0).contains(&ab), "case {case}: iou {ab}");
+        assert!((ab - ba).abs() < 1e-6, "case {case}: asymmetric {ab} vs {ba}");
+        let aa = iou_xywh((a.cx, a.cy, a.w, a.h), (a.cx, a.cy, a.w, a.h));
+        assert!((aa - 1.0).abs() < 1e-6, "case {case}: self-iou {aa}");
+    }
+}
+
+#[test]
+fn prop_nms_no_same_class_overlap_and_sorted() {
+    let mut rng = Rng::new(2);
+    for case in 0..CASES {
+        let n = rng.range_usize(0, 40);
+        let dets: Vec<Detection> = (0..n).map(|_| rand_det(&mut rng)).collect();
+        let thresh = rng.range_f32(0.1, 0.9);
+        let kept = nms(dets.clone(), thresh);
+        assert!(kept.len() <= dets.len());
+        for i in 0..kept.len() {
+            for j in (i + 1)..kept.len() {
+                assert!(kept[i].score >= kept[j].score, "case {case}: not sorted");
+                if kept[i].class == kept[j].class {
+                    let iou = kept[i].iou(&kept[j]);
+                    assert!(iou <= thresh + 1e-6, "case {case}: kept overlap {iou} > {thresh}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_ap_in_unit_interval() {
+    let mut rng = Rng::new(3);
+    for case in 0..CASES {
+        let n = rng.range_usize(0, 30);
+        let gt = rng.range_usize(0, 20);
+        // valid record streams have at most `gt` true positives (the
+        // Evaluator matches each ground-truth box at most once)
+        let mut tp_left = gt;
+        let recs: Vec<(f32, bool)> = (0..n)
+            .map(|_| {
+                let tp = tp_left > 0 && rng.bool(0.5);
+                if tp {
+                    tp_left -= 1;
+                }
+                (rng.f32(), tp)
+            })
+            .collect();
+        let ap = average_precision(&recs, gt);
+        assert!((0.0..=1.0).contains(&ap), "case {case}: ap {ap} (gt {gt}, n {n})");
+    }
+}
+
+#[test]
+fn prop_router_conservation() {
+    // every routed tile lands in exactly one bucket; stats add up
+    let mut rng = Rng::new(4);
+    let policy = RouterPolicy::default();
+    let mut stats = RouterStats::default();
+    let mut total = 0u64;
+    for _ in 0..CASES {
+        let n = rng.range_usize(0, 5);
+        let dets: Vec<Detection> = (0..n).map(|_| rand_det(&mut rng)).collect();
+        let best = rng.f32();
+        let fate = route(&policy, &dets, best, &mut stats);
+        total += 1;
+        assert!(matches!(fate, TileFate::OnboardFinal | TileFate::Offloaded));
+    }
+    assert_eq!(stats.total(), total);
+    assert!(stats.confidently_empty <= stats.onboard_final);
+}
+
+#[test]
+fn prop_batcher_bounds_and_conservation() {
+    let mut rng = Rng::new(5);
+    for case in 0..50 {
+        let max_b = rng.range_usize(1, 10);
+        let mut b = Batcher::new(max_b, rng.range_f64(0.1, 5.0));
+        let n = rng.range_usize(0, 40);
+        let mut now = 0.0;
+        let mut popped = 0usize;
+        for _ in 0..n {
+            b.push(
+                Tile { scene_id: 0, x0: 0, y0: 0, frag: 64, pixels: vec![], gt: vec![] },
+                now,
+            );
+            now += rng.range_f64(0.0, 1.0);
+            if let Some((tiles, delays)) = b.pop(now, false) {
+                assert!(tiles.len() <= max_b, "case {case}: batch too big");
+                assert!(!tiles.is_empty());
+                assert!(delays.iter().all(|&d| d >= 0.0));
+                popped += tiles.len();
+            }
+        }
+        while let Some((tiles, _)) = b.pop(now, true) {
+            popped += tiles.len();
+        }
+        assert_eq!(popped, n, "case {case}: tiles lost or duplicated");
+    }
+}
+
+#[test]
+fn prop_link_byte_conservation() {
+    let mut rng = Rng::new(6);
+    for case in 0..40 {
+        let profile = *rng.choose(&[
+            LossProfile::stable(),
+            LossProfile::weak(),
+            LossProfile::makersat_incident(),
+        ]);
+        let mut link = Link::new(LinkConfig { rate_bps: 40e6, mtu: 1400, loss: profile, max_tries: 4 }, case);
+        let mut offered = 0u64;
+        for _ in 0..rng.range_usize(1, 20) {
+            let bytes = rng.below(200_000) + 1;
+            offered += bytes;
+            let t = link.transmit(bytes, rng.range_f64(0.001, 2.0));
+            assert!(t.bytes_delivered <= t.bytes_requested);
+            assert!(t.elapsed_s >= 0.0);
+        }
+        assert_eq!(link.stats.bytes_offered, offered, "case {case}");
+        assert!(link.stats.bytes_delivered <= offered);
+        assert!(link.stats.packets_lost <= link.stats.packets_sent);
+    }
+}
+
+#[test]
+fn prop_contact_windows_disjoint_for_random_geometry() {
+    let mut rng = Rng::new(7);
+    for case in 0..12 {
+        let sat = Satellite {
+            name: format!("sat{case}"),
+            altitude_km: rng.range_f64(400.0, 800.0),
+            inclination_rad: rng.range_f64(0.5, 1.8),
+            raan_rad: rng.range_f64(0.0, 6.28),
+            phase_rad: rng.range_f64(0.0, 6.28),
+        };
+        let gs = GroundStation {
+            name: "g".into(),
+            lat_deg: rng.range_f64(-60.0, 60.0),
+            lon_deg: rng.range_f64(-180.0, 180.0),
+            min_elevation_deg: rng.range_f64(5.0, 20.0),
+        };
+        let windows = contact_windows(&sat, &gs, 0.0, 43_200.0, 10.0);
+        for pair in windows.windows(2) {
+            assert!(pair[0].los <= pair[1].aos, "case {case}: overlap {pair:?}");
+        }
+        for w in &windows {
+            assert!(w.duration_s() > 0.0 && w.aos >= 0.0 && w.los <= 43_200.0 + 1e-6);
+        }
+    }
+}
+
+#[test]
+fn prop_split_conserves_ground_truth() {
+    let mut rng = Rng::new(8);
+    for case in 0..10 {
+        let cells = rng.range_usize(2, 7);
+        let mut gen = SceneGen::new(case as u64, Version::V2.spec(), cells, cells);
+        let scene = gen.capture();
+        for frag in [32usize, 64, 128] {
+            if (cells * 64) % frag != 0 {
+                continue;
+            }
+            let tiles = split_scene(&scene, frag);
+            let total: usize = tiles.iter().map(|t| t.gt.len()).sum();
+            assert_eq!(total, scene.boxes.len(), "case {case} frag {frag}");
+            for t in &tiles {
+                for b in &t.gt {
+                    let in_bounds = |b: &GtBox| b.cx >= 0.0 && b.cx <= 64.0 && b.cy >= 0.0 && b.cy <= 64.0;
+                    assert!(in_bounds(b), "case {case}: gt escaped tile: {b:?}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_json_roundtrip_fuzz() {
+    let mut rng = Rng::new(9);
+    fn gen_value(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.bool(0.5)),
+            2 => Json::Num((rng.f64() * 2000.0 - 1000.0 * 0.5).round() / 8.0),
+            3 => Json::Str((0..rng.range_usize(0, 12)).map(|_| {
+                *rng.choose(&['a', 'b', '"', '\\', '\n', '字', ' ', '0'])
+            }).collect()),
+            4 => Json::Arr((0..rng.range_usize(0, 5)).map(|_| gen_value(rng, depth - 1)).collect()),
+            _ => Json::Obj((0..rng.range_usize(0, 5)).map(|i| {
+                (format!("k{i}"), gen_value(rng, depth - 1))
+            }).collect()),
+        }
+    }
+    for case in 0..CASES {
+        let v = gen_value(&mut rng, 3);
+        let text = v.to_string();
+        let parsed = Json::parse(&text).unwrap_or_else(|e| panic!("case {case}: {e}\n{text}"));
+        assert_eq!(parsed, v, "case {case}: roundtrip mismatch\n{text}");
+    }
+}
+
+#[test]
+fn prop_orbit_radius_invariant_under_time() {
+    let sat = baoyun();
+    let mut rng = Rng::new(10);
+    let a = sat.semi_major_axis_km();
+    for _ in 0..CASES {
+        let t = rng.range_f64(0.0, 1e6);
+        let p = sat.position_eci(t);
+        let r = (p[0] * p[0] + p[1] * p[1] + p[2] * p[2]).sqrt();
+        assert!((r - a).abs() < 1e-6, "t={t}: r={r}");
+    }
+}

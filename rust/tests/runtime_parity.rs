@@ -1,0 +1,92 @@
+//! Numeric parity between the python (JAX/Pallas) build path and the rust
+//! (PJRT) serving path: the same input batch must produce the same
+//! decoded rows through both stacks.  Fixtures are dumped by aot.py.
+
+use std::path::Path;
+
+use tiansuan::runtime::{Model, Runtime};
+
+fn artifacts() -> Option<Runtime> {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    if !Path::new(dir).join("fixture_input_b1.bin").exists() {
+        eprintln!("skipping: artifacts/fixtures not built");
+        return None;
+    }
+    Some(Runtime::open(dir).expect("open artifacts"))
+}
+
+fn read_f32(path: &str) -> Vec<f32> {
+    let bytes = std::fs::read(
+        Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")).join(path),
+    )
+    .unwrap_or_else(|e| panic!("{path}: {e}"));
+    bytes
+        .chunks_exact(4)
+        .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        .collect()
+}
+
+fn assert_close(got: &[f32], want: &[f32], tol: f32, what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    let mut worst = 0.0f32;
+    for (g, w) in got.iter().zip(want) {
+        worst = worst.max((g - w).abs());
+    }
+    assert!(worst < tol, "{what}: max abs err {worst} >= {tol}");
+}
+
+#[test]
+fn tinydet_matches_python() {
+    let Some(rt) = artifacts() else { return };
+    let input = read_f32("fixture_input_b1.bin");
+    let want = read_f32("fixture_tinydet_b1_out.bin");
+    let got = rt.execute_exact(Model::Tiny, 1, &input).unwrap();
+    assert_close(&got, &want, 2e-3, "tinydet");
+}
+
+#[test]
+fn tinydet_v2_matches_python() {
+    let Some(rt) = artifacts() else { return };
+    let input = read_f32("fixture_input_b1.bin");
+    let want = read_f32("fixture_tinydet_v2_b1_out.bin");
+    let got = rt.execute_exact(Model::TinyV2, 1, &input).unwrap();
+    assert_close(&got, &want, 2e-3, "tinydet_v2");
+}
+
+#[test]
+fn heavydet_matches_python() {
+    let Some(rt) = artifacts() else { return };
+    let input = read_f32("fixture_input_b1.bin");
+    let want = read_f32("fixture_heavydet_b1_out.bin");
+    let got = rt.execute_exact(Model::Heavy, 1, &input).unwrap();
+    assert_close(&got, &want, 2e-3, "heavydet");
+}
+
+#[test]
+fn cloudscore_matches_python() {
+    let Some(rt) = artifacts() else { return };
+    let input = read_f32("fixture_input_b1.bin");
+    let want = read_f32("fixture_cloudscore_b1_out.bin");
+    let got = rt.execute_exact(Model::CloudScore, 1, &input).unwrap();
+    assert_close(&got, &want, 1e-4, "cloudscore");
+}
+
+#[test]
+fn tiny_and_v2_actually_differ() {
+    // incremental learning is only meaningful if the artifacts differ
+    let Some(rt) = artifacts() else { return };
+    let input = read_f32("fixture_input_b1.bin");
+    let a = rt.execute_exact(Model::Tiny, 1, &input).unwrap();
+    let b = rt.execute_exact(Model::TinyV2, 1, &input).unwrap();
+    let diff: f32 = a.iter().zip(&b).map(|(x, y)| (x - y).abs()).sum();
+    assert!(diff > 1e-3, "tiny and tiny_v2 look identical (sum abs diff {diff})");
+}
+
+#[test]
+fn deterministic_across_calls() {
+    let Some(rt) = artifacts() else { return };
+    let input = read_f32("fixture_input_b1.bin");
+    let a = rt.execute_exact(Model::Tiny, 1, &input).unwrap();
+    let b = rt.execute_exact(Model::Tiny, 1, &input).unwrap();
+    assert_eq!(a, b, "PJRT execution must be deterministic");
+}
