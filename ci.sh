@@ -1,0 +1,25 @@
+#!/usr/bin/env bash
+# Tier-1 verification + lint gate.  Run from anywhere; operates on rust/.
+#
+#   ./ci.sh          full gate: build, test, fmt --check, clippy -D warnings
+#   ./ci.sh fast     build + test only (the tier-1 subset)
+set -euo pipefail
+cd "$(dirname "$0")/rust"
+
+echo "== tier-1: cargo build --release =="
+cargo build --release
+
+echo "== tier-1: cargo test -q =="
+cargo test -q
+
+if [[ "${1:-}" == "fast" ]]; then
+  exit 0
+fi
+
+echo "== lint: cargo fmt --check =="
+cargo fmt --check
+
+echo "== lint: cargo clippy -D warnings =="
+cargo clippy --all-targets -- -D warnings
+
+echo "ci: all gates passed"

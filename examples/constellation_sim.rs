@@ -1,10 +1,18 @@
-//! Constellation simulation: a 24-hour mission timeline for Baoyun +
-//! Chuangxingleishen over the Beijing ground station, integrating the
-//! orbital mechanics, contact windows, lossy downlink, the KubeEdge-like
-//! cluster substrate (heartbeats, offline autonomy, reconcile), and the
-//! collaborative-inference pipeline.
+//! Constellation simulation, two parts:
+//!
+//! 1. The coordinator's constellation runner (`run_constellation`): N
+//!    satellites with their own staged pipelines and contact-window-gated
+//!    downlinks sharing one ground segment, scheduled as a Sedna
+//!    JointInference task, reporting aggregate throughput and per-stage
+//!    latency telemetry.
+//! 2. A 24-hour mission timeline for Baoyun + Chuangxingleishen over the
+//!    Beijing ground station, integrating the orbital mechanics, contact
+//!    windows, lossy downlink, the KubeEdge-like cluster substrate
+//!    (heartbeats, offline autonomy, reconcile), and the
+//!    collaborative-inference pipeline.
 //!
 //!     cargo run --release --example constellation_sim -- [--hours H] [--loss stable|weak|makersat]
+//!                                                        [--sats N] [--scenes N]
 
 use tiansuan::cluster::metastore::{EdgeReplica, MetaStore};
 use tiansuan::cluster::orchestrator::{AppSpec, Orchestrator, Placement};
@@ -12,7 +20,7 @@ use tiansuan::cluster::registry::{NodeStatus, Registry};
 use tiansuan::cluster::{NodeId, NodeRole};
 use tiansuan::config::Config;
 use tiansuan::coordinator::downlink::{DownlinkItem, DownlinkQueue, ItemKind};
-use tiansuan::coordinator::{Pipeline, TileFate};
+use tiansuan::coordinator::{run_constellation, Pipeline, TileFate};
 use tiansuan::coordinator::router::RouterStats;
 use tiansuan::data::{SceneGen, Version};
 use tiansuan::detect::Detection;
@@ -33,6 +41,43 @@ fn main() -> anyhow::Result<()> {
     let horizon = hours * 3600.0;
     let rt = Runtime::open(args.opt_or("artifacts", "artifacts"))?;
     let gs = beijing_station();
+
+    // Part 1: the coordinator's constellation runner.
+    let mut ccfg = Config::default();
+    ccfg.scene_cells = args.opt_usize("cells", 4);
+    ccfg.constellation.satellites = args.opt_usize("sats", 3);
+    ccfg.constellation.scenes_per_satellite = args.opt_usize("scenes", 2);
+    println!(
+        "=== run_constellation: {} satellites × {} scenes, shared ground segment ===",
+        ccfg.constellation.satellites, ccfg.constellation.scenes_per_satellite
+    );
+    let report = run_constellation(&rt, &ccfg, Version::V2)?;
+    for sat in &report.satellites {
+        println!(
+            "{}: {} tiles ({} filtered, {} offloaded), mAP {:.3}->{:.3}, {} passes / {:.0} s contact, downlink {} delivered / {} dropped, compute {:.1}% of energy",
+            sat.name,
+            sat.result.tiles_total,
+            sat.result.tiles_filtered,
+            sat.result.router.offloaded,
+            sat.result.map_inorbit,
+            sat.result.map_collab,
+            sat.windows,
+            sat.contact_s,
+            sat.downlink.items_delivered,
+            sat.downlink.items_dropped,
+            100.0 * sat.result.energy_compute_share,
+        );
+    }
+    println!(
+        "aggregate: {} tiles in {:.2} s wall = {:.1} tiles/s; sedna task completed: {}",
+        report.tiles_total,
+        report.wall_s,
+        report.aggregate_tiles_per_s(),
+        report.task_completed
+    );
+    println!("--- per-stage telemetry ---\n{}", report.telemetry);
+
+    // Part 2: the 24-hour two-satellite mission timeline.
 
     // cluster bring-up: CloudCore + two EdgeCores
     let mut registry = Registry::new(60_000, 600_000);

@@ -1,0 +1,61 @@
+//! Perf: sequential vs staged-concurrent scenario throughput (tiles/s).
+//!
+//! The staged engine overlaps capture, onboard (CloudScore + TinyDet)
+//! and ground (HeavyDet) inference across scenes; with enough workers it
+//! must beat the sequential facade while producing bit-identical
+//! results.  Emits the standard bench JSON (one object per line) so
+//! EXPERIMENTS tooling can diff runs.
+
+use tiansuan::config::Config;
+use tiansuan::coordinator::{Pipeline, StagedEngine};
+use tiansuan::data::Version;
+use tiansuan::runtime::Runtime;
+use tiansuan::util::bench;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::open("artifacts")?;
+    rt.warmup()?;
+    rt.calibrate()?;
+    let scenes = 6;
+    println!("=== perf: staged engine vs sequential facade ({scenes} scenes) ===");
+    for version in [Version::V1, Version::V2] {
+        let cfg = Config::default();
+        let pipeline = Pipeline::new(&rt, cfg.clone());
+        let (seq, seq_dt) =
+            bench::once(&format!("engine/{}/sequential", version.name()), || {
+                pipeline.run_scenario(version, scenes).unwrap()
+            });
+        let seq_tps = seq.tiles_total as f64 / seq_dt.as_secs_f64();
+        bench::json_line(
+            &format!("perf_engine.{}.sequential", version.name()),
+            &[
+                ("tiles", seq.tiles_total as f64),
+                ("wall_s", seq_dt.as_secs_f64()),
+                ("tiles_per_s", seq_tps),
+            ],
+        );
+
+        for workers in [1usize, 2, 4] {
+            let engine = StagedEngine::new(&pipeline).with_workers(workers);
+            let (r, dt) = bench::once(
+                &format!("engine/{}/staged/w{workers}", version.name()),
+                || engine.run_scenario(version, scenes).unwrap(),
+            );
+            // staged results must be identical, not merely similar
+            assert_eq!(r.tiles_total, seq.tiles_total, "tile mismatch at w{workers}");
+            assert_eq!(r.map_collab, seq.map_collab, "mAP mismatch at w{workers}");
+            let tps = r.tiles_total as f64 / dt.as_secs_f64();
+            bench::json_line(
+                &format!("perf_engine.{}.staged", version.name()),
+                &[
+                    ("workers", workers as f64),
+                    ("tiles", r.tiles_total as f64),
+                    ("wall_s", dt.as_secs_f64()),
+                    ("tiles_per_s", tps),
+                    ("speedup_vs_sequential", tps / seq_tps),
+                ],
+            );
+        }
+    }
+    Ok(())
+}

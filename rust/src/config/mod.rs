@@ -30,6 +30,9 @@ pub struct PlatformConfig {
 pub struct PolicyConfig {
     /// Detection score below which a tile is offloaded to the ground.
     pub confidence_threshold: f32,
+    /// Best raw objectness below which an empty tile is confidently empty
+    /// (router keeps it onboard instead of offloading).
+    pub empty_objectness: f32,
     /// Cloud white-fraction above which a tile is dropped as redundant.
     pub redundancy_threshold: f32,
     /// NMS IoU threshold.
@@ -44,10 +47,73 @@ impl Default for PolicyConfig {
     fn default() -> PolicyConfig {
         PolicyConfig {
             confidence_threshold: 0.90,
+            empty_objectness: 0.25,
             redundancy_threshold: 0.5,
             nms_iou: 0.45,
             score_threshold: 0.20,
             batch_size: 8,
+        }
+    }
+}
+
+/// Staged-engine execution knobs ([`crate::coordinator::engine`]).
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    /// Stage worker threads; 1 degenerates to the sequential facade.
+    pub workers: usize,
+    /// Bounded depth of each inter-stage queue (backpressure).
+    pub channel_depth: usize,
+    /// Batcher deadline (virtual seconds) before a partial batch is
+    /// forced out.  Note: the current per-scene flow enqueues a whole
+    /// scene at virtual time 0 and drains with flush — which is what
+    /// keeps results bit-identical to the sequential facade — so this
+    /// deadline only bites once tiles stream into the batcher
+    /// asynchronously (streaming capture is future work).
+    pub batch_max_wait_s: f64,
+}
+
+impl Default for EngineConfig {
+    fn default() -> EngineConfig {
+        EngineConfig { workers: 2, channel_depth: 4, batch_max_wait_s: 5.0 }
+    }
+}
+
+/// Scenario virtual-time constants (previously hardcoded in
+/// `Pipeline::run_scenario`).
+#[derive(Clone, Debug)]
+pub struct TimingConfig {
+    /// At most one scene capture per this many seconds.
+    pub scene_period_floor_s: f64,
+    /// Per-scene capture + filtering overhead folded into busy time.
+    pub capture_overhead_s: f64,
+}
+
+impl Default for TimingConfig {
+    fn default() -> TimingConfig {
+        TimingConfig { scene_period_floor_s: 30.0, capture_overhead_s: 2.0 }
+    }
+}
+
+/// Constellation runner ([`crate::coordinator::constellation`]).
+#[derive(Clone, Debug)]
+pub struct ConstellationConfig {
+    /// Satellites sharing one ground segment.
+    pub satellites: usize,
+    /// Scenes each satellite captures.
+    pub scenes_per_satellite: usize,
+    /// Mission horizon for contact-window computation, seconds.
+    pub horizon_s: f64,
+    /// RAAN spacing between satellite planes, radians.
+    pub raan_step_rad: f64,
+}
+
+impl Default for ConstellationConfig {
+    fn default() -> ConstellationConfig {
+        ConstellationConfig {
+            satellites: 3,
+            scenes_per_satellite: 4,
+            horizon_s: 21_600.0, // 6 h: a few Beijing passes per satellite
+            raan_step_rad: 0.35,
         }
     }
 }
@@ -57,6 +123,9 @@ impl Default for PolicyConfig {
 pub struct Config {
     pub platform: PlatformConfig,
     pub policy: PolicyConfig,
+    pub engine: EngineConfig,
+    pub timing: TimingConfig,
+    pub constellation: ConstellationConfig,
     /// Scene size in 64-px cells.
     pub scene_cells: usize,
     /// Fragment edge length in px for the splitter.
@@ -80,6 +149,9 @@ impl Default for Config {
         Config {
             platform: baoyun_platform(),
             policy: PolicyConfig::default(),
+            engine: EngineConfig::default(),
+            timing: TimingConfig::default(),
+            constellation: ConstellationConfig::default(),
             scene_cells: 8,
             fragment_px: 64,
             loss_profile: "stable".into(),
@@ -158,6 +230,7 @@ impl Config {
             let f = |k: &str, d: f32| p.get(k).and_then(|v| v.as_f64()).map(|x| x as f32).unwrap_or(d);
             cfg.policy = PolicyConfig {
                 confidence_threshold: f("confidence_threshold", cfg.policy.confidence_threshold),
+                empty_objectness: f("empty_objectness", cfg.policy.empty_objectness),
                 redundancy_threshold: f("redundancy_threshold", cfg.policy.redundancy_threshold),
                 nms_iou: f("nms_iou", cfg.policy.nms_iou),
                 score_threshold: f("score_threshold", cfg.policy.score_threshold),
@@ -165,6 +238,51 @@ impl Config {
                     .get("batch_size")
                     .and_then(|v| v.as_usize())
                     .unwrap_or(cfg.policy.batch_size),
+            };
+        }
+        if let Some(e) = j.get("engine") {
+            cfg.engine = EngineConfig {
+                workers: e.get("workers").and_then(|v| v.as_usize()).unwrap_or(cfg.engine.workers),
+                channel_depth: e
+                    .get("channel_depth")
+                    .and_then(|v| v.as_usize())
+                    .unwrap_or(cfg.engine.channel_depth),
+                batch_max_wait_s: e
+                    .get("batch_max_wait_s")
+                    .and_then(|v| v.as_f64())
+                    .unwrap_or(cfg.engine.batch_max_wait_s),
+            };
+        }
+        if let Some(t) = j.get("timing") {
+            cfg.timing = TimingConfig {
+                scene_period_floor_s: t
+                    .get("scene_period_floor_s")
+                    .and_then(|v| v.as_f64())
+                    .unwrap_or(cfg.timing.scene_period_floor_s),
+                capture_overhead_s: t
+                    .get("capture_overhead_s")
+                    .and_then(|v| v.as_f64())
+                    .unwrap_or(cfg.timing.capture_overhead_s),
+            };
+        }
+        if let Some(c) = j.get("constellation") {
+            cfg.constellation = ConstellationConfig {
+                satellites: c
+                    .get("satellites")
+                    .and_then(|v| v.as_usize())
+                    .unwrap_or(cfg.constellation.satellites),
+                scenes_per_satellite: c
+                    .get("scenes_per_satellite")
+                    .and_then(|v| v.as_usize())
+                    .unwrap_or(cfg.constellation.scenes_per_satellite),
+                horizon_s: c
+                    .get("horizon_s")
+                    .and_then(|v| v.as_f64())
+                    .unwrap_or(cfg.constellation.horizon_s),
+                raan_step_rad: c
+                    .get("raan_step_rad")
+                    .and_then(|v| v.as_f64())
+                    .unwrap_or(cfg.constellation.raan_step_rad),
             };
         }
         if let Some(v) = j.get("scene_cells").and_then(|v| v.as_usize()) {
@@ -206,6 +324,38 @@ mod tests {
         assert_eq!(c.fragment_px, 32);
         assert_eq!(c.seed, 7);
         assert!((c.loss().loss_bad - LossProfile::weak().loss_bad).abs() < 1e-12);
+    }
+
+    #[test]
+    fn parse_engine_timing_constellation_sections() {
+        let c = Config::parse(
+            r#"{"policy": {"empty_objectness": 0.3},
+                "engine": {"workers": 4, "channel_depth": 8, "batch_max_wait_s": 2.5},
+                "timing": {"scene_period_floor_s": 45, "capture_overhead_s": 1.5},
+                "constellation": {"satellites": 5, "scenes_per_satellite": 2,
+                                  "horizon_s": 7200, "raan_step_rad": 0.5}}"#,
+        )
+        .unwrap();
+        assert_eq!(c.policy.empty_objectness, 0.3);
+        assert_eq!(c.engine.workers, 4);
+        assert_eq!(c.engine.channel_depth, 8);
+        assert_eq!(c.engine.batch_max_wait_s, 2.5);
+        assert_eq!(c.timing.scene_period_floor_s, 45.0);
+        assert_eq!(c.timing.capture_overhead_s, 1.5);
+        assert_eq!(c.constellation.satellites, 5);
+        assert_eq!(c.constellation.scenes_per_satellite, 2);
+        assert_eq!(c.constellation.horizon_s, 7200.0);
+        assert_eq!(c.constellation.raan_step_rad, 0.5);
+    }
+
+    #[test]
+    fn defaults_preserve_legacy_constants() {
+        // The staged-engine refactor promoted these from hardcoded values;
+        // defaults must keep the pre-refactor behaviour bit-for-bit.
+        let c = Config::default();
+        assert_eq!(c.policy.empty_objectness, 0.25);
+        assert_eq!(c.timing.scene_period_floor_s, 30.0);
+        assert_eq!(c.timing.capture_overhead_s, 2.0);
     }
 
     #[test]

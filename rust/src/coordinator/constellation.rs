@@ -1,0 +1,382 @@
+//! Constellation-scale scenario runner: N satellites, one ground segment.
+//!
+//! Each satellite runs its scenario (capture → filter → batch → onboard
+//! infer → route) sequentially on its own thread — the concurrency here
+//! is *across* satellites, plus the asynchronous shared ground segment;
+//! within one satellite, [`super::engine::StagedEngine`]-style stage
+//! overlap is future work.  Every satellite queues results and
+//! offloaded imagery in a [`DownlinkQueue`] whose drains are gated by its
+//! *own* contact windows from [`crate::orbit`], and shares a single
+//! ground-segment worker that serves HeavyDet re-inference for every
+//! satellite (serialized by the runtime's per-model execution lock —
+//! exactly one ground GPU).  Scenes fold through the same
+//! [`ScenarioAccumulator`] as the single-satellite paths, in capture
+//! order, with one honest difference: an offloaded tile whose imagery
+//! never survives a contact window is evaluated with its onboard
+//! detections (the collaborative gain only materializes for delivered
+//! tiles).  Byte accounting keeps both views: the scenario fold's
+//! `collab_bytes` stays nominal (bytes *queued* for downlink, same as
+//! single-satellite runs) while [`SatelliteReport::downlink`] records
+//! what the lossy windowed link actually delivered.
+//!
+//! Cluster/sedna bookkeeping mirrors the paper's control plane: every
+//! satellite registers as an Edge node and heartbeats during contact
+//! windows, and the whole run is scheduled as a Sedna `JointInference`
+//! task whose per-worker phases aggregate into the report.
+
+use std::collections::BTreeMap;
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::cluster::registry::Registry as NodeRegistry;
+use crate::cluster::{NodeId, NodeRole};
+use crate::config::Config;
+use crate::data::{Tile, Version};
+use crate::detect::Detection;
+use crate::link::{Link, LinkConfig, LinkStats};
+use crate::orbit::{baoyun, beijing_station, contact_windows};
+use crate::runtime::{Model, Runtime};
+use crate::sedna::{GlobalManager, LocalController, TaskKind, TaskPhase, TaskSpec};
+use crate::telemetry::Registry;
+
+use super::downlink::{DownlinkItem, DownlinkQueue, DownlinkStats, ItemKind};
+use super::pipeline::{
+    scene_timing, Pipeline, ProcessedTile, ScenarioAccumulator, ScenarioResult,
+    RESULT_HEADER_BYTES,
+};
+use super::router::RouterStats;
+use super::TileFate;
+
+/// Downlink tag encoding: scene index * stride + tile index.
+const TAG_STRIDE: u64 = 1_000_000;
+
+/// One satellite's share of the constellation run.
+pub struct SatelliteReport {
+    /// Constellation plane index (reports are ordered by this).
+    pub index: usize,
+    pub name: String,
+    /// Full scenario metrics (same fold as single-satellite runs).
+    /// `result.collab_bytes` is the *nominal* accounting — what the
+    /// system queued for downlink; `downlink` below holds what actually
+    /// crossed the lossy windowed link, so under heavy loss
+    /// `result.collab_bytes > downlink.total_bytes()`.
+    pub result: ScenarioResult,
+    pub downlink: DownlinkStats,
+    pub link: LinkStats,
+    pub windows: usize,
+    pub contact_s: f64,
+}
+
+pub struct ConstellationReport {
+    pub satellites: Vec<SatelliteReport>,
+    pub tiles_total: usize,
+    /// Wallclock for the whole constellation run.
+    pub wall_s: f64,
+    /// Sedna JointInference task reached Completed.
+    pub task_completed: bool,
+    /// Rendered per-stage telemetry (queue waits, service times, depths).
+    pub telemetry: String,
+}
+
+impl ConstellationReport {
+    /// Aggregate throughput across all satellites.
+    pub fn aggregate_tiles_per_s(&self) -> f64 {
+        self.tiles_total as f64 / self.wall_s.max(1e-9)
+    }
+}
+
+/// HeavyDet work order for the shared ground segment.
+struct GroundRequest {
+    tiles: Vec<Tile>,
+    reply: Sender<Result<(Vec<Vec<Detection>>, f64)>>,
+    at: Instant,
+}
+
+/// A scene waiting for its offloaded tiles to clear the downlink.
+struct PendingScene {
+    bentpipe_bytes: u64,
+    n_scene_tiles: usize,
+    processed: Vec<ProcessedTile>,
+    n_filtered: usize,
+    wall: f64,
+    router: RouterStats,
+    /// Offloaded tiles not yet ground-inferred (delivery pending).
+    outstanding: usize,
+}
+
+/// Run `cfg.constellation.satellites` satellites against one ground
+/// segment.  Per-satellite seeds, orbital planes, and contact windows
+/// differ; the scene workload per satellite is
+/// `cfg.constellation.scenes_per_satellite`.
+pub fn run_constellation(rt: &Runtime, cfg: &Config, version: Version) -> Result<ConstellationReport> {
+    let n_sats = cfg.constellation.satellites.max(1);
+    let scenes = cfg.constellation.scenes_per_satellite;
+    let metrics = Registry::new();
+    let gs = beijing_station();
+
+    // control plane: node registry + Sedna JointInference task
+    let ground_node = NodeId::new("ground-1");
+    let sat_nodes: Vec<NodeId> = (0..n_sats).map(|i| NodeId::new(format!("sat-{i}"))).collect();
+    let registry = Mutex::new(NodeRegistry::new(60_000, 600_000));
+    {
+        let mut reg = registry.lock().unwrap();
+        reg.register(ground_node.clone(), NodeRole::Cloud, 64_000, 262_144, 0);
+        for id in &sat_nodes {
+            reg.register(id.clone(), NodeRole::Edge, 4_000, 8_192, 0);
+        }
+    }
+    let gm = Mutex::new(GlobalManager::new());
+    let task = "joint-inference";
+    {
+        let mut workers = sat_nodes.clone();
+        workers.push(ground_node.clone());
+        gm.lock().unwrap().create(TaskSpec {
+            name: task.into(),
+            kind: TaskKind::JointInference,
+            workers,
+            params: BTreeMap::new(),
+        })?;
+    }
+
+    let (ground_tx, ground_rx) = channel::<GroundRequest>();
+    let t0 = Instant::now();
+    let mut reports: Vec<SatelliteReport> = Vec::with_capacity(n_sats);
+
+    std::thread::scope(|s| -> Result<()> {
+        // shared ground segment: one HeavyDet server for all satellites
+        let ground_pipe = Pipeline::new(rt, cfg.clone());
+        let metrics_ref = &metrics;
+        let ground = s.spawn(move || {
+            let wait = metrics_ref.histogram("constellation.ground.queue_wait_s");
+            let svc = metrics_ref.histogram("constellation.ground.service_s");
+            let served = metrics_ref.counter("constellation.ground.tiles");
+            let depth = metrics_ref.gauge("constellation.ground.queue_depth");
+            while let Ok(req) = ground_rx.recv() {
+                depth.dec();
+                wait.observe_secs(req.at.elapsed().as_secs_f64());
+                let t = Instant::now();
+                let out = ground_pipe
+                    .infer(Model::Heavy, &req.tiles)
+                    .map(|(dets, _, wall)| (dets, wall));
+                svc.observe_secs(t.elapsed().as_secs_f64());
+                served.add(req.tiles.len() as u64);
+                let _ = req.reply.send(out);
+            }
+        });
+
+        let mut handles = Vec::with_capacity(n_sats);
+        for i in 0..n_sats {
+            let node = sat_nodes[i].clone();
+            let tx = ground_tx.clone();
+            let registry = &registry;
+            let gm = &gm;
+            let gs = &gs;
+            handles.push(s.spawn(move || -> Result<SatelliteReport> {
+                run_satellite(rt, cfg, version, i, node, tx, registry, gm, task, gs, metrics_ref, scenes)
+            }));
+        }
+        drop(ground_tx); // ground loop ends when the last satellite hangs up
+
+        let mut first_err = None;
+        for h in handles {
+            match h.join().map_err(|_| anyhow!("satellite thread panicked"))? {
+                Ok(r) => reports.push(r),
+                Err(e) => first_err = first_err.or(Some(e)),
+            }
+        }
+        ground.join().map_err(|_| anyhow!("ground thread panicked"))?;
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    })?;
+
+    gm.lock().unwrap().report(task, &ground_node, TaskPhase::Completed)?;
+    let task_completed =
+        gm.lock().unwrap().get(task).map(|(_, st)| st.phase) == Some(TaskPhase::Completed);
+    reports.sort_by_key(|r| r.index);
+    let tiles_total = reports.iter().map(|r| r.result.tiles_total).sum();
+    Ok(ConstellationReport {
+        satellites: reports,
+        tiles_total,
+        wall_s: t0.elapsed().as_secs_f64(),
+        task_completed,
+        telemetry: metrics.render(),
+    })
+}
+
+#[allow(clippy::too_many_arguments)] // internal plumbing fn, not API
+fn run_satellite(
+    rt: &Runtime,
+    cfg: &Config,
+    version: Version,
+    index: usize,
+    node: NodeId,
+    ground_tx: Sender<GroundRequest>,
+    registry: &Mutex<NodeRegistry>,
+    gm: &Mutex<GlobalManager>,
+    task: &str,
+    gs: &crate::orbit::GroundStation,
+    metrics: &Registry,
+    scenes: usize,
+) -> Result<SatelliteReport> {
+    let mut lc = LocalController::new(node.clone());
+    lc.start(task);
+    gm.lock().unwrap().report(task, &node, TaskPhase::Running)?;
+
+    // one orbital plane per satellite, phased around the constellation
+    let mut sat = baoyun();
+    sat.name = node.to_string();
+    sat.raan_rad = index as f64 * cfg.constellation.raan_step_rad;
+    sat.phase_rad = index as f64 * std::f64::consts::TAU / cfg.constellation.satellites.max(1) as f64;
+    let windows = contact_windows(&sat, gs, 0.0, cfg.constellation.horizon_s, 10.0);
+    let contact_s: f64 = windows.iter().map(|w| w.duration_s()).sum();
+
+    let mut sat_cfg = cfg.clone();
+    sat_cfg.seed = cfg.seed.wrapping_add(1 + index as u64 * 101);
+    let pipeline = Pipeline::new(rt, sat_cfg);
+    let mut gen = pipeline.scene_gen(version);
+    let mut acc = ScenarioAccumulator::new(&pipeline.cfg, rt.manifest.classes);
+    let mut queue = DownlinkQueue::new();
+    let mut link = Link::new(LinkConfig::downlink(pipeline.cfg.loss()), pipeline.cfg.seed);
+    let onboard_svc = metrics.histogram("constellation.onboard.service_s");
+    let delivered_items = metrics.counter("constellation.downlink.items_delivered");
+    let queue_depth = metrics.gauge("constellation.ground.queue_depth");
+
+    let mut pending: BTreeMap<usize, PendingScene> = BTreeMap::new();
+    let mut next_fold = 0usize;
+    let mut t = 0.0f64; // virtual mission time
+    let mut next_w = 0usize;
+
+    // ground round-trip for every Image item delivered in one drain
+    let mut serve_delivered = |delivered: Vec<super::downlink::Delivered>,
+                               pending: &mut BTreeMap<usize, PendingScene>|
+     -> Result<()> {
+        let mut tags: Vec<(usize, usize)> = Vec::new();
+        let mut tiles: Vec<Tile> = Vec::new();
+        for d in &delivered {
+            if d.item.kind != ItemKind::Image {
+                continue;
+            }
+            let sidx = (d.item.tag / TAG_STRIDE) as usize;
+            let tidx = (d.item.tag % TAG_STRIDE) as usize;
+            let scene = pending
+                .get(&sidx)
+                .ok_or_else(|| anyhow!("delivered tile for unknown scene {sidx}"))?;
+            tiles.push(scene.processed[tidx].tile.clone());
+            tags.push((sidx, tidx));
+        }
+        delivered_items.add(delivered.len() as u64);
+        if tiles.is_empty() {
+            return Ok(());
+        }
+        let n = tiles.len();
+        let (reply_tx, reply_rx) = channel();
+        queue_depth.inc();
+        ground_tx
+            .send(GroundRequest { tiles, reply: reply_tx, at: Instant::now() })
+            .map_err(|_| anyhow!("ground segment gone"))?;
+        let (dets, wall) = reply_rx.recv().context("ground segment hung up")??;
+        let wall_each = wall / n as f64;
+        for ((sidx, tidx), d) in tags.into_iter().zip(dets) {
+            let scene = pending.get_mut(&sidx).expect("scene vanished mid-delivery");
+            scene.processed[tidx].ground_dets = Some(d);
+            scene.outstanding -= 1;
+            scene.wall += wall_each;
+        }
+        Ok(())
+    };
+
+    for idx in 0..scenes {
+        let scene = gen.capture();
+        let mut router = RouterStats::default();
+        let svc0 = Instant::now();
+        let (processed, n_filtered, wall) = pipeline.onboard_scene(&scene, &mut router)?;
+        onboard_svc.observe_secs(svc0.elapsed().as_secs_f64());
+
+        let (busy, period) = scene_timing(&pipeline.cfg.timing, processed.len());
+        let ready = t + busy;
+        let mut outstanding = 0usize;
+        for (tidx, p) in processed.iter().enumerate() {
+            let tag = idx as u64 * TAG_STRIDE + tidx as u64;
+            match p.fate {
+                TileFate::OnboardFinal => queue.push(DownlinkItem {
+                    kind: ItemKind::Results,
+                    bytes: RESULT_HEADER_BYTES
+                        + Detection::WIRE_BYTES * p.onboard_dets.len() as u64,
+                    ready_at: ready,
+                    tag,
+                }),
+                TileFate::Offloaded => {
+                    outstanding += 1;
+                    queue.push(DownlinkItem {
+                        kind: ItemKind::Image,
+                        bytes: p.tile.raw_bytes(),
+                        ready_at: ready,
+                        tag,
+                    });
+                }
+                TileFate::Filtered => unreachable!("filtered tiles are not processed"),
+            }
+        }
+        let n_scene_tiles = (scene.width / pipeline.cfg.fragment_px)
+            * (scene.height / pipeline.cfg.fragment_px);
+        pending.insert(
+            idx,
+            PendingScene {
+                bentpipe_bytes: scene.size_bytes(),
+                n_scene_tiles,
+                processed,
+                n_filtered,
+                wall,
+                router,
+                outstanding,
+            },
+        );
+        t += period;
+
+        // contact windows that have opened by now: heartbeat + drain
+        while next_w < windows.len() && windows[next_w].aos < t {
+            let w = &windows[next_w];
+            registry.lock().unwrap().heartbeat(&node, (w.aos * 1000.0) as u64);
+            let got = queue.drain_window(&mut link, w);
+            serve_delivered(got, &mut pending)?;
+            next_w += 1;
+        }
+        // fold every leading scene whose offloads have all resolved
+        while pending.get(&next_fold).map(|p| p.outstanding == 0).unwrap_or(false) {
+            let p = pending.remove(&next_fold).unwrap();
+            acc.add_scene(&p.router, p.bentpipe_bytes, p.n_scene_tiles, &p.processed, p.n_filtered, p.wall);
+            next_fold += 1;
+        }
+    }
+
+    // mission tail: remaining windows give queued items their chance
+    while next_w < windows.len() {
+        let w = &windows[next_w];
+        registry.lock().unwrap().heartbeat(&node, (w.aos * 1000.0) as u64);
+        let got = queue.drain_window(&mut link, w);
+        serve_delivered(got, &mut pending)?;
+        next_w += 1;
+    }
+    // force-fold: undelivered offloads are evaluated with onboard results
+    while let Some(p) = pending.remove(&next_fold) {
+        acc.add_scene(&p.router, p.bentpipe_bytes, p.n_scene_tiles, &p.processed, p.n_filtered, p.wall);
+        next_fold += 1;
+    }
+
+    lc.finish(task, true);
+    gm.lock().unwrap().report(task, &node, TaskPhase::Completed)?;
+    Ok(SatelliteReport {
+        index,
+        name: node.to_string(),
+        result: acc.finish(version, cfg.fragment_px),
+        downlink: queue.stats,
+        link: link.stats,
+        windows: windows.len(),
+        contact_s,
+    })
+}

@@ -1,0 +1,358 @@
+//! Staged concurrent scenario engine — the stage-graph refactor.
+//!
+//! The sequential `Pipeline::run_scenario` is a monolith: ground
+//! re-inference blocks the next capture.  This module decomposes the
+//! scenario into explicit stages connected by bounded typed channels and
+//! runs them on scoped worker threads, so scene k's ground (HeavyDet)
+//! inference overlaps scene k+1's capture and onboard (CloudScore +
+//! TinyDet) inference — the per-model execution locks in
+//! [`crate::runtime`] make that overlap safe and real.
+//!
+//! Stage graph / channel topology (all channels `sync_channel(depth)`):
+//!
+//! ```text
+//! capture ──▶ [onboard × W₁] ──▶ [ground × W₂] ──▶ collector
+//!   (source)   split·filter·       HeavyDet on       re-sequence by
+//!              batch·TinyDet·      offloaded tiles    capture index,
+//!              route                                  fold via
+//!                                                     ScenarioAccumulator
+//! ```
+//!
+//! Parity: every stage body is the exact function the sequential facade
+//! calls (`onboard_scene`, `ground_scene`) and the collector re-sequences
+//! scenes into capture order before folding through the shared
+//! [`ScenarioAccumulator`], so for the same config + seed the staged
+//! result is bit-identical to the sequential one (asserted by
+//! `rust/tests/engine_parity.rs`).
+//!
+//! Per-stage telemetry: `engine.<stage>.items` counters plus
+//! `engine.<stage>.service_s` / `engine.<stage>.queue_wait_s` histograms
+//! in [`StagedEngine::metrics`].
+
+use std::collections::BTreeMap;
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::config::EngineConfig;
+use crate::data::{Scene, Version};
+use crate::telemetry::Registry;
+use crate::util::pool;
+
+use super::pipeline::{Pipeline, ProcessedTile, ScenarioAccumulator, ScenarioResult};
+use super::router::RouterStats;
+
+/// One stage of the graph: a typed item transformer.  Stages are driven
+/// by [`worker_loop`], which owns the channel plumbing and telemetry so
+/// implementations stay pure.
+pub trait Stage {
+    type In: Send;
+    type Out: Send;
+    /// Metric name segment (`engine.<name>.*`).
+    fn name(&self) -> &'static str;
+    fn process(&mut self, item: Self::In) -> Result<Self::Out>;
+}
+
+/// Channel message wrapper stamping enqueue time, so queue waits are
+/// observable per stage.
+struct Envelope<T> {
+    at: Instant,
+    inner: T,
+}
+
+impl<T> Envelope<T> {
+    fn new(inner: T) -> Envelope<T> {
+        Envelope { at: Instant::now(), inner }
+    }
+}
+
+/// A captured scene entering the graph.
+struct SceneJob {
+    idx: usize,
+    scene: Scene,
+}
+
+/// Per-scene output of the onboard stage; the ground stage completes the
+/// offloaded tiles in place.
+struct OnboardDone {
+    idx: usize,
+    bentpipe_bytes: u64,
+    n_scene_tiles: usize,
+    processed: Vec<ProcessedTile>,
+    n_filtered: usize,
+    wall: f64,
+    router: RouterStats,
+}
+
+struct OnboardStage<'p, 'rt> {
+    p: &'p Pipeline<'rt>,
+    frag: usize,
+}
+
+impl Stage for OnboardStage<'_, '_> {
+    type In = SceneJob;
+    type Out = OnboardDone;
+
+    fn name(&self) -> &'static str {
+        "onboard"
+    }
+
+    fn process(&mut self, job: SceneJob) -> Result<OnboardDone> {
+        let mut router = RouterStats::default();
+        let bentpipe_bytes = job.scene.size_bytes();
+        let n_scene_tiles = (job.scene.width / self.frag) * (job.scene.height / self.frag);
+        let (processed, n_filtered, wall) = self.p.onboard_scene(&job.scene, &mut router)?;
+        Ok(OnboardDone {
+            idx: job.idx,
+            bentpipe_bytes,
+            n_scene_tiles,
+            processed,
+            n_filtered,
+            wall,
+            router,
+        })
+    }
+}
+
+struct GroundStage<'p, 'rt> {
+    p: &'p Pipeline<'rt>,
+}
+
+impl Stage for GroundStage<'_, '_> {
+    type In = OnboardDone;
+    type Out = OnboardDone;
+
+    fn name(&self) -> &'static str {
+        "ground"
+    }
+
+    fn process(&mut self, mut done: OnboardDone) -> Result<OnboardDone> {
+        done.wall += self.p.ground_scene(&mut done.processed)?;
+        Ok(done)
+    }
+}
+
+/// Drive one stage worker: recv → process → send, recording service time,
+/// queue wait, and item count.  On a stage error the worker parks the
+/// error and exits; dropping its sender lets the rest of the graph drain
+/// and shut down instead of deadlocking.
+fn worker_loop<S: Stage>(
+    mut stage: S,
+    rx: &Mutex<Receiver<Envelope<S::In>>>,
+    tx: &SyncSender<Envelope<S::Out>>,
+    metrics: &Registry,
+    errs: &Mutex<Vec<anyhow::Error>>,
+) {
+    let items = metrics.counter(&format!("engine.{}.items", stage.name()));
+    let svc = metrics.histogram(&format!("engine.{}.service_s", stage.name()));
+    let wait = metrics.histogram(&format!("engine.{}.queue_wait_s", stage.name()));
+    loop {
+        let msg = {
+            let guard = rx.lock().unwrap();
+            guard.recv()
+        };
+        let Ok(env) = msg else { break };
+        wait.observe_secs(env.at.elapsed().as_secs_f64());
+        let t0 = Instant::now();
+        match stage.process(env.inner) {
+            Ok(out) => {
+                svc.observe_secs(t0.elapsed().as_secs_f64());
+                items.inc();
+                if tx.send(Envelope::new(out)).is_err() {
+                    break; // downstream shut down
+                }
+            }
+            Err(e) => {
+                errs.lock().unwrap().push(e);
+                break;
+            }
+        }
+    }
+}
+
+/// Concurrent scenario executor over a borrowed [`Pipeline`].
+pub struct StagedEngine<'p, 'rt> {
+    pipeline: &'p Pipeline<'rt>,
+    pub cfg: EngineConfig,
+    /// Per-stage counters and latency histograms, accumulated across
+    /// every `run_scenario` call on this engine (the registry is never
+    /// reset — use a fresh engine for per-run numbers).
+    pub metrics: Registry,
+}
+
+impl<'p, 'rt> StagedEngine<'p, 'rt> {
+    pub fn new(pipeline: &'p Pipeline<'rt>) -> StagedEngine<'p, 'rt> {
+        StagedEngine {
+            pipeline,
+            cfg: pipeline.cfg.engine.clone(),
+            metrics: Registry::new(),
+        }
+    }
+
+    pub fn with_workers(mut self, workers: usize) -> StagedEngine<'p, 'rt> {
+        self.cfg.workers = workers;
+        self
+    }
+
+    /// Run the scenario concurrently.  With `workers <= 1` there is
+    /// nothing to overlap, so this is exactly the sequential facade.
+    pub fn run_scenario(&self, version: Version, n_scenes: usize) -> Result<ScenarioResult> {
+        if self.cfg.workers <= 1 {
+            return self.pipeline.run_scenario(version, n_scenes);
+        }
+        let p = self.pipeline;
+        let depth = self.cfg.channel_depth.max(1);
+        // Split inference workers across the two heavy stages; onboard
+        // gets the odd one out (it also runs the CloudScore filter).
+        let onboard_workers = self.cfg.workers.div_ceil(2);
+        let ground_workers = (self.cfg.workers / 2).max(1);
+
+        let (tx_scene, rx_scene) = sync_channel::<Envelope<SceneJob>>(depth);
+        let (tx_onboard, rx_onboard) = sync_channel::<Envelope<OnboardDone>>(depth);
+        let (tx_done, rx_done) = sync_channel::<Envelope<OnboardDone>>(depth);
+        let rx_scene = Arc::new(Mutex::new(rx_scene));
+        let rx_onboard = Arc::new(Mutex::new(rx_onboard));
+
+        let mut gen = p.scene_gen(version);
+        let mut acc = ScenarioAccumulator::new(&p.cfg, p.rt.manifest.classes);
+        let errs: Mutex<Vec<anyhow::Error>> = Mutex::new(Vec::new());
+        let metrics = &self.metrics;
+        let frag = p.cfg.fragment_px;
+
+        {
+            let errs = &errs;
+            let acc_ref = &mut acc;
+            let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+
+            // capture source (SceneGen is inherently sequential: one RNG
+            // stream).  Send failure means downstream stopped on error.
+            jobs.push(Box::new(move || {
+                let produced = metrics.counter("engine.capture.items");
+                for idx in 0..n_scenes {
+                    let scene = gen.capture();
+                    produced.inc();
+                    if tx_scene.send(Envelope::new(SceneJob { idx, scene })).is_err() {
+                        break;
+                    }
+                }
+            }));
+
+            for _ in 0..onboard_workers {
+                let rx = Arc::clone(&rx_scene);
+                let tx = tx_onboard.clone();
+                jobs.push(Box::new(move || {
+                    worker_loop(OnboardStage { p, frag }, &rx, &tx, metrics, errs);
+                }));
+            }
+            // Drop the spawner's channel handles: termination propagates
+            // through sender/receiver drops, so no handle may outlive the
+            // workers or the graph never observes shutdown.
+            drop(rx_scene);
+            drop(tx_onboard);
+
+            for _ in 0..ground_workers {
+                let rx = Arc::clone(&rx_onboard);
+                let tx = tx_done.clone();
+                jobs.push(Box::new(move || {
+                    worker_loop(GroundStage { p }, &rx, &tx, metrics, errs);
+                }));
+            }
+            drop(rx_onboard);
+            drop(tx_done);
+
+            // collector: re-sequence by capture index, fold in order —
+            // this is what keeps the result bit-identical to sequential.
+            jobs.push(Box::new(move || {
+                let wait = metrics.histogram("engine.evaluate.queue_wait_s");
+                let mut held: BTreeMap<usize, OnboardDone> = BTreeMap::new();
+                let mut next = 0usize;
+                for env in rx_done.iter() {
+                    wait.observe_secs(env.at.elapsed().as_secs_f64());
+                    held.insert(env.inner.idx, env.inner);
+                    while let Some(d) = held.remove(&next) {
+                        acc_ref.add_scene(
+                            &d.router,
+                            d.bentpipe_bytes,
+                            d.n_scene_tiles,
+                            &d.processed,
+                            d.n_filtered,
+                            d.wall,
+                        );
+                        next += 1;
+                    }
+                }
+            }));
+
+            pool::scope_jobs(jobs);
+        }
+
+        if let Some(e) = errs.into_inner().unwrap().into_iter().next() {
+            return Err(e);
+        }
+        anyhow::ensure!(
+            acc.scenes() == n_scenes,
+            "staged engine lost scenes: folded {} of {n_scenes}",
+            acc.scenes()
+        );
+        Ok(acc.finish(version, frag))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::runtime::Runtime;
+
+    fn rt() -> Option<Runtime> {
+        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+        if !std::path::Path::new(dir).join("manifest.json").exists() {
+            eprintln!("skipping: artifacts/ not built");
+            return None;
+        }
+        Some(Runtime::open(dir).unwrap())
+    }
+
+    fn small_cfg() -> Config {
+        let mut cfg = Config::default();
+        cfg.scene_cells = 4;
+        cfg
+    }
+
+    #[test]
+    fn staged_conserves_tiles() {
+        let Some(rt) = rt() else { return };
+        let p = Pipeline::new(&rt, small_cfg());
+        let r = StagedEngine::new(&p).with_workers(2).run_scenario(Version::V2, 3).unwrap();
+        assert_eq!(
+            r.tiles_total,
+            r.tiles_filtered + r.router.onboard_final as usize + r.router.offloaded as usize
+        );
+        assert_eq!(r.scenes, 3);
+    }
+
+    #[test]
+    fn single_worker_is_the_sequential_facade() {
+        let Some(rt) = rt() else { return };
+        let p = Pipeline::new(&rt, small_cfg());
+        let staged = StagedEngine::new(&p).with_workers(1).run_scenario(Version::V2, 2).unwrap();
+        let seq = p.run_scenario(Version::V2, 2).unwrap();
+        assert_eq!(staged.tiles_total, seq.tiles_total);
+        assert_eq!(staged.map_collab, seq.map_collab);
+    }
+
+    #[test]
+    fn stage_telemetry_recorded() {
+        let Some(rt) = rt() else { return };
+        let p = Pipeline::new(&rt, small_cfg());
+        let engine = StagedEngine::new(&p).with_workers(2);
+        engine.run_scenario(Version::V2, 2).unwrap();
+        let text = engine.metrics.render();
+        assert!(text.contains("counter engine.capture.items 2"), "{text}");
+        assert!(text.contains("counter engine.onboard.items 2"), "{text}");
+        assert!(text.contains("counter engine.ground.items 2"), "{text}");
+        assert!(text.contains("histogram engine.onboard.service_s"), "{text}");
+    }
+}

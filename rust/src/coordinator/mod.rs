@@ -14,16 +14,29 @@
 //! 7. [`downlink`] — contact-window-gated transfer over the lossy link
 //! 8. evaluation   — mAP of in-orbit vs collaborative + byte accounting
 //!
-//! [`pipeline`] wires the stages; everything above it is unit-testable
-//! without artifacts.
+//! Execution paths over those stages:
+//!
+//! * [`pipeline`] — per-scene stage bodies + the sequential facade
+//!   (`run_scenario`) and the shared result fold; unit-testable without
+//!   artifacts above the runtime.
+//! * [`engine`] — the staged concurrent executor: bounded typed channels
+//!   between stage workers so onboard and ground inference overlap
+//!   (bit-identical results to the facade).
+//! * [`constellation`] — N satellites in parallel (one thread + pipeline
+//!   + contact-window-gated downlink each) sharing one ground segment,
+//!   with cluster/sedna bookkeeping and per-stage telemetry.
 
 pub mod batcher;
 pub mod cloudfilter;
+pub mod constellation;
 pub mod downlink;
+pub mod engine;
 pub mod pipeline;
 pub mod router;
 
-pub use pipeline::{Pipeline, ScenarioResult};
+pub use constellation::{run_constellation, ConstellationReport, SatelliteReport};
+pub use engine::StagedEngine;
+pub use pipeline::{Pipeline, ScenarioAccumulator, ScenarioResult};
 
 /// Where a tile ended up — the router's conservation invariant is that
 /// every split tile is assigned exactly one of these.

@@ -4,15 +4,23 @@
 //! dataset version: filter rate (Fig 6), in-orbit vs collaborative mAP
 //! (Fig 7), downlinked-byte accounting (the 90% headline), router stats,
 //! and duty-cycled energy (Tables 2–3 + the 17% headline).
+//!
+//! Since the stage-graph refactor this module holds the per-scene stage
+//! bodies ([`Pipeline::onboard_scene`], [`Pipeline::ground_scene`]) and
+//! the order-dependent result fold ([`ScenarioAccumulator`]); both the
+//! sequential facade here and the concurrent [`super::engine`] execute
+//! exactly these functions, which is what makes the staged engine's
+//! `ScenarioResult` bit-identical to the sequential one.
 
 use anyhow::Result;
 
-use crate::config::Config;
+use crate::config::{Config, TimingConfig};
 use crate::data::{split_scene, SceneGen, Tile, Version};
 use crate::detect::{decode_rows, nms, Detection, Evaluator, MapReport};
 use crate::energy::EnergyMeter;
 use crate::runtime::{Model, Runtime};
 
+use super::batcher::Batcher;
 use super::cloudfilter::CloudFilter;
 use super::router::{route, RouterPolicy, RouterStats};
 use super::TileFate;
@@ -24,6 +32,15 @@ pub const ONBOARD_S_PER_TILE: f64 = 0.65;
 pub const GROUND_S_PER_TILE: f64 = 0.05;
 /// Per-tile header bytes accompanying compact results.
 pub const RESULT_HEADER_BYTES: u64 = 8;
+
+/// Virtual (busy, scene_period) seconds for a scene with `n_kept`
+/// processed tiles.  One definition shared by the result fold and the
+/// constellation's downlink `ready_at`/window gating, so the two can
+/// never desynchronize.
+pub fn scene_timing(timing: &TimingConfig, n_kept: usize) -> (f64, f64) {
+    let busy = n_kept as f64 * ONBOARD_S_PER_TILE + timing.capture_overhead_s;
+    (busy, busy.max(timing.scene_period_floor_s))
+}
 
 /// One processed tile with everything the ground segment ends up knowing.
 pub struct ProcessedTile {
@@ -80,8 +97,142 @@ impl ScenarioResult {
     }
 }
 
+/// Order-dependent fold of per-scene outputs into a [`ScenarioResult`].
+///
+/// Floating-point accumulation (confidence sums, energy integration) and
+/// evaluator record order depend on scene order, so the staged engine's
+/// collector re-sequences scenes by capture index before feeding this —
+/// identical per-scene inputs then produce a bit-identical result on both
+/// paths.
+pub struct ScenarioAccumulator {
+    router: RouterStats,
+    ev_inorbit: Evaluator,
+    ev_collab: Evaluator,
+    tiles_total: usize,
+    tiles_filtered: usize,
+    bentpipe_bytes: u64,
+    collab_bytes: u64,
+    conf_sum: f64,
+    conf_n: u64,
+    wall_infer: f64,
+    onboard_busy_s: f64,
+    virtual_s: f64,
+    energy: EnergyMeter,
+    scenes: usize,
+    timing: TimingConfig,
+}
+
+impl ScenarioAccumulator {
+    pub fn new(cfg: &Config, classes: usize) -> ScenarioAccumulator {
+        ScenarioAccumulator {
+            router: RouterStats::default(),
+            ev_inorbit: Evaluator::new(classes, 0.5),
+            ev_collab: Evaluator::new(classes, 0.5),
+            tiles_total: 0,
+            tiles_filtered: 0,
+            bentpipe_bytes: 0,
+            collab_bytes: 0,
+            conf_sum: 0.0,
+            conf_n: 0,
+            wall_infer: 0.0,
+            onboard_busy_s: 0.0,
+            virtual_s: 0.0,
+            energy: EnergyMeter::new(),
+            scenes: 0,
+            timing: cfg.timing.clone(),
+        }
+    }
+
+    /// Fold one scene, in capture order.
+    pub fn add_scene(
+        &mut self,
+        router: &RouterStats,
+        bentpipe_bytes: u64,
+        n_scene_tiles: usize,
+        processed: &[ProcessedTile],
+        n_filtered: usize,
+        wall: f64,
+    ) {
+        self.scenes += 1;
+        self.router.merge(router);
+        self.bentpipe_bytes += bentpipe_bytes;
+        self.tiles_total += n_scene_tiles;
+        self.tiles_filtered += n_filtered;
+        self.wall_infer += wall;
+
+        for p in processed {
+            // evaluation — in-orbit: onboard detections everywhere
+            self.ev_inorbit.add_image(&p.onboard_dets, &p.tile.gt);
+            // collaborative: ground detections replace offloaded tiles
+            match (&p.fate, &p.ground_dets) {
+                (TileFate::Offloaded, Some(g)) => self.ev_collab.add_image(g, &p.tile.gt),
+                _ => self.ev_collab.add_image(&p.onboard_dets, &p.tile.gt),
+            }
+            // byte accounting
+            match p.fate {
+                TileFate::OnboardFinal => {
+                    self.collab_bytes += RESULT_HEADER_BYTES
+                        + Detection::WIRE_BYTES * p.onboard_dets.len() as u64;
+                }
+                TileFate::Offloaded => {
+                    self.collab_bytes += p.tile.raw_bytes();
+                }
+                TileFate::Filtered => unreachable!("filtered tiles are not processed"),
+            }
+            if let Some(best) = p.onboard_dets.first() {
+                self.conf_sum += best.score as f64;
+                self.conf_n += 1;
+            }
+        }
+
+        // virtual-time + energy accounting for this scene: the satellite is
+        // busy ONBOARD_S_PER_TILE per kept tile; capture and filtering are
+        // folded into a per-scene constant.
+        let (busy, scene_period) = scene_timing(&self.timing, processed.len());
+        self.onboard_busy_s += busy;
+        self.virtual_s += scene_period;
+        self.energy.advance(scene_period, busy / scene_period, 0.05, 0.1);
+    }
+
+    /// Scenes folded so far (the engine's collector uses this to detect
+    /// lost work).
+    pub fn scenes(&self) -> usize {
+        self.scenes
+    }
+
+    pub fn finish(self, version: Version, fragment_px: usize) -> ScenarioResult {
+        // Each report is computed once and the headline maps are derived
+        // from the cached values (the pre-refactor code evaluated every
+        // report twice).
+        let report_inorbit = self.ev_inorbit.report();
+        let report_collab = self.ev_collab.report();
+        ScenarioResult {
+            version: version.name(),
+            fragment_px,
+            scenes: self.scenes,
+            tiles_total: self.tiles_total,
+            tiles_filtered: self.tiles_filtered,
+            router: self.router,
+            map_inorbit: report_inorbit.map,
+            map_collab: report_collab.map,
+            report_inorbit,
+            report_collab,
+            bentpipe_bytes: self.bentpipe_bytes,
+            collab_bytes: self.collab_bytes,
+            mean_confidence: if self.conf_n == 0 {
+                0.0
+            } else {
+                self.conf_sum / self.conf_n as f64
+            },
+            compute_duty: self.onboard_busy_s / self.virtual_s.max(1e-9),
+            energy_compute_share: self.energy.compute_share(),
+            wall_infer_s: self.wall_infer,
+        }
+    }
+}
+
 pub struct Pipeline<'rt> {
-    rt: &'rt Runtime,
+    pub(crate) rt: &'rt Runtime,
     pub cfg: Config,
     pub policy: RouterPolicy,
     pub onboard_model: Model,
@@ -91,9 +242,21 @@ impl<'rt> Pipeline<'rt> {
     pub fn new(rt: &'rt Runtime, cfg: Config) -> Pipeline<'rt> {
         let policy = RouterPolicy {
             confidence_threshold: cfg.policy.confidence_threshold,
-            empty_objectness: 0.25,
+            empty_objectness: cfg.policy.empty_objectness,
         };
         Pipeline { rt, cfg, policy, onboard_model: Model::Tiny }
+    }
+
+    /// Deterministic scene source for one scenario run — shared by the
+    /// sequential facade and the engine's capture stage so both observe
+    /// the identical capture stream.
+    pub fn scene_gen(&self, version: Version) -> SceneGen {
+        SceneGen::new(
+            self.cfg.seed ^ version.name().len() as u64,
+            version.spec(),
+            self.cfg.scene_cells,
+            self.cfg.scene_cells,
+        )
     }
 
     /// Run one detector over tiles; returns (per-tile NMS'd detections,
@@ -127,11 +290,12 @@ impl<'rt> Pipeline<'rt> {
         Ok((dets, best_obj, wall))
     }
 
-    /// Process one scene through split → filter → onboard → route →
-    /// ground.  Ground inference runs immediately (the contact-window
-    /// dynamics are layered on by the orbital examples via
-    /// [`super::downlink`]).
-    pub fn process_scene(
+    /// Onboard half of one scene: split → cloud-filter → dynamic-batch →
+    /// onboard infer → route.  Batches form through the [`Batcher`] (the
+    /// hot path since the staged-engine refactor); enqueueing a whole
+    /// scene and draining with flush reproduces `chunks(max_batch)`
+    /// exactly, so detections are unchanged from the pre-batcher pipeline.
+    pub fn onboard_scene(
         &self,
         scene: &crate::data::Scene,
         router_stats: &mut RouterStats,
@@ -140,125 +304,89 @@ impl<'rt> Pipeline<'rt> {
         let filter = CloudFilter::new(self.rt, self.cfg.policy.redundancy_threshold);
         let (kept, redundant) = filter.filter(tiles)?;
         let n_filtered = redundant.len();
+        // redundant tiles are simply dropped (their GT is lost — the
+        // communication/accuracy trade the paper accepts)
+        drop(redundant);
 
-        let (dets, best_obj, mut wall) = self.infer(self.onboard_model, &kept)?;
-        let mut processed: Vec<ProcessedTile> = kept
-            .into_iter()
-            .zip(dets)
-            .zip(best_obj)
-            .map(|((tile, onboard_dets), best)| {
+        let mut batcher = Batcher::new(self.rt.max_batch(), self.cfg.engine.batch_max_wait_s);
+        for t in kept {
+            batcher.push(t, 0.0);
+        }
+        let mut processed: Vec<ProcessedTile> = Vec::new();
+        let mut wall = 0.0;
+        while let Some((batch, _delays)) = batcher.pop(0.0, true) {
+            let (dets, best_obj, w) = self.infer(self.onboard_model, &batch)?;
+            wall += w;
+            for ((tile, onboard_dets), best) in batch.into_iter().zip(dets).zip(best_obj) {
                 let fate = route(&self.policy, &onboard_dets, best, router_stats);
-                ProcessedTile { tile, fate, onboard_dets, ground_dets: None, best_objectness: best }
-            })
-            .collect();
+                processed.push(ProcessedTile {
+                    tile,
+                    fate,
+                    onboard_dets,
+                    ground_dets: None,
+                    best_objectness: best,
+                });
+            }
+        }
+        Ok((processed, n_filtered, wall))
+    }
 
-        // ground re-inference for offloaded tiles
+    /// Ground half: re-inference (HeavyDet) for offloaded tiles.  Returns
+    /// the PJRT wallclock spent.
+    pub fn ground_scene(&self, processed: &mut [ProcessedTile]) -> Result<f64> {
         let offload_idx: Vec<usize> = processed
             .iter()
             .enumerate()
             .filter(|(_, p)| p.fate == TileFate::Offloaded)
             .map(|(i, _)| i)
             .collect();
-        if !offload_idx.is_empty() {
-            let off_tiles: Vec<Tile> =
-                offload_idx.iter().map(|&i| processed[i].tile.clone()).collect();
-            let (gdets, _, w) = self.infer(Model::Heavy, &off_tiles)?;
-            wall += w;
-            for (&i, d) in offload_idx.iter().zip(gdets) {
-                processed[i].ground_dets = Some(d);
-            }
+        if offload_idx.is_empty() {
+            return Ok(0.0);
         }
-        // redundant tiles are simply dropped (their GT is lost — the
-        // communication/accuracy trade the paper accepts)
-        drop(redundant);
+        let off_tiles: Vec<Tile> =
+            offload_idx.iter().map(|&i| processed[i].tile.clone()).collect();
+        let (gdets, _, wall) = self.infer(Model::Heavy, &off_tiles)?;
+        for (&i, d) in offload_idx.iter().zip(gdets) {
+            processed[i].ground_dets = Some(d);
+        }
+        Ok(wall)
+    }
+
+    /// Process one scene through split → filter → batch → onboard → route
+    /// → ground.  Ground inference runs immediately (the contact-window
+    /// dynamics are layered on by [`super::constellation`] and the orbital
+    /// examples via [`super::downlink`]).
+    pub fn process_scene(
+        &self,
+        scene: &crate::data::Scene,
+        router_stats: &mut RouterStats,
+    ) -> Result<(Vec<ProcessedTile>, usize, f64)> {
+        let (mut processed, n_filtered, mut wall) = self.onboard_scene(scene, router_stats)?;
+        wall += self.ground_scene(&mut processed)?;
         Ok((processed, n_filtered, wall))
     }
 
-    /// Full scenario: `n_scenes` captures of a dataset `version`.
+    /// Full scenario: `n_scenes` captures of a dataset `version`,
+    /// processed sequentially.  This is the reference facade the staged
+    /// engine ([`super::engine::StagedEngine`]) must match bit-for-bit.
     pub fn run_scenario(&self, version: Version, n_scenes: usize) -> Result<ScenarioResult> {
-        let mut gen = SceneGen::new(
-            self.cfg.seed ^ version.name().len() as u64,
-            version.spec(),
-            self.cfg.scene_cells,
-            self.cfg.scene_cells,
-        );
-        let mut router_stats = RouterStats::default();
-        let mut ev_inorbit = Evaluator::new(self.rt.manifest.classes, 0.5);
-        let mut ev_collab = Evaluator::new(self.rt.manifest.classes, 0.5);
-        let mut tiles_total = 0;
-        let mut tiles_filtered = 0;
-        let mut bentpipe_bytes = 0u64;
-        let mut collab_bytes = 0u64;
-        let mut conf_sum = 0.0;
-        let mut conf_n = 0u64;
-        let mut wall_infer = 0.0;
-        let mut onboard_busy_s = 0.0;
-        let mut virtual_s = 0.0;
-        let mut energy = EnergyMeter::new();
-
+        let mut gen = self.scene_gen(version);
+        let mut acc = ScenarioAccumulator::new(&self.cfg, self.rt.manifest.classes);
         for _ in 0..n_scenes {
             let scene = gen.capture();
-            bentpipe_bytes += scene.size_bytes();
+            let mut router = RouterStats::default();
+            let (processed, n_filtered, wall) = self.process_scene(&scene, &mut router)?;
             let n_scene_tiles = (scene.width / self.cfg.fragment_px)
                 * (scene.height / self.cfg.fragment_px);
-            tiles_total += n_scene_tiles;
-            let (processed, n_filtered, wall) = self.process_scene(&scene, &mut router_stats)?;
-            wall_infer += wall;
-            tiles_filtered += n_filtered;
-
-            for p in &processed {
-                // evaluation — in-orbit: onboard detections everywhere
-                ev_inorbit.add_image(&p.onboard_dets, &p.tile.gt);
-                // collaborative: ground detections replace offloaded tiles
-                match (&p.fate, &p.ground_dets) {
-                    (TileFate::Offloaded, Some(g)) => ev_collab.add_image(g, &p.tile.gt),
-                    _ => ev_collab.add_image(&p.onboard_dets, &p.tile.gt),
-                }
-                // byte accounting
-                match p.fate {
-                    TileFate::OnboardFinal => {
-                        collab_bytes += RESULT_HEADER_BYTES
-                            + Detection::WIRE_BYTES * p.onboard_dets.len() as u64;
-                    }
-                    TileFate::Offloaded => {
-                        collab_bytes += p.tile.raw_bytes();
-                    }
-                    TileFate::Filtered => unreachable!("filtered tiles are not processed"),
-                }
-                if let Some(best) = p.onboard_dets.first() {
-                    conf_sum += best.score as f64;
-                    conf_n += 1;
-                }
-            }
-
-            // virtual-time + energy accounting for this scene: the
-            // satellite is busy ONBOARD_S_PER_TILE per kept tile; capture
-            // and filtering are folded into a per-scene constant.
-            let busy = processed.len() as f64 * ONBOARD_S_PER_TILE + 2.0;
-            let scene_period = busy.max(30.0); // at most one scene per 30 s
-            onboard_busy_s += busy;
-            virtual_s += scene_period;
-            energy.advance(scene_period, busy / scene_period, 0.05, 0.1);
+            acc.add_scene(&router, scene.size_bytes(), n_scene_tiles, &processed, n_filtered, wall);
         }
+        Ok(acc.finish(version, self.cfg.fragment_px))
+    }
 
-        Ok(ScenarioResult {
-            version: version.name(),
-            fragment_px: self.cfg.fragment_px,
-            scenes: n_scenes,
-            tiles_total,
-            tiles_filtered,
-            router: router_stats,
-            map_inorbit: ev_inorbit.report().map,
-            map_collab: ev_collab.report().map,
-            report_inorbit: ev_inorbit.report(),
-            report_collab: ev_collab.report(),
-            bentpipe_bytes,
-            collab_bytes,
-            mean_confidence: if conf_n == 0 { 0.0 } else { conf_sum / conf_n as f64 },
-            compute_duty: onboard_busy_s / virtual_s.max(1e-9),
-            energy_compute_share: energy.compute_share(),
-            wall_infer_s: wall_infer,
-        })
+    /// Convenience: run the scenario on the staged concurrent engine with
+    /// the config's engine section.
+    pub fn run_scenario_staged(&self, version: Version, n_scenes: usize) -> Result<ScenarioResult> {
+        super::engine::StagedEngine::new(self).run_scenario(version, n_scenes)
     }
 }
 
@@ -328,5 +456,26 @@ mod tests {
         let p = Pipeline::new(&rt, small_cfg());
         let r = p.run_scenario(Version::V2, 3).unwrap();
         assert!((0.05..0.25).contains(&r.energy_compute_share), "{}", r.energy_compute_share);
+    }
+
+    #[test]
+    fn reports_match_headline_maps() {
+        // satellite fix: each evaluator report is computed once; the
+        // headline maps must be the cached reports' maps.
+        let Some(rt) = rt() else { return };
+        let p = Pipeline::new(&rt, small_cfg());
+        let r = p.run_scenario(Version::V2, 2).unwrap();
+        assert_eq!(r.map_inorbit, r.report_inorbit.map);
+        assert_eq!(r.map_collab, r.report_collab.map);
+    }
+
+    #[test]
+    fn timing_config_drives_duty_cycle() {
+        let Some(rt) = rt() else { return };
+        let mut cfg = small_cfg();
+        cfg.timing.scene_period_floor_s = 300.0; // much idler satellite
+        let idle = Pipeline::new(&rt, cfg).run_scenario(Version::V2, 2).unwrap();
+        let busy = Pipeline::new(&rt, small_cfg()).run_scenario(Version::V2, 2).unwrap();
+        assert!(idle.compute_duty < busy.compute_duty, "{} vs {}", idle.compute_duty, busy.compute_duty);
     }
 }

@@ -49,6 +49,14 @@ impl RouterStats {
             self.offloaded as f64 / t as f64
         }
     }
+
+    /// Fold per-scene stats into a scenario total.  Counts are sums, so
+    /// merging is exact regardless of the order stage workers finish in.
+    pub fn merge(&mut self, other: &RouterStats) {
+        self.onboard_final += other.onboard_final;
+        self.offloaded += other.offloaded;
+        self.confidently_empty += other.confidently_empty;
+    }
 }
 
 /// Route one tile given its NMS'd onboard detections and the best raw
@@ -132,6 +140,17 @@ mod tests {
         route(&policy(), &[], 0.01, &mut s);
         assert_eq!(s.total(), 5);
         assert_eq!(s.onboard_final + s.offloaded, 5);
+    }
+
+    #[test]
+    fn merge_sums_counts() {
+        let mut a = RouterStats { onboard_final: 2, offloaded: 1, confidently_empty: 1 };
+        let b = RouterStats { onboard_final: 3, offloaded: 4, confidently_empty: 0 };
+        a.merge(&b);
+        assert_eq!(a.onboard_final, 5);
+        assert_eq!(a.offloaded, 5);
+        assert_eq!(a.confidently_empty, 1);
+        assert_eq!(a.total(), 10);
     }
 
     #[test]

@@ -19,12 +19,22 @@
 //! * [`sedna`]     — collaborative-AI task layer: GlobalManager, workers,
 //!                   joint inference / federated / incremental learning.
 //! * [`coordinator`] — the paper's contribution: the satellite-ground
-//!                   collaborative inference pipeline (Fig 5).
+//!                   collaborative inference pipeline (Fig 5).  Three
+//!                   execution paths: the sequential facade
+//!                   (`coordinator::pipeline`), the staged concurrent
+//!                   engine (`coordinator::engine` — bounded typed
+//!                   channels, bit-identical results), and the
+//!                   constellation runner (`coordinator::constellation` —
+//!                   N satellites sharing one ground segment behind
+//!                   contact-window-gated downlinks).
 //! * [`telemetry`] — counters, gauges, histograms, report rendering.
-//! * [`config`]    — JSON config system + `configs/*.json` platform files.
+//! * [`config`]    — JSON config system + `configs/*.json` platform files;
+//!                   `engine`/`timing`/`constellation` sections drive the
+//!                   staged execution paths.
 //! * [`util`]      — deterministic RNG, mini-JSON, CLI, bench harness,
-//!                   thread pool (offline substitutes for rand / serde /
-//!                   clap / criterion / tokio).
+//!                   thread pool + scoped stage workers (offline
+//!                   substitutes for rand / serde / clap / criterion /
+//!                   tokio).
 
 pub mod cluster;
 pub mod config;

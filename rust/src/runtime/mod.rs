@@ -16,7 +16,7 @@ pub use manifest::{Manifest, ModelInfo};
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, Context, Result};
 
@@ -55,8 +55,14 @@ struct LoadedExe {
 
 /// A PJRT CPU client plus lazily-compiled executables per (model, batch).
 ///
-/// Thread-safe: executables compile under a mutex once, execute afterwards
-/// without contention (PJRT execution itself is internally synchronized).
+/// Concurrency audit (staged-engine refactor): every piece of mutable
+/// state is behind a `Mutex` — `exes` (compile-once cache, held only for
+/// lookup/compile, never across `execute`), `costs` (calibration table,
+/// held only for lookup/insert inside `plan`/`calibrate`), and
+/// `exec_locks` below.  Cached executables are leaked to `&'static`, so
+/// worker threads execute without touching the cache lock.  Stage workers
+/// may therefore share `&Runtime` freely; the only serialization point is
+/// the per-model execution lock.
 pub struct Runtime {
     client: xla::PjRtClient,
     dir: PathBuf,
@@ -68,6 +74,11 @@ pub struct Runtime {
     /// CPU-PJRT, so `execute` picks the cheapest plan instead of blindly
     /// padding to the largest exported batch.
     costs: Mutex<HashMap<(Model, usize), f64>>,
+    /// Per-model execution locks: concurrent `execute` calls on *different*
+    /// models (onboard Tiny vs ground Heavy) overlap, while calls on the
+    /// same model serialize — CPU-PJRT gains nothing from oversubscribing
+    /// one executable and the lock keeps its arena usage bounded.
+    exec_locks: Mutex<HashMap<Model, Arc<Mutex<()>>>>,
 }
 
 impl Runtime {
@@ -83,6 +94,7 @@ impl Runtime {
             manifest,
             exes: Mutex::new(HashMap::new()),
             costs: Mutex::new(HashMap::new()),
+            exec_locks: Mutex::new(HashMap::new()),
         })
     }
 
@@ -211,6 +223,11 @@ impl Runtime {
             return Err(anyhow!("input len {} != {want}", input.len()));
         }
         let loaded: &LoadedExe = self.exe(model, batch)?;
+        let model_lock = {
+            let mut guard = self.exec_locks.lock().unwrap();
+            Arc::clone(guard.entry(model).or_default())
+        };
+        let _exec_guard = model_lock.lock().unwrap();
         let lit = xla::Literal::vec1(input)
             .reshape(&[batch as i64, t as i64, t as i64, 3])
             .map_err(wrap_xla)?;

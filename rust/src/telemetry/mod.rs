@@ -26,6 +26,29 @@ impl Counter {
     }
 }
 
+/// Instantaneous level (queue depth, in-flight batches).  Stored as i64
+/// so transient dec-before-inc races in relaxed code can't wrap.
+#[derive(Default)]
+pub struct Gauge(std::sync::atomic::AtomicI64);
+
+impl Gauge {
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn dec(&self) {
+        self.0.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
 /// Streaming histogram with fixed log-spaced buckets (µs-scale latencies
 /// up to minutes) plus exact count/sum for means.
 pub struct Histogram {
@@ -104,6 +127,7 @@ impl Histogram {
 #[derive(Default)]
 pub struct Registry {
     counters: Mutex<BTreeMap<String, std::sync::Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, std::sync::Arc<Gauge>>>,
     histograms: Mutex<BTreeMap<String, std::sync::Arc<Histogram>>>,
 }
 
@@ -114,6 +138,15 @@ impl Registry {
 
     pub fn counter(&self, name: &str) -> std::sync::Arc<Counter> {
         self.counters
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
+    pub fn gauge(&self, name: &str) -> std::sync::Arc<Gauge> {
+        self.gauges
             .lock()
             .unwrap()
             .entry(name.to_string())
@@ -135,6 +168,9 @@ impl Registry {
         let mut out = String::new();
         for (name, c) in self.counters.lock().unwrap().iter() {
             out.push_str(&format!("counter {name} {}\n", c.get()));
+        }
+        for (name, g) in self.gauges.lock().unwrap().iter() {
+            out.push_str(&format!("gauge {name} {}\n", g.get()));
         }
         for (name, h) in self.histograms.lock().unwrap().iter() {
             out.push_str(&format!(
@@ -180,6 +216,24 @@ mod tests {
         }
         assert!(h.quantile_secs(0.5) <= h.quantile_secs(0.9));
         assert!(h.quantile_secs(0.9) <= h.quantile_secs(0.99) + 1e-9);
+    }
+
+    #[test]
+    fn gauge_tracks_level() {
+        let g = Gauge::default();
+        g.inc();
+        g.inc();
+        g.dec();
+        assert_eq!(g.get(), 1);
+        g.set(-3);
+        assert_eq!(g.get(), -3);
+    }
+
+    #[test]
+    fn registry_renders_gauges() {
+        let r = Registry::new();
+        r.gauge("depth").set(7);
+        assert!(r.render().contains("gauge depth 7"));
     }
 
     #[test]

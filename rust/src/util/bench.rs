@@ -62,6 +62,23 @@ pub fn once<T, F: FnOnce() -> T>(name: &str, f: F) -> (T, Duration) {
     (out, dt)
 }
 
+/// Emit one machine-readable bench record: a single JSON object per line
+/// (`{"bench": <name>, <field>: <value>, ...}`), the format EXPERIMENTS
+/// tooling greps out of bench logs.  Non-finite values are emitted as
+/// null so the line stays valid JSON.
+pub fn json_line(name: &str, fields: &[(&str, f64)]) {
+    let mut s = format!("{{\"bench\":\"{name}\"");
+    for (k, v) in fields {
+        if v.is_finite() {
+            s.push_str(&format!(",\"{k}\":{v}"));
+        } else {
+            s.push_str(&format!(",\"{k}\":null"));
+        }
+    }
+    s.push('}');
+    println!("{s}");
+}
+
 /// Render a paper-style table row: fixed-width columns.
 pub fn table_row(cols: &[&str], widths: &[usize]) -> String {
     let mut s = String::new();
@@ -95,5 +112,12 @@ mod tests {
     fn table_row_pads() {
         let row = table_row(&["a", "bb"], &[4, 4]);
         assert_eq!(row, "a   bb  ");
+    }
+
+    #[test]
+    fn json_line_smoke() {
+        // json_line prints; just exercise the formatting paths (finite +
+        // non-finite) for panics.
+        json_line("t", &[("a", 1.5), ("b", f64::NAN)]);
     }
 }

@@ -76,6 +76,13 @@ impl Pool {
     }
 
     pub fn join(mut self) {
+        self.shutdown();
+    }
+
+    /// Drain queued jobs and stop all workers.  Idempotent: safe to call
+    /// more than once (and again from `Drop`); after shutdown, `spawn`
+    /// panics — the pool is done.
+    pub fn shutdown(&mut self) {
         drop(self.tx.take());
         for w in self.workers.drain(..) {
             let _ = w.join();
@@ -85,11 +92,55 @@ impl Pool {
 
 impl Drop for Pool {
     fn drop(&mut self) {
-        drop(self.tx.take());
-        for w in self.workers.drain(..) {
-            let _ = w.join();
-        }
+        self.shutdown();
     }
+}
+
+/// Ordered parallel map over items that may borrow non-'static data, run
+/// on `n` scoped threads — the borrowed-data counterpart of
+/// [`Pool::map`] (whose jobs must be 'static), for callers that fan a
+/// batch out against the `Runtime` without an explicit stage graph.
+pub fn scoped_map<T, R, F>(n: usize, items: Vec<T>, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    let n = n.max(1);
+    let total = items.len();
+    let mut shards: Vec<Vec<(usize, T)>> = (0..n).map(|_| Vec::new()).collect();
+    for (i, item) in items.into_iter().enumerate() {
+        shards[i % n].push((i, item));
+    }
+    let mut out: Vec<Option<R>> = (0..total).map(|_| None).collect();
+    let f = &f;
+    std::thread::scope(|s| {
+        let handles: Vec<_> = shards
+            .into_iter()
+            .map(|shard| {
+                s.spawn(move || shard.into_iter().map(|(i, t)| (i, f(t))).collect::<Vec<_>>())
+            })
+            .collect();
+        for h in handles {
+            for (i, r) in h.join().expect("scoped_map worker panicked") {
+                out[i] = Some(r);
+            }
+        }
+    });
+    out.into_iter().map(|o| o.expect("scoped_map lost an item")).collect()
+}
+
+/// Run a set of heterogeneous borrowed jobs to completion on scoped
+/// threads — one thread per job.  The staged engine's stage workers run
+/// through this (they borrow the `Runtime` and each other's channels, so
+/// they cannot be `Pool` jobs).
+pub fn scope_jobs<'env>(jobs: Vec<Box<dyn FnOnce() + Send + 'env>>) {
+    std::thread::scope(|s| {
+        let handles: Vec<_> = jobs.into_iter().map(|j| s.spawn(j)).collect();
+        for h in handles {
+            h.join().expect("stage worker panicked");
+        }
+    });
 }
 
 #[cfg(test)]
@@ -123,5 +174,40 @@ mod tests {
         let pool = Pool::new(1);
         let out = pool.map(vec![1, 2, 3], |x| x + 1);
         assert_eq!(out, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn shutdown_is_idempotent() {
+        let mut pool = Pool::new(2);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..10 {
+            let c = Arc::clone(&counter);
+            pool.spawn(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.shutdown();
+        assert_eq!(counter.load(Ordering::SeqCst), 10);
+        pool.shutdown(); // second call is a no-op (and Drop will be a third)
+    }
+
+    #[test]
+    fn scoped_map_borrows_and_preserves_order() {
+        let base = vec![10u64, 20, 30]; // borrowed, not 'static-moved
+        let out = scoped_map(2, vec![0usize, 1, 2], |i| base[i] + i as u64);
+        assert_eq!(out, vec![10, 21, 32]);
+    }
+
+    #[test]
+    fn scope_jobs_runs_all_to_completion() {
+        let counter = AtomicUsize::new(0);
+        let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+        for _ in 0..5 {
+            jobs.push(Box::new(|| {
+                counter.fetch_add(1, Ordering::SeqCst);
+            }));
+        }
+        scope_jobs(jobs);
+        assert_eq!(counter.load(Ordering::SeqCst), 5);
     }
 }

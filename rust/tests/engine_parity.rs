@@ -1,0 +1,125 @@
+//! Staged-engine correctness: the concurrent stage graph must reproduce
+//! the sequential facade's `ScenarioResult` bit-for-bit for identical
+//! config + seed, and the constellation runner must complete with ≥ 3
+//! satellites and report per-stage telemetry.
+
+use tiansuan::config::Config;
+use tiansuan::coordinator::{run_constellation, Pipeline, StagedEngine};
+use tiansuan::data::Version;
+use tiansuan::runtime::Runtime;
+
+fn rt() -> Option<Runtime> {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    if !std::path::Path::new(dir).join("manifest.json").exists() {
+        eprintln!("skipping: artifacts/ not built");
+        return None;
+    }
+    Some(Runtime::open(dir).unwrap())
+}
+
+fn small_cfg() -> Config {
+    let mut cfg = Config::default();
+    cfg.scene_cells = 4;
+    cfg
+}
+
+/// Everything except `wall_infer_s` (genuine wallclock) must match
+/// exactly — tile conservation, filter rate, router counts, mAP bits,
+/// byte accounting, confidence, duty cycle, energy share.
+fn assert_bit_identical(staged: &tiansuan::coordinator::ScenarioResult, seq: &tiansuan::coordinator::ScenarioResult) {
+    assert_eq!(staged.version, seq.version);
+    assert_eq!(staged.fragment_px, seq.fragment_px);
+    assert_eq!(staged.scenes, seq.scenes);
+    assert_eq!(staged.tiles_total, seq.tiles_total);
+    assert_eq!(staged.tiles_filtered, seq.tiles_filtered);
+    assert_eq!(staged.router.onboard_final, seq.router.onboard_final);
+    assert_eq!(staged.router.offloaded, seq.router.offloaded);
+    assert_eq!(staged.router.confidently_empty, seq.router.confidently_empty);
+    assert_eq!(staged.map_inorbit.to_bits(), seq.map_inorbit.to_bits());
+    assert_eq!(staged.map_collab.to_bits(), seq.map_collab.to_bits());
+    assert_eq!(staged.report_inorbit.gt_total, seq.report_inorbit.gt_total);
+    assert_eq!(staged.report_inorbit.det_total, seq.report_inorbit.det_total);
+    assert_eq!(staged.report_collab.det_total, seq.report_collab.det_total);
+    assert_eq!(staged.bentpipe_bytes, seq.bentpipe_bytes);
+    assert_eq!(staged.collab_bytes, seq.collab_bytes);
+    assert_eq!(staged.mean_confidence.to_bits(), seq.mean_confidence.to_bits());
+    assert_eq!(staged.compute_duty.to_bits(), seq.compute_duty.to_bits());
+    assert_eq!(
+        staged.energy_compute_share.to_bits(),
+        seq.energy_compute_share.to_bits()
+    );
+}
+
+#[test]
+fn staged_engine_matches_sequential_facade() {
+    let Some(rt) = rt() else { return };
+    for version in [Version::V1, Version::V2] {
+        let p = Pipeline::new(&rt, small_cfg());
+        let seq = p.run_scenario(version, 4).unwrap();
+        for workers in [2usize, 4] {
+            let staged = StagedEngine::new(&p)
+                .with_workers(workers)
+                .run_scenario(version, 4)
+                .unwrap();
+            assert_bit_identical(&staged, &seq);
+        }
+    }
+}
+
+#[test]
+fn staged_engine_matches_across_seeds() {
+    let Some(rt) = rt() else { return };
+    for seed in [1u64, 20231207] {
+        let mut cfg = small_cfg();
+        cfg.seed = seed;
+        let p = Pipeline::new(&rt, cfg);
+        let seq = p.run_scenario(Version::V2, 3).unwrap();
+        let staged = p.run_scenario_staged(Version::V2, 3).unwrap();
+        assert_bit_identical(&staged, &seq);
+    }
+}
+
+#[test]
+fn constellation_three_satellites_complete() {
+    let Some(rt) = rt() else { return };
+    let mut cfg = small_cfg();
+    cfg.constellation.satellites = 3;
+    cfg.constellation.scenes_per_satellite = 2;
+    let report = run_constellation(&rt, &cfg, Version::V2).unwrap();
+
+    assert_eq!(report.satellites.len(), 3);
+    assert!(report.task_completed, "sedna task should aggregate to Completed");
+    assert!(report.tiles_total > 0);
+    assert!(report.aggregate_tiles_per_s() > 0.0);
+    for sat in &report.satellites {
+        assert_eq!(sat.result.scenes, 2);
+        // tile conservation holds per satellite
+        assert_eq!(
+            sat.result.tiles_total,
+            sat.result.tiles_filtered
+                + sat.result.router.onboard_final as usize
+                + sat.result.router.offloaded as usize
+        );
+        assert!((0.0..=1.0).contains(&sat.result.energy_compute_share));
+    }
+    // per-stage latency telemetry is present
+    assert!(report.telemetry.contains("histogram constellation.onboard.service_s"), "{}", report.telemetry);
+    assert!(report.telemetry.contains("histogram constellation.ground.queue_wait_s"), "{}", report.telemetry);
+    assert!(report.telemetry.contains("counter constellation.ground.tiles"), "{}", report.telemetry);
+}
+
+#[test]
+fn constellation_satellites_see_distinct_workloads() {
+    let Some(rt) = rt() else { return };
+    let mut cfg = small_cfg();
+    cfg.constellation.satellites = 2;
+    cfg.constellation.scenes_per_satellite = 2;
+    let report = run_constellation(&rt, &cfg, Version::V2).unwrap();
+    let a = &report.satellites[0].result;
+    let b = &report.satellites[1].result;
+    // distinct per-satellite seeds: byte accounting should differ
+    assert!(
+        a.collab_bytes != b.collab_bytes || a.router.offloaded != b.router.offloaded,
+        "satellites unexpectedly produced identical workloads"
+    );
+}

@@ -1,0 +1,104 @@
+//! Multi-threaded `Runtime::execute` smoke test: N threads hammer mixed
+//! models and ragged batch sizes concurrently, guarding the
+//! `Mutex<HashMap>` caches (compiled executables, calibration costs) and
+//! the per-model execution locks.  Every thread's results must match a
+//! single-threaded reference run.
+
+use tiansuan::runtime::{Model, Runtime};
+
+fn rt() -> Option<Runtime> {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    if !std::path::Path::new(dir).join("manifest.json").exists() {
+        eprintln!("skipping: artifacts/ not built");
+        return None;
+    }
+    Some(Runtime::open(dir).unwrap())
+}
+
+fn input(rt: &Runtime, n: usize, seed: u64) -> Vec<f32> {
+    let t = rt.manifest.tile;
+    let mut rng = tiansuan::util::rng::Rng::new(seed);
+    (0..n * t * t * 3).map(|_| rng.f32()).collect()
+}
+
+fn out_cols(rt: &Runtime, model: Model) -> usize {
+    match model {
+        Model::CloudScore => 3,
+        _ => rt.manifest.grid * rt.manifest.grid * rt.manifest.head_d,
+    }
+}
+
+#[test]
+fn concurrent_execute_mixed_models_and_batches() {
+    let Some(rt) = rt() else { return };
+    let models = [Model::Tiny, Model::Heavy, Model::CloudScore];
+    let batch_ns = [1usize, 3, 5];
+
+    // single-threaded reference, computed cold (compiles cache entries)
+    let mut reference = Vec::new();
+    for (mi, &model) in models.iter().enumerate() {
+        for (ni, &n) in batch_ns.iter().enumerate() {
+            let inp = input(&rt, n, (mi * 10 + ni) as u64 + 1);
+            let out = rt.execute(model, n, &inp).unwrap();
+            assert_eq!(out.len(), n * out_cols(&rt, model));
+            reference.push(out);
+        }
+    }
+
+    // 8 threads × every (model, n) combination, interleaved
+    let rt_ref = &rt;
+    let reference = &reference;
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for thread in 0..8usize {
+            handles.push(s.spawn(move || {
+                for round in 0..3usize {
+                    for step in 0..models.len() {
+                        for (ni, &n) in batch_ns.iter().enumerate() {
+                            // skew the order per thread so lock acquisition interleaves
+                            let mi = (step + thread + round) % models.len();
+                            let model = models[mi];
+                            let inp = input(rt_ref, n, (mi * 10 + ni) as u64 + 1);
+                            let out = rt_ref.execute(model, n, &inp).unwrap();
+                            let want = &reference[mi * batch_ns.len() + ni];
+                            assert_eq!(out.len(), want.len());
+                            for (a, b) in out.iter().zip(want) {
+                                assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+                            }
+                        }
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    });
+}
+
+#[test]
+fn concurrent_calibrate_and_execute() {
+    // calibrate mutates the costs cache while executes are in flight;
+    // plans may change between calls but results must stay correct.
+    let Some(rt) = rt() else { return };
+    let rt_ref = &rt;
+    let n = 5usize;
+    let inp = input(&rt, n, 42);
+    let want = rt.execute(Model::Tiny, n, &inp).unwrap();
+    let inp = &inp;
+    let want = &want;
+    std::thread::scope(|s| {
+        let cal = s.spawn(move || rt_ref.calibrate().unwrap());
+        for _ in 0..4 {
+            s.spawn(move || {
+                for _ in 0..4 {
+                    let out = rt_ref.execute(Model::Tiny, n, inp).unwrap();
+                    for (a, b) in out.iter().zip(want) {
+                        assert!((a - b).abs() < 1e-4);
+                    }
+                }
+            });
+        }
+        cal.join().unwrap();
+    });
+}
