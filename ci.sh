@@ -22,4 +22,17 @@ cargo fmt --check
 echo "== lint: cargo clippy -D warnings =="
 cargo clippy --all-targets -- -D warnings
 
+echo "== bench artifact: perf_engine -> BENCH_engine.json =="
+if [[ -f artifacts/manifest.json ]]; then
+  bench_log=$(mktemp)
+  cargo bench --bench perf_engine | tee "$bench_log"
+  # append, stamped per run, so the perf trajectory accumulates
+  echo "{\"bench\":\"run\",\"commit\":\"$(git rev-parse --short HEAD 2>/dev/null || echo unknown)\",\"date\":\"$(date -u +%FT%TZ)\"}" >> ../BENCH_engine.json
+  grep '^{"bench"' "$bench_log" >> ../BENCH_engine.json || true
+  rm -f "$bench_log"
+  echo "BENCH_engine.json now holds $(wc -l < ../BENCH_engine.json) records"
+else
+  echo "skipping bench artifact: artifacts/ not built"
+fi
+
 echo "ci: all gates passed"

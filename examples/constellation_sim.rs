@@ -54,7 +54,7 @@ fn main() -> anyhow::Result<()> {
     let report = run_constellation(&rt, &ccfg, Version::V2)?;
     for sat in &report.satellites {
         println!(
-            "{}: {} tiles ({} filtered, {} offloaded), mAP {:.3}->{:.3}, {} passes / {:.0} s contact, downlink {} delivered / {} dropped, compute {:.1}% of energy",
+            "{}: {} tiles ({} filtered, {} offloaded), mAP {:.3}->{:.3}, {} passes / {:.0} s contact / {:.0} s sunlit, downlink {} delivered / {} dropped ({} B lost), compute {:.1}% of energy",
             sat.name,
             sat.result.tiles_total,
             sat.result.tiles_filtered,
@@ -63,8 +63,10 @@ fn main() -> anyhow::Result<()> {
             sat.result.map_collab,
             sat.windows,
             sat.contact_s,
+            sat.sunlit_s,
             sat.downlink.items_delivered,
             sat.downlink.items_dropped,
+            sat.downlink.bytes_dropped,
             100.0 * sat.result.energy_compute_share,
         );
     }

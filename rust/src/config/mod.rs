@@ -41,6 +41,21 @@ pub struct PolicyConfig {
     pub score_threshold: f32,
     /// Onboard batch target (matches an exported artifact batch size).
     pub batch_size: usize,
+    /// Link-aware adaptive routing: consult downlink backlog + recent
+    /// loss rate to tighten/relax the offload threshold (the weak-network
+    /// and MakerSat-incident regimes).  Off by default — the static
+    /// threshold reproduces the paper's policy bit-for-bit.
+    pub adaptive: bool,
+    /// Queued downlink bytes above which the router tightens (offloads
+    /// less).  Default ≈ one second of the Table-1 40 Mbps downlink.
+    pub adaptive_backlog_bytes: u64,
+    /// Recent link loss rate above which the router tightens.
+    pub adaptive_loss_rate: f64,
+    /// How far the confidence threshold drops when the link is stressed.
+    pub adaptive_tighten: f32,
+    /// How far it rises when the link is clearly idle (offload more,
+    /// harvesting collaborative accuracy while the window is cheap).
+    pub adaptive_relax: f32,
 }
 
 impl Default for PolicyConfig {
@@ -52,6 +67,11 @@ impl Default for PolicyConfig {
             nms_iou: 0.45,
             score_threshold: 0.20,
             batch_size: 8,
+            adaptive: false,
+            adaptive_backlog_bytes: 5_000_000,
+            adaptive_loss_rate: 0.2,
+            adaptive_tighten: 0.2,
+            adaptive_relax: 0.05,
         }
     }
 }
@@ -79,18 +99,31 @@ impl Default for EngineConfig {
 }
 
 /// Scenario virtual-time constants (previously hardcoded in
-/// `Pipeline::run_scenario`).
+/// `Pipeline::run_scenario`), consumed through [`crate::sim::Timeline`].
 #[derive(Clone, Debug)]
 pub struct TimingConfig {
     /// At most one scene capture per this many seconds.
     pub scene_period_floor_s: f64,
     /// Per-scene capture + filtering overhead folded into busy time.
     pub capture_overhead_s: f64,
+    /// Comm duty assumed by the degenerate always-in-contact timeline
+    /// (single-satellite paths; was hardcoded in the scenario fold).
+    /// Orbital timelines ignore this and derive comm duty from actual
+    /// link airtime inside contact windows.
+    pub nominal_comm_duty: f64,
+    /// Camera duty assumed by the degenerate timeline; orbital timelines
+    /// derive it from capture events instead.
+    pub nominal_camera_duty: f64,
 }
 
 impl Default for TimingConfig {
     fn default() -> TimingConfig {
-        TimingConfig { scene_period_floor_s: 30.0, capture_overhead_s: 2.0 }
+        TimingConfig {
+            scene_period_floor_s: 30.0,
+            capture_overhead_s: 2.0,
+            nominal_comm_duty: 0.05,
+            nominal_camera_duty: 0.1,
+        }
     }
 }
 
@@ -105,6 +138,11 @@ pub struct ConstellationConfig {
     pub horizon_s: f64,
     /// RAAN spacing between satellite planes, radians.
     pub raan_step_rad: f64,
+    /// Replace each satellite's orbital timeline with the degenerate
+    /// always-in-contact one (ground reachable whenever data is ready).
+    /// With a lossless link this makes a 1-satellite constellation
+    /// reproduce `run_scenario` exactly (`tests/constellation_parity.rs`).
+    pub ideal_contact: bool,
 }
 
 impl Default for ConstellationConfig {
@@ -114,6 +152,7 @@ impl Default for ConstellationConfig {
             scenes_per_satellite: 4,
             horizon_s: 21_600.0, // 6 h: a few Beijing passes per satellite
             raan_step_rad: 0.35,
+            ideal_contact: false,
         }
     }
 }
@@ -139,6 +178,7 @@ impl Config {
         match self.loss_profile.as_str() {
             "weak" => LossProfile::weak(),
             "makersat" => LossProfile::makersat_incident(),
+            "lossless" => LossProfile::lossless(),
             _ => LossProfile::stable(),
         }
     }
@@ -238,6 +278,21 @@ impl Config {
                     .get("batch_size")
                     .and_then(|v| v.as_usize())
                     .unwrap_or(cfg.policy.batch_size),
+                adaptive: p
+                    .get("adaptive")
+                    .and_then(|v| v.as_bool())
+                    .unwrap_or(cfg.policy.adaptive),
+                adaptive_backlog_bytes: p
+                    .get("adaptive_backlog_bytes")
+                    .and_then(|v| v.as_f64())
+                    .map(|x| x as u64)
+                    .unwrap_or(cfg.policy.adaptive_backlog_bytes),
+                adaptive_loss_rate: p
+                    .get("adaptive_loss_rate")
+                    .and_then(|v| v.as_f64())
+                    .unwrap_or(cfg.policy.adaptive_loss_rate),
+                adaptive_tighten: f("adaptive_tighten", cfg.policy.adaptive_tighten),
+                adaptive_relax: f("adaptive_relax", cfg.policy.adaptive_relax),
             };
         }
         if let Some(e) = j.get("engine") {
@@ -263,6 +318,14 @@ impl Config {
                     .get("capture_overhead_s")
                     .and_then(|v| v.as_f64())
                     .unwrap_or(cfg.timing.capture_overhead_s),
+                nominal_comm_duty: t
+                    .get("nominal_comm_duty")
+                    .and_then(|v| v.as_f64())
+                    .unwrap_or(cfg.timing.nominal_comm_duty),
+                nominal_camera_duty: t
+                    .get("nominal_camera_duty")
+                    .and_then(|v| v.as_f64())
+                    .unwrap_or(cfg.timing.nominal_camera_duty),
             };
         }
         if let Some(c) = j.get("constellation") {
@@ -283,6 +346,10 @@ impl Config {
                     .get("raan_step_rad")
                     .and_then(|v| v.as_f64())
                     .unwrap_or(cfg.constellation.raan_step_rad),
+                ideal_contact: c
+                    .get("ideal_contact")
+                    .and_then(|v| v.as_bool())
+                    .unwrap_or(cfg.constellation.ideal_contact),
             };
         }
         if let Some(v) = j.get("scene_cells").and_then(|v| v.as_usize()) {
@@ -350,12 +417,39 @@ mod tests {
 
     #[test]
     fn defaults_preserve_legacy_constants() {
-        // The staged-engine refactor promoted these from hardcoded values;
-        // defaults must keep the pre-refactor behaviour bit-for-bit.
+        // The staged-engine and sim refactors promoted these from
+        // hardcoded values; defaults must keep the pre-refactor
+        // behaviour bit-for-bit.
         let c = Config::default();
         assert_eq!(c.policy.empty_objectness, 0.25);
         assert_eq!(c.timing.scene_period_floor_s, 30.0);
         assert_eq!(c.timing.capture_overhead_s, 2.0);
+        assert_eq!(c.timing.nominal_comm_duty, 0.05);
+        assert_eq!(c.timing.nominal_camera_duty, 0.1);
+        assert!(!c.policy.adaptive, "adaptive routing must default off");
+        assert!(!c.constellation.ideal_contact);
+    }
+
+    #[test]
+    fn parse_sim_and_adaptive_sections() {
+        let c = Config::parse(
+            r#"{"policy": {"adaptive": true, "adaptive_backlog_bytes": 1000000,
+                           "adaptive_loss_rate": 0.1, "adaptive_tighten": 0.3,
+                           "adaptive_relax": 0.02},
+                "timing": {"nominal_comm_duty": 0.08, "nominal_camera_duty": 0.2},
+                "constellation": {"ideal_contact": true},
+                "loss_profile": "lossless"}"#,
+        )
+        .unwrap();
+        assert!(c.policy.adaptive);
+        assert_eq!(c.policy.adaptive_backlog_bytes, 1_000_000);
+        assert_eq!(c.policy.adaptive_loss_rate, 0.1);
+        assert_eq!(c.policy.adaptive_tighten, 0.3);
+        assert_eq!(c.policy.adaptive_relax, 0.02);
+        assert_eq!(c.timing.nominal_comm_duty, 0.08);
+        assert_eq!(c.timing.nominal_camera_duty, 0.2);
+        assert!(c.constellation.ideal_contact);
+        assert_eq!(c.loss().stationary_loss(), 0.0);
     }
 
     #[test]

@@ -1,23 +1,42 @@
 //! Constellation-scale scenario runner: N satellites, one ground segment.
 //!
-//! Each satellite runs its scenario (capture → filter → batch → onboard
-//! infer → route) sequentially on its own thread — the concurrency here
-//! is *across* satellites, plus the asynchronous shared ground segment;
-//! within one satellite, [`super::engine::StagedEngine`]-style stage
-//! overlap is future work.  Every satellite queues results and
-//! offloaded imagery in a [`DownlinkQueue`] whose drains are gated by its
-//! *own* contact windows from [`crate::orbit`], and shares a single
-//! ground-segment worker that serves HeavyDet re-inference for every
-//! satellite (serialized by the runtime's per-model execution lock —
-//! exactly one ground GPU).  Scenes fold through the same
-//! [`ScenarioAccumulator`] as the single-satellite paths, in capture
-//! order, with one honest difference: an offloaded tile whose imagery
-//! never survives a contact window is evaluated with its onboard
-//! detections (the collaborative gain only materializes for delivered
-//! tiles).  Byte accounting keeps both views: the scenario fold's
-//! `collab_bytes` stays nominal (bytes *queued* for downlink, same as
-//! single-satellite runs) while [`SatelliteReport::downlink`] records
-//! what the lossy windowed link actually delivered.
+//! Each satellite runs a staged pipeline on its own mission [`Timeline`]:
+//! a capture source thread feeds onboard stage workers (split · filter ·
+//! batch · TinyDet · route — the same [`super::engine`] stage bodies the
+//! single-satellite engine runs), so capture, filtering, and onboard
+//! inference overlap *within* each satellite, while a driver loop
+//! re-sequences scenes into capture order and advances the virtual
+//! mission clock one scene period at a time.  Ground round-trips are
+//! asynchronous completions on that timeline: delivered imagery is
+//! dispatched to the shared ground segment and the driver keeps
+//! capturing; replies fold in whenever they land.
+//!
+//! Every satellite queues results and offloaded imagery in a
+//! [`DownlinkQueue`] whose drains are gated by its *own* contact windows
+//! — handed out incrementally by the timeline so no window airtime is
+//! ever double-spent — and shares a single ground-segment worker that
+//! serves HeavyDet re-inference for every satellite (serialized by the
+//! runtime's per-model execution lock — exactly one ground GPU).  Energy
+//! duty cycles are *derived*, not assumed: comm duty from actual
+//! [`Link`] airtime inside contact windows, camera duty from capture
+//! events, compute duty from onboard busy time.  With
+//! `policy.adaptive`, the router consults downlink backlog and recent
+//! loss rate at each scene's virtual capture time and tightens/relaxes
+//! the offload threshold (the weak-network and MakerSat-incident
+//! regimes from [`crate::link::LossProfile`]).
+//!
+//! Scenes fold through the same [`ScenarioAccumulator`] as the
+//! single-satellite paths, in capture order, with one honest
+//! difference: an offloaded tile whose imagery never survives a contact
+//! window is evaluated with its onboard detections (the collaborative
+//! gain only materializes for delivered tiles).  Byte accounting keeps
+//! both views: the scenario fold's `collab_bytes` stays nominal (bytes
+//! *queued* for downlink, same as single-satellite runs) while
+//! [`SatelliteReport::downlink`] records what the lossy windowed link
+//! actually delivered — and, since the per-head failure accounting,
+//! what it dropped (`bytes_dropped`).  With `constellation.ideal_contact`
+//! and a lossless link, a 1-satellite run reproduces `run_scenario`
+//! exactly (`tests/constellation_parity.rs`).
 //!
 //! Cluster/sedna bookkeeping mirrors the paper's control plane: every
 //! satellite registers as an Edge node and heartbeats during contact
@@ -25,11 +44,11 @@
 //! task whose per-worker phases aggregate into the report.
 
 use std::collections::BTreeMap;
-use std::sync::mpsc::{channel, Sender};
-use std::sync::Mutex;
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, TryRecvError};
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, Result};
 
 use crate::cluster::registry::Registry as NodeRegistry;
 use crate::cluster::{NodeId, NodeRole};
@@ -37,17 +56,18 @@ use crate::config::Config;
 use crate::data::{Tile, Version};
 use crate::detect::Detection;
 use crate::link::{Link, LinkConfig, LinkStats};
-use crate::orbit::{baoyun, beijing_station, contact_windows};
+use crate::orbit::{baoyun, beijing_station};
 use crate::runtime::{Model, Runtime};
 use crate::sedna::{GlobalManager, LocalController, TaskKind, TaskPhase, TaskSpec};
+use crate::sim::{scene_timing, DutyCycles, Timeline};
 use crate::telemetry::Registry;
 
-use super::downlink::{DownlinkItem, DownlinkQueue, DownlinkStats, ItemKind};
+use super::downlink::{Delivered, DownlinkItem, DownlinkQueue, DownlinkStats, ItemKind};
+use super::engine::{worker_loop, Envelope, OnboardDone, OnboardStage, SceneJob};
 use super::pipeline::{
-    scene_timing, Pipeline, ProcessedTile, ScenarioAccumulator, ScenarioResult,
-    RESULT_HEADER_BYTES,
+    Pipeline, ProcessedTile, ScenarioAccumulator, ScenarioResult, RESULT_HEADER_BYTES,
 };
-use super::router::RouterStats;
+use super::router::{route, LinkSnapshot, RouterStats};
 use super::TileFate;
 
 /// Downlink tag encoding: scene index * stride + tile index.
@@ -68,6 +88,9 @@ pub struct SatelliteReport {
     pub link: LinkStats,
     pub windows: usize,
     pub contact_s: f64,
+    /// Sunlit seconds over the mission horizon (the timeline's
+    /// illumination event source; horizon minus this is eclipse time).
+    pub sunlit_s: f64,
 }
 
 pub struct ConstellationReport {
@@ -95,6 +118,14 @@ struct GroundRequest {
     at: Instant,
 }
 
+/// A ground round-trip in flight: which (scene, tile) slots the reply
+/// will fill, and the channel it arrives on.  The driver polls these
+/// between scenes instead of blocking on each send.
+struct GroundInflight {
+    pairs: Vec<(usize, usize)>,
+    rx: Receiver<Result<(Vec<Vec<Detection>>, f64)>>,
+}
+
 /// A scene waiting for its offloaded tiles to clear the downlink.
 struct PendingScene {
     bentpipe_bytes: u64,
@@ -103,6 +134,9 @@ struct PendingScene {
     n_filtered: usize,
     wall: f64,
     router: RouterStats,
+    /// Duty cycles observed over this scene's period on the mission
+    /// timeline (comm from link airtime, camera from the capture event).
+    duties: DutyCycles,
     /// Offloaded tiles not yet ground-inferred (delivery pending).
     outstanding: usize,
 }
@@ -208,6 +242,55 @@ pub fn run_constellation(rt: &Runtime, cfg: &Config, version: Version) -> Result
     })
 }
 
+/// Apply one ground reply: fill the (scene, tile) slots it answers and
+/// release those tiles' outstanding counts.
+fn apply_ground_reply(
+    pending: &mut BTreeMap<usize, PendingScene>,
+    pairs: &[(usize, usize)],
+    dets: Vec<Vec<Detection>>,
+    wall: f64,
+) {
+    let wall_each = wall / pairs.len().max(1) as f64;
+    for (&(sidx, tidx), d) in pairs.iter().zip(dets) {
+        let scene = pending.get_mut(&sidx).expect("scene vanished mid-delivery");
+        scene.processed[tidx].ground_dets = Some(d);
+        scene.outstanding -= 1;
+        scene.wall += wall_each;
+    }
+}
+
+/// Collect completed ground round-trips.  Non-blocking between scenes
+/// (the timeline keeps moving); blocking at end of mission, when nothing
+/// is left to overlap with.
+fn poll_ground(
+    inflight: &mut Vec<GroundInflight>,
+    pending: &mut BTreeMap<usize, PendingScene>,
+    block: bool,
+) -> Result<()> {
+    let mut i = 0;
+    while i < inflight.len() {
+        let outcome = if block {
+            Some(inflight[i].rx.recv().map_err(|_| anyhow!("ground segment hung up"))??)
+        } else {
+            match inflight[i].rx.try_recv() {
+                Ok(r) => Some(r?),
+                Err(TryRecvError::Empty) => None,
+                Err(TryRecvError::Disconnected) => {
+                    return Err(anyhow!("ground segment hung up"))
+                }
+            }
+        };
+        match outcome {
+            Some((dets, wall)) => {
+                let f = inflight.swap_remove(i);
+                apply_ground_reply(pending, &f.pairs, dets, wall);
+            }
+            None => i += 1,
+        }
+    }
+    Ok(())
+}
+
 #[allow(clippy::too_many_arguments)] // internal plumbing fn, not API
 fn run_satellite(
     rt: &Runtime,
@@ -227,35 +310,53 @@ fn run_satellite(
     lc.start(task);
     gm.lock().unwrap().report(task, &node, TaskPhase::Running)?;
 
-    // one orbital plane per satellite, phased around the constellation
+    // one orbital plane per satellite, phased around the constellation;
+    // the timeline owns this satellite's contact windows + eclipse phases
     let mut sat = baoyun();
     sat.name = node.to_string();
     sat.raan_rad = index as f64 * cfg.constellation.raan_step_rad;
     sat.phase_rad = index as f64 * std::f64::consts::TAU / cfg.constellation.satellites.max(1) as f64;
-    let windows = contact_windows(&sat, gs, 0.0, cfg.constellation.horizon_s, 10.0);
-    let contact_s: f64 = windows.iter().map(|w| w.duration_s()).sum();
+    let horizon = cfg.constellation.horizon_s;
+    let mut timeline = if cfg.constellation.ideal_contact {
+        Timeline::degenerate(&cfg.timing, horizon)
+    } else {
+        Timeline::orbital(&cfg.timing, &sat, gs, horizon, 10.0)
+    };
 
     let mut sat_cfg = cfg.clone();
     sat_cfg.seed = cfg.seed.wrapping_add(1 + index as u64 * 101);
     let pipeline = Pipeline::new(rt, sat_cfg);
-    let mut gen = pipeline.scene_gen(version);
+    let gen = pipeline.scene_gen(version);
     let mut acc = ScenarioAccumulator::new(&pipeline.cfg, rt.manifest.classes);
     let mut queue = DownlinkQueue::new();
     let mut link = Link::new(LinkConfig::downlink(pipeline.cfg.loss()), pipeline.cfg.seed);
-    let onboard_svc = metrics.histogram("constellation.onboard.service_s");
     let delivered_items = metrics.counter("constellation.downlink.items_delivered");
     let queue_depth = metrics.gauge("constellation.ground.queue_depth");
 
     let mut pending: BTreeMap<usize, PendingScene> = BTreeMap::new();
+    let mut inflight: Vec<GroundInflight> = Vec::new();
     let mut next_fold = 0usize;
-    let mut t = 0.0f64; // virtual mission time
-    let mut next_w = 0usize;
+    let frag = pipeline.cfg.fragment_px;
+    let depth = pipeline.cfg.engine.channel_depth.max(1);
+    // all engine workers go to the onboard stage here — the ground stage
+    // is the shared segment, reached through async completions
+    let onboard_workers = pipeline.cfg.engine.workers.max(1);
+    let errs: Mutex<Vec<anyhow::Error>> = Mutex::new(Vec::new());
 
-    // ground round-trip for every Image item delivered in one drain
-    let mut serve_delivered = |delivered: Vec<super::downlink::Delivered>,
-                               pending: &mut BTreeMap<usize, PendingScene>|
+    let (tx_scene, rx_scene) = sync_channel::<Envelope<SceneJob>>(depth);
+    let (tx_onboard, rx_onboard) = sync_channel::<Envelope<OnboardDone>>(depth);
+    let rx_scene = Arc::new(Mutex::new(rx_scene));
+    let pipeline_ref = &pipeline;
+    let errs_ref = &errs;
+
+    // dispatch one drain's worth of delivered imagery to the ground
+    // segment; the reply is an asynchronous completion on the timeline
+    let dispatch_ground = |delivered: Vec<Delivered>,
+                          pending: &BTreeMap<usize, PendingScene>,
+                          inflight: &mut Vec<GroundInflight>|
      -> Result<()> {
-        let mut tags: Vec<(usize, usize)> = Vec::new();
+        delivered_items.add(delivered.len() as u64);
+        let mut pairs: Vec<(usize, usize)> = Vec::new();
         let mut tiles: Vec<Tile> = Vec::new();
         for d in &delivered {
             if d.item.kind != ItemKind::Image {
@@ -267,106 +368,217 @@ fn run_satellite(
                 .get(&sidx)
                 .ok_or_else(|| anyhow!("delivered tile for unknown scene {sidx}"))?;
             tiles.push(scene.processed[tidx].tile.clone());
-            tags.push((sidx, tidx));
+            pairs.push((sidx, tidx));
         }
-        delivered_items.add(delivered.len() as u64);
         if tiles.is_empty() {
             return Ok(());
         }
-        let n = tiles.len();
         let (reply_tx, reply_rx) = channel();
         queue_depth.inc();
         ground_tx
             .send(GroundRequest { tiles, reply: reply_tx, at: Instant::now() })
             .map_err(|_| anyhow!("ground segment gone"))?;
-        let (dets, wall) = reply_rx.recv().context("ground segment hung up")??;
-        let wall_each = wall / n as f64;
-        for ((sidx, tidx), d) in tags.into_iter().zip(dets) {
-            let scene = pending.get_mut(&sidx).expect("scene vanished mid-delivery");
-            scene.processed[tidx].ground_dets = Some(d);
-            scene.outstanding -= 1;
-            scene.wall += wall_each;
-        }
+        inflight.push(GroundInflight { pairs, rx: reply_rx });
         Ok(())
     };
 
-    for idx in 0..scenes {
-        let scene = gen.capture();
-        let mut router = RouterStats::default();
-        let svc0 = Instant::now();
-        let (processed, n_filtered, wall) = pipeline.onboard_scene(&scene, &mut router)?;
-        onboard_svc.observe_secs(svc0.elapsed().as_secs_f64());
-
-        let (busy, period) = scene_timing(&pipeline.cfg.timing, processed.len());
-        let ready = t + busy;
-        let mut outstanding = 0usize;
-        for (tidx, p) in processed.iter().enumerate() {
-            let tag = idx as u64 * TAG_STRIDE + tidx as u64;
-            match p.fate {
-                TileFate::OnboardFinal => queue.push(DownlinkItem {
-                    kind: ItemKind::Results,
-                    bytes: RESULT_HEADER_BYTES
-                        + Detection::WIRE_BYTES * p.onboard_dets.len() as u64,
-                    ready_at: ready,
-                    tag,
-                }),
-                TileFate::Offloaded => {
-                    outstanding += 1;
-                    queue.push(DownlinkItem {
-                        kind: ItemKind::Image,
-                        bytes: p.tile.raw_bytes(),
-                        ready_at: ready,
-                        tag,
-                    });
+    std::thread::scope(|s| -> Result<()> {
+        // capture source: one deterministic RNG stream, its own thread,
+        // so scene k+1's capture overlaps scene k's onboard inference
+        let produced = metrics.counter("constellation.capture.items");
+        s.spawn(move || {
+            let mut gen = gen;
+            for idx in 0..scenes {
+                let scene = gen.capture();
+                produced.inc();
+                if tx_scene.send(Envelope::new(SceneJob { idx, scene })).is_err() {
+                    break;
                 }
-                TileFate::Filtered => unreachable!("filtered tiles are not processed"),
+            }
+        });
+        for _ in 0..onboard_workers {
+            let rx = Arc::clone(&rx_scene);
+            let tx = tx_onboard.clone();
+            s.spawn(move || {
+                worker_loop(
+                    "constellation",
+                    OnboardStage { p: pipeline_ref, frag },
+                    &rx,
+                    &tx,
+                    metrics,
+                    errs_ref,
+                );
+            });
+        }
+        drop(rx_scene);
+        drop(tx_onboard);
+
+        // driver: re-sequence scenes into capture order and advance the
+        // mission timeline; nothing below blocks on the ground segment.
+        // The receiver is owned here so an early error return drops it,
+        // failing the workers' sends instead of deadlocking the scope.
+        let rx_onboard = rx_onboard;
+        let mut held: BTreeMap<usize, OnboardDone> = BTreeMap::new();
+        let mut next_drive = 0usize;
+        // recent loss rate for the adaptive router: rate over the packets
+        // sent since the previous scene, not the link's whole lifetime
+        // (a bad early pass must not latch the tightened state forever)
+        let mut prev_sent = 0u64;
+        let mut prev_lost = 0u64;
+        let mut recent_loss = 0.0f64;
+        for env in rx_onboard.iter() {
+            held.insert(env.inner.idx, env.inner);
+            while let Some(mut d) = held.remove(&next_drive) {
+                // link-aware adaptive routing: re-route with the policy
+                // effective under the downlink state at this virtual
+                // capture time (deterministic — no wallclock involved)
+                if pipeline.policy.adaptive.is_some() {
+                    let d_sent = link.stats.packets_sent - prev_sent;
+                    if d_sent > 0 {
+                        recent_loss =
+                            (link.stats.packets_lost - prev_lost) as f64 / d_sent as f64;
+                    } else {
+                        // no traffic since the last decision: the old
+                        // estimate goes stale, so decay it instead of
+                        // letting one bad pass latch the tightened state
+                        // through a multi-hour contact gap
+                        recent_loss *= 0.5;
+                    }
+                    prev_sent = link.stats.packets_sent;
+                    prev_lost = link.stats.packets_lost;
+                    let snap = LinkSnapshot {
+                        backlog_bytes: queue.pending_bytes(),
+                        loss_rate: recent_loss,
+                    };
+                    let eff = pipeline.policy.effective(&snap);
+                    let mut restats = RouterStats::default();
+                    for p in d.processed.iter_mut() {
+                        p.fate = route(&eff, &p.onboard_dets, p.best_objectness, &mut restats);
+                    }
+                    d.router = restats;
+                }
+
+                let (busy, period) = scene_timing(timeline.timing(), d.processed.len());
+                let t_capture = timeline.now_s();
+                let ready = t_capture + busy;
+                let mut outstanding = 0usize;
+                for (tidx, p) in d.processed.iter().enumerate() {
+                    let tag = next_drive as u64 * TAG_STRIDE + tidx as u64;
+                    match p.fate {
+                        TileFate::OnboardFinal => queue.push(DownlinkItem {
+                            kind: ItemKind::Results,
+                            bytes: RESULT_HEADER_BYTES
+                                + Detection::WIRE_BYTES * p.onboard_dets.len() as u64,
+                            ready_at: ready,
+                            tag,
+                        }),
+                        TileFate::Offloaded => {
+                            outstanding += 1;
+                            queue.push(DownlinkItem {
+                                kind: ItemKind::Image,
+                                bytes: p.tile.raw_bytes(),
+                                ready_at: ready,
+                                tag,
+                            });
+                        }
+                        TileFate::Filtered => unreachable!("filtered tiles are not processed"),
+                    }
+                }
+
+                // register the scene before any drain can deliver its
+                // imagery; duties are patched in once the drains for
+                // this period have been observed
+                pending.insert(
+                    next_drive,
+                    PendingScene {
+                        bentpipe_bytes: d.bentpipe_bytes,
+                        n_scene_tiles: d.n_scene_tiles,
+                        processed: d.processed,
+                        n_filtered: d.n_filtered,
+                        wall: d.wall,
+                        router: d.router,
+                        duties: DutyCycles::default(),
+                        outstanding,
+                    },
+                );
+
+                // advance the mission clock one scene period, then spend
+                // the contact time that has elapsed; comm duty is the
+                // link airtime those drains actually consumed
+                let comm_before = link.stats.busy_s;
+                let t = timeline.advance(period);
+                for slice in timeline.due_contacts(t) {
+                    registry.lock().unwrap().heartbeat(&node, (slice.window.aos * 1000.0) as u64);
+                    let got = queue.drain_window_sliced(&mut link, &slice.window, slice.closes_pass);
+                    dispatch_ground(got, &pending, &mut inflight)?;
+                }
+                let comm_busy = link.stats.busy_s - comm_before;
+                pending.get_mut(&next_drive).expect("scene just inserted").duties = timeline
+                    .observed_duties(busy, period, comm_busy, timeline.timing().capture_overhead_s);
+                next_drive += 1;
+
+                // harvest any completed ground round-trips, then fold
+                // every leading scene whose offloads have all resolved
+                poll_ground(&mut inflight, &mut pending, false)?;
+                while pending.get(&next_fold).map(|p| p.outstanding == 0).unwrap_or(false) {
+                    let p = pending.remove(&next_fold).unwrap();
+                    acc.add_scene_observed(
+                        &p.router,
+                        p.bentpipe_bytes,
+                        p.n_scene_tiles,
+                        &p.processed,
+                        p.n_filtered,
+                        p.wall,
+                        p.duties,
+                    );
+                    next_fold += 1;
+                }
             }
         }
-        let n_scene_tiles = (scene.width / pipeline.cfg.fragment_px)
-            * (scene.height / pipeline.cfg.fragment_px);
-        pending.insert(
-            idx,
-            PendingScene {
-                bentpipe_bytes: scene.size_bytes(),
-                n_scene_tiles,
-                processed,
-                n_filtered,
-                wall,
-                router,
-                outstanding,
-            },
-        );
-        t += period;
 
-        // contact windows that have opened by now: heartbeat + drain
-        while next_w < windows.len() && windows[next_w].aos < t {
-            let w = &windows[next_w];
-            registry.lock().unwrap().heartbeat(&node, (w.aos * 1000.0) as u64);
-            let got = queue.drain_window(&mut link, w);
-            serve_delivered(got, &mut pending)?;
-            next_w += 1;
+        // mission tail: remaining windows give queued items their chance
+        let tail_start = timeline.now_s();
+        let tail_comm_before = link.stats.busy_s;
+        for slice in timeline.remaining_contacts() {
+            registry.lock().unwrap().heartbeat(&node, (slice.window.aos * 1000.0) as u64);
+            let got = queue.drain_window_sliced(&mut link, &slice.window, slice.closes_pass);
+            dispatch_ground(got, &pending, &mut inflight)?;
         }
-        // fold every leading scene whose offloads have all resolved
-        while pending.get(&next_fold).map(|p| p.outstanding == 0).unwrap_or(false) {
-            let p = pending.remove(&next_fold).unwrap();
-            acc.add_scene(&p.router, p.bentpipe_bytes, p.n_scene_tiles, &p.processed, p.n_filtered, p.wall);
+        // everything dispatched; now completions are all that's left
+        poll_ground(&mut inflight, &mut pending, true)?;
+        // fold the resolved scenes; force-fold the rest — undelivered
+        // offloads are evaluated with their onboard detections
+        while let Some(p) = pending.remove(&next_fold) {
+            acc.add_scene_observed(
+                &p.router,
+                p.bentpipe_bytes,
+                p.n_scene_tiles,
+                &p.processed,
+                p.n_filtered,
+                p.wall,
+                p.duties,
+            );
             next_fold += 1;
         }
-    }
+        // the tail is mission time too: integrate its energy with the
+        // comm airtime the tail drains actually consumed (compute idle,
+        // camera off) — with default configs most contact happens here
+        let tail_dt = horizon - tail_start;
+        if tail_dt > 0.0 {
+            let tail_comm = link.stats.busy_s - tail_comm_before;
+            acc.extend_mission(tail_dt, timeline.observed_duties(0.0, tail_dt, tail_comm, 0.0));
+        }
+        Ok(())
+    })?;
 
-    // mission tail: remaining windows give queued items their chance
-    while next_w < windows.len() {
-        let w = &windows[next_w];
-        registry.lock().unwrap().heartbeat(&node, (w.aos * 1000.0) as u64);
-        let got = queue.drain_window(&mut link, w);
-        serve_delivered(got, &mut pending)?;
-        next_w += 1;
+    if let Some(e) = errs.into_inner().unwrap().into_iter().next() {
+        return Err(e);
     }
-    // force-fold: undelivered offloads are evaluated with onboard results
-    while let Some(p) = pending.remove(&next_fold) {
-        acc.add_scene(&p.router, p.bentpipe_bytes, p.n_scene_tiles, &p.processed, p.n_filtered, p.wall);
-        next_fold += 1;
-    }
+    anyhow::ensure!(
+        acc.scenes() == scenes,
+        "satellite {index} lost scenes: folded {} of {scenes}",
+        acc.scenes()
+    );
 
     lc.finish(task, true);
     gm.lock().unwrap().report(task, &node, TaskPhase::Completed)?;
@@ -376,7 +588,8 @@ fn run_satellite(
         result: acc.finish(version, cfg.fragment_px),
         downlink: queue.stats,
         link: link.stats,
-        windows: windows.len(),
-        contact_s,
+        windows: timeline.n_contacts(),
+        contact_s: timeline.contact_total_s(),
+        sunlit_s: timeline.sunlit_s(0.0, horizon),
     })
 }

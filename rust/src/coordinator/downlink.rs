@@ -35,6 +35,9 @@ pub struct DownlinkStats {
     pub image_bytes: u64,
     pub items_delivered: u64,
     pub items_dropped: u64,
+    /// Bytes of dropped items (they never crossed the link, but they
+    /// were queued — without this they vanish from byte accounting).
+    pub bytes_dropped: u64,
     /// Sum + count of (delivery - ready) latencies for delivered items.
     pub latency_sum_s: f64,
     pub latency_count: u64,
@@ -68,7 +71,11 @@ pub struct DownlinkQueue {
     /// Give up on an item after this many failed windows (paper's systems
     /// drop stale observations rather than stall the queue).
     pub max_window_failures: u32,
-    failures: u32,
+    /// Failed-window counts for the *current head* of each class; a
+    /// class's counter resets when its head is delivered or dropped, and
+    /// failures in one class never evict the other's head.
+    results_failures: u32,
+    images_failures: u32,
 }
 
 impl DownlinkQueue {
@@ -78,7 +85,8 @@ impl DownlinkQueue {
             images: VecDeque::new(),
             stats: DownlinkStats::default(),
             max_window_failures: 3,
-            failures: 0,
+            results_failures: 0,
+            images_failures: 0,
         }
     }
 
@@ -97,34 +105,67 @@ impl DownlinkQueue {
         self.results.iter().chain(self.images.iter()).map(|i| i.bytes).sum()
     }
 
-    /// Drain through `link` during `window`.  Only items ready before the
-    /// window closes are eligible.  Returns delivered items.
+    /// Drain through `link` during a full contact `window`.  Only items
+    /// ready before the window closes are eligible.  Returns delivered
+    /// items.  A failed transfer counts toward the head item's
+    /// `max_window_failures` (this is a whole pass).
     pub fn drain_window(&mut self, link: &mut Link, window: &ContactWindow) -> Vec<Delivered> {
+        self.drain_window_sliced(link, window, true)
+    }
+
+    /// Drain through `link` during one slice of a contact window (the
+    /// timeline hands passes out incrementally).  `closes_pass` marks the
+    /// slice that reaches the physical window's LOS: only then does a
+    /// failed transfer count toward `max_window_failures` — a transfer
+    /// that didn't fit a mid-pass slice still has pass time ahead of it.
+    ///
+    /// The ARQ model has no transfer resume: an interrupted item restarts
+    /// from byte zero next time.  A transfer that cannot complete even
+    /// loss-free within the slice budget is therefore not started at all
+    /// (no airtime burned on a doomed restart); on a pass-closing slice
+    /// it is still charged the failed window.
+    pub fn drain_window_sliced(
+        &mut self,
+        link: &mut Link,
+        window: &ContactWindow,
+        closes_pass: bool,
+    ) -> Vec<Delivered> {
         let mut now = window.aos;
         let mut out = Vec::new();
         loop {
             // results before images; within a class, FIFO
             let queue_is_results = !self.results.is_empty();
-            let item = if queue_is_results {
+            let head = if queue_is_results {
                 self.results.front()
             } else {
                 self.images.front()
             };
-            let Some(item) = item else { break };
-            if item.ready_at > window.los {
+            let Some(head) = head else { break };
+            let (bytes, ready_at) = (head.bytes, head.ready_at);
+            if ready_at > window.los {
                 break; // not yet captured when this window closes
             }
-            let start = now.max(item.ready_at);
+            let start = now.max(ready_at);
             let budget = window.los - start;
             if budget <= 0.0 {
                 break;
             }
-            let t = link.transmit(item.bytes, budget);
+            let packet_time = link.cfg.mtu as f64 * 8.0 / link.cfg.rate_bps;
+            let min_airtime = bytes.div_ceil(link.cfg.mtu as u64).max(1) as f64 * packet_time;
+            if min_airtime > budget {
+                if closes_pass {
+                    self.note_failure(queue_is_results);
+                }
+                break;
+            }
+            let t = link.transmit(bytes, budget);
             now = start + t.elapsed_s;
             if t.completed {
                 let item = if queue_is_results {
+                    self.results_failures = 0;
                     self.results.pop_front().unwrap()
                 } else {
+                    self.images_failures = 0;
                     self.images.pop_front().unwrap()
                 };
                 match item.kind {
@@ -134,25 +175,40 @@ impl DownlinkQueue {
                 self.stats.items_delivered += 1;
                 self.stats.latency_sum_s += now - item.ready_at;
                 self.stats.latency_count += 1;
-                self.failures = 0;
                 out.push(Delivered { item, at: now });
             } else {
-                // window exhausted or link hopeless for this item
-                self.failures += 1;
-                if self.failures >= self.max_window_failures {
-                    let item = if queue_is_results {
-                        self.results.pop_front().unwrap()
-                    } else {
-                        self.images.pop_front().unwrap()
-                    };
-                    let _ = item;
-                    self.stats.items_dropped += 1;
-                    self.failures = 0;
+                // lost packets exhausted the ARQ budget; the failure
+                // belongs to this class's head alone, and only a
+                // pass-closing slice charges it a failed window
+                if closes_pass {
+                    self.note_failure(queue_is_results);
                 }
                 break;
             }
         }
         out
+    }
+
+    /// Charge the head of one class a failed window; after
+    /// `max_window_failures` the item is dropped with its bytes
+    /// accounted in `bytes_dropped`.
+    fn note_failure(&mut self, queue_is_results: bool) {
+        let failures = if queue_is_results {
+            &mut self.results_failures
+        } else {
+            &mut self.images_failures
+        };
+        *failures += 1;
+        if *failures >= self.max_window_failures {
+            *failures = 0;
+            let item = if queue_is_results {
+                self.results.pop_front().unwrap()
+            } else {
+                self.images.pop_front().unwrap()
+            };
+            self.stats.items_dropped += 1;
+            self.stats.bytes_dropped += item.bytes;
+        }
     }
 }
 
@@ -224,6 +280,69 @@ mod tests {
         }
         assert_eq!(q.pending(), 0);
         assert_eq!(q.stats.items_dropped, 1);
+        assert_eq!(q.stats.bytes_dropped, 100_000_000, "dropped bytes must be accounted");
+        assert_eq!(q.stats.total_bytes(), q.stats.results_bytes + q.stats.image_bytes);
+    }
+
+    #[test]
+    fn failures_tracked_per_class_head() {
+        let mut q = DownlinkQueue::new();
+        let big = 10_000_000_000u64; // ~2000 s of airtime: fails any window here
+        q.push(item(ItemKind::Image, big, 0.0, 1));
+        q.drain_window(&mut link(10), &win(0.0, 1.0));
+        q.drain_window(&mut link(11), &win(100.0, 101.0));
+        assert_eq!(q.stats.items_dropped, 0);
+        // A results item now fails once, in a window too short for even
+        // one packet.  Under the old shared counter the image head's two
+        // failures would evict it immediately.
+        q.push(item(ItemKind::Results, 100, 0.0, 2));
+        q.drain_window(&mut link(12), &win(200.0, 200.0001));
+        assert_eq!(q.stats.items_dropped, 0, "results head must survive its first failure");
+        assert_eq!(q.pending(), 2);
+        // A generous window delivers the results, then the image fails
+        // its third window and drops — with its bytes accounted.
+        let got = q.drain_window(&mut link(13), &win(300.0, 400.0));
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].item.tag, 2);
+        assert_eq!(q.stats.items_dropped, 1);
+        assert_eq!(q.stats.bytes_dropped, big);
+        assert_eq!(q.pending(), 0);
+    }
+
+    #[test]
+    fn mid_pass_slices_do_not_count_failures() {
+        let mut q = DownlinkQueue::new();
+        q.push(item(ItemKind::Image, 100_000_000, 0.0, 1)); // never fits a 1 s slice
+        // five mid-pass slices: the pass isn't over, so no failures accrue
+        for k in 0..5 {
+            let w = win(k as f64 * 10.0, k as f64 * 10.0 + 1.0);
+            q.drain_window_sliced(&mut link(30 + k), &w, false);
+        }
+        assert_eq!(q.stats.items_dropped, 0, "mid-pass slices must not evict");
+        assert_eq!(q.pending(), 1);
+        // three pass-closing slices evict, as three failed windows should
+        for k in 0..3 {
+            let w = win(1000.0 + k as f64 * 100.0, 1000.0 + k as f64 * 100.0 + 1.0);
+            q.drain_window_sliced(&mut link(40 + k), &w, true);
+        }
+        assert_eq!(q.stats.items_dropped, 1);
+        assert_eq!(q.stats.bytes_dropped, 100_000_000);
+    }
+
+    #[test]
+    fn delivery_resets_only_own_class_counter() {
+        let mut q = DownlinkQueue::new();
+        let big = 10_000_000_000u64;
+        q.push(item(ItemKind::Image, big, 0.0, 1));
+        q.drain_window(&mut link(20), &win(0.0, 1.0));
+        q.drain_window(&mut link(21), &win(100.0, 101.0)); // image failures: 2
+        // Delivering results must NOT reset the image head's count: the
+        // image drops on its next (third) failed window.
+        q.push(item(ItemKind::Results, 100, 0.0, 2));
+        let got = q.drain_window(&mut link(22), &win(200.0, 201.0));
+        assert_eq!(got.len(), 1, "results delivered, image fails its third window");
+        assert_eq!(q.stats.items_dropped, 1);
+        assert_eq!(q.stats.bytes_dropped, big);
     }
 
     #[test]

@@ -57,38 +57,39 @@ pub trait Stage {
 
 /// Channel message wrapper stamping enqueue time, so queue waits are
 /// observable per stage.
-struct Envelope<T> {
-    at: Instant,
-    inner: T,
+pub(crate) struct Envelope<T> {
+    pub(crate) at: Instant,
+    pub(crate) inner: T,
 }
 
 impl<T> Envelope<T> {
-    fn new(inner: T) -> Envelope<T> {
+    pub(crate) fn new(inner: T) -> Envelope<T> {
         Envelope { at: Instant::now(), inner }
     }
 }
 
 /// A captured scene entering the graph.
-struct SceneJob {
-    idx: usize,
-    scene: Scene,
+pub(crate) struct SceneJob {
+    pub(crate) idx: usize,
+    pub(crate) scene: Scene,
 }
 
 /// Per-scene output of the onboard stage; the ground stage completes the
-/// offloaded tiles in place.
-struct OnboardDone {
-    idx: usize,
-    bentpipe_bytes: u64,
-    n_scene_tiles: usize,
-    processed: Vec<ProcessedTile>,
-    n_filtered: usize,
-    wall: f64,
-    router: RouterStats,
+/// offloaded tiles in place.  Shared with the constellation runner,
+/// whose per-satellite driver stands in for the ground stage + collector.
+pub(crate) struct OnboardDone {
+    pub(crate) idx: usize,
+    pub(crate) bentpipe_bytes: u64,
+    pub(crate) n_scene_tiles: usize,
+    pub(crate) processed: Vec<ProcessedTile>,
+    pub(crate) n_filtered: usize,
+    pub(crate) wall: f64,
+    pub(crate) router: RouterStats,
 }
 
-struct OnboardStage<'p, 'rt> {
-    p: &'p Pipeline<'rt>,
-    frag: usize,
+pub(crate) struct OnboardStage<'p, 'rt> {
+    pub(crate) p: &'p Pipeline<'rt>,
+    pub(crate) frag: usize,
 }
 
 impl Stage for OnboardStage<'_, '_> {
@@ -135,19 +136,20 @@ impl Stage for GroundStage<'_, '_> {
 }
 
 /// Drive one stage worker: recv → process → send, recording service time,
-/// queue wait, and item count.  On a stage error the worker parks the
-/// error and exits; dropping its sender lets the rest of the graph drain
-/// and shut down instead of deadlocking.
-fn worker_loop<S: Stage>(
+/// queue wait, and item count under `<prefix>.<stage>.*`.  On a stage
+/// error the worker parks the error and exits; dropping its sender lets
+/// the rest of the graph drain and shut down instead of deadlocking.
+pub(crate) fn worker_loop<S: Stage>(
+    prefix: &str,
     mut stage: S,
     rx: &Mutex<Receiver<Envelope<S::In>>>,
     tx: &SyncSender<Envelope<S::Out>>,
     metrics: &Registry,
     errs: &Mutex<Vec<anyhow::Error>>,
 ) {
-    let items = metrics.counter(&format!("engine.{}.items", stage.name()));
-    let svc = metrics.histogram(&format!("engine.{}.service_s", stage.name()));
-    let wait = metrics.histogram(&format!("engine.{}.queue_wait_s", stage.name()));
+    let items = metrics.counter(&format!("{prefix}.{}.items", stage.name()));
+    let svc = metrics.histogram(&format!("{prefix}.{}.service_s", stage.name()));
+    let wait = metrics.histogram(&format!("{prefix}.{}.queue_wait_s", stage.name()));
     loop {
         let msg = {
             let guard = rx.lock().unwrap();
@@ -243,7 +245,7 @@ impl<'p, 'rt> StagedEngine<'p, 'rt> {
                 let rx = Arc::clone(&rx_scene);
                 let tx = tx_onboard.clone();
                 jobs.push(Box::new(move || {
-                    worker_loop(OnboardStage { p, frag }, &rx, &tx, metrics, errs);
+                    worker_loop("engine", OnboardStage { p, frag }, &rx, &tx, metrics, errs);
                 }));
             }
             // Drop the spawner's channel handles: termination propagates
@@ -256,7 +258,7 @@ impl<'p, 'rt> StagedEngine<'p, 'rt> {
                 let rx = Arc::clone(&rx_onboard);
                 let tx = tx_done.clone();
                 jobs.push(Box::new(move || {
-                    worker_loop(GroundStage { p }, &rx, &tx, metrics, errs);
+                    worker_loop("engine", GroundStage { p }, &rx, &tx, metrics, errs);
                 }));
             }
             drop(rx_onboard);

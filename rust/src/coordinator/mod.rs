@@ -22,9 +22,12 @@
 //! * [`engine`] — the staged concurrent executor: bounded typed channels
 //!   between stage workers so onboard and ground inference overlap
 //!   (bit-identical results to the facade).
-//! * [`constellation`] — N satellites in parallel (one thread + pipeline
-//!   + contact-window-gated downlink each) sharing one ground segment,
-//!   with cluster/sedna bookkeeping and per-stage telemetry.
+//! * [`constellation`] — N satellites in parallel sharing one ground
+//!   segment, each running the engine's capture/onboard stages
+//!   concurrently over its own [`crate::sim::Timeline`] (contact
+//!   windows, eclipse phases, derived energy duties), with ground
+//!   round-trips as asynchronous completions, cluster/sedna bookkeeping,
+//!   and per-stage telemetry.
 
 pub mod batcher;
 pub mod cloudfilter;

@@ -14,33 +14,25 @@
 
 use anyhow::Result;
 
-use crate::config::{Config, TimingConfig};
+use crate::config::Config;
 use crate::data::{split_scene, SceneGen, Tile, Version};
 use crate::detect::{decode_rows, nms, Detection, Evaluator, MapReport};
 use crate::energy::EnergyMeter;
 use crate::runtime::{Model, Runtime};
+use crate::sim::{DutyCycles, Timeline};
 
 use super::batcher::Batcher;
 use super::cloudfilter::CloudFilter;
-use super::router::{route, RouterPolicy, RouterStats};
+use super::router::{route, AdaptiveRouting, RouterPolicy, RouterStats};
 use super::TileFate;
 
-/// Modeled onboard service time per tile (Raspberry-Pi-class YOLO-tiny;
-/// drives energy duty cycles and orbital-time latency, not wallclock).
-pub const ONBOARD_S_PER_TILE: f64 = 0.65;
-/// Ground GPU-class service time per tile.
-pub const GROUND_S_PER_TILE: f64 = 0.05;
+// Mission-time constants and the shared scene-timing definition now live
+// in the unified simulation core; re-exported here for the established
+// import paths (benches, examples, constellation).
+pub use crate::sim::{scene_timing, GROUND_S_PER_TILE, ONBOARD_S_PER_TILE};
+
 /// Per-tile header bytes accompanying compact results.
 pub const RESULT_HEADER_BYTES: u64 = 8;
-
-/// Virtual (busy, scene_period) seconds for a scene with `n_kept`
-/// processed tiles.  One definition shared by the result fold and the
-/// constellation's downlink `ready_at`/window gating, so the two can
-/// never desynchronize.
-pub fn scene_timing(timing: &TimingConfig, n_kept: usize) -> (f64, f64) {
-    let busy = n_kept as f64 * ONBOARD_S_PER_TILE + timing.capture_overhead_s;
-    (busy, busy.max(timing.scene_period_floor_s))
-}
 
 /// One processed tile with everything the ground segment ends up knowing.
 pub struct ProcessedTile {
@@ -104,6 +96,13 @@ impl ScenarioResult {
 /// collector re-sequences scenes by capture index before feeding this —
 /// identical per-scene inputs then produce a bit-identical result on both
 /// paths.
+///
+/// Virtual time lives on an internal degenerate [`Timeline`] whose clock
+/// advances one scene period per fold.  Duty cycles handed to the
+/// [`EnergyMeter`] are no longer hardcoded here: [`Self::add_scene`]
+/// derives the always-in-contact nominal duties from the timeline, and
+/// the constellation path passes real observed duties (link airtime,
+/// capture events) through [`Self::add_scene_observed`].
 pub struct ScenarioAccumulator {
     router: RouterStats,
     ev_inorbit: Evaluator,
@@ -116,10 +115,9 @@ pub struct ScenarioAccumulator {
     conf_n: u64,
     wall_infer: f64,
     onboard_busy_s: f64,
-    virtual_s: f64,
     energy: EnergyMeter,
     scenes: usize,
-    timing: TimingConfig,
+    timeline: Timeline,
 }
 
 impl ScenarioAccumulator {
@@ -136,14 +134,14 @@ impl ScenarioAccumulator {
             conf_n: 0,
             wall_infer: 0.0,
             onboard_busy_s: 0.0,
-            virtual_s: 0.0,
             energy: EnergyMeter::new(),
             scenes: 0,
-            timing: cfg.timing.clone(),
+            timeline: Timeline::degenerate(&cfg.timing, f64::INFINITY),
         }
     }
 
-    /// Fold one scene, in capture order.
+    /// Fold one scene, in capture order, with the degenerate timeline's
+    /// nominal duty cycles (the single-satellite scenario abstraction).
     pub fn add_scene(
         &mut self,
         router: &RouterStats,
@@ -152,6 +150,25 @@ impl ScenarioAccumulator {
         processed: &[ProcessedTile],
         n_filtered: usize,
         wall: f64,
+    ) {
+        let (busy, period) = scene_timing(self.timeline.timing(), processed.len());
+        let duties = self.timeline.nominal_duties(busy, period);
+        self.add_scene_observed(router, bentpipe_bytes, n_scene_tiles, processed, n_filtered, wall, duties);
+    }
+
+    /// Fold one scene with externally observed duty cycles (the
+    /// constellation path: comm from link airtime inside contact
+    /// windows, camera from capture events).
+    #[allow(clippy::too_many_arguments)] // the scene fold, not public API surface
+    pub fn add_scene_observed(
+        &mut self,
+        router: &RouterStats,
+        bentpipe_bytes: u64,
+        n_scene_tiles: usize,
+        processed: &[ProcessedTile],
+        n_filtered: usize,
+        wall: f64,
+        duties: DutyCycles,
     ) {
         self.scenes += 1;
         self.router.merge(router);
@@ -187,11 +204,27 @@ impl ScenarioAccumulator {
 
         // virtual-time + energy accounting for this scene: the satellite is
         // busy ONBOARD_S_PER_TILE per kept tile; capture and filtering are
-        // folded into a per-scene constant.
-        let (busy, scene_period) = scene_timing(&self.timing, processed.len());
+        // folded into a per-scene constant.  The mission clock advances one
+        // scene period and the energy meter integrates the duty cycles the
+        // timeline (or the constellation's observation) derived.
+        let (busy, scene_period) = scene_timing(self.timeline.timing(), processed.len());
         self.onboard_busy_s += busy;
-        self.virtual_s += scene_period;
-        self.energy.advance(scene_period, busy / scene_period, 0.05, 0.1);
+        self.timeline.advance(scene_period);
+        self.energy.advance(scene_period, duties.compute, duties.comm, duties.camera);
+    }
+
+    /// Advance mission time past the last capture without folding a
+    /// scene — the constellation's downlink tail, where queued items get
+    /// their remaining contact windows.  Integrates energy at the given
+    /// duties (compute 0 ⇒ the meter's idle floor; comm reflects the
+    /// tail drains' observed link airtime).  Single-satellite paths
+    /// never call this, so their results are untouched.
+    pub fn extend_mission(&mut self, dt_s: f64, duties: DutyCycles) {
+        if dt_s <= 0.0 {
+            return;
+        }
+        self.timeline.advance(dt_s);
+        self.energy.advance(dt_s, duties.compute, duties.comm, duties.camera);
     }
 
     /// Scenes folded so far (the engine's collector uses this to detect
@@ -224,7 +257,7 @@ impl ScenarioAccumulator {
             } else {
                 self.conf_sum / self.conf_n as f64
             },
-            compute_duty: self.onboard_busy_s / self.virtual_s.max(1e-9),
+            compute_duty: self.onboard_busy_s / self.timeline.now_s().max(1e-9),
             energy_compute_share: self.energy.compute_share(),
             wall_infer_s: self.wall_infer,
         }
@@ -243,6 +276,19 @@ impl<'rt> Pipeline<'rt> {
         let policy = RouterPolicy {
             confidence_threshold: cfg.policy.confidence_threshold,
             empty_objectness: cfg.policy.empty_objectness,
+            // Adaptation only bites where a LinkSnapshot exists (the
+            // constellation driver re-routes with `policy.effective`);
+            // link-blind paths always apply the base threshold.
+            adaptive: if cfg.policy.adaptive {
+                Some(AdaptiveRouting {
+                    backlog_high_bytes: cfg.policy.adaptive_backlog_bytes,
+                    loss_high: cfg.policy.adaptive_loss_rate,
+                    tighten_step: cfg.policy.adaptive_tighten,
+                    relax_step: cfg.policy.adaptive_relax,
+                })
+            } else {
+                None
+            },
         };
         Pipeline { rt, cfg, policy, onboard_model: Model::Tiny }
     }

@@ -9,10 +9,55 @@
 //! tiles (no detections at all) are treated as *confidently empty* when
 //! the best objectness anywhere is very low — otherwise offloaded, since
 //! a weak model failing to see anything is exactly the uncertain case.
+//!
+//! Adaptive mode (off by default): the policy consults a [`LinkSnapshot`]
+//! — downlink backlog + recent loss rate, both functions of virtual
+//! mission time, so decisions stay deterministic — and tightens the
+//! offload threshold when the link is stressed (a raw tile queued behind
+//! a MakerSat-grade link is a tile that will never arrive) or relaxes it
+//! when the link is idle (collaborative accuracy is cheap to harvest).
 
 use crate::detect::Detection;
 
 use super::TileFate;
+
+/// What the router is allowed to observe about the downlink, sampled at
+/// the scene's virtual capture time.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LinkSnapshot {
+    /// Bytes queued for downlink (results + images).
+    pub backlog_bytes: u64,
+    /// Loss rate over recent traffic — the caller samples it over the
+    /// packets sent since the previous decision and decays it while the
+    /// link is silent, so one bad early pass doesn't latch the tightened
+    /// state for the whole mission.
+    pub loss_rate: f64,
+}
+
+/// Knobs for link-aware threshold adaptation.
+#[derive(Clone, Copy, Debug)]
+pub struct AdaptiveRouting {
+    /// Backlog above this ⇒ tighten (offload less).
+    pub backlog_high_bytes: u64,
+    /// Loss rate above this ⇒ tighten.
+    pub loss_high: f64,
+    /// Subtracted from the confidence threshold when stressed.
+    pub tighten_step: f32,
+    /// Added when the link is clearly idle (backlog under a quarter of
+    /// the high watermark and loss under half the limit).
+    pub relax_step: f32,
+}
+
+impl Default for AdaptiveRouting {
+    fn default() -> AdaptiveRouting {
+        AdaptiveRouting {
+            backlog_high_bytes: 5_000_000,
+            loss_high: 0.2,
+            tighten_step: 0.2,
+            relax_step: 0.05,
+        }
+    }
+}
 
 #[derive(Clone, Copy, Debug)]
 pub struct RouterPolicy {
@@ -21,11 +66,32 @@ pub struct RouterPolicy {
     /// Best raw objectness below this on an empty tile ⇒ confidently
     /// empty (no offload, nothing to send).
     pub empty_objectness: f32,
+    /// Link-aware threshold adaptation; `None` is the paper's static
+    /// policy.
+    pub adaptive: Option<AdaptiveRouting>,
 }
 
 impl Default for RouterPolicy {
     fn default() -> RouterPolicy {
-        RouterPolicy { confidence_threshold: 0.90, empty_objectness: 0.25 }
+        RouterPolicy { confidence_threshold: 0.90, empty_objectness: 0.25, adaptive: None }
+    }
+}
+
+impl RouterPolicy {
+    /// The policy actually applied under `snapshot`: identical to `self`
+    /// in static mode; with adaptation on, the confidence threshold
+    /// tightens under backlog/loss stress and relaxes on an idle link.
+    pub fn effective(&self, snapshot: &LinkSnapshot) -> RouterPolicy {
+        let Some(ad) = self.adaptive else { return *self };
+        let mut threshold = self.confidence_threshold;
+        if snapshot.backlog_bytes > ad.backlog_high_bytes || snapshot.loss_rate > ad.loss_high {
+            threshold -= ad.tighten_step;
+        } else if snapshot.backlog_bytes < ad.backlog_high_bytes / 4
+            && snapshot.loss_rate < ad.loss_high / 2.0
+        {
+            threshold += ad.relax_step;
+        }
+        RouterPolicy { confidence_threshold: threshold.clamp(0.05, 0.999), ..*self }
     }
 }
 
@@ -95,7 +161,7 @@ mod tests {
     }
 
     fn policy() -> RouterPolicy {
-        RouterPolicy { confidence_threshold: 0.45, empty_objectness: 0.25 }
+        RouterPolicy { confidence_threshold: 0.45, empty_objectness: 0.25, adaptive: None }
     }
 
     #[test]
@@ -161,5 +227,61 @@ mod tests {
             route(&policy(), &[det(0.2), det(0.8)], 0.8, &mut s),
             TileFate::OnboardFinal
         );
+    }
+
+    fn adaptive_policy() -> RouterPolicy {
+        RouterPolicy {
+            confidence_threshold: 0.45,
+            empty_objectness: 0.25,
+            adaptive: Some(AdaptiveRouting::default()),
+        }
+    }
+
+    #[test]
+    fn static_policy_ignores_snapshot() {
+        let p = policy();
+        let stressed = LinkSnapshot { backlog_bytes: u64::MAX, loss_rate: 1.0 };
+        assert_eq!(p.effective(&stressed).confidence_threshold, p.confidence_threshold);
+    }
+
+    #[test]
+    fn backlog_tightens_threshold() {
+        let p = adaptive_policy();
+        let snap = LinkSnapshot { backlog_bytes: 6_000_000, loss_rate: 0.0 };
+        let eff = p.effective(&snap);
+        assert!((eff.confidence_threshold - 0.25).abs() < 1e-6, "{}", eff.confidence_threshold);
+        // a tile the static policy would offload now stays onboard
+        let mut s = RouterStats::default();
+        assert_eq!(route(&eff, &[det(0.3)], 0.3, &mut s), TileFate::OnboardFinal);
+    }
+
+    #[test]
+    fn loss_tightens_threshold() {
+        let p = adaptive_policy();
+        let snap = LinkSnapshot { backlog_bytes: 0, loss_rate: 0.5 };
+        assert!((p.effective(&snap).confidence_threshold - 0.25).abs() < 1e-6);
+    }
+
+    #[test]
+    fn idle_link_relaxes_threshold() {
+        let p = adaptive_policy();
+        let snap = LinkSnapshot { backlog_bytes: 0, loss_rate: 0.0 };
+        assert!((p.effective(&snap).confidence_threshold - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn mid_band_leaves_threshold_alone() {
+        let p = adaptive_policy();
+        // backlog between the relax and tighten watermarks
+        let snap = LinkSnapshot { backlog_bytes: 2_000_000, loss_rate: 0.05 };
+        assert_eq!(p.effective(&snap).confidence_threshold, 0.45);
+    }
+
+    #[test]
+    fn effective_threshold_clamped() {
+        let mut p = adaptive_policy();
+        p.confidence_threshold = 0.1;
+        let stressed = LinkSnapshot { backlog_bytes: u64::MAX, loss_rate: 1.0 };
+        assert!((p.effective(&stressed).confidence_threshold - 0.05).abs() < 1e-6);
     }
 }

@@ -10,6 +10,13 @@
 //! timeline: compute draws full power only while inference batches run,
 //! comm only during contact windows, camera only during captures.  The
 //! 17% figure is an output of the simulation, not a constant.
+//!
+//! The duty cycles handed to [`EnergyMeter::advance`] come from the
+//! mission-time core ([`crate::sim::Timeline`]): single-satellite runs
+//! integrate the configured nominal duties of the degenerate
+//! always-in-contact timeline, while the constellation derives comm duty
+//! from actual link airtime inside contact windows and camera duty from
+//! capture events.
 
 use std::collections::BTreeMap;
 

@@ -11,8 +11,11 @@
 //! * [`runtime`]   — PJRT client wrapper: load HLO text, execute, marshal.
 //! * [`data`]      — SynthDOTA procedural Earth-Observation scenes + tiler.
 //! * [`detect`]    — box decode post-processing, NMS, AP/mAP evaluation.
-//! * [`orbit`]     — Keplerian propagation and contact-window computation.
+//! * [`orbit`]     — Keplerian propagation, contact windows, eclipse model.
 //! * [`link`]      — space-ground link: rate limits, burst loss, ARQ.
+//! * [`sim`]       — unified mission-time core: `MissionClock` + `Timeline`
+//!                   (scene cadence, contact windows, illumination phases)
+//!                   from which every consumer derives its duty cycles.
 //! * [`energy`]    — Baoyun power model (Tables 2–3), duty-cycle integration.
 //! * [`cluster`]   — KubeEdge-like substrate: registry, metastore, message
 //!                   bus, orchestrator, edgemesh.
@@ -46,6 +49,7 @@ pub mod link;
 pub mod orbit;
 pub mod runtime;
 pub mod sedna;
+pub mod sim;
 pub mod telemetry;
 pub mod util;
 // coordinator lands last (depends on everything above).

@@ -57,6 +57,22 @@ impl Satellite {
             a * (su * si),
         ]
     }
+
+    /// Cylindrical Earth-shadow eclipse test with the sun fixed at the
+    /// epoch direction (+X ECI; the sun moves < 0.05°/h, negligible over
+    /// mission horizons of hours).  The satellite is eclipsed when it is
+    /// on the anti-sun side of Earth and inside the shadow cylinder —
+    /// the event source behind the timeline's illumination phases and
+    /// duty-cycled camera/solar modeling.
+    pub fn in_eclipse(&self, t: f64) -> bool {
+        let p = self.position_eci(t);
+        let along_sun = p[0]; // dot(p, sun_dir) with sun_dir = +X
+        if along_sun >= 0.0 {
+            return false;
+        }
+        let perp2 = dot(&p, &p) - along_sun * along_sun;
+        perp2 < EARTH_RADIUS_KM * EARTH_RADIUS_KM
+    }
 }
 
 /// Ground station (paper: control center + downlink stations).
@@ -197,6 +213,32 @@ mod tests {
         let gs = beijing_station();
         let visible = (0..8640).any(|i| gs.visible(&sat, i as f64 * 10.0));
         assert!(visible, "no visibility in 24h is implausible for a 97° LEO");
+    }
+
+    #[test]
+    fn eclipse_fraction_realistic_for_leo() {
+        // A 500 km orbit spends roughly a third of each revolution in
+        // Earth's shadow (up to ~40% depending on beta angle).
+        let sat = baoyun();
+        let period = sat.period_s();
+        let n = 1000;
+        let dark = (0..n)
+            .filter(|i| sat.in_eclipse(*i as f64 * period / n as f64))
+            .count();
+        let frac = dark as f64 / n as f64;
+        assert!((0.05..0.5).contains(&frac), "eclipse fraction {frac}");
+    }
+
+    #[test]
+    fn sun_side_never_eclipsed() {
+        let sat = baoyun();
+        let period = sat.period_s();
+        for i in 0..1000 {
+            let t = i as f64 * period / 1000.0;
+            if sat.position_eci(t)[0] >= 0.0 {
+                assert!(!sat.in_eclipse(t), "sun-side eclipse at t={t}");
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,78 @@
+//! The mission clock: one owner for virtual mission time.
+//!
+//! Every time domain in the system — scene capture cadence, contact
+//! windows, link airtime, energy integration — advances against this
+//! clock, so the domains can never desynchronize.  The clock is plain
+//! seconds since mission epoch; there is no wallclock anywhere in the
+//! simulation core (wallclock exists only in perf telemetry).
+
+/// Monotone virtual mission time, seconds since epoch.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct MissionClock {
+    now_s: f64,
+}
+
+impl MissionClock {
+    pub fn new() -> MissionClock {
+        MissionClock { now_s: 0.0 }
+    }
+
+    /// Start the clock at an arbitrary epoch offset (e.g. a satellite
+    /// phased into an already-running mission).
+    pub fn starting_at(t0_s: f64) -> MissionClock {
+        MissionClock { now_s: t0_s }
+    }
+
+    pub fn now_s(&self) -> f64 {
+        self.now_s
+    }
+
+    /// Advance by a non-negative interval; returns the new time.
+    pub fn advance(&mut self, dt_s: f64) -> f64 {
+        assert!(dt_s >= 0.0, "mission time is monotone (dt {dt_s})");
+        self.now_s += dt_s;
+        self.now_s
+    }
+
+    /// Jump forward to an absolute time; no-op if `t_s` is in the past
+    /// (the clock never rewinds).
+    pub fn advance_to(&mut self, t_s: f64) -> f64 {
+        if t_s > self.now_s {
+            self.now_s = t_s;
+        }
+        self.now_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn starts_at_zero() {
+        assert_eq!(MissionClock::new().now_s(), 0.0);
+    }
+
+    #[test]
+    fn advance_accumulates() {
+        let mut c = MissionClock::new();
+        c.advance(30.0);
+        c.advance(12.5);
+        assert!((c.now_s() - 42.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn advance_to_never_rewinds() {
+        let mut c = MissionClock::starting_at(100.0);
+        c.advance_to(50.0);
+        assert_eq!(c.now_s(), 100.0);
+        c.advance_to(150.0);
+        assert_eq!(c.now_s(), 150.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn negative_advance_panics() {
+        MissionClock::new().advance(-1.0);
+    }
+}

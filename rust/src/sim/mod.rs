@@ -1,0 +1,28 @@
+//! Unified mission-time simulation core.
+//!
+//! One virtual clock drives every time domain the paper's headline
+//! numbers emerge from: scene-capture cadence, orbital contact windows,
+//! lossy-link airtime, eclipse phases, and duty-cycled energy.  Before
+//! this layer, those domains lived in disconnected modules (the energy
+//! meter was fed hardcoded comm/camera duties while the link tracked
+//! real busy seconds that never reached it); now every consumer derives
+//! its timing from a [`Timeline`] over a [`MissionClock`].
+//!
+//! * [`MissionClock`] — monotone virtual mission seconds; the one owner
+//!   of "now".
+//! * [`Timeline`] — event sources over the clock: contact windows,
+//!   sunlit/eclipse spans, scene cadence ([`scene_timing`]), and duty
+//!   derivation ([`DutyCycles`]).  Degenerate (always-in-contact) for
+//!   single-satellite paths, orbital for the constellation.
+//!
+//! See DESIGN.md §"Mission-time simulation core" for which module
+//! derives which duty cycle.
+
+mod clock;
+mod timeline;
+
+pub use clock::MissionClock;
+pub use timeline::{
+    scan_spans, scene_timing, ContactSlice, DutyCycles, Span, Timeline, GROUND_S_PER_TILE,
+    ONBOARD_S_PER_TILE,
+};

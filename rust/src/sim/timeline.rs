@@ -1,0 +1,403 @@
+//! The mission timeline: event sources layered over the [`MissionClock`].
+//!
+//! A [`Timeline`] owns the virtual clock plus everything that makes a
+//! satellite's mission time *structured*: scene-capture cadence (from
+//! [`TimingConfig`]), contact windows (from [`crate::orbit`]), and
+//! eclipse/illumination phases.  Consumers derive their duty cycles from
+//! it instead of hardcoding them:
+//!
+//! * compute duty — onboard busy seconds per scene period ([`scene_timing`]);
+//! * comm duty    — actual [`crate::link::Link`] airtime inside contact
+//!                  windows, attributed to the scene period it occurred in;
+//! * camera duty  — capture-event duration per scene period.
+//!
+//! Two flavors:
+//!
+//! * [`Timeline::degenerate`] — the single-satellite scenario paths:
+//!   always in contact, always sunlit, duties at the configured nominal
+//!   values.  This preserves the pre-`sim` results bit-for-bit (guarded
+//!   by `rust/tests/engine_parity.rs`).
+//! * [`Timeline::orbital`] — the constellation path: real contact
+//!   windows, eclipse phases from the orbit geometry, observed duties.
+//!
+//! Contact time is consumed *incrementally*: [`Timeline::due_contacts`]
+//! hands back each window span at most once, clipped to the unconsumed
+//! part that has elapsed by the caller's mission time, so no downlink can
+//! double-spend window airtime.
+
+use crate::config::TimingConfig;
+use crate::orbit::{ContactWindow, GroundStation, Satellite};
+
+use super::MissionClock;
+
+/// Modeled onboard service time per tile (Raspberry-Pi-class YOLO-tiny;
+/// drives energy duty cycles and orbital-time latency, not wallclock).
+pub const ONBOARD_S_PER_TILE: f64 = 0.65;
+/// Ground GPU-class service time per tile.
+pub const GROUND_S_PER_TILE: f64 = 0.05;
+
+/// Virtual (busy, scene_period) seconds for a scene with `n_kept`
+/// processed tiles.  One definition shared by the result fold, the
+/// staged engines, and the constellation's downlink `ready_at`/window
+/// gating, so the time domains can never desynchronize.
+pub fn scene_timing(timing: &TimingConfig, n_kept: usize) -> (f64, f64) {
+    let busy = n_kept as f64 * ONBOARD_S_PER_TILE + timing.capture_overhead_s;
+    (busy, busy.max(timing.scene_period_floor_s))
+}
+
+/// Half-open interval of mission time.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Span {
+    pub start: f64,
+    pub end: f64,
+}
+
+impl Span {
+    pub fn duration_s(&self) -> f64 {
+        (self.end - self.start).max(0.0)
+    }
+
+    pub fn contains(&self, t: f64) -> bool {
+        t >= self.start && t < self.end
+    }
+
+    /// Seconds of overlap with `[t0, t1)`.
+    pub fn overlap_s(&self, t0: f64, t1: f64) -> f64 {
+        (self.end.min(t1) - self.start.max(t0)).max(0.0)
+    }
+}
+
+/// Coarse-scan a boolean predicate of mission time into maximal true
+/// spans (the eclipse/illumination event source; contact windows use the
+/// bisection-refined scan in [`crate::orbit`]).
+pub fn scan_spans(pred: impl Fn(f64) -> bool, t0: f64, t1: f64, step_s: f64) -> Vec<Span> {
+    assert!(t1 > t0 && step_s > 0.0);
+    let mut spans = Vec::new();
+    let mut open: Option<f64> = if pred(t0) { Some(t0) } else { None };
+    let mut t = t0;
+    while t < t1 {
+        let tn = (t + step_s).min(t1);
+        match (open, pred(tn)) {
+            (None, true) => open = Some(tn),
+            (Some(s), false) => {
+                spans.push(Span { start: s, end: tn });
+                open = None;
+            }
+            _ => {}
+        }
+        t = tn;
+    }
+    if let Some(s) = open {
+        spans.push(Span { start: s, end: t1 });
+    }
+    spans
+}
+
+/// Per-scene-period duty cycles handed to the energy integrator.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct DutyCycles {
+    /// Onboard inference busy fraction.
+    pub compute: f64,
+    /// Transmitter busy fraction (link airtime inside contact windows).
+    pub comm: f64,
+    /// Camera capture fraction.
+    pub camera: f64,
+}
+
+/// One drainable chunk of a physical contact window, as handed out by
+/// [`Timeline::due_contacts`].
+#[derive(Clone, Debug)]
+pub struct ContactSlice {
+    /// The elapsed, not-yet-consumed span (aos/los clipped).
+    pub window: ContactWindow,
+    /// True when this slice reaches the physical window's LOS.  Downlink
+    /// failure accounting counts a failed *pass* only on such slices —
+    /// a transfer that didn't fit a mid-pass slice still has the rest of
+    /// the pass ahead of it.
+    pub closes_pass: bool,
+}
+
+/// One satellite's mission timeline.
+#[derive(Clone, Debug)]
+pub struct Timeline {
+    clock: MissionClock,
+    timing: TimingConfig,
+    contacts: Vec<ContactWindow>,
+    /// Cursor into `contacts` for incremental consumption.
+    next_contact: usize,
+    /// Contact time at or before this instant has been handed out.
+    consumed_to: f64,
+    /// Sunlit spans; `None` means always sunlit (degenerate timeline).
+    sunlit: Option<Vec<Span>>,
+    horizon_s: f64,
+}
+
+impl Timeline {
+    /// Always-in-contact, always-sunlit timeline: the single-satellite
+    /// scenario abstraction (the ground segment is reachable whenever a
+    /// result is ready).  Duty cycles come out at the configured nominal
+    /// values, which keeps pre-`sim` results bit-identical.
+    pub fn degenerate(timing: &TimingConfig, horizon_s: f64) -> Timeline {
+        let contacts = vec![ContactWindow { aos: 0.0, los: horizon_s, max_elevation_deg: 90.0 }];
+        Timeline {
+            clock: MissionClock::new(),
+            timing: timing.clone(),
+            contacts,
+            next_contact: 0,
+            consumed_to: 0.0,
+            sunlit: None,
+            horizon_s,
+        }
+    }
+
+    /// Timeline for one orbital plane over a ground station: contact
+    /// windows from visibility geometry, illumination phases from the
+    /// cylindrical Earth-shadow model.
+    pub fn orbital(
+        timing: &TimingConfig,
+        sat: &Satellite,
+        gs: &GroundStation,
+        horizon_s: f64,
+        step_s: f64,
+    ) -> Timeline {
+        let contacts = crate::orbit::contact_windows(sat, gs, 0.0, horizon_s, step_s);
+        let sunlit = scan_spans(|t| !sat.in_eclipse(t), 0.0, horizon_s, step_s);
+        Timeline {
+            clock: MissionClock::new(),
+            timing: timing.clone(),
+            contacts,
+            next_contact: 0,
+            consumed_to: 0.0,
+            sunlit: Some(sunlit),
+            horizon_s,
+        }
+    }
+
+    pub fn timing(&self) -> &TimingConfig {
+        &self.timing
+    }
+
+    pub fn now_s(&self) -> f64 {
+        self.clock.now_s()
+    }
+
+    pub fn horizon_s(&self) -> f64 {
+        self.horizon_s
+    }
+
+    /// Advance mission time by one scene period; returns the new time.
+    pub fn advance(&mut self, dt_s: f64) -> f64 {
+        self.clock.advance(dt_s)
+    }
+
+    pub fn n_contacts(&self) -> usize {
+        self.contacts.len()
+    }
+
+    pub fn contact_total_s(&self) -> f64 {
+        self.contacts.iter().map(|w| w.duration_s()).sum()
+    }
+
+    pub fn in_contact(&self, t: f64) -> bool {
+        self.contacts.iter().any(|w| w.contains(t))
+    }
+
+    pub fn sunlit(&self, t: f64) -> bool {
+        match &self.sunlit {
+            None => true,
+            Some(spans) => spans.iter().any(|s| s.contains(t)),
+        }
+    }
+
+    /// Sunlit seconds within `[t0, t1)`.
+    pub fn sunlit_s(&self, t0: f64, t1: f64) -> f64 {
+        match &self.sunlit {
+            None => (t1 - t0).max(0.0),
+            Some(spans) => spans.iter().map(|s| s.overlap_s(t0, t1)).sum(),
+        }
+    }
+
+    /// Contact spans that have elapsed by mission time `t`, clipped to
+    /// the part not yet handed out.  Each returned slice is a drainable
+    /// budget: the caller spends it against a [`crate::link::Link`] and
+    /// it is never offered again.
+    pub fn due_contacts(&mut self, t: f64) -> Vec<ContactSlice> {
+        let mut out = Vec::new();
+        while self.next_contact < self.contacts.len() {
+            let w = &self.contacts[self.next_contact];
+            if w.aos >= t {
+                break;
+            }
+            let start = w.aos.max(self.consumed_to);
+            let end = w.los.min(t);
+            let closes_pass = w.los <= t;
+            if end > start {
+                out.push(ContactSlice {
+                    window: ContactWindow {
+                        aos: start,
+                        los: end,
+                        max_elevation_deg: w.max_elevation_deg,
+                    },
+                    closes_pass,
+                });
+                self.consumed_to = end;
+            }
+            if closes_pass {
+                self.next_contact += 1;
+            } else {
+                break;
+            }
+        }
+        out
+    }
+
+    /// Everything left through the mission horizon (the end-of-mission
+    /// tail drain).
+    pub fn remaining_contacts(&mut self) -> Vec<ContactSlice> {
+        self.due_contacts(self.horizon_s)
+    }
+
+    /// Duties for the degenerate timeline: compute from the scene's busy
+    /// time, comm/camera at the configured nominal fractions (the
+    /// always-in-contact abstraction has no windows to integrate over).
+    pub fn nominal_duties(&self, busy_s: f64, period_s: f64) -> DutyCycles {
+        DutyCycles {
+            compute: busy_s / period_s,
+            comm: self.timing.nominal_comm_duty,
+            camera: self.timing.nominal_camera_duty,
+        }
+    }
+
+    /// Duties derived from what actually happened during one scene
+    /// period: onboard busy time, link airtime, and capture-event time.
+    pub fn observed_duties(
+        &self,
+        busy_s: f64,
+        period_s: f64,
+        comm_busy_s: f64,
+        camera_busy_s: f64,
+    ) -> DutyCycles {
+        let p = period_s.max(1e-9);
+        DutyCycles {
+            compute: (busy_s / p).clamp(0.0, 1.0),
+            comm: (comm_busy_s / p).clamp(0.0, 1.0),
+            camera: (camera_busy_s / p).clamp(0.0, 1.0),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::orbit::{baoyun, beijing_station};
+
+    fn timing() -> TimingConfig {
+        TimingConfig::default()
+    }
+
+    #[test]
+    fn scene_timing_floor_applies() {
+        let t = timing();
+        let (busy, period) = scene_timing(&t, 4);
+        assert!((busy - (4.0 * ONBOARD_S_PER_TILE + t.capture_overhead_s)).abs() < 1e-12);
+        assert_eq!(period, t.scene_period_floor_s);
+        let (busy_big, period_big) = scene_timing(&t, 100);
+        assert_eq!(busy_big, period_big, "above the floor, period tracks busy");
+    }
+
+    #[test]
+    fn degenerate_always_in_contact_and_sunlit() {
+        let tl = Timeline::degenerate(&timing(), 1000.0);
+        assert!(tl.in_contact(0.0) && tl.in_contact(999.0));
+        assert!(tl.sunlit(500.0));
+        assert_eq!(tl.sunlit_s(0.0, 1000.0), 1000.0);
+        assert_eq!(tl.n_contacts(), 1);
+    }
+
+    #[test]
+    fn degenerate_nominal_duties_are_config_constants() {
+        let t = timing();
+        let tl = Timeline::degenerate(&t, 1000.0);
+        let d = tl.nominal_duties(15.0, 30.0);
+        assert_eq!(d.compute, 0.5);
+        assert_eq!(d.comm, t.nominal_comm_duty);
+        assert_eq!(d.camera, t.nominal_camera_duty);
+    }
+
+    #[test]
+    fn due_contacts_consumes_incrementally() {
+        let mut tl = Timeline::degenerate(&timing(), 100.0);
+        let first = tl.due_contacts(30.0);
+        assert_eq!(first.len(), 1);
+        assert_eq!(first[0].window.aos, 0.0);
+        assert_eq!(first[0].window.los, 30.0);
+        assert!(!first[0].closes_pass, "the pass runs to the horizon");
+        // nothing new before time advances
+        assert!(tl.due_contacts(30.0).is_empty());
+        let second = tl.due_contacts(60.0);
+        assert_eq!(second.len(), 1);
+        assert_eq!(second[0].window.aos, 30.0);
+        assert_eq!(second[0].window.los, 60.0);
+        let tail = tl.remaining_contacts();
+        assert_eq!(tail.len(), 1);
+        assert_eq!(tail[0].window.aos, 60.0);
+        assert_eq!(tail[0].window.los, 100.0);
+        assert!(tail[0].closes_pass, "the horizon closes the pass");
+        assert!(tl.remaining_contacts().is_empty());
+    }
+
+    #[test]
+    fn due_contacts_never_double_spends() {
+        let mut tl = Timeline::degenerate(&timing(), 500.0);
+        let mut total = 0.0;
+        for t in [100.0, 100.0, 250.0, 400.0] {
+            for s in tl.due_contacts(t) {
+                total += s.window.duration_s();
+            }
+        }
+        for s in tl.remaining_contacts() {
+            total += s.window.duration_s();
+        }
+        assert!((total - 500.0).abs() < 1e-9, "consumed {total} of 500 s");
+    }
+
+    #[test]
+    fn orbital_timeline_has_windows_and_eclipse() {
+        let tl = Timeline::orbital(&timing(), &baoyun(), &beijing_station(), 86_400.0, 10.0);
+        assert!(tl.n_contacts() >= 1, "a day of LEO should see the station");
+        assert!(tl.contact_total_s() > 0.0);
+        let sunlit = tl.sunlit_s(0.0, 86_400.0);
+        assert!(
+            sunlit > 0.3 * 86_400.0 && sunlit < 86_400.0,
+            "sunlit fraction {} should show real eclipse phases",
+            sunlit / 86_400.0
+        );
+    }
+
+    #[test]
+    fn scan_spans_finds_intervals() {
+        let spans = scan_spans(|t| (100.0..200.0).contains(&t), 0.0, 300.0, 10.0);
+        assert_eq!(spans.len(), 1);
+        assert!((spans[0].start - 100.0).abs() <= 10.0);
+        assert!((spans[0].end - 200.0).abs() <= 10.0);
+        assert!(spans[0].overlap_s(150.0, 160.0) > 9.9);
+    }
+
+    #[test]
+    fn observed_duties_clamped() {
+        let tl = Timeline::degenerate(&timing(), 100.0);
+        let d = tl.observed_duties(40.0, 30.0, 45.0, 2.0);
+        assert_eq!(d.compute, 1.0);
+        assert_eq!(d.comm, 1.0);
+        assert!((d.camera - 2.0 / 30.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn clock_advances_through_timeline() {
+        let mut tl = Timeline::degenerate(&timing(), 100.0);
+        assert_eq!(tl.now_s(), 0.0);
+        tl.advance(30.0);
+        tl.advance(30.0);
+        assert!((tl.now_s() - 60.0).abs() < 1e-12);
+    }
+}

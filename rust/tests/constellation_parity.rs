@@ -1,0 +1,98 @@
+//! Constellation ↔ single-satellite parity: the constellation runner's
+//! only honest differences from `run_scenario` are the lossy windowed
+//! link and the energy duties it derives from it.  Remove those — one
+//! satellite, lossless link, contact covering the whole horizon
+//! (`constellation.ideal_contact`) — and the per-satellite result must
+//! reproduce the sequential facade's mAP and tile accounting exactly.
+
+use tiansuan::config::Config;
+use tiansuan::coordinator::{run_constellation, Pipeline};
+use tiansuan::data::Version;
+use tiansuan::runtime::Runtime;
+
+fn rt() -> Option<Runtime> {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    if !std::path::Path::new(dir).join("manifest.json").exists() {
+        eprintln!("skipping: artifacts/ not built");
+        return None;
+    }
+    Some(Runtime::open(dir).unwrap())
+}
+
+fn ideal_cfg() -> Config {
+    let mut cfg = Config::default();
+    cfg.scene_cells = 4;
+    cfg.constellation.satellites = 1;
+    cfg.constellation.scenes_per_satellite = 3;
+    cfg.constellation.ideal_contact = true;
+    cfg.loss_profile = "lossless".into();
+    cfg
+}
+
+#[test]
+fn one_satellite_ideal_contact_matches_run_scenario() {
+    let Some(rt) = rt() else { return };
+    let cfg = ideal_cfg();
+    let report = run_constellation(&rt, &cfg, Version::V2).unwrap();
+    assert_eq!(report.satellites.len(), 1);
+    let sat = &report.satellites[0];
+
+    // the constellation derives per-satellite seeds; reproduce sat 0's
+    let mut single = cfg.clone();
+    single.seed = cfg.seed.wrapping_add(1);
+    let p = Pipeline::new(&rt, single);
+    let seq = p.run_scenario(Version::V2, cfg.constellation.scenes_per_satellite).unwrap();
+
+    // mAP: every offloaded tile crossed the ideal link and was
+    // ground-inferred, exactly like the sequential facade
+    assert_eq!(sat.result.map_inorbit.to_bits(), seq.map_inorbit.to_bits());
+    assert_eq!(sat.result.map_collab.to_bits(), seq.map_collab.to_bits());
+    assert_eq!(sat.result.report_collab.det_total, seq.report_collab.det_total);
+
+    // tile accounting
+    assert_eq!(sat.result.scenes, seq.scenes);
+    assert_eq!(sat.result.tiles_total, seq.tiles_total);
+    assert_eq!(sat.result.tiles_filtered, seq.tiles_filtered);
+    assert_eq!(sat.result.router.onboard_final, seq.router.onboard_final);
+    assert_eq!(sat.result.router.offloaded, seq.router.offloaded);
+    assert_eq!(sat.result.router.confidently_empty, seq.router.confidently_empty);
+
+    // byte accounting: nominal collab bytes match; the ideal link
+    // delivered every queued byte and dropped none
+    assert_eq!(sat.result.bentpipe_bytes, seq.bentpipe_bytes);
+    assert_eq!(sat.result.collab_bytes, seq.collab_bytes);
+    assert_eq!(sat.downlink.total_bytes(), sat.result.collab_bytes);
+    assert_eq!(sat.downlink.items_dropped, 0);
+    assert_eq!(sat.downlink.bytes_dropped, 0);
+    assert_eq!(sat.link.packets_lost, 0);
+}
+
+#[test]
+fn lossy_constellation_diverges_only_in_delivery() {
+    // Sanity for the "honest difference": with the MakerSat-grade link
+    // the nominal accounting still matches the single-satellite run, but
+    // delivery falls short and collaborative accuracy can only shrink.
+    let Some(rt) = rt() else { return };
+    let mut cfg = ideal_cfg();
+    cfg.loss_profile = "makersat".into();
+    let report = run_constellation(&rt, &cfg, Version::V2).unwrap();
+    let sat = &report.satellites[0];
+
+    let mut single = cfg.clone();
+    single.seed = cfg.seed.wrapping_add(1);
+    let p = Pipeline::new(&rt, single);
+    let seq = p.run_scenario(Version::V2, cfg.constellation.scenes_per_satellite).unwrap();
+
+    assert_eq!(sat.result.tiles_total, seq.tiles_total);
+    assert_eq!(sat.result.collab_bytes, seq.collab_bytes, "nominal bytes are link-independent");
+    assert!(sat.link.packets_lost > 0, "the MakerSat profile must actually lose packets");
+    // every queued byte is delivered, dropped, or still pending — never
+    // more than queued, and dropped bytes no longer vanish
+    assert!(
+        sat.downlink.total_bytes() + sat.downlink.bytes_dropped <= sat.result.collab_bytes,
+        "delivered {} + dropped {} exceeds queued {}",
+        sat.downlink.total_bytes(),
+        sat.downlink.bytes_dropped,
+        sat.result.collab_bytes
+    );
+}

@@ -101,9 +101,15 @@ fn constellation_three_satellites_complete() {
                 + sat.result.router.offloaded as usize
         );
         assert!((0.0..=1.0).contains(&sat.result.energy_compute_share));
+        // the timeline's illumination event source is wired through
+        assert!(sat.sunlit_s > 0.0 && sat.sunlit_s <= 21_600.0, "sunlit_s {}", sat.sunlit_s);
     }
-    // per-stage latency telemetry is present
+    // per-stage latency telemetry is present (capture + onboard stages
+    // run on the staged per-satellite engine since the sim refactor)
+    assert!(report.telemetry.contains("counter constellation.capture.items 6"), "{}", report.telemetry);
+    assert!(report.telemetry.contains("counter constellation.onboard.items 6"), "{}", report.telemetry);
     assert!(report.telemetry.contains("histogram constellation.onboard.service_s"), "{}", report.telemetry);
+    assert!(report.telemetry.contains("histogram constellation.onboard.queue_wait_s"), "{}", report.telemetry);
     assert!(report.telemetry.contains("histogram constellation.ground.queue_wait_s"), "{}", report.telemetry);
     assert!(report.telemetry.contains("counter constellation.ground.tiles"), "{}", report.telemetry);
 }
