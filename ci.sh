@@ -22,6 +22,9 @@ cargo fmt --check
 echo "== lint: cargo clippy -D warnings =="
 cargo clippy --all-targets -- -D warnings
 
+echo "== lint: cargo doc --no-deps (warnings are errors) =="
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
+
 echo "== bench artifact: perf_engine -> BENCH_engine.json =="
 if [[ -f artifacts/manifest.json ]]; then
   bench_log=$(mktemp)
@@ -34,5 +37,14 @@ if [[ -f artifacts/manifest.json ]]; then
 else
   echo "skipping bench artifact: artifacts/ not built"
 fi
+
+echo "== bench artifact: perf_power -> BENCH_power.json =="
+# artifact-free (pure mission-time integration): always recorded
+bench_log=$(mktemp)
+cargo bench --bench perf_power | tee "$bench_log"
+echo "{\"bench\":\"run\",\"commit\":\"$(git rev-parse --short HEAD 2>/dev/null || echo unknown)\",\"date\":\"$(date -u +%FT%TZ)\"}" >> ../BENCH_power.json
+grep '^{"bench"' "$bench_log" >> ../BENCH_power.json || true
+rm -f "$bench_log"
+echo "BENCH_power.json now holds $(wc -l < ../BENCH_power.json) records"
 
 echo "ci: all gates passed"

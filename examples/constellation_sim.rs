@@ -13,6 +13,11 @@
 //!
 //!     cargo run --release --example constellation_sim -- [--hours H] [--loss stable|weak|makersat]
 //!                                                        [--sats N] [--scenes N]
+//!                                                        [--battery-wh W] [--soc0 F] [--power]
+//!
+//! `--power` enables the power subsystem (solar array + battery +
+//! governor) for part 1; `--battery-wh` / `--soc0` size the battery and
+//! its initial state of charge.
 
 use tiansuan::cluster::metastore::{EdgeReplica, MetaStore};
 use tiansuan::cluster::orchestrator::{AppSpec, Orchestrator, Placement};
@@ -47,9 +52,18 @@ fn main() -> anyhow::Result<()> {
     ccfg.scene_cells = args.opt_usize("cells", 4);
     ccfg.constellation.satellites = args.opt_usize("sats", 3);
     ccfg.constellation.scenes_per_satellite = args.opt_usize("scenes", 2);
+    ccfg.power.enabled = args.flag("power");
+    ccfg.power.battery_wh = args.opt_f64("battery-wh", ccfg.power.battery_wh);
+    ccfg.power.initial_soc = args.opt_f64("soc0", ccfg.power.initial_soc);
     println!(
-        "=== run_constellation: {} satellites × {} scenes, shared ground segment ===",
-        ccfg.constellation.satellites, ccfg.constellation.scenes_per_satellite
+        "=== run_constellation: {} satellites × {} scenes, shared ground segment{} ===",
+        ccfg.constellation.satellites,
+        ccfg.constellation.scenes_per_satellite,
+        if ccfg.power.enabled {
+            format!(", power governor on ({} Wh battery)", ccfg.power.battery_wh)
+        } else {
+            String::new()
+        }
     );
     let report = run_constellation(&rt, &ccfg, Version::V2)?;
     for sat in &report.satellites {
@@ -69,6 +83,19 @@ fn main() -> anyhow::Result<()> {
             sat.downlink.bytes_dropped,
             100.0 * sat.result.energy_compute_share,
         );
+        if let Some(p) = &sat.power {
+            println!(
+                "    power: SoC min {:.0}% / mean {:.0}% / final {:.0}%, {:.1} Wh generated / {:.1} Wh consumed, {} scenes deferred / {} shed, {:.2} Wh unmet",
+                100.0 * p.min_soc_frac,
+                100.0 * p.mean_soc_frac(),
+                100.0 * p.final_soc_frac,
+                p.generated_wh,
+                p.consumed_wh,
+                p.scenes_deferred,
+                p.scenes_shed,
+                p.shortfall_wh,
+            );
+        }
     }
     println!(
         "aggregate: {} tiles in {:.2} s wall = {:.1} tiles/s; sedna task completed: {}",

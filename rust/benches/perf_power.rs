@@ -1,0 +1,101 @@
+//! Perf + scenario: battery-capacity sweep over an eclipse-heavy
+//! mission, governed vs ungoverned.
+//!
+//! Artifact-free by design: it flies the governed power profile
+//! ([`tiansuan::power::fly_mission`]) over a real orbital timeline
+//! without touching the inference runtime, so CI can always record the
+//! sweep (unlike `perf_engine`, which needs `artifacts/`).  Emits the
+//! standard bench JSON (one object per line) that `ci.sh` greps into
+//! `BENCH_power.json`.
+
+use tiansuan::config::{EnergyConfig, PowerConfig, TimingConfig};
+use tiansuan::orbit::{baoyun, beijing_station};
+use tiansuan::power::{fly_mission, PowerState};
+use tiansuan::sim::{DutyCycles, Timeline};
+use tiansuan::util::bench;
+
+fn main() {
+    let sat = baoyun();
+    let horizon = 6.0 * sat.period_s(); // six revolutions, ~38% eclipse each
+    let period_s = 30.0;
+    let timeline =
+        Timeline::orbital(&TimingConfig::default(), &sat, &beijing_station(), horizon, 10.0);
+    let active = DutyCycles { compute: 1.0, comm: 1.0, camera: 1.0 };
+    let energy = EnergyConfig { pi_idle_floor: 0.0, comm_idle_floor: 0.0 };
+    let periods = (horizon / period_s).ceil();
+
+    println!(
+        "=== perf_power: battery sweep over {:.1} h eclipse-heavy mission ({:.0}% sunlit) ===",
+        horizon / 3600.0,
+        100.0 * timeline.sunlit_fraction(0.0, horizon)
+    );
+    for battery_wh in [20.0, 40.0, 60.0, 80.0, 120.0, 240.0] {
+        for governed in [true, false] {
+            let power = PowerConfig {
+                enabled: true,
+                battery_wh,
+                panel_w: 95.0,
+                cosine_derate: 0.8,
+                initial_soc: 0.4,
+                soc_defer: if governed { 0.6 } else { 0.0 },
+                soc_critical: if governed { 0.3 } else { 0.0 },
+                ..PowerConfig::default()
+            };
+            let mut state = PowerState::new(&power, &energy);
+            let t0 = std::time::Instant::now();
+            fly_mission(&mut state, &timeline, active, period_s);
+            let wall = t0.elapsed().as_secs_f64();
+            let s = state.stats;
+            println!(
+                "battery {battery_wh:>5.0} Wh {}: SoC min {:>4.1}% mean {:>4.1}%, \
+                 {:.0}/{:.0} Wh gen/load, {:>4} deferred {:>4} shed, {:.2} Wh unmet",
+                if governed { "governed  " } else { "ungoverned" },
+                100.0 * s.min_soc_frac,
+                100.0 * s.mean_soc_frac(),
+                s.generated_wh,
+                s.consumed_wh,
+                s.scenes_deferred,
+                s.scenes_shed,
+                s.shortfall_wh,
+            );
+            bench::json_line(
+                "perf_power.battery_sweep",
+                &[
+                    ("battery_wh", battery_wh),
+                    ("governed", if governed { 1.0 } else { 0.0 }),
+                    ("min_soc", s.min_soc_frac),
+                    ("mean_soc", s.mean_soc_frac()),
+                    ("generated_wh", s.generated_wh),
+                    ("consumed_wh", s.consumed_wh),
+                    ("shortfall_wh", s.shortfall_wh),
+                    ("deferred", s.scenes_deferred as f64),
+                    ("shed", s.scenes_shed as f64),
+                    ("wall_s", wall),
+                    ("periods_per_s", periods / wall.max(1e-12)),
+                ],
+            );
+        }
+    }
+
+    // pure integration hot-loop throughput (the per-period cost the
+    // constellation driver pays when power is enabled)
+    let power = PowerConfig { enabled: true, ..PowerConfig::default() };
+    let stats = bench::run(
+        "power/fly_mission/6rev",
+        10,
+        std::time::Duration::from_millis(500),
+        || {
+            let mut state = PowerState::new(&power, &energy);
+            fly_mission(&mut state, &timeline, active, period_s);
+            std::hint::black_box(state.stats.min_soc_frac);
+        },
+    );
+    bench::json_line(
+        "perf_power.integrate",
+        &[
+            ("periods", periods),
+            ("median_s", stats.median.as_secs_f64()),
+            ("periods_per_s", periods / stats.median.as_secs_f64().max(1e-12)),
+        ],
+    );
+}

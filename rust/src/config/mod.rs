@@ -98,6 +98,144 @@ impl Default for EngineConfig {
     }
 }
 
+/// Idle duty floors for the [`crate::energy::EnergyMeter`] (previously
+/// hardcoded in `EnergyMeter::advance`).  Power scenarios model low-idle
+/// hardware by lowering these; the defaults reproduce the pre-config
+/// integration exactly.
+#[derive(Clone, Copy, Debug)]
+pub struct EnergyConfig {
+    /// Raspberry Pi idle draw as a fraction of active draw (was 0.25).
+    pub pi_idle_floor: f64,
+    /// Comm subsystem idle draw as a fraction of nameplate (was 0.15).
+    pub comm_idle_floor: f64,
+}
+
+impl EnergyConfig {
+    /// Out-of-range floors would be silently clamped deep inside the
+    /// meter; fail at the surface instead, like [`PowerConfig::validate`].
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.pi_idle_floor),
+            "energy.pi_idle_floor must be in [0, 1], got {}",
+            self.pi_idle_floor
+        );
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.comm_idle_floor),
+            "energy.comm_idle_floor must be in [0, 1], got {}",
+            self.comm_idle_floor
+        );
+        Ok(())
+    }
+}
+
+impl Default for EnergyConfig {
+    fn default() -> EnergyConfig {
+        EnergyConfig { pi_idle_floor: 0.25, comm_idle_floor: 0.15 }
+    }
+}
+
+/// Power subsystem ([`crate::power`]): solar array, battery, and the
+/// energy-aware mission governor.  Disabled by default — every existing
+/// result stays bit-identical until a scenario opts in.
+#[derive(Clone, Copy, Debug)]
+pub struct PowerConfig {
+    /// Master switch: off ⇒ no [`crate::power::PowerState`] exists and
+    /// the constellation driver never consults a governor.
+    pub enabled: bool,
+    /// Battery capacity, Wh (12U-microsat class).
+    pub battery_wh: f64,
+    /// Solar array output at normal incidence, W.
+    pub panel_w: f64,
+    /// Mean cosine/beta-angle derate applied to `panel_w` while sunlit.
+    pub cosine_derate: f64,
+    /// Battery charge efficiency (fraction of surplus Wh stored).
+    pub charge_eff: f64,
+    /// Battery discharge efficiency (Wh drawn per Wh delivered is 1/η).
+    pub discharge_eff: f64,
+    /// Initial state of charge as a fraction of capacity.
+    pub initial_soc: f64,
+    /// SoC fraction below which the governor defers downlink drains and
+    /// tightens the router threshold.
+    pub soc_defer: f64,
+    /// SoC fraction below which captures are shed entirely.
+    pub soc_critical: f64,
+    /// How far the router confidence threshold drops while deferring
+    /// (composes with the adaptive path's `RouterPolicy::effective`).
+    pub defer_tighten: f32,
+}
+
+impl PowerConfig {
+    /// Hard invariants, checked at parse time and again at the top of
+    /// `run_constellation` — a degenerate battery must fail loudly at
+    /// the surface, not as an assert deep inside a satellite thread.
+    /// (`soc_critical >= soc_defer` is *not* an error: it is a
+    /// shed-only governor with an empty defer band.)
+    pub fn validate(&self) -> Result<()> {
+        if !self.enabled {
+            return Ok(());
+        }
+        anyhow::ensure!(
+            self.battery_wh > 0.0 && self.battery_wh.is_finite(),
+            "power.battery_wh must be positive, got {}",
+            self.battery_wh
+        );
+        anyhow::ensure!(
+            self.panel_w >= 0.0 && self.panel_w.is_finite(),
+            "power.panel_w must be non-negative, got {}",
+            self.panel_w
+        );
+        anyhow::ensure!(
+            self.charge_eff > 0.0 && self.charge_eff <= 1.0,
+            "power.charge_eff must be in (0, 1], got {}",
+            self.charge_eff
+        );
+        anyhow::ensure!(
+            self.discharge_eff > 0.0 && self.discharge_eff <= 1.0,
+            "power.discharge_eff must be in (0, 1], got {}",
+            self.discharge_eff
+        );
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.cosine_derate),
+            "power.cosine_derate must be in [0, 1], got {}",
+            self.cosine_derate
+        );
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.initial_soc),
+            "power.initial_soc must be in [0, 1], got {}",
+            self.initial_soc
+        );
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.soc_defer) && (0.0..=1.0).contains(&self.soc_critical),
+            "power.soc_defer / soc_critical must be in [0, 1], got {} / {}",
+            self.soc_defer,
+            self.soc_critical
+        );
+        anyhow::ensure!(
+            self.defer_tighten >= 0.0 && self.defer_tighten.is_finite(),
+            "power.defer_tighten must be non-negative, got {}",
+            self.defer_tighten
+        );
+        Ok(())
+    }
+}
+
+impl Default for PowerConfig {
+    fn default() -> PowerConfig {
+        PowerConfig {
+            enabled: false,
+            battery_wh: 80.0,
+            panel_w: 110.0,
+            cosine_derate: 0.65,
+            charge_eff: 0.95,
+            discharge_eff: 0.95,
+            initial_soc: 1.0,
+            soc_defer: 0.4,
+            soc_critical: 0.2,
+            defer_tighten: 0.2,
+        }
+    }
+}
+
 /// Scenario virtual-time constants (previously hardcoded in
 /// `Pipeline::run_scenario`), consumed through [`crate::sim::Timeline`].
 #[derive(Clone, Debug)]
@@ -165,6 +303,8 @@ pub struct Config {
     pub engine: EngineConfig,
     pub timing: TimingConfig,
     pub constellation: ConstellationConfig,
+    pub energy: EnergyConfig,
+    pub power: PowerConfig,
     /// Scene size in 64-px cells.
     pub scene_cells: usize,
     /// Fragment edge length in px for the splitter.
@@ -192,6 +332,8 @@ impl Default for Config {
             engine: EngineConfig::default(),
             timing: TimingConfig::default(),
             constellation: ConstellationConfig::default(),
+            energy: EnergyConfig::default(),
+            power: PowerConfig::default(),
             scene_cells: 8,
             fragment_px: 64,
             loss_profile: "stable".into(),
@@ -352,6 +494,33 @@ impl Config {
                     .unwrap_or(cfg.constellation.ideal_contact),
             };
         }
+        if let Some(e) = j.get("energy") {
+            cfg.energy = EnergyConfig {
+                pi_idle_floor: e
+                    .get("pi_idle_floor")
+                    .and_then(|v| v.as_f64())
+                    .unwrap_or(cfg.energy.pi_idle_floor),
+                comm_idle_floor: e
+                    .get("comm_idle_floor")
+                    .and_then(|v| v.as_f64())
+                    .unwrap_or(cfg.energy.comm_idle_floor),
+            };
+        }
+        if let Some(p) = j.get("power") {
+            let n = |k: &str, d: f64| p.get(k).and_then(|v| v.as_f64()).unwrap_or(d);
+            cfg.power = PowerConfig {
+                enabled: p.get("enabled").and_then(|v| v.as_bool()).unwrap_or(cfg.power.enabled),
+                battery_wh: n("battery_wh", cfg.power.battery_wh),
+                panel_w: n("panel_w", cfg.power.panel_w),
+                cosine_derate: n("cosine_derate", cfg.power.cosine_derate),
+                charge_eff: n("charge_eff", cfg.power.charge_eff),
+                discharge_eff: n("discharge_eff", cfg.power.discharge_eff),
+                initial_soc: n("initial_soc", cfg.power.initial_soc),
+                soc_defer: n("soc_defer", cfg.power.soc_defer),
+                soc_critical: n("soc_critical", cfg.power.soc_critical),
+                defer_tighten: n("defer_tighten", cfg.power.defer_tighten as f64) as f32,
+            };
+        }
         if let Some(v) = j.get("scene_cells").and_then(|v| v.as_usize()) {
             cfg.scene_cells = v;
         }
@@ -364,6 +533,8 @@ impl Config {
         if let Some(v) = j.get("seed").and_then(|v| v.as_f64()) {
             cfg.seed = v as u64;
         }
+        cfg.energy.validate().context("energy config")?;
+        cfg.power.validate().context("power config")?;
         Ok(cfg)
     }
 }
@@ -428,6 +599,72 @@ mod tests {
         assert_eq!(c.timing.nominal_camera_duty, 0.1);
         assert!(!c.policy.adaptive, "adaptive routing must default off");
         assert!(!c.constellation.ideal_contact);
+        assert_eq!(c.energy.pi_idle_floor, 0.25);
+        assert_eq!(c.energy.comm_idle_floor, 0.15);
+        assert!(!c.power.enabled, "power subsystem must default off");
+    }
+
+    #[test]
+    fn parse_energy_and_power_sections() {
+        let c = Config::parse(
+            r#"{"energy": {"pi_idle_floor": 0.05, "comm_idle_floor": 0.02},
+                "power": {"enabled": true, "battery_wh": 30, "panel_w": 90,
+                          "cosine_derate": 0.7, "charge_eff": 0.9,
+                          "discharge_eff": 0.92, "initial_soc": 0.8,
+                          "soc_defer": 0.5, "soc_critical": 0.25,
+                          "defer_tighten": 0.3}}"#,
+        )
+        .unwrap();
+        assert_eq!(c.energy.pi_idle_floor, 0.05);
+        assert_eq!(c.energy.comm_idle_floor, 0.02);
+        assert!(c.power.enabled);
+        assert_eq!(c.power.battery_wh, 30.0);
+        assert_eq!(c.power.panel_w, 90.0);
+        assert_eq!(c.power.cosine_derate, 0.7);
+        assert_eq!(c.power.charge_eff, 0.9);
+        assert_eq!(c.power.discharge_eff, 0.92);
+        assert_eq!(c.power.initial_soc, 0.8);
+        assert_eq!(c.power.soc_defer, 0.5);
+        assert_eq!(c.power.soc_critical, 0.25);
+        assert_eq!(c.power.defer_tighten, 0.3);
+    }
+
+    #[test]
+    fn invalid_power_section_fails_at_parse() {
+        assert!(Config::parse(r#"{"power": {"enabled": true, "battery_wh": 0}}"#).is_err());
+        assert!(
+            Config::parse(r#"{"power": {"enabled": true, "discharge_eff": 0}}"#).is_err()
+        );
+        assert!(
+            Config::parse(r#"{"power": {"enabled": true, "cosine_derate": -0.5}}"#).is_err()
+        );
+        assert!(
+            Config::parse(r#"{"power": {"enabled": true, "soc_critical": 1.5}}"#).is_err()
+        );
+        assert!(
+            Config::parse(r#"{"power": {"enabled": true, "defer_tighten": -0.1}}"#).is_err()
+        );
+        // energy floors are validated too (2.5 is a plausible typo for 0.25)
+        assert!(Config::parse(r#"{"energy": {"pi_idle_floor": 2.5}}"#).is_err());
+        assert!(Config::parse(r#"{"energy": {"comm_idle_floor": -1}}"#).is_err());
+        // disabled power is never validated: the section is inert
+        assert!(Config::parse(r#"{"power": {"battery_wh": 0}}"#).is_ok());
+        // shed-only governor (empty defer band) is legal, not an error
+        assert!(Config::parse(
+            r#"{"power": {"enabled": true, "soc_defer": 0.2, "soc_critical": 0.5}}"#
+        )
+        .is_ok());
+    }
+
+    #[test]
+    fn power_partial_override_keeps_other_defaults() {
+        let c = Config::parse(r#"{"power": {"enabled": true, "battery_wh": 12}}"#).unwrap();
+        assert!(c.power.enabled);
+        assert_eq!(c.power.battery_wh, 12.0);
+        let d = PowerConfig::default();
+        assert_eq!(c.power.panel_w, d.panel_w);
+        assert_eq!(c.power.soc_defer, d.soc_defer);
+        assert_eq!(c.power.soc_critical, d.soc_critical);
     }
 
     #[test]

@@ -11,6 +11,18 @@
 //! dispatched to the shared ground segment and the driver keeps
 //! capturing; replies fold in whenever they land.
 //!
+//! With `power.enabled`, the driver owns a per-satellite
+//! [`PowerState`] (solar array + battery + governor from
+//! [`crate::power`]) and consults its verdict at each scene's virtual
+//! capture time: below `soc_defer` downlink drains are deferred to the
+//! next window (transmitter off, elapsed window time passes unused)
+//! and the router threshold tightens on top of the adaptive path's
+//! `effective()`; below `soc_critical` the capture is shed outright —
+//! camera and compute idle for that period, nothing queued or folded.
+//! SoC is integrated per scene period from the timeline's sunlit
+//! seconds minus the same duty-cycled load the energy meter charges,
+//! so verdicts are deterministic functions of mission time.
+//!
 //! Every satellite queues results and offloaded imagery in a
 //! [`DownlinkQueue`] whose drains are gated by its *own* contact windows
 //! — handed out incrementally by the timeline so no window airtime is
@@ -43,7 +55,7 @@
 //! windows, and the whole run is scheduled as a Sedna `JointInference`
 //! task whose per-worker phases aggregate into the report.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, TryRecvError};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
@@ -57,6 +69,7 @@ use crate::data::{Tile, Version};
 use crate::detect::Detection;
 use crate::link::{Link, LinkConfig, LinkStats};
 use crate::orbit::{baoyun, beijing_station};
+use crate::power::{PowerState, PowerVerdict};
 use crate::runtime::{Model, Runtime};
 use crate::sedna::{GlobalManager, LocalController, TaskKind, TaskPhase, TaskSpec};
 use crate::sim::{scene_timing, DutyCycles, Timeline};
@@ -91,6 +104,11 @@ pub struct SatelliteReport {
     /// Sunlit seconds over the mission horizon (the timeline's
     /// illumination event source; horizon minus this is eclipse time).
     pub sunlit_s: f64,
+    /// SoC trajectory + governor stats (`result.power` carries the same
+    /// data; duplicated here so fleet tooling can read power health
+    /// without unpacking the scenario fold).  `None` when `power.enabled`
+    /// is off.
+    pub power: Option<crate::power::PowerStats>,
 }
 
 pub struct ConstellationReport {
@@ -146,6 +164,8 @@ struct PendingScene {
 /// differ; the scene workload per satellite is
 /// `cfg.constellation.scenes_per_satellite`.
 pub fn run_constellation(rt: &Runtime, cfg: &Config, version: Version) -> Result<ConstellationReport> {
+    cfg.energy.validate()?;
+    cfg.power.validate()?;
     let n_sats = cfg.constellation.satellites.max(1);
     let scenes = cfg.constellation.scenes_per_satellite;
     let metrics = Registry::new();
@@ -291,6 +311,39 @@ fn poll_ground(
     Ok(())
 }
 
+/// Fold every leading scene whose offloads have all resolved, skipping
+/// capture indices the governor shed (no scene exists there — the
+/// camera never fired).  With `force`, outstanding offloads no longer
+/// gate the fold — the end-of-mission path, where undelivered offloads
+/// are evaluated with their onboard detections.
+fn fold_ready(
+    pending: &mut BTreeMap<usize, PendingScene>,
+    shed_idx: &mut BTreeSet<usize>,
+    next_fold: &mut usize,
+    acc: &mut ScenarioAccumulator,
+    force: bool,
+) {
+    loop {
+        if shed_idx.remove(next_fold) {
+            *next_fold += 1;
+        } else if pending.get(next_fold).map(|p| force || p.outstanding == 0).unwrap_or(false) {
+            let p = pending.remove(next_fold).unwrap();
+            acc.add_scene_observed(
+                &p.router,
+                p.bentpipe_bytes,
+                p.n_scene_tiles,
+                &p.processed,
+                p.n_filtered,
+                p.wall,
+                p.duties,
+            );
+            *next_fold += 1;
+        } else {
+            break;
+        }
+    }
+}
+
 #[allow(clippy::too_many_arguments)] // internal plumbing fn, not API
 fn run_satellite(
     rt: &Runtime,
@@ -333,8 +386,24 @@ fn run_satellite(
     let delivered_items = metrics.counter("constellation.downlink.items_delivered");
     let queue_depth = metrics.gauge("constellation.ground.queue_depth");
 
+    // energy-aware power subsystem; `None` (the default) leaves every
+    // driver decision exactly as the power-blind code path made it
+    let mut power = cfg.power.enabled.then(|| PowerState::new(&cfg.power, &cfg.energy));
+    // the SoC gauge is per-satellite (a fleet-shared gauge would be
+    // last-write-wins across threads); the defer/shed counters sum
+    // correctly across the fleet and stay shared
+    let power_metrics = power.as_ref().map(|_| {
+        (
+            metrics.gauge(&format!("power.soc_pct.{node}")),
+            metrics.counter("power.scenes_deferred"),
+            metrics.counter("power.scenes_shed"),
+        )
+    });
+
     let mut pending: BTreeMap<usize, PendingScene> = BTreeMap::new();
     let mut inflight: Vec<GroundInflight> = Vec::new();
+    // capture indices the governor shed: no scene exists to fold there
+    let mut shed_idx: BTreeSet<usize> = BTreeSet::new();
     let mut next_fold = 0usize;
     let frag = pipeline.cfg.fragment_px;
     let depth = pipeline.cfg.engine.channel_depth.max(1);
@@ -429,28 +498,79 @@ fn run_satellite(
         for env in rx_onboard.iter() {
             held.insert(env.inner.idx, env.inner);
             while let Some(mut d) = held.remove(&next_drive) {
+                // the power governor speaks at this scene's virtual
+                // capture time; SoC is pure mission-time history, so
+                // governed runs stay deterministic
+                let verdict =
+                    power.as_ref().map(|p| p.verdict()).unwrap_or(PowerVerdict::Nominal);
+                if verdict == PowerVerdict::Shed {
+                    // below soc_critical the capture is shed: camera and
+                    // compute idle this period, transmitter off, and the
+                    // contact time that elapses passes unused (airtime
+                    // cannot be banked); the scene never happened in
+                    // mission time, so nothing is queued or folded.
+                    // Wallclock trade: the onboard stage ran ahead of
+                    // this verdict (the stage overlap PR 2 built), so
+                    // the discarded inference cost simulator wallclock —
+                    // but no mission-time energy.
+                    drop(d);
+                    let (_, period) = scene_timing(timeline.timing(), 0);
+                    let t_start = timeline.now_s();
+                    let t = timeline.advance(period);
+                    let _ = timeline.due_contacts(t);
+                    let duties = DutyCycles::default();
+                    acc.extend_mission(period, duties);
+                    let p = power.as_mut().expect("shed verdict implies power state");
+                    p.advance_period(period, duties, timeline.sunlit_s(t_start, t));
+                    p.stats.scenes_shed += 1;
+                    if let Some((soc, _, shed)) = &power_metrics {
+                        shed.inc();
+                        soc.set(p.soc_pct());
+                    }
+                    shed_idx.insert(next_drive);
+                    next_drive += 1;
+                    poll_ground(&mut inflight, &mut pending, false)?;
+                    fold_ready(&mut pending, &mut shed_idx, &mut next_fold, &mut acc, false);
+                    continue;
+                }
+                let deferring = verdict == PowerVerdict::Defer;
+
                 // link-aware adaptive routing: re-route with the policy
                 // effective under the downlink state at this virtual
-                // capture time (deterministic — no wallclock involved)
-                if pipeline.policy.adaptive.is_some() {
-                    let d_sent = link.stats.packets_sent - prev_sent;
-                    if d_sent > 0 {
-                        recent_loss =
-                            (link.stats.packets_lost - prev_lost) as f64 / d_sent as f64;
+                // capture time (deterministic — no wallclock involved);
+                // a deferring governor tightens on top of whatever the
+                // adaptive path produced
+                if pipeline.policy.adaptive.is_some() || deferring {
+                    let mut eff = if pipeline.policy.adaptive.is_some() {
+                        let d_sent = link.stats.packets_sent - prev_sent;
+                        if d_sent > 0 {
+                            recent_loss =
+                                (link.stats.packets_lost - prev_lost) as f64 / d_sent as f64;
+                        } else {
+                            // no traffic since the last decision: the old
+                            // estimate goes stale, so decay it instead of
+                            // letting one bad pass latch the tightened state
+                            // through a multi-hour contact gap
+                            recent_loss *= 0.5;
+                        }
+                        prev_sent = link.stats.packets_sent;
+                        prev_lost = link.stats.packets_lost;
+                        let snap = LinkSnapshot {
+                            backlog_bytes: queue.pending_bytes(),
+                            loss_rate: recent_loss,
+                        };
+                        pipeline.policy.effective(&snap)
                     } else {
-                        // no traffic since the last decision: the old
-                        // estimate goes stale, so decay it instead of
-                        // letting one bad pass latch the tightened state
-                        // through a multi-hour contact gap
-                        recent_loss *= 0.5;
-                    }
-                    prev_sent = link.stats.packets_sent;
-                    prev_lost = link.stats.packets_lost;
-                    let snap = LinkSnapshot {
-                        backlog_bytes: queue.pending_bytes(),
-                        loss_rate: recent_loss,
+                        pipeline.policy
                     };
-                    let eff = pipeline.policy.effective(&snap);
+                    if deferring {
+                        let step = power
+                            .as_ref()
+                            .expect("defer verdict implies power state")
+                            .governor()
+                            .defer_tighten;
+                        eff = eff.tightened(step);
+                    }
                     let mut restats = RouterStats::default();
                     for p in d.processed.iter_mut() {
                         p.fate = route(&eff, &p.onboard_dets, p.best_objectness, &mut restats);
@@ -504,62 +624,87 @@ fn run_satellite(
 
                 // advance the mission clock one scene period, then spend
                 // the contact time that has elapsed; comm duty is the
-                // link airtime those drains actually consumed
+                // link airtime those drains actually consumed.  While
+                // deferring, the transmitter is off: elapsed window time
+                // passes unused and queued items wait for the next window.
                 let comm_before = link.stats.busy_s;
                 let t = timeline.advance(period);
-                for slice in timeline.due_contacts(t) {
-                    registry.lock().unwrap().heartbeat(&node, (slice.window.aos * 1000.0) as u64);
-                    let got = queue.drain_window_sliced(&mut link, &slice.window, slice.closes_pass);
-                    dispatch_ground(got, &pending, &mut inflight)?;
+                if deferring {
+                    let _ = timeline.due_contacts(t);
+                } else {
+                    for slice in timeline.due_contacts(t) {
+                        let at_ms = (slice.window.aos * 1000.0) as u64;
+                        registry.lock().unwrap().heartbeat(&node, at_ms);
+                        let got =
+                            queue.drain_window_sliced(&mut link, &slice.window, slice.closes_pass);
+                        dispatch_ground(got, &pending, &mut inflight)?;
+                    }
                 }
                 let comm_busy = link.stats.busy_s - comm_before;
-                pending.get_mut(&next_drive).expect("scene just inserted").duties = timeline
+                let duties = timeline
                     .observed_duties(busy, period, comm_busy, timeline.timing().capture_overhead_s);
+                pending.get_mut(&next_drive).expect("scene just inserted").duties = duties;
+                if let Some(p) = power.as_mut() {
+                    p.advance_period(period, duties, timeline.sunlit_s(t_capture, t));
+                    if deferring {
+                        p.stats.scenes_deferred += 1;
+                    }
+                    if let Some((soc, deferred, _)) = &power_metrics {
+                        if deferring {
+                            deferred.inc();
+                        }
+                        soc.set(p.soc_pct());
+                    }
+                }
                 next_drive += 1;
 
                 // harvest any completed ground round-trips, then fold
                 // every leading scene whose offloads have all resolved
                 poll_ground(&mut inflight, &mut pending, false)?;
-                while pending.get(&next_fold).map(|p| p.outstanding == 0).unwrap_or(false) {
-                    let p = pending.remove(&next_fold).unwrap();
-                    acc.add_scene_observed(
-                        &p.router,
-                        p.bentpipe_bytes,
-                        p.n_scene_tiles,
-                        &p.processed,
-                        p.n_filtered,
-                        p.wall,
-                        p.duties,
-                    );
-                    next_fold += 1;
-                }
+                fold_ready(&mut pending, &mut shed_idx, &mut next_fold, &mut acc, false);
             }
         }
 
-        // mission tail: remaining windows give queued items their chance
+        // mission tail: remaining windows give queued items their chance.
+        // A governed satellite keeps integrating power through the tail
+        // and skips any pass that opens below soc_critical — with no
+        // captures left to protect, the defer band transmits (downlink
+        // is the remaining mission value), but a critical battery still
+        // keeps its transmitter off.
         let tail_start = timeline.now_s();
         let tail_comm_before = link.stats.busy_s;
+        let power_step = timeline.timing().scene_period_floor_s.max(1.0);
+        let mut power_cursor = tail_start;
         for slice in timeline.remaining_contacts() {
-            registry.lock().unwrap().heartbeat(&node, (slice.window.aos * 1000.0) as u64);
+            if let Some(p) = power.as_mut() {
+                // idle mission time up to this pass, so the verdict
+                // reflects SoC at AOS
+                let aos = slice.window.aos;
+                p.advance_chunked(&timeline, power_cursor, aos, DutyCycles::default(), power_step);
+                power_cursor = aos;
+                if p.verdict() == PowerVerdict::Shed {
+                    continue;
+                }
+            }
+            let at_ms = (slice.window.aos * 1000.0) as u64;
+            registry.lock().unwrap().heartbeat(&node, at_ms);
+            let busy_before = link.stats.busy_s;
             let got = queue.drain_window_sliced(&mut link, &slice.window, slice.closes_pass);
             dispatch_ground(got, &pending, &mut inflight)?;
+            if let Some(p) = power.as_mut() {
+                let comm = link.stats.busy_s - busy_before;
+                let duties =
+                    timeline.observed_duties(0.0, slice.window.duration_s(), comm, 0.0);
+                let (aos, los) = (slice.window.aos, slice.window.los);
+                p.advance_chunked(&timeline, aos, los, duties, power_step);
+                power_cursor = los;
+            }
         }
         // everything dispatched; now completions are all that's left
         poll_ground(&mut inflight, &mut pending, true)?;
         // fold the resolved scenes; force-fold the rest — undelivered
         // offloads are evaluated with their onboard detections
-        while let Some(p) = pending.remove(&next_fold) {
-            acc.add_scene_observed(
-                &p.router,
-                p.bentpipe_bytes,
-                p.n_scene_tiles,
-                &p.processed,
-                p.n_filtered,
-                p.wall,
-                p.duties,
-            );
-            next_fold += 1;
-        }
+        fold_ready(&mut pending, &mut shed_idx, &mut next_fold, &mut acc, true);
         // the tail is mission time too: integrate its energy with the
         // comm airtime the tail drains actually consumed (compute idle,
         // camera off) — with default configs most contact happens here
@@ -568,28 +713,40 @@ fn run_satellite(
             let tail_comm = link.stats.busy_s - tail_comm_before;
             acc.extend_mission(tail_dt, timeline.observed_duties(0.0, tail_dt, tail_comm, 0.0));
         }
+        if let Some(p) = power.as_mut() {
+            // the stretch after the last pass is idle mission time too
+            p.advance_chunked(&timeline, power_cursor, horizon, DutyCycles::default(), power_step);
+            if let Some((soc, _, _)) = &power_metrics {
+                soc.set(p.soc_pct());
+            }
+        }
         Ok(())
     })?;
 
     if let Some(e) = errs.into_inner().unwrap().into_iter().next() {
         return Err(e);
     }
+    let shed = power.as_ref().map(|p| p.stats.scenes_shed as usize).unwrap_or(0);
     anyhow::ensure!(
-        acc.scenes() == scenes,
-        "satellite {index} lost scenes: folded {} of {scenes}",
+        acc.scenes() + shed == scenes,
+        "satellite {index} lost scenes: folded {} + shed {shed} of {scenes}",
         acc.scenes()
     );
 
     lc.finish(task, true);
     gm.lock().unwrap().report(task, &node, TaskPhase::Completed)?;
+    let power_stats = power.map(|p| p.stats);
+    let mut result = acc.finish(version, cfg.fragment_px);
+    result.power = power_stats;
     Ok(SatelliteReport {
         index,
         name: node.to_string(),
-        result: acc.finish(version, cfg.fragment_px),
+        result,
         downlink: queue.stats,
         link: link.stats,
         windows: timeline.n_contacts(),
         contact_s: timeline.contact_total_s(),
         sunlit_s: timeline.sunlit_s(0.0, horizon),
+        power: power_stats,
     })
 }

@@ -69,6 +69,11 @@ pub struct ScenarioResult {
     pub energy_compute_share: f64,
     /// Wallclock spent in PJRT execution (perf metric).
     pub wall_infer_s: f64,
+    /// SoC trajectory + governor stats when the power subsystem is
+    /// enabled (`power.enabled`); `None` on the single-satellite paths
+    /// and whenever power is off — the constellation driver fills it in
+    /// after the fold, so the accumulator stays power-agnostic.
+    pub power: Option<crate::power::PowerStats>,
 }
 
 impl ScenarioResult {
@@ -134,7 +139,7 @@ impl ScenarioAccumulator {
             conf_n: 0,
             wall_infer: 0.0,
             onboard_busy_s: 0.0,
-            energy: EnergyMeter::new(),
+            energy: EnergyMeter::with_floors(cfg.energy.pi_idle_floor, cfg.energy.comm_idle_floor),
             scenes: 0,
             timeline: Timeline::degenerate(&cfg.timing, f64::INFINITY),
         }
@@ -260,6 +265,7 @@ impl ScenarioAccumulator {
             compute_duty: self.onboard_busy_s / self.timeline.now_s().max(1e-9),
             energy_compute_share: self.energy.compute_share(),
             wall_infer_s: self.wall_infer,
+            power: None,
         }
     }
 }

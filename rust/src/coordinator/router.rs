@@ -93,6 +93,17 @@ impl RouterPolicy {
         }
         RouterPolicy { confidence_threshold: threshold.clamp(0.05, 0.999), ..*self }
     }
+
+    /// This policy with the confidence threshold dropped by `step`
+    /// (offload less).  The power governor composes it on top of
+    /// [`Self::effective`] while deferring downlink drains: raw tiles
+    /// queued behind a transmitter that is off are pure backlog.
+    pub fn tightened(&self, step: f32) -> RouterPolicy {
+        RouterPolicy {
+            confidence_threshold: (self.confidence_threshold - step).clamp(0.05, 0.999),
+            ..*self
+        }
+    }
 }
 
 #[derive(Clone, Copy, Debug, Default)]
@@ -275,6 +286,18 @@ mod tests {
         // backlog between the relax and tighten watermarks
         let snap = LinkSnapshot { backlog_bytes: 2_000_000, loss_rate: 0.05 };
         assert_eq!(p.effective(&snap).confidence_threshold, 0.45);
+    }
+
+    #[test]
+    fn tightened_composes_with_effective() {
+        // the governor tightens whatever the adaptive path produced
+        let p = adaptive_policy();
+        let idle = LinkSnapshot { backlog_bytes: 0, loss_rate: 0.0 };
+        let eff = p.effective(&idle); // relaxed to 0.5
+        let gov = eff.tightened(0.2);
+        assert!((gov.confidence_threshold - 0.3).abs() < 1e-6, "{}", gov.confidence_threshold);
+        // and clamps like the adaptive path does
+        assert_eq!(policy().tightened(5.0).confidence_threshold, 0.05);
     }
 
     #[test]

@@ -120,18 +120,45 @@ pub fn table2_sum_w() -> f64 {
 }
 
 /// Energy accumulator: integrates P·dt per subsystem/payload.
-#[derive(Clone, Debug, Default)]
+///
+/// Idle duty floors (Pi and Comm draw a floor fraction of nameplate even
+/// when idle) come from the `energy` config section; the defaults are
+/// the values previously hardcoded here, so results are unchanged until
+/// a scenario models low-idle hardware.
+#[derive(Clone, Debug)]
 pub struct EnergyMeter {
     /// Joules per platform subsystem.
     platform_j: BTreeMap<&'static str, f64>,
     /// Joules per payload.
     payload_j: BTreeMap<&'static str, f64>,
     pub elapsed_s: f64,
+    /// Raspberry Pi idle draw as a fraction of active draw.
+    pi_idle_floor: f64,
+    /// Comm subsystem idle draw as a fraction of nameplate.
+    comm_idle_floor: f64,
+}
+
+impl Default for EnergyMeter {
+    fn default() -> EnergyMeter {
+        let d = crate::config::EnergyConfig::default();
+        EnergyMeter::with_floors(d.pi_idle_floor, d.comm_idle_floor)
+    }
 }
 
 impl EnergyMeter {
     pub fn new() -> EnergyMeter {
         EnergyMeter::default()
+    }
+
+    /// Meter with explicit idle floors (the `energy` config section).
+    pub fn with_floors(pi_idle_floor: f64, comm_idle_floor: f64) -> EnergyMeter {
+        EnergyMeter {
+            platform_j: BTreeMap::new(),
+            payload_j: BTreeMap::new(),
+            elapsed_s: 0.0,
+            pi_idle_floor: pi_idle_floor.clamp(0.0, 1.0),
+            comm_idle_floor: comm_idle_floor.clamp(0.0, 1.0),
+        }
     }
 
     /// Advance time by dt with the given duty cycles (0..1) per subsystem.
@@ -142,11 +169,13 @@ impl EnergyMeter {
     /// integrate at nameplate; idle compute draws a floor fraction.
     pub fn advance(&mut self, dt_s: f64, compute_duty: f64, comm_duty: f64, camera_duty: f64) {
         assert!(dt_s >= 0.0);
-        const IDLE_FLOOR: f64 = 0.25; // Pi idles ~25% of active draw
         self.elapsed_s += dt_s;
         for s in Subsystem::all() {
             let duty = match s {
-                Subsystem::Comm => 0.15 + 0.85 * comm_duty.clamp(0.0, 1.0),
+                Subsystem::Comm => {
+                    self.comm_idle_floor
+                        + (1.0 - self.comm_idle_floor) * comm_duty.clamp(0.0, 1.0)
+                }
                 Subsystem::Payloads => continue, // integrated per-payload below
                 _ => 1.0,
             };
@@ -155,7 +184,8 @@ impl EnergyMeter {
         for p in Payload::all() {
             let duty = match p {
                 Payload::RaspberryPi => {
-                    IDLE_FLOOR + (1.0 - IDLE_FLOOR) * compute_duty.clamp(0.0, 1.0)
+                    self.pi_idle_floor
+                        + (1.0 - self.pi_idle_floor) * compute_duty.clamp(0.0, 1.0)
                 }
                 Payload::Camera => camera_duty.clamp(0.0, 1.0),
                 _ => 1.0, // science payloads run continuously
@@ -263,6 +293,30 @@ mod tests {
         m.advance(100.0, 0.0, 0.0, 0.0);
         let pi = m.payload_j(Payload::RaspberryPi);
         assert!((pi - 8.78 * 0.25 * 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn configured_floors_drive_idle_draw() {
+        // Low-idle hardware: an idle Pi and Comm draw far less, and full
+        // duty still reaches nameplate.
+        let mut low = EnergyMeter::with_floors(0.05, 0.02);
+        low.advance(100.0, 0.0, 0.0, 0.0);
+        assert!((low.payload_j(Payload::RaspberryPi) - 8.78 * 0.05 * 100.0).abs() < 1e-9);
+        assert!((low.platform_j(Subsystem::Comm) - 5.43 * 0.02 * 100.0).abs() < 1e-9);
+        let mut full = EnergyMeter::with_floors(0.05, 0.02);
+        full.advance(100.0, 1.0, 1.0, 1.0);
+        assert!((full.payload_j(Payload::RaspberryPi) - 8.78 * 100.0).abs() < 1e-6);
+        assert!((full.platform_j(Subsystem::Comm) - 5.43 * 100.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn default_floors_match_legacy_constants() {
+        // `EnergyMeter::new()` must integrate exactly as the pre-config
+        // hardcoded floors (0.25 Pi, 0.15 Comm) did.
+        let mut m = EnergyMeter::new();
+        m.advance(100.0, 0.0, 0.0, 0.0);
+        assert!((m.payload_j(Payload::RaspberryPi) - 8.78 * 0.25 * 100.0).abs() < 1e-9);
+        assert!((m.platform_j(Subsystem::Comm) - 5.43 * 0.15 * 100.0).abs() < 1e-9);
     }
 
     #[test]

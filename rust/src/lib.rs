@@ -17,6 +17,9 @@
 //!                   (scene cadence, contact windows, illumination phases)
 //!                   from which every consumer derives its duty cycles.
 //! * [`energy`]    — Baoyun power model (Tables 2–3), duty-cycle integration.
+//! * [`power`]     — solar array, battery SoC, and the energy-aware
+//!                   mission governor (defer / shed verdicts the
+//!                   constellation driver applies per scene).
 //! * [`cluster`]   — KubeEdge-like substrate: registry, metastore, message
 //!                   bus, orchestrator, edgemesh.
 //! * [`sedna`]     — collaborative-AI task layer: GlobalManager, workers,
@@ -47,6 +50,7 @@ pub mod detect;
 pub mod energy;
 pub mod link;
 pub mod orbit;
+pub mod power;
 pub mod runtime;
 pub mod sedna;
 pub mod sim;

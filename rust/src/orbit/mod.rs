@@ -230,6 +230,28 @@ mod tests {
     }
 
     #[test]
+    fn eclipse_is_single_interval_per_revolution() {
+        // The cylindrical shadow is convex and the orbit circular, so
+        // the in/out predicate changes exactly twice per period — the
+        // structural property behind the timeline's contiguous,
+        // non-overlapping sunlit spans (and thus exact solar charging
+        // integration).
+        let sat = baoyun();
+        let period = sat.period_s();
+        let n = 5000;
+        let mut transitions = 0;
+        let mut prev = sat.in_eclipse(0.0);
+        for i in 1..=n {
+            let cur = sat.in_eclipse(i as f64 * period / n as f64);
+            if cur != prev {
+                transitions += 1;
+                prev = cur;
+            }
+        }
+        assert_eq!(transitions, 2, "one eclipse interval per orbit");
+    }
+
+    #[test]
     fn sun_side_never_eclipsed() {
         let sat = baoyun();
         let period = sat.period_s();

@@ -217,6 +217,16 @@ impl Timeline {
         }
     }
 
+    /// Fraction of `[t0, t1)` spent sunlit — what the power model's
+    /// solar array integrates per scene period.
+    pub fn sunlit_fraction(&self, t0: f64, t1: f64) -> f64 {
+        let dt = t1 - t0;
+        if dt <= 0.0 {
+            return 0.0;
+        }
+        (self.sunlit_s(t0, t1) / dt).clamp(0.0, 1.0)
+    }
+
     /// Contact spans that have elapsed by mission time `t`, clipped to
     /// the part not yet handed out.  Each returned slice is a drainable
     /// budget: the caller spends it against a [`crate::link::Link`] and
@@ -372,6 +382,72 @@ mod tests {
             "sunlit fraction {} should show real eclipse phases",
             sunlit / 86_400.0
         );
+    }
+
+    #[test]
+    fn orbital_sunlit_spans_contiguous_and_nonoverlapping() {
+        // The illumination event source the solar model integrates:
+        // sunlit spans must be strictly ordered, non-overlapping, and
+        // complementary to the eclipse spans over the same horizon.
+        let sat = baoyun();
+        let horizon = 2.0 * sat.period_s();
+        let sunlit = scan_spans(|t| !sat.in_eclipse(t), 0.0, horizon, 10.0);
+        let dark = scan_spans(|t| sat.in_eclipse(t), 0.0, horizon, 10.0);
+        for w in sunlit.windows(2) {
+            assert!(w[0].end <= w[1].start, "overlap: {:?} then {:?}", w[0], w[1]);
+        }
+        for s in &sunlit {
+            assert!(s.end > s.start, "degenerate span {s:?}");
+            for d in &dark {
+                assert_eq!(s.overlap_s(d.start, d.end), 0.0, "sunlit {s:?} overlaps dark {d:?}");
+            }
+        }
+        let total: f64 = sunlit.iter().map(|s| s.duration_s()).sum::<f64>()
+            + dark.iter().map(|s| s.duration_s()).sum::<f64>();
+        assert!((total - horizon).abs() < 1e-6, "spans must tile the horizon: {total}");
+    }
+
+    #[test]
+    fn sunlit_s_partial_span_integration_exact() {
+        // Partial-period integration at span boundaries is exactly the
+        // overlap the solar model will charge: querying across a
+        // boundary must return precisely the inside part, and chunked
+        // queries must sum to the whole (up to f64 summation noise).
+        let tl = Timeline::orbital(&timing(), &baoyun(), &beijing_station(), 20_000.0, 10.0);
+        let sunlit = scan_spans(|t| !baoyun().in_eclipse(t), 0.0, 20_000.0, 10.0);
+        let s = sunlit.iter().find(|s| s.start > 0.0).expect("an interior sunlit span");
+        // interval straddling the span start: only the inside half counts
+        assert!((tl.sunlit_s(s.start - 7.0, s.start + 13.0) - 13.0).abs() < 1e-9);
+        // interval fully inside the span: its whole duration
+        let mid = (s.start + s.end) / 2.0;
+        assert!((tl.sunlit_s(mid - 1.0, mid + 1.0) - 2.0).abs() < 1e-12);
+        // interval straddling the span end
+        assert!((tl.sunlit_s(s.end - 5.0, s.end + 20.0) - 5.0).abs() < 1e-9);
+        // chunked integration reproduces the total
+        let total = tl.sunlit_s(0.0, 20_000.0);
+        let mut acc = 0.0;
+        let mut t = 0.0;
+        while t < 20_000.0 {
+            let t1 = (t + 37.0).min(20_000.0); // deliberately uneven chunks
+            acc += tl.sunlit_s(t, t1);
+            t = t1;
+        }
+        assert!((acc - total).abs() < 1e-6, "chunked {acc} vs whole {total}");
+        assert!(total > 0.0 && total < 20_000.0, "real eclipse phases expected");
+    }
+
+    #[test]
+    fn sunlit_fraction_bounded_and_degenerate() {
+        let tl = Timeline::orbital(&timing(), &baoyun(), &beijing_station(), 20_000.0, 10.0);
+        let mut t = 0.0;
+        while t < 20_000.0 {
+            let f = tl.sunlit_fraction(t, t + 30.0);
+            assert!((0.0..=1.0).contains(&f), "fraction {f} at t={t}");
+            t += 30.0;
+        }
+        assert_eq!(tl.sunlit_fraction(100.0, 100.0), 0.0, "empty interval");
+        let dg = Timeline::degenerate(&timing(), 1000.0);
+        assert_eq!(dg.sunlit_fraction(0.0, 500.0), 1.0);
     }
 
     #[test]

@@ -1,0 +1,259 @@
+//! Power subsystem invariants (ISSUE 3 acceptance):
+//!
+//! * SoC always stays within `[0, capacity]`, whatever the flows;
+//! * an eclipse-heavy mission on an undersized battery shows the
+//!   governor deferring drains and shedding captures, and that keeps
+//!   the battery out of brownout where the ungoverned mission empties
+//!   it;
+//! * an oversized battery never intervenes, and through the
+//!   constellation runner reproduces the unconstrained mission
+//!   scene-for-scene.
+//!
+//! The flight-profile tests are artifact-free (they exercise
+//! `power::fly_mission` over a real orbital [`Timeline`]); the
+//! constellation tests need `rust/artifacts/` like every other
+//! integration test and skip when it is absent.
+
+use tiansuan::config::{Config, EnergyConfig, PowerConfig, TimingConfig};
+use tiansuan::coordinator::run_constellation;
+use tiansuan::data::Version;
+use tiansuan::orbit::{baoyun, beijing_station};
+use tiansuan::power::{fly_mission, PowerState};
+use tiansuan::runtime::Runtime;
+use tiansuan::sim::{DutyCycles, Timeline};
+
+fn rt() -> Option<Runtime> {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    if !std::path::Path::new(dir).join("manifest.json").exists() {
+        eprintln!("skipping: artifacts/ not built");
+        return None;
+    }
+    Some(Runtime::open(dir).unwrap())
+}
+
+/// Baoyun over Beijing: ~38% of every revolution in Earth's shadow.
+fn orbital_timeline(horizon_s: f64) -> Timeline {
+    Timeline::orbital(&TimingConfig::default(), &baoyun(), &beijing_station(), horizon_s, 10.0)
+}
+
+fn active() -> DutyCycles {
+    DutyCycles { compute: 1.0, comm: 1.0, camera: 1.0 }
+}
+
+/// Low-idle hardware (the configurable floors exist exactly for this):
+/// always-on platform + science ≈ 37.7 W idle vs ≈ 52 W at full duty.
+fn low_idle() -> EnergyConfig {
+    EnergyConfig { pi_idle_floor: 0.0, comm_idle_floor: 0.0 }
+}
+
+/// Undersized for the full-duty mission: 95 W × 0.8 derate generates
+/// ~76 W sunlit, below the ~55 W full-duty battery draw averaged over
+/// the ~38% eclipse — sustainable only if the governor intervenes.
+fn eclipse_heavy_power(battery_wh: f64) -> PowerConfig {
+    PowerConfig {
+        enabled: true,
+        battery_wh,
+        panel_w: 95.0,
+        cosine_derate: 0.8,
+        charge_eff: 0.95,
+        discharge_eff: 0.95,
+        initial_soc: 0.4,
+        soc_defer: 0.6,
+        soc_critical: 0.3,
+        defer_tighten: 0.2,
+    }
+}
+
+#[test]
+fn soc_always_within_bounds() {
+    // batteries from absurdly small to oversized: SoC must clamp at
+    // both rails, never wrap or overshoot
+    let tl = orbital_timeline(30_000.0);
+    for battery_wh in [0.5, 5.0, 60.0, 5_000.0] {
+        let mut s = PowerState::new(&eclipse_heavy_power(battery_wh), &low_idle());
+        fly_mission(&mut s, &tl, active(), 30.0);
+        assert!(
+            (0.0..=1.0).contains(&s.soc_frac()),
+            "battery {battery_wh} Wh ended at soc {}",
+            s.soc_frac()
+        );
+        assert!((0.0..=1.0).contains(&s.stats.min_soc_frac));
+        assert!((0.0..=1.0).contains(&s.stats.mean_soc_frac()));
+        assert!(s.stats.min_soc_frac <= s.stats.mean_soc_frac() + 1e-12);
+        assert!(s.stats.generated_wh >= 0.0 && s.stats.consumed_wh > 0.0);
+    }
+}
+
+#[test]
+fn governor_defers_and_sheds_to_protect_soc() {
+    // ~4 revolutions of an eclipse-heavy orbit on an undersized battery:
+    // the governor must visibly defer and shed, and doing so must keep
+    // the battery out of brownout.
+    //
+    // Semantics note: "min SoC stays at soc_critical" cannot hold
+    // literally in this load model — shedding only idles the camera,
+    // compute, and transmitter, while the always-on platform + science
+    // payloads (~37.7 W here) keep draining through eclipse, so SoC
+    // necessarily dips below the shed threshold before sunrise.  The
+    // guarantee the governor *can* make, and the one asserted here, is
+    // that no capture executes below soc_critical and the battery never
+    // browns out (shortfall_wh == 0) where the ungoverned mission empties
+    // it.
+    let tl = orbital_timeline(23_000.0);
+    let mut governed = PowerState::new(&eclipse_heavy_power(60.0), &low_idle());
+    fly_mission(&mut governed, &tl, active(), 30.0);
+    assert!(governed.stats.scenes_deferred > 0, "defer band never entered");
+    assert!(governed.stats.scenes_shed > 0, "shed band never entered");
+    assert_eq!(governed.stats.shortfall_wh, 0.0, "governor must prevent brownout");
+    assert!(
+        governed.stats.min_soc_frac > 0.03,
+        "governed min SoC collapsed: {}",
+        governed.stats.min_soc_frac
+    );
+
+    // same battery, governor disabled (thresholds at zero): the
+    // full-duty mission overruns it
+    let mut blind_cfg = eclipse_heavy_power(60.0);
+    blind_cfg.soc_defer = 0.0;
+    blind_cfg.soc_critical = 0.0;
+    let mut blind = PowerState::new(&blind_cfg, &low_idle());
+    fly_mission(&mut blind, &tl, active(), 30.0);
+    assert_eq!(blind.stats.scenes_shed, 0);
+    assert_eq!(blind.stats.scenes_deferred, 0);
+    assert!(blind.stats.shortfall_wh > 0.0, "the ungoverned mission must brown out");
+    assert!(blind.stats.min_soc_frac < 0.01);
+    assert!(governed.stats.min_soc_frac > blind.stats.min_soc_frac);
+}
+
+#[test]
+fn oversized_battery_never_intervenes() {
+    let tl = orbital_timeline(23_000.0);
+    let mut cfg = eclipse_heavy_power(100_000.0);
+    cfg.initial_soc = 1.0;
+    let mut s = PowerState::new(&cfg, &low_idle());
+    fly_mission(&mut s, &tl, active(), 30.0);
+    assert_eq!(s.stats.scenes_deferred, 0);
+    assert_eq!(s.stats.scenes_shed, 0);
+    assert_eq!(s.stats.shortfall_wh, 0.0);
+    assert!(s.stats.min_soc_frac > cfg.soc_defer, "oversized battery barely moves");
+}
+
+fn small_cfg() -> Config {
+    let mut cfg = Config::default();
+    cfg.scene_cells = 4;
+    cfg.constellation.satellites = 1;
+    cfg.constellation.scenes_per_satellite = 3;
+    cfg.loss_profile = "lossless".into();
+    cfg
+}
+
+#[test]
+fn oversized_battery_reproduces_unconstrained_mission() {
+    // With an oversized battery the governor is Nominal at every capture,
+    // so the run must match the power-disabled mission scene-for-scene.
+    let Some(rt) = rt() else { return };
+    let cfg = small_cfg();
+    let base = run_constellation(&rt, &cfg, Version::V2).unwrap();
+    let mut pcfg = cfg.clone();
+    pcfg.power.enabled = true;
+    pcfg.power.battery_wh = 1_000_000.0;
+    pcfg.power.initial_soc = 1.0;
+    let powered = run_constellation(&rt, &pcfg, Version::V2).unwrap();
+
+    let (a, b) = (&base.satellites[0], &powered.satellites[0]);
+    assert_eq!(b.result.scenes, a.result.scenes);
+    assert_eq!(b.result.tiles_total, a.result.tiles_total);
+    assert_eq!(b.result.tiles_filtered, a.result.tiles_filtered);
+    assert_eq!(b.result.router.onboard_final, a.result.router.onboard_final);
+    assert_eq!(b.result.router.offloaded, a.result.router.offloaded);
+    assert_eq!(b.result.map_inorbit.to_bits(), a.result.map_inorbit.to_bits());
+    assert_eq!(b.result.map_collab.to_bits(), a.result.map_collab.to_bits());
+    assert_eq!(b.result.bentpipe_bytes, a.result.bentpipe_bytes);
+    assert_eq!(b.result.collab_bytes, a.result.collab_bytes);
+    assert_eq!(
+        b.result.energy_compute_share.to_bits(),
+        a.result.energy_compute_share.to_bits()
+    );
+    assert_eq!(b.downlink.items_delivered, a.downlink.items_delivered);
+
+    // power stats exist only on the powered run, and show no intervention
+    assert!(a.power.is_none() && a.result.power.is_none());
+    let p = b.power.expect("power stats present when enabled");
+    assert_eq!(p.scenes_shed, 0);
+    assert_eq!(p.scenes_deferred, 0);
+    assert_eq!(p.shortfall_wh, 0.0);
+    assert!(b.result.power.is_some());
+}
+
+#[test]
+fn dead_battery_sheds_every_capture() {
+    // No panel, empty battery: the governor sheds every capture; the
+    // run still completes, folds zero scenes, and accounts them as shed.
+    let Some(rt) = rt() else { return };
+    let mut cfg = small_cfg();
+    cfg.power.enabled = true;
+    cfg.power.battery_wh = 10.0;
+    cfg.power.panel_w = 0.0;
+    cfg.power.initial_soc = 0.0;
+    let report = run_constellation(&rt, &cfg, Version::V2).unwrap();
+    let sat = &report.satellites[0];
+    let p = sat.power.expect("power stats present");
+    assert_eq!(p.scenes_shed, 3, "every capture shed");
+    assert_eq!(sat.result.scenes, 0);
+    assert_eq!(sat.result.tiles_total, 0);
+    assert_eq!(sat.downlink.items_delivered, 0);
+    assert_eq!(p.min_soc_frac, 0.0);
+    assert!(
+        report.telemetry.contains("counter power.scenes_shed 3"),
+        "{}",
+        report.telemetry
+    );
+}
+
+#[test]
+fn deferral_delays_drains_and_tightens_router() {
+    // Mid-band SoC with a huge battery: every capture defers.  With
+    // ideal contact + lossless link and zero tighten step the routing
+    // and byte accounting match the unconstrained run exactly, and the
+    // deferred drains all land in the mission tail — every item still
+    // arrives, just later; with a real tighten step the router offloads
+    // no more than the unconstrained policy did.
+    let Some(rt) = rt() else { return };
+    let mut cfg = small_cfg();
+    cfg.constellation.ideal_contact = true;
+    let base = run_constellation(&rt, &cfg, Version::V2).unwrap();
+
+    let mut defer_cfg = cfg.clone();
+    defer_cfg.power.enabled = true;
+    defer_cfg.power.battery_wh = 1_000_000.0;
+    defer_cfg.power.initial_soc = 0.5;
+    defer_cfg.power.soc_defer = 0.9;
+    defer_cfg.power.soc_critical = 0.0;
+    defer_cfg.power.defer_tighten = 0.0;
+    let deferred = run_constellation(&rt, &defer_cfg, Version::V2).unwrap();
+    let (a, d) = (&base.satellites[0], &deferred.satellites[0]);
+    let p = d.power.expect("power stats present");
+    assert_eq!(p.scenes_deferred, 3, "every capture deferred");
+    assert_eq!(p.scenes_shed, 0);
+    assert_eq!(d.result.scenes, a.result.scenes);
+    assert_eq!(d.result.router.offloaded, a.result.router.offloaded);
+    assert_eq!(d.result.collab_bytes, a.result.collab_bytes);
+    assert_eq!(d.downlink.items_delivered, a.downlink.items_delivered);
+    assert!(
+        d.downlink.mean_latency_s() >= a.downlink.mean_latency_s(),
+        "deferred drains cannot arrive earlier: {} vs {}",
+        d.downlink.mean_latency_s(),
+        a.downlink.mean_latency_s()
+    );
+
+    let mut tight_cfg = defer_cfg.clone();
+    tight_cfg.power.defer_tighten = 0.5;
+    let tightened = run_constellation(&rt, &tight_cfg, Version::V2).unwrap();
+    let t = &tightened.satellites[0];
+    assert_eq!(t.power.expect("power stats").scenes_deferred, 3);
+    assert!(
+        t.result.router.offloaded <= a.result.router.offloaded,
+        "a tightened threshold cannot offload more"
+    );
+    assert_eq!(t.result.tiles_total, a.result.tiles_total);
+}
