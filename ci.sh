@@ -47,4 +47,13 @@ grep '^{"bench"' "$bench_log" >> ../BENCH_power.json || true
 rm -f "$bench_log"
 echo "BENCH_power.json now holds $(wc -l < ../BENCH_power.json) records"
 
+echo "== bench artifact: perf_federated -> BENCH_federated.json =="
+# artifact-free (scheduling + FedAvg, no inference runtime): always recorded
+bench_log=$(mktemp)
+cargo bench --bench perf_federated | tee "$bench_log"
+echo "{\"bench\":\"run\",\"commit\":\"$(git rev-parse --short HEAD 2>/dev/null || echo unknown)\",\"date\":\"$(date -u +%FT%TZ)\"}" >> ../BENCH_federated.json
+grep '^{"bench"' "$bench_log" >> ../BENCH_federated.json || true
+rm -f "$bench_log"
+echo "BENCH_federated.json now holds $(wc -l < ../BENCH_federated.json) records"
+
 echo "ci: all gates passed"

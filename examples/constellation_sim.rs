@@ -14,10 +14,13 @@
 //!     cargo run --release --example constellation_sim -- [--hours H] [--loss stable|weak|makersat]
 //!                                                        [--sats N] [--scenes N]
 //!                                                        [--battery-wh W] [--soc0 F] [--power]
+//!                                                        [--federated] [--round-interval-s S]
 //!
 //! `--power` enables the power subsystem (solar array + battery +
 //! governor) for part 1; `--battery-wh` / `--soc0` size the battery and
-//! its initial state of charge.
+//! its initial state of charge.  `--federated` schedules federated
+//! training rounds as a mission workload (SoC-gated when `--power` is
+//! also on), with weights contending for downlink airtime.
 
 use tiansuan::cluster::metastore::{EdgeReplica, MetaStore};
 use tiansuan::cluster::orchestrator::{AppSpec, Orchestrator, Placement};
@@ -55,12 +58,20 @@ fn main() -> anyhow::Result<()> {
     ccfg.power.enabled = args.flag("power");
     ccfg.power.battery_wh = args.opt_f64("battery-wh", ccfg.power.battery_wh);
     ccfg.power.initial_soc = args.opt_f64("soc0", ccfg.power.initial_soc);
+    ccfg.federated.enabled = args.flag("federated");
+    ccfg.federated.round_interval_s =
+        args.opt_f64("round-interval-s", ccfg.federated.round_interval_s);
     println!(
-        "=== run_constellation: {} satellites × {} scenes, shared ground segment{} ===",
+        "=== run_constellation: {} satellites × {} scenes, shared ground segment{}{} ===",
         ccfg.constellation.satellites,
         ccfg.constellation.scenes_per_satellite,
         if ccfg.power.enabled {
             format!(", power governor on ({} Wh battery)", ccfg.power.battery_wh)
+        } else {
+            String::new()
+        },
+        if ccfg.federated.enabled {
+            format!(", federated rounds every {} s", ccfg.federated.round_interval_s)
         } else {
             String::new()
         }
@@ -85,17 +96,38 @@ fn main() -> anyhow::Result<()> {
         );
         if let Some(p) = &sat.power {
             println!(
-                "    power: SoC min {:.0}% / mean {:.0}% / final {:.0}%, {:.1} Wh generated / {:.1} Wh consumed, {} scenes deferred / {} shed, {:.2} Wh unmet",
+                "    power: SoC min {:.0}% / mean {:.0}% / final {:.0}%, {:.1} Wh generated / {:.1} Wh consumed ({:.2} Wh training), {} scenes deferred / {} shed, {:.2} Wh unmet",
                 100.0 * p.min_soc_frac,
                 100.0 * p.mean_soc_frac(),
                 100.0 * p.final_soc_frac,
                 p.generated_wh,
                 p.consumed_wh,
+                p.training_wh,
                 p.scenes_deferred,
                 p.scenes_shed,
                 p.shortfall_wh,
             );
         }
+        if let Some(f) = &sat.federated {
+            println!(
+                "    federated: {}/{} rounds trained, {} skipped for power, {} B weights queued / {} B delivered",
+                f.rounds_completed,
+                f.rounds_scheduled,
+                f.rounds_skipped_power,
+                f.uplink_bytes,
+                sat.downlink.weights_bytes,
+            );
+        }
+    }
+    if let Some(fl) = &report.federated {
+        println!(
+            "federated fleet: final accuracy {:.3} over {} rounds ({} aggregated / {} held), {} B weights uplinked",
+            fl.final_accuracy(),
+            fl.acc_history.len(),
+            fl.rounds_aggregated,
+            fl.rounds_held,
+            fl.uplink_bytes,
+        );
     }
     println!(
         "aggregate: {} tiles in {:.2} s wall = {:.1} tiles/s; sedna task completed: {}",

@@ -1,0 +1,124 @@
+//! Perf + scenario: battery-capacity sweep for power-aware federated
+//! scheduling — how many training rounds a fleet completes, and what
+//! global accuracy it reaches, as the battery grows.
+//!
+//! Artifact-free by design: four workers fly the governed federated
+//! profile ([`tiansuan::power::fly_federated_mission`]) over a real
+//! eclipse-heavy orbital timeline, then the recorded participant sets
+//! are replayed with partial-participation FedAvg — no inference
+//! runtime involved, so CI can always record the sweep.  Emits the
+//! standard bench JSON (one object per line) that `ci.sh` greps into
+//! `BENCH_federated.json`.
+
+use tiansuan::config::{EnergyConfig, FederatedConfig, PowerConfig, TimingConfig};
+use tiansuan::orbit::{baoyun, beijing_station};
+use tiansuan::power::{fly_federated_mission, PowerState};
+use tiansuan::sedna::federated::{self, FedScheduler};
+use tiansuan::sim::{DutyCycles, Timeline};
+use tiansuan::util::bench;
+
+fn main() {
+    let sat = baoyun();
+    let horizon = 6.0 * sat.period_s(); // six revolutions, ~38% eclipse each
+    let period_s = 30.0;
+    let timeline =
+        Timeline::orbital(&TimingConfig::default(), &sat, &beijing_station(), horizon, 10.0);
+    let active = DutyCycles { compute: 1.0, comm: 1.0, camera: 1.0 };
+    let energy = EnergyConfig { pi_idle_floor: 0.0, comm_idle_floor: 0.0 };
+    let fed = FederatedConfig {
+        enabled: true,
+        round_interval_s: 600.0,
+        min_soc: 0.5,
+        ..FederatedConfig::default()
+    };
+    let workers = 4usize;
+    let train_s = federated::train_seconds(fed.epochs, fed.samples_per_node);
+    let rounds = FedScheduler::rounds_in(horizon, fed.round_interval_s);
+    let shards = federated::fleet_shards(workers, fed.samples_per_node, fed.dim, 7);
+    let test = federated::make_shard(7 + 10_000, 2000, fed.dim, 0.0);
+
+    println!(
+        "=== perf_federated: battery sweep, {workers} workers x {rounds} rounds over {:.1} h ({:.0}% sunlit) ===",
+        horizon / 3600.0,
+        100.0 * timeline.sunlit_fraction(0.0, horizon)
+    );
+    for battery_wh in [20.0, 40.0, 60.0, 80.0, 120.0, 240.0] {
+        let mut scheds: Vec<FedScheduler> = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let power = PowerConfig {
+                enabled: true,
+                battery_wh,
+                panel_w: 95.0,
+                cosine_derate: 0.8,
+                // stagger initial charge so the participant set differs
+                // per worker and partial-participation FedAvg is exercised
+                initial_soc: 0.3 + 0.15 * w as f64,
+                soc_defer: 0.6,
+                soc_critical: 0.3,
+                ..PowerConfig::default()
+            };
+            let mut state = PowerState::new(&power, &energy);
+            let mut sched = FedScheduler::new(&fed, horizon);
+            fly_federated_mission(&mut state, &mut sched, &timeline, active, period_s, train_s);
+            scheds.push(sched);
+        }
+        let t0 = std::time::Instant::now();
+        let rep = federated::train_schedule(
+            &shards,
+            &test,
+            rounds,
+            |r, w| scheds[w].stats.participated[r],
+            fed.epochs,
+            fed.lr,
+            fed.dim,
+            7,
+        );
+        let wall = t0.elapsed().as_secs_f64();
+        let completed: u64 = scheds.iter().map(|s| s.stats.rounds_completed).sum();
+        let skipped: u64 = scheds.iter().map(|s| s.stats.rounds_skipped_power).sum();
+        println!(
+            "battery {battery_wh:>5.0} Wh: {completed:>3} rounds trained / {skipped:>3} skipped for power \
+             (fleet of {}), final accuracy {:.3}, {} held rounds, {} B weights",
+            workers * rounds,
+            rep.final_accuracy(),
+            rep.rounds_held,
+            rep.uplink_bytes,
+        );
+        bench::json_line(
+            "perf_federated.battery_sweep",
+            &[
+                ("battery_wh", battery_wh),
+                ("rounds_scheduled", (workers * rounds) as f64),
+                ("rounds_completed", completed as f64),
+                ("rounds_skipped_power", skipped as f64),
+                ("rounds_held", rep.rounds_held as f64),
+                ("final_accuracy", rep.final_accuracy()),
+                ("uplink_bytes", rep.uplink_bytes as f64),
+                ("train_wall_s", wall),
+            ],
+        );
+    }
+
+    // hot loop: per-mission cost of SoC integration + round scheduling
+    // (what the constellation driver pays per satellite when enabled)
+    let power = PowerConfig { enabled: true, ..PowerConfig::default() };
+    let stats = bench::run(
+        "federated/schedule/6rev",
+        10,
+        std::time::Duration::from_millis(500),
+        || {
+            let mut state = PowerState::new(&power, &energy);
+            let mut sched = FedScheduler::new(&fed, horizon);
+            fly_federated_mission(&mut state, &mut sched, &timeline, active, period_s, train_s);
+            std::hint::black_box(sched.stats.rounds_completed);
+        },
+    );
+    bench::json_line(
+        "perf_federated.schedule",
+        &[
+            ("rounds", rounds as f64),
+            ("median_s", stats.median.as_secs_f64()),
+            ("rounds_per_s", rounds as f64 / stats.median.as_secs_f64().max(1e-12)),
+        ],
+    );
+}

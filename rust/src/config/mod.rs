@@ -236,6 +236,76 @@ impl Default for PowerConfig {
     }
 }
 
+/// Power-aware federated learning ([`crate::sedna::federated`]): local
+/// training rounds scheduled in mission time, gated on battery SoC, with
+/// weights contending for downlink airtime.  Disabled by default — every
+/// existing result stays bit-identical until a scenario opts in.
+#[derive(Clone, Copy, Debug)]
+pub struct FederatedConfig {
+    /// Master switch: off ⇒ no scheduler exists and the constellation
+    /// driver never fires a round.
+    pub enabled: bool,
+    /// Virtual seconds between training rounds (round r is due at
+    /// `round_interval_s * (r + 1)`).
+    pub round_interval_s: f64,
+    /// Samples in each satellite's private non-IID shard.
+    pub samples_per_node: usize,
+    /// Model dimensionality (weights on the wire are `(dim + 1) * 4` B).
+    pub dim: usize,
+    /// Local SGD epochs per round.
+    pub epochs: usize,
+    /// Local SGD learning rate.
+    pub lr: f32,
+    /// SoC fraction below which a satellite skips its round (reported as
+    /// `rounds_skipped_power`); inert when the power subsystem is off.
+    /// With power on it must sit at or above `power.soc_critical`
+    /// ([`Config::validate_cross`]) — training must not fire in periods
+    /// where captures are shed.
+    pub min_soc: f64,
+}
+
+impl FederatedConfig {
+    /// Hard invariants, checked at parse time and again at the top of
+    /// `run_constellation`, like [`PowerConfig::validate`].
+    pub fn validate(&self) -> Result<()> {
+        if !self.enabled {
+            return Ok(());
+        }
+        anyhow::ensure!(
+            self.round_interval_s > 0.0 && self.round_interval_s.is_finite(),
+            "federated.round_interval_s must be positive, got {}",
+            self.round_interval_s
+        );
+        anyhow::ensure!(self.dim >= 1, "federated.dim must be at least 1");
+        anyhow::ensure!(self.epochs >= 1, "federated.epochs must be at least 1");
+        anyhow::ensure!(
+            self.lr > 0.0 && self.lr.is_finite(),
+            "federated.lr must be positive, got {}",
+            self.lr
+        );
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.min_soc),
+            "federated.min_soc must be in [0, 1], got {}",
+            self.min_soc
+        );
+        Ok(())
+    }
+}
+
+impl Default for FederatedConfig {
+    fn default() -> FederatedConfig {
+        FederatedConfig {
+            enabled: false,
+            round_interval_s: 900.0, // a few rounds per revolution
+            samples_per_node: 200,
+            dim: 8,
+            epochs: 2,
+            lr: 0.05,
+            min_soc: 0.35,
+        }
+    }
+}
+
 /// Scenario virtual-time constants (previously hardcoded in
 /// `Pipeline::run_scenario`), consumed through [`crate::sim::Timeline`].
 #[derive(Clone, Debug)]
@@ -305,6 +375,7 @@ pub struct Config {
     pub constellation: ConstellationConfig,
     pub energy: EnergyConfig,
     pub power: PowerConfig,
+    pub federated: FederatedConfig,
     /// Scene size in 64-px cells.
     pub scene_cells: usize,
     /// Fragment edge length in px for the splitter.
@@ -314,6 +385,21 @@ pub struct Config {
 }
 
 impl Config {
+    /// Cross-section invariants no single section can check, enforced at
+    /// parse time and again at `run_constellation` entry.
+    pub fn validate_cross(&self) -> Result<()> {
+        if self.federated.enabled && self.power.enabled {
+            anyhow::ensure!(
+                self.federated.min_soc >= self.power.soc_critical,
+                "federated.min_soc ({}) must be at least power.soc_critical ({}): \
+                 training must not fire in periods where captures are shed",
+                self.federated.min_soc,
+                self.power.soc_critical
+            );
+        }
+        Ok(())
+    }
+
     pub fn loss(&self) -> LossProfile {
         match self.loss_profile.as_str() {
             "weak" => LossProfile::weak(),
@@ -334,6 +420,7 @@ impl Default for Config {
             constellation: ConstellationConfig::default(),
             energy: EnergyConfig::default(),
             power: PowerConfig::default(),
+            federated: FederatedConfig::default(),
             scene_cells: 8,
             fragment_px: 64,
             loss_profile: "stable".into(),
@@ -521,6 +608,22 @@ impl Config {
                 defer_tighten: n("defer_tighten", cfg.power.defer_tighten as f64) as f32,
             };
         }
+        if let Some(f) = j.get("federated") {
+            let n = |k: &str, d: f64| f.get(k).and_then(|v| v.as_f64()).unwrap_or(d);
+            let u = |k: &str, d: usize| f.get(k).and_then(|v| v.as_usize()).unwrap_or(d);
+            cfg.federated = FederatedConfig {
+                enabled: f
+                    .get("enabled")
+                    .and_then(|v| v.as_bool())
+                    .unwrap_or(cfg.federated.enabled),
+                round_interval_s: n("round_interval_s", cfg.federated.round_interval_s),
+                samples_per_node: u("samples_per_node", cfg.federated.samples_per_node),
+                dim: u("dim", cfg.federated.dim),
+                epochs: u("epochs", cfg.federated.epochs),
+                lr: n("lr", cfg.federated.lr as f64) as f32,
+                min_soc: n("min_soc", cfg.federated.min_soc),
+            };
+        }
         if let Some(v) = j.get("scene_cells").and_then(|v| v.as_usize()) {
             cfg.scene_cells = v;
         }
@@ -535,6 +638,8 @@ impl Config {
         }
         cfg.energy.validate().context("energy config")?;
         cfg.power.validate().context("power config")?;
+        cfg.federated.validate().context("federated config")?;
+        cfg.validate_cross().context("config cross-checks")?;
         Ok(cfg)
     }
 }
@@ -602,6 +707,62 @@ mod tests {
         assert_eq!(c.energy.pi_idle_floor, 0.25);
         assert_eq!(c.energy.comm_idle_floor, 0.15);
         assert!(!c.power.enabled, "power subsystem must default off");
+        assert!(!c.federated.enabled, "federated scheduling must default off");
+    }
+
+    #[test]
+    fn parse_federated_section() {
+        let c = Config::parse(
+            r#"{"federated": {"enabled": true, "round_interval_s": 600,
+                              "samples_per_node": 300, "dim": 16, "epochs": 3,
+                              "lr": 0.02, "min_soc": 0.5}}"#,
+        )
+        .unwrap();
+        assert!(c.federated.enabled);
+        assert_eq!(c.federated.round_interval_s, 600.0);
+        assert_eq!(c.federated.samples_per_node, 300);
+        assert_eq!(c.federated.dim, 16);
+        assert_eq!(c.federated.epochs, 3);
+        assert_eq!(c.federated.lr, 0.02);
+        assert_eq!(c.federated.min_soc, 0.5);
+        // partial override keeps the other defaults
+        let p = Config::parse(r#"{"federated": {"enabled": true, "dim": 4}}"#).unwrap();
+        assert_eq!(p.federated.dim, 4);
+        assert_eq!(p.federated.round_interval_s, FederatedConfig::default().round_interval_s);
+    }
+
+    #[test]
+    fn invalid_federated_section_fails_at_parse() {
+        assert!(
+            Config::parse(r#"{"federated": {"enabled": true, "round_interval_s": 0}}"#).is_err()
+        );
+        assert!(Config::parse(r#"{"federated": {"enabled": true, "dim": 0}}"#).is_err());
+        assert!(Config::parse(r#"{"federated": {"enabled": true, "epochs": 0}}"#).is_err());
+        assert!(Config::parse(r#"{"federated": {"enabled": true, "lr": 0}}"#).is_err());
+        assert!(Config::parse(r#"{"federated": {"enabled": true, "min_soc": 1.5}}"#).is_err());
+        // disabled federated is never validated: the section is inert
+        assert!(Config::parse(r#"{"federated": {"dim": 0}}"#).is_ok());
+    }
+
+    #[test]
+    fn federated_min_soc_must_cover_shed_band() {
+        // a round firing in a shed period would train on a battery the
+        // governor just declared critical; the cross-check forbids it
+        assert!(Config::parse(
+            r#"{"power": {"enabled": true, "soc_critical": 0.3},
+                "federated": {"enabled": true, "min_soc": 0.2}}"#
+        )
+        .is_err());
+        // equal is fine, and so is either subsystem alone
+        assert!(Config::parse(
+            r#"{"power": {"enabled": true, "soc_critical": 0.3},
+                "federated": {"enabled": true, "min_soc": 0.3}}"#
+        )
+        .is_ok());
+        assert!(
+            Config::parse(r#"{"federated": {"enabled": true, "min_soc": 0.0}}"#).is_ok(),
+            "power off: the gate is inert and unconstrained"
+        );
     }
 
     #[test]

@@ -50,6 +50,21 @@
 //! and a lossless link, a 1-satellite run reproduces `run_scenario`
 //! exactly (`tests/constellation_parity.rs`).
 //!
+//! With `federated.enabled`, §3.4's FederatedLearning runs as a
+//! first-class mission workload on the same timelines: each satellite
+//! owns a non-IID shard (seeded per plane) and a
+//! [`FedScheduler`] firing local-training rounds every
+//! `round_interval_s` of virtual time.  A round consults the power
+//! subsystem first — below `federated.min_soc` it is skipped and
+//! reported (`rounds_skipped_power`), at or above it the satellite
+//! charges the training burst against its battery and queues the round's
+//! weights (`ItemKind::Weights`) on its own [`DownlinkQueue`], where
+//! they contend with imagery for pass airtime.  After the mission the
+//! fleet aggregation replays the recorded participant sets with
+//! partial-participation FedAvg (`sedna::federated::train_schedule`):
+//! each round averages whichever subset trained, and an empty round
+//! keeps the previous global.
+//!
 //! Cluster/sedna bookkeeping mirrors the paper's control plane: every
 //! satellite registers as an Edge node and heartbeats during contact
 //! windows, and the whole run is scheduled as a Sedna `JointInference`
@@ -71,9 +86,10 @@ use crate::link::{Link, LinkConfig, LinkStats};
 use crate::orbit::{baoyun, beijing_station};
 use crate::power::{PowerState, PowerVerdict};
 use crate::runtime::{Model, Runtime};
+use crate::sedna::federated::{self, FedScheduler, RoundDecision};
 use crate::sedna::{GlobalManager, LocalController, TaskKind, TaskPhase, TaskSpec};
 use crate::sim::{scene_timing, DutyCycles, Timeline};
-use crate::telemetry::Registry;
+use crate::telemetry::{Counter, Registry};
 
 use super::downlink::{Delivered, DownlinkItem, DownlinkQueue, DownlinkStats, ItemKind};
 use super::engine::{worker_loop, Envelope, OnboardDone, OnboardStage, SceneJob};
@@ -85,6 +101,9 @@ use super::TileFate;
 
 /// Downlink tag encoding: scene index * stride + tile index.
 const TAG_STRIDE: u64 = 1_000_000;
+/// Tag base for federated weight items (tag = base + round index),
+/// disjoint from the scene/tile tag space.
+const FED_TAG_BASE: u64 = u64::MAX - TAG_STRIDE;
 
 /// One satellite's share of the constellation run.
 pub struct SatelliteReport {
@@ -109,6 +128,11 @@ pub struct SatelliteReport {
     /// without unpacking the scenario fold).  `None` when `power.enabled`
     /// is off.
     pub power: Option<crate::power::PowerStats>,
+    /// Federated round accounting — per-round participation plus the
+    /// counters that must reconcile (`rounds_completed +
+    /// rounds_skipped_power == rounds_scheduled`).  `None` when
+    /// `federated.enabled` is off.
+    pub federated: Option<federated::FederatedStats>,
 }
 
 pub struct ConstellationReport {
@@ -118,6 +142,9 @@ pub struct ConstellationReport {
     pub wall_s: f64,
     /// Sedna JointInference task reached Completed.
     pub task_completed: bool,
+    /// Fleet FedAvg outcome over the satellites' recorded participant
+    /// sets; `None` when `federated.enabled` is off.
+    pub federated: Option<federated::FleetTrainingReport>,
     /// Rendered per-stage telemetry (queue waits, service times, depths).
     pub telemetry: String,
 }
@@ -166,6 +193,8 @@ struct PendingScene {
 pub fn run_constellation(rt: &Runtime, cfg: &Config, version: Version) -> Result<ConstellationReport> {
     cfg.energy.validate()?;
     cfg.power.validate()?;
+    cfg.federated.validate()?;
+    cfg.validate_cross()?;
     let n_sats = cfg.constellation.satellites.max(1);
     let scenes = cfg.constellation.scenes_per_satellite;
     let metrics = Registry::new();
@@ -253,13 +282,85 @@ pub fn run_constellation(rt: &Runtime, cfg: &Config, version: Version) -> Result
         gm.lock().unwrap().get(task).map(|(_, st)| st.phase) == Some(TaskPhase::Completed);
     reports.sort_by_key(|r| r.index);
     let tiles_total = reports.iter().map(|r| r.result.tiles_total).sum();
+
+    // fleet aggregation: replay the recorded per-round participant sets
+    // with partial-participation FedAvg.  The satellites already paid the
+    // schedule's costs in mission time (training energy, weight airtime);
+    // the weight arithmetic itself has no feedback into mission dynamics,
+    // so running it once after the threads join keeps the round sequence
+    // strictly ordered without cross-satellite blocking.
+    let fed_report = cfg.federated.enabled.then(|| {
+        let fed = &cfg.federated;
+        let shards = federated::fleet_shards(n_sats, fed.samples_per_node, fed.dim, cfg.seed);
+        let test = federated::make_shard(cfg.seed + 10_000, 2000, fed.dim, 0.0);
+        let rounds = FedScheduler::rounds_in(cfg.constellation.horizon_s, fed.round_interval_s);
+        let participation: Vec<&[bool]> = reports
+            .iter()
+            .map(|r| {
+                r.federated.as_ref().map(|f| f.participated.as_slice()).unwrap_or(&[])
+            })
+            .collect();
+        let rep = federated::train_schedule(
+            &shards,
+            &test,
+            rounds,
+            |r, w| participation[w].get(r).copied().unwrap_or(false),
+            fed.epochs,
+            fed.lr,
+            fed.dim,
+            cfg.seed,
+        );
+        metrics
+            .gauge("federated.accuracy_pct")
+            .set((rep.final_accuracy() * 100.0).round() as i64);
+        rep
+    });
+
     Ok(ConstellationReport {
         satellites: reports,
         tiles_total,
         wall_s: t0.elapsed().as_secs_f64(),
         task_completed,
+        federated: fed_report,
         telemetry: metrics.render(),
     })
+}
+
+/// Apply federated round decisions: a participating round queues its
+/// weights for uplink (contending with imagery for window airtime) and
+/// charges the training burst to the battery and the H2 energy ledger;
+/// a skipped round only counts.  Shared by the scene loop and the
+/// mission tail.
+fn apply_fed_rounds(
+    decisions: Vec<RoundDecision>,
+    wire_bytes: u64,
+    train_s: f64,
+    queue: &mut DownlinkQueue,
+    power: &mut Option<PowerState>,
+    acc: &mut ScenarioAccumulator,
+    counters: &Option<(std::sync::Arc<Counter>, std::sync::Arc<Counter>)>,
+) {
+    for d in decisions {
+        if d.participated {
+            queue.push(DownlinkItem {
+                kind: ItemKind::Weights,
+                bytes: wire_bytes,
+                ready_at: d.due_s + train_s,
+                tag: FED_TAG_BASE + d.round as u64,
+            });
+            if let Some(p) = power.as_mut() {
+                p.charge_training(train_s);
+            }
+            acc.add_training(train_s);
+        }
+        if let Some((completed, skipped)) = counters {
+            if d.participated {
+                completed.inc();
+            } else {
+                skipped.inc();
+            }
+        }
+    }
 }
 
 /// Apply one ground reply: fill the (scene, tile) slots it answers and
@@ -400,6 +501,21 @@ fn run_satellite(
         )
     });
 
+    // federated round clock; rounds fire in virtual time, gated on SoC
+    // when the power subsystem is on, and their weights contend with
+    // imagery for pass airtime through the same downlink queue
+    let mut fed = cfg.federated.enabled.then(|| FedScheduler::new(&cfg.federated, horizon));
+    let fed_train_s =
+        federated::train_seconds(cfg.federated.epochs, cfg.federated.samples_per_node);
+    // per-sat counters (a fleet-summed pair would hide which satellite
+    // the eclipse starved)
+    let fed_metrics = fed.as_ref().map(|_| {
+        (
+            metrics.counter(&format!("federated.rounds.{node}")),
+            metrics.counter(&format!("federated.skipped_power.{node}")),
+        )
+    });
+
     let mut pending: BTreeMap<usize, PendingScene> = BTreeMap::new();
     let mut inflight: Vec<GroundInflight> = Vec::new();
     // capture indices the governor shed: no scene exists to fold there
@@ -526,6 +642,17 @@ fn run_satellite(
                     if let Some((soc, _, shed)) = &power_metrics {
                         shed.inc();
                         soc.set(p.soc_pct());
+                    }
+                    // rounds due this period are decided at its end;
+                    // below soc_critical they land under min_soc (the
+                    // validate_cross invariant) and skip
+                    if let Some(f) = fed.as_mut() {
+                        let decisions = f.poll(t, power.as_ref().map(|p| p.soc_frac()));
+                        let wire = f.wire_bytes();
+                        apply_fed_rounds(
+                            decisions, wire, fed_train_s, &mut queue, &mut power, &mut acc,
+                            &fed_metrics,
+                        );
                     }
                     shed_idx.insert(next_drive);
                     next_drive += 1;
@@ -656,6 +783,17 @@ fn run_satellite(
                         soc.set(p.soc_pct());
                     }
                 }
+                // federated rounds due this scene period, decided with
+                // the SoC the period's flows left behind; their weights
+                // queue for the next drain (possibly this period's tail)
+                if let Some(f) = fed.as_mut() {
+                    let decisions = f.poll(t, power.as_ref().map(|p| p.soc_frac()));
+                    let wire = f.wire_bytes();
+                    apply_fed_rounds(
+                        decisions, wire, fed_train_s, &mut queue, &mut power, &mut acc,
+                        &fed_metrics,
+                    );
+                }
                 next_drive += 1;
 
                 // harvest any completed ground round-trips, then fold
@@ -676,6 +814,32 @@ fn run_satellite(
         let power_step = timeline.timing().scene_period_floor_s.max(1.0);
         let mut power_cursor = tail_start;
         for slice in timeline.remaining_contacts() {
+            // federated rounds due by the end of this pass fire first so
+            // their weights can ride it.  Power integrates idle time to
+            // each round boundary, clamped at AOS — pass time itself is
+            // integrated with observed duties after the drain, so a
+            // round due mid-pass is gated on the SoC at AOS.
+            if let Some(f) = fed.as_mut() {
+                while let Some(due) = f.due_next().filter(|d| *d <= slice.window.los) {
+                    if let Some(p) = power.as_mut() {
+                        let target = due.min(slice.window.aos);
+                        p.advance_chunked(
+                            &timeline,
+                            power_cursor,
+                            target,
+                            DutyCycles::default(),
+                            power_step,
+                        );
+                        power_cursor = power_cursor.max(target);
+                    }
+                    let decisions = f.poll(due, power.as_ref().map(|p| p.soc_frac()));
+                    let wire = f.wire_bytes();
+                    apply_fed_rounds(
+                        decisions, wire, fed_train_s, &mut queue, &mut power, &mut acc,
+                        &fed_metrics,
+                    );
+                }
+            }
             if let Some(p) = power.as_mut() {
                 // idle mission time up to this pass, so the verdict
                 // reflects SoC at AOS
@@ -698,6 +862,29 @@ fn run_satellite(
                 let (aos, los) = (slice.window.aos, slice.window.los);
                 p.advance_chunked(&timeline, aos, los, duties, power_step);
                 power_cursor = los;
+            }
+        }
+        // rounds due after the last pass still fire (battery permitting)
+        // — their weights are queued and counted, but with no window
+        // left they wait for a mission extension, which is honest
+        if let Some(f) = fed.as_mut() {
+            while let Some(due) = f.due_next() {
+                if let Some(p) = power.as_mut() {
+                    p.advance_chunked(
+                        &timeline,
+                        power_cursor,
+                        due,
+                        DutyCycles::default(),
+                        power_step,
+                    );
+                    power_cursor = power_cursor.max(due);
+                }
+                let decisions = f.poll(due, power.as_ref().map(|p| p.soc_frac()));
+                let wire = f.wire_bytes();
+                apply_fed_rounds(
+                    decisions, wire, fed_train_s, &mut queue, &mut power, &mut acc,
+                    &fed_metrics,
+                );
             }
         }
         // everything dispatched; now completions are all that's left
@@ -733,11 +920,23 @@ fn run_satellite(
         acc.scenes()
     );
 
+    if let Some(f) = &fed {
+        anyhow::ensure!(
+            f.stats.rounds_completed + f.stats.rounds_skipped_power == f.stats.rounds_scheduled,
+            "satellite {index} lost federated rounds: {} + {} of {}",
+            f.stats.rounds_completed,
+            f.stats.rounds_skipped_power,
+            f.stats.rounds_scheduled
+        );
+    }
+
     lc.finish(task, true);
     gm.lock().unwrap().report(task, &node, TaskPhase::Completed)?;
     let power_stats = power.map(|p| p.stats);
+    let fed_stats = fed.map(|f| f.stats);
     let mut result = acc.finish(version, cfg.fragment_px);
     result.power = power_stats;
+    result.federated = fed_stats.clone();
     Ok(SatelliteReport {
         index,
         name: node.to_string(),
@@ -748,5 +947,6 @@ fn run_satellite(
         contact_s: timeline.contact_total_s(),
         sunlit_s: timeline.sunlit_s(0.0, horizon),
         power: power_stats,
+        federated: fed_stats,
     })
 }

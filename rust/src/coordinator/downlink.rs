@@ -17,6 +17,11 @@ pub enum ItemKind {
     Results,
     /// Raw tile imagery for ground re-inference.
     Image,
+    /// Federated model weights ((dim + 1) × 4 B per round).  Small
+    /// control-plane traffic: queues with results ahead of imagery, but
+    /// is accounted separately so federated uplink is visible in the
+    /// link books.
+    Weights,
 }
 
 #[derive(Clone, Debug)]
@@ -33,6 +38,9 @@ pub struct DownlinkItem {
 pub struct DownlinkStats {
     pub results_bytes: u64,
     pub image_bytes: u64,
+    /// Federated weight bytes delivered (the training uplink's share of
+    /// pass airtime).
+    pub weights_bytes: u64,
     pub items_delivered: u64,
     pub items_dropped: u64,
     /// Bytes of dropped items (they never crossed the link, but they
@@ -45,7 +53,7 @@ pub struct DownlinkStats {
 
 impl DownlinkStats {
     pub fn total_bytes(&self) -> u64 {
-        self.results_bytes + self.image_bytes
+        self.results_bytes + self.image_bytes + self.weights_bytes
     }
 
     pub fn mean_latency_s(&self) -> f64 {
@@ -92,7 +100,9 @@ impl DownlinkQueue {
 
     pub fn push(&mut self, item: DownlinkItem) {
         match item.kind {
-            ItemKind::Results => self.results.push_back(item),
+            // weights share the results class: both are small and
+            // time-critical relative to raw imagery
+            ItemKind::Results | ItemKind::Weights => self.results.push_back(item),
             ItemKind::Image => self.images.push_back(item),
         }
     }
@@ -171,6 +181,7 @@ impl DownlinkQueue {
                 match item.kind {
                     ItemKind::Results => self.stats.results_bytes += item.bytes,
                     ItemKind::Image => self.stats.image_bytes += item.bytes,
+                    ItemKind::Weights => self.stats.weights_bytes += item.bytes,
                 }
                 self.stats.items_delivered += 1;
                 self.stats.latency_sum_s += now - item.ready_at;
@@ -224,7 +235,7 @@ mod tests {
     use crate::link::{LinkConfig, LossProfile};
 
     fn win(aos: f64, los: f64) -> ContactWindow {
-        ContactWindow { aos, los, max_elevation_deg: 45.0 }
+        ContactWindow { aos, los, max_elevation_deg: 45.0, truncated: false }
     }
 
     fn link(seed: u64) -> Link {
@@ -343,6 +354,24 @@ mod tests {
         assert_eq!(got.len(), 1, "results delivered, image fails its third window");
         assert_eq!(q.stats.items_dropped, 1);
         assert_eq!(q.stats.bytes_dropped, big);
+    }
+
+    #[test]
+    fn weights_share_results_priority_and_own_accounting() {
+        let mut q = DownlinkQueue::new();
+        q.push(item(ItemKind::Image, 10_000, 0.0, 1));
+        q.push(item(ItemKind::Weights, 36, 0.0, 2));
+        q.push(item(ItemKind::Results, 100, 0.0, 3));
+        let got = q.drain_window(&mut link(7), &win(100.0, 200.0));
+        // weights queue with results: both precede imagery, FIFO within
+        // the class
+        assert_eq!(got[0].item.tag, 2);
+        assert_eq!(got[1].item.tag, 3);
+        assert_eq!(got[2].item.tag, 1);
+        assert_eq!(q.stats.weights_bytes, 36);
+        assert_eq!(q.stats.results_bytes, 100);
+        assert_eq!(q.stats.image_bytes, 10_000);
+        assert_eq!(q.stats.total_bytes(), 36 + 100 + 10_000);
     }
 
     #[test]

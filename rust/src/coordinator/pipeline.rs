@@ -74,6 +74,10 @@ pub struct ScenarioResult {
     /// and whenever power is off — the constellation driver fills it in
     /// after the fold, so the accumulator stays power-agnostic.
     pub power: Option<crate::power::PowerStats>,
+    /// Federated round accounting when scheduling is enabled
+    /// (`federated.enabled`); `None` otherwise — filled in by the
+    /// constellation driver after the fold, like `power`.
+    pub federated: Option<crate::sedna::federated::FederatedStats>,
 }
 
 impl ScenarioResult {
@@ -232,6 +236,14 @@ impl ScenarioAccumulator {
         self.energy.advance(dt_s, duties.compute, duties.comm, duties.camera);
     }
 
+    /// Charge one federated local-training burst to the H2 energy
+    /// ledger (the constellation driver calls this at each participating
+    /// round; single-satellite paths never do, so their
+    /// `energy_compute_share` is untouched).
+    pub fn add_training(&mut self, train_s: f64) {
+        self.energy.add_training(train_s);
+    }
+
     /// Scenes folded so far (the engine's collector uses this to detect
     /// lost work).
     pub fn scenes(&self) -> usize {
@@ -266,6 +278,7 @@ impl ScenarioAccumulator {
             energy_compute_share: self.energy.compute_share(),
             wall_infer_s: self.wall_infer,
             power: None,
+            federated: None,
         }
     }
 }

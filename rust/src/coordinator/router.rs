@@ -78,6 +78,18 @@ impl Default for RouterPolicy {
 }
 
 impl RouterPolicy {
+    /// Floor for any composed confidence threshold.  Dropping it below
+    /// `empty_objectness` would rank a tile with a barely-scored
+    /// detection as more trustworthy than a confidently-empty one —
+    /// stacked tightening (adaptive stress + governor defer) used to
+    /// drive the threshold there silently, inverting the empty-tile
+    /// branch of [`route`].  The floor never exceeds the threshold this
+    /// policy already carries: composition must not *raise* a threshold
+    /// the operator statically configured below the empty bar.
+    fn threshold_floor(&self) -> f32 {
+        self.empty_objectness.min(self.confidence_threshold).clamp(0.05, 0.999)
+    }
+
     /// The policy actually applied under `snapshot`: identical to `self`
     /// in static mode; with adaptation on, the confidence threshold
     /// tightens under backlog/loss stress and relaxes on an idle link.
@@ -91,16 +103,21 @@ impl RouterPolicy {
         {
             threshold += ad.relax_step;
         }
-        RouterPolicy { confidence_threshold: threshold.clamp(0.05, 0.999), ..*self }
+        RouterPolicy {
+            confidence_threshold: threshold.clamp(self.threshold_floor(), 0.999),
+            ..*self
+        }
     }
 
     /// This policy with the confidence threshold dropped by `step`
     /// (offload less).  The power governor composes it on top of
     /// [`Self::effective`] while deferring downlink drains: raw tiles
-    /// queued behind a transmitter that is off are pure backlog.
+    /// queued behind a transmitter that is off are pure backlog.  The
+    /// composition clamps at `empty_objectness` like the adaptive path.
     pub fn tightened(&self, step: f32) -> RouterPolicy {
         RouterPolicy {
-            confidence_threshold: (self.confidence_threshold - step).clamp(0.05, 0.999),
+            confidence_threshold: (self.confidence_threshold - step)
+                .clamp(self.threshold_floor(), 0.999),
             ..*self
         }
     }
@@ -296,15 +313,50 @@ mod tests {
         let eff = p.effective(&idle); // relaxed to 0.5
         let gov = eff.tightened(0.2);
         assert!((gov.confidence_threshold - 0.3).abs() < 1e-6, "{}", gov.confidence_threshold);
-        // and clamps like the adaptive path does
-        assert_eq!(policy().tightened(5.0).confidence_threshold, 0.05);
+        // and clamps like the adaptive path does — at the empty bar
+        assert_eq!(policy().tightened(5.0).confidence_threshold, 0.25);
     }
 
     #[test]
-    fn effective_threshold_clamped() {
+    fn effective_threshold_clamped_at_empty_objectness() {
+        // a base threshold configured *below* the empty bar is the
+        // operator's static choice: tightening clamps at that base (it
+        // can go no lower), never rises to the bar
         let mut p = adaptive_policy();
         p.confidence_threshold = 0.1;
         let stressed = LinkSnapshot { backlog_bytes: u64::MAX, loss_rate: 1.0 };
+        assert!((p.effective(&stressed).confidence_threshold - 0.1).abs() < 1e-6);
+        // and an idle link still relaxes it untouched by the bar
+        let idle = LinkSnapshot { backlog_bytes: 0, loss_rate: 0.0 };
+        assert!((p.effective(&idle).confidence_threshold - 0.15).abs() < 1e-6);
+        // a policy with no empty bar keeps the absolute 0.05 floor
+        p.empty_objectness = 0.0;
         assert!((p.effective(&stressed).confidence_threshold - 0.05).abs() < 1e-6);
+    }
+
+    #[test]
+    fn governor_on_stressed_adaptive_cannot_invert_empty_branch() {
+        // regression: governor defer (tightened) stacked on an adaptive
+        // policy already tightened by a stressed link used to push the
+        // threshold to 0.05 < empty_objectness, inverting the
+        // confidently-empty ordering
+        let p = adaptive_policy();
+        let stressed = LinkSnapshot { backlog_bytes: u64::MAX, loss_rate: 1.0 };
+        let eff = p.effective(&stressed); // 0.45 - 0.2 = 0.25
+        let gov = eff.tightened(0.2); // would be 0.05 unclamped
+        assert!(
+            gov.confidence_threshold >= gov.empty_objectness,
+            "threshold {} below empty bar {}",
+            gov.confidence_threshold,
+            gov.empty_objectness
+        );
+        assert!((gov.confidence_threshold - 0.25).abs() < 1e-6);
+        // the empty-tile ordering survives the whole stack: an empty
+        // tile below the bar stays onboard, and no detection weaker than
+        // the bar can count as confident
+        let mut s = RouterStats::default();
+        assert_eq!(route(&gov, &[], 0.2, &mut s), TileFate::OnboardFinal);
+        assert_eq!(s.confidently_empty, 1);
+        assert_eq!(route(&gov, &[det(0.2)], 0.2, &mut s), TileFate::Offloaded);
     }
 }

@@ -136,6 +136,9 @@ pub struct EnergyMeter {
     pi_idle_floor: f64,
     /// Comm subsystem idle draw as a fraction of nameplate.
     comm_idle_floor: f64,
+    /// Federated local-training energy — its own ledger line so the H2
+    /// accounting keeps inference and training distinguishable.
+    training_j: f64,
 }
 
 impl Default for EnergyMeter {
@@ -158,7 +161,23 @@ impl EnergyMeter {
             elapsed_s: 0.0,
             pi_idle_floor: pi_idle_floor.clamp(0.0, 1.0),
             comm_idle_floor: comm_idle_floor.clamp(0.0, 1.0),
+            training_j: 0.0,
         }
+    }
+
+    /// Charge one federated local-training burst: `dt_s` seconds of the
+    /// Pi at full active draw, on top of whatever duty the enclosing
+    /// period integrates (training overlays the period, it does not add
+    /// mission time).  Returns the joules charged.
+    pub fn add_training(&mut self, dt_s: f64) -> f64 {
+        assert!(dt_s >= 0.0);
+        let j = Payload::RaspberryPi.nameplate_w() * dt_s;
+        self.training_j += j;
+        j
+    }
+
+    pub fn training_j(&self) -> f64 {
+        self.training_j
     }
 
     /// Advance time by dt with the given duty cycles (0..1) per subsystem.
@@ -195,7 +214,7 @@ impl EnergyMeter {
     }
 
     pub fn payload_total_j(&self) -> f64 {
-        self.payload_j.values().sum()
+        self.payload_j.values().sum::<f64>() + self.training_j
     }
 
     pub fn platform_total_j(&self) -> f64 {
@@ -232,14 +251,20 @@ impl EnergyMeter {
     }
 
     /// Fraction of total onboard energy consumed by computing (the
-    /// paper's ≈17% headline, H2).
+    /// paper's ≈17% headline, H2).  Training runs on the Pi, so its
+    /// ledger line counts as computing; without federated rounds it is
+    /// zero and the share is unchanged.
     pub fn compute_share(&self) -> f64 {
-        self.payload_j(Payload::RaspberryPi) / self.platform_total_j().max(1e-9)
+        (self.payload_j(Payload::RaspberryPi) + self.training_j)
+            / self.platform_total_j().max(1e-9)
     }
 
     /// Fraction of payload energy consumed by computing (paper: 33%).
+    /// Training counts as computing here too, consistent with
+    /// [`Self::compute_share`].
     pub fn compute_share_of_payloads(&self) -> f64 {
-        self.payload_j(Payload::RaspberryPi) / self.payload_total_j().max(1e-9)
+        (self.payload_j(Payload::RaspberryPi) + self.training_j)
+            / self.payload_total_j().max(1e-9)
     }
 }
 
@@ -317,6 +342,22 @@ mod tests {
         m.advance(100.0, 0.0, 0.0, 0.0);
         assert!((m.payload_j(Payload::RaspberryPi) - 8.78 * 0.25 * 100.0).abs() < 1e-9);
         assert!((m.platform_j(Subsystem::Comm) - 5.43 * 0.15 * 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn training_line_adds_to_totals_and_compute_share() {
+        let mut m = EnergyMeter::new();
+        m.advance(100.0, 0.0, 0.0, 0.0);
+        let before = m.platform_total_j();
+        let share_before = m.compute_share();
+        let j = m.add_training(10.0);
+        assert!((j - 8.78 * 10.0).abs() < 1e-9, "training runs at Pi nameplate");
+        assert!((m.training_j() - j).abs() < 1e-12);
+        assert!((m.platform_total_j() - before - j).abs() < 1e-9);
+        assert!(m.compute_share() > share_before, "training counts as computing");
+        // the Table-3 rows themselves are untouched — training is its
+        // own ledger line, not a duty on the inference row
+        assert!((m.payload_j(Payload::RaspberryPi) - 8.78 * 0.25 * 100.0).abs() < 1e-9);
     }
 
     #[test]

@@ -9,8 +9,15 @@ pub struct ContactWindow {
     pub aos: f64,
     /// Loss of signal.
     pub los: f64,
-    /// Peak elevation during the pass, degrees.
+    /// Peak elevation during the pass, degrees.  For a `truncated`
+    /// window this covers only the scanned span and may sit below the
+    /// elevation mask.
     pub max_elevation_deg: f64,
+    /// True when the scan clipped this pass at a boundary of `[t0, t1]`
+    /// — already open at `t0` or still open at `t1`.  The clipped end is
+    /// a clamp time, not a bisected horizon crossing, so `duration_s`
+    /// understates the physical pass.
+    pub truncated: bool,
 }
 
 impl ContactWindow {
@@ -38,6 +45,9 @@ pub fn contact_windows(
     let mut windows = Vec::new();
     let mut t = t0;
     let mut prev_vis = gs.visible(sat, t0);
+    // a pass already open at t0 gets aos = t0 verbatim — a clamp, not a
+    // bisected AOS — and must carry the truncation flag
+    let mut clipped_at_start = prev_vis;
     let mut aos = if prev_vis { Some(t0) } else { None };
     while t < t1 {
         let tn = (t + step_s).min(t1);
@@ -47,14 +57,16 @@ pub fn contact_windows(
         } else if !vis && prev_vis {
             let los = bisect(sat, gs, t, tn);
             if let Some(a) = aos.take() {
-                windows.push(finish(sat, gs, a, los));
+                windows.push(finish(sat, gs, a, los, clipped_at_start));
+                clipped_at_start = false;
             }
         }
         prev_vis = vis;
         t = tn;
     }
     if let Some(a) = aos {
-        windows.push(finish(sat, gs, a, t1));
+        // still visible at t1: los = t1 is a clamp, not a real LOS
+        windows.push(finish(sat, gs, a, t1, true));
     }
     windows
 }
@@ -73,14 +85,20 @@ fn bisect(sat: &Satellite, gs: &GroundStation, mut lo: f64, mut hi: f64) -> f64 
     0.5 * (lo + hi)
 }
 
-fn finish(sat: &Satellite, gs: &GroundStation, aos: f64, los: f64) -> ContactWindow {
+fn finish(
+    sat: &Satellite,
+    gs: &GroundStation,
+    aos: f64,
+    los: f64,
+    truncated: bool,
+) -> ContactWindow {
     let mut max_el = f64::MIN;
     let n = 64;
     for i in 0..=n {
         let t = aos + (los - aos) * i as f64 / n as f64;
         max_el = max_el.max(gs.elevation_rad(sat, t).to_degrees());
     }
-    ContactWindow { aos, los, max_elevation_deg: max_el }
+    ContactWindow { aos, los, max_elevation_deg: max_el, truncated }
 }
 
 #[cfg(test)]
@@ -138,8 +156,43 @@ mod tests {
 
     #[test]
     fn max_elevation_above_mask() {
+        // only a whole pass guarantees the mask was crossed; a truncated
+        // span can peak below it
         for win in day_windows() {
-            assert!(win.max_elevation_deg >= 10.0 - 0.2, "{}", win.max_elevation_deg);
+            if !win.truncated {
+                assert!(win.max_elevation_deg >= 10.0 - 0.2, "{}", win.max_elevation_deg);
+            }
         }
+    }
+
+    #[test]
+    fn scan_starting_mid_pass_flags_truncation() {
+        let sat = baoyun();
+        let gs = beijing_station();
+        let full = day_windows();
+        let w0 = &full[0];
+        assert!(!w0.truncated, "the first full-scan pass opens after t0");
+        let mid = 0.5 * (w0.aos + w0.los);
+
+        // scan starting mid-pass: the open pass is clamped and flagged
+        let clipped = contact_windows(&sat, &gs, mid, DAY, 10.0);
+        let first = &clipped[0];
+        assert!(first.truncated, "pass open at t0 must be flagged");
+        assert_eq!(first.aos, mid, "aos clamps to the scan start");
+        assert!((first.los - w0.los).abs() < 0.3, "los is still a bisected crossing");
+        assert!(first.duration_s() < w0.duration_s());
+        // later passes are unaffected: same boundaries, same flags
+        assert_eq!(clipped.len(), full.len());
+        for (c, f) in clipped.iter().zip(full.iter()).skip(1) {
+            assert!((c.aos - f.aos).abs() < 0.3 && (c.los - f.los).abs() < 0.3);
+            assert_eq!(c.truncated, f.truncated);
+        }
+
+        // scan ending mid-pass: the still-open pass is clamped at t1
+        let endclip = contact_windows(&sat, &gs, 0.0, mid, 10.0);
+        let last = endclip.last().expect("the straddled pass is emitted");
+        assert!(last.truncated, "pass open at t1 must be flagged");
+        assert_eq!(last.los, mid, "los clamps to the scan end");
+        assert!((last.aos - w0.aos).abs() < 0.3);
     }
 }

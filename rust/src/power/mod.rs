@@ -34,6 +34,7 @@
 
 use crate::config::{EnergyConfig, PowerConfig};
 use crate::energy::EnergyMeter;
+use crate::sedna::federated::FedScheduler;
 use crate::sim::{DutyCycles, Timeline};
 
 /// Solar array: nameplate watts derated by the mean incidence cosine.
@@ -157,6 +158,9 @@ pub struct PowerStats {
     pub shortfall_wh: f64,
     pub scenes_deferred: u64,
     pub scenes_shed: u64,
+    /// Federated local-training energy drawn from the battery (already
+    /// included in `consumed_wh`; broken out for the H2 ledger).
+    pub training_wh: f64,
     soc_sum: f64,
     soc_n: u64,
 }
@@ -171,6 +175,7 @@ impl PowerStats {
             shortfall_wh: 0.0,
             scenes_deferred: 0,
             scenes_shed: 0,
+            training_wh: 0.0,
             soc_sum: 0.0,
             soc_n: 0,
         }
@@ -278,6 +283,40 @@ impl PowerState {
         self.stats.soc_sum += f;
         self.stats.soc_n += 1;
     }
+
+    /// Charge one federated local-training burst at a round boundary:
+    /// `train_s` seconds of the Pi at full active draw, drawn from the
+    /// battery through the meter's training ledger line.  The burst is
+    /// an additional load at that instant, not additional mission time —
+    /// solar input for the surrounding period is integrated by the
+    /// normal period advance.
+    pub fn charge_training(&mut self, train_s: f64) {
+        let wh = self.meter.add_training(train_s) / 3600.0;
+        let shortfall = self.battery.step(0.0, wh);
+        self.stats.consumed_wh += wh;
+        self.stats.training_wh += wh;
+        self.stats.shortfall_wh += shortfall;
+        let f = self.battery.soc_frac();
+        self.stats.min_soc_frac = self.stats.min_soc_frac.min(f);
+        self.stats.final_soc_frac = f;
+    }
+}
+
+/// The duty cycles a governed satellite actually flies this period:
+/// Defer switches the transmitter off, Shed idles camera and compute
+/// too.  Increments the matching governor stat.
+fn governed_duties(state: &mut PowerState, active: DutyCycles) -> DutyCycles {
+    match state.verdict() {
+        PowerVerdict::Nominal => active,
+        PowerVerdict::Defer => {
+            state.stats.scenes_deferred += 1;
+            DutyCycles { comm: 0.0, ..active }
+        }
+        PowerVerdict::Shed => {
+            state.stats.scenes_shed += 1;
+            DutyCycles::default()
+        }
+    }
 }
 
 /// Artifact-free governed flight: march a [`PowerState`] over a
@@ -292,19 +331,46 @@ pub fn fly_mission(state: &mut PowerState, timeline: &Timeline, active: DutyCycl
     let mut t = 0.0;
     while t < timeline.horizon_s() {
         let dt = period_s.min(timeline.horizon_s() - t);
-        let duties = match state.verdict() {
-            PowerVerdict::Nominal => active,
-            PowerVerdict::Defer => {
-                state.stats.scenes_deferred += 1;
-                DutyCycles { comm: 0.0, ..active }
-            }
-            PowerVerdict::Shed => {
-                state.stats.scenes_shed += 1;
-                DutyCycles::default()
-            }
-        };
+        let duties = governed_duties(state, active);
         state.advance_period(dt, duties, timeline.sunlit_s(t, t + dt));
         t += dt;
+    }
+}
+
+/// [`fly_mission`] with federated round scheduling layered on: the
+/// [`FedScheduler`] is polled at each period boundary with the battery's
+/// SoC, rounds at or above its `min_soc` gate charge their training
+/// burst ([`PowerState::charge_training`]), rounds below it are skipped
+/// and counted.  Artifact-free and deterministic; shared by
+/// `benches/perf_federated.rs` and the scheduling invariant tests, and
+/// the same decide→charge semantics the constellation driver applies to
+/// real scenes and downlink queues.
+pub fn fly_federated_mission(
+    state: &mut PowerState,
+    fed: &mut FedScheduler,
+    timeline: &Timeline,
+    active: DutyCycles,
+    period_s: f64,
+    train_s: f64,
+) {
+    assert!(period_s > 0.0);
+    let mut t = 0.0;
+    while t < timeline.horizon_s() {
+        let dt = period_s.min(timeline.horizon_s() - t);
+        let duties = governed_duties(state, active);
+        state.advance_period(dt, duties, timeline.sunlit_s(t, t + dt));
+        t += dt;
+        for d in fed.poll(t, Some(state.soc_frac())) {
+            if d.participated {
+                state.charge_training(train_s);
+            }
+        }
+    }
+    // f64 rounding at the horizon must not strand a scheduled round
+    for d in fed.finish(Some(state.soc_frac())) {
+        if d.participated {
+            state.charge_training(train_s);
+        }
     }
 }
 
@@ -407,6 +473,23 @@ mod tests {
         assert_eq!(whole.soc_frac(), 1.0);
         assert!((chunked.stats.generated_wh - whole.stats.generated_wh).abs() < 1e-6);
         assert!((chunked.stats.consumed_wh - whole.stats.consumed_wh).abs() < 1e-6);
+    }
+
+    #[test]
+    fn training_burst_draws_from_battery_and_ledger() {
+        let mut s = state(80.0);
+        let soc0 = s.soc_frac();
+        // one virtual hour of Pi-nameplate training: 8.78 Wh of load
+        s.charge_training(3600.0);
+        assert!((s.stats.training_wh - 8.78).abs() < 1e-9);
+        assert!((s.stats.consumed_wh - 8.78).abs() < 1e-9, "training is consumed load");
+        assert!(s.soc_frac() < soc0, "the burst drains the battery");
+        assert_eq!(s.stats.min_soc_frac, s.soc_frac());
+        assert_eq!(s.stats.shortfall_wh, 0.0);
+        // a zero-length burst is free
+        let before = s.soc_frac();
+        s.charge_training(0.0);
+        assert_eq!(s.soc_frac(), before);
     }
 
     #[test]

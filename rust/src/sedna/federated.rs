@@ -10,8 +10,33 @@
 //! is the privacy property the paper motivates.  The uplink cost of one
 //! round is `dim * 4` bytes per worker (weights as f32), which examples
 //! account against the 0.1–1 Mbps uplink.
+//!
+//! Two layers:
+//!
+//! * the math — [`make_shard`]/[`fleet_shards`], [`local_train`],
+//!   [`fedavg`], and [`train_schedule`], the partial-participation
+//!   FedAvg loop: each round averages whichever subset of workers
+//!   participated, and a round with no contributing samples keeps the
+//!   previous global (the divide-by-zero guard in [`fedavg`]);
+//! * the schedule — [`FedScheduler`], the mission-time round clock the
+//!   constellation driver and `power::fly_federated_mission` poll:
+//!   rounds fire every `round_interval_s` of virtual time, each gated on
+//!   the satellite's battery state of charge (train only at or above
+//!   `min_soc`, the power-limited constraint of arXiv:2111.12769), with
+//!   skipped rounds reported in [`FederatedStats::rounds_skipped_power`].
 
+use crate::config::FederatedConfig;
 use crate::util::rng::Rng;
+
+/// Modeled Pi-class local-SGD time per (sample × epoch) — ~500 samples/s
+/// through an 8-D logistic model.  Drives the training energy burst and
+/// the weights' uplink `ready_at`, not wallclock.
+pub const TRAIN_S_PER_SAMPLE_EPOCH: f64 = 0.002;
+
+/// Virtual seconds one local round trains for.
+pub fn train_seconds(epochs: usize, samples_per_node: usize) -> f64 {
+    (epochs * samples_per_node) as f64 * TRAIN_S_PER_SAMPLE_EPOCH
+}
 
 /// Logistic-regression model: w (dim) + bias.
 #[derive(Clone, Debug)]
@@ -33,6 +58,13 @@ impl LinearModel {
     pub fn wire_bytes(&self) -> u64 {
         (self.w.len() as u64 + 1) * 4
     }
+}
+
+/// Uplink bytes for one round of a `dim`-weight model (weights + bias as
+/// f32) — what the constellation charges against the downlink queue
+/// without materializing the model first.
+pub fn wire_bytes_for_dim(dim: usize) -> u64 {
+    (dim as u64 + 1) * 4
 }
 
 /// A worker's private shard.
@@ -79,6 +111,22 @@ pub fn make_shard(seed: u64, n: usize, dim: usize, skew: f32) -> Shard {
     Shard { xs, ys }
 }
 
+/// One non-IID shard per worker, skew spread linearly across the fleet —
+/// the spread [`run_federated`] has always used, factored out so the
+/// constellation can seed the identical shards per satellite plane.
+pub fn fleet_shards(n_workers: usize, samples_per_worker: usize, dim: usize, seed: u64) -> Vec<Shard> {
+    (0..n_workers)
+        .map(|i| {
+            let skew = if n_workers == 1 {
+                0.0
+            } else {
+                -1.0 + 2.0 * i as f32 / (n_workers - 1) as f32
+            };
+            make_shard(seed + i as u64, samples_per_worker, dim, skew)
+        })
+        .collect()
+}
+
 /// One worker's local training: `epochs` of SGD from the global weights.
 pub fn local_train(global: &LinearModel, shard: &Shard, epochs: usize, lr: f32, seed: u64) -> LinearModel {
     let mut m = global.clone();
@@ -99,11 +147,19 @@ pub fn local_train(global: &LinearModel, shard: &Shard, epochs: usize, lr: f32, 
     m
 }
 
-/// FedAvg: sample-count-weighted average of worker models.
-pub fn fedavg(models: &[(LinearModel, usize)]) -> LinearModel {
-    assert!(!models.is_empty());
-    let dim = models[0].0.w.len();
+/// FedAvg: sample-count-weighted average of the participating worker
+/// models.  Returns `None` when there is nothing to average — no
+/// participants, or every participating shard is empty (`total == 0`).
+/// The old unconditional division poisoned the global with NaNs on such
+/// rounds; callers keep the previous global instead, which is
+/// load-bearing once power gating can shrink the participant set to
+/// nothing.
+pub fn fedavg(models: &[(LinearModel, usize)]) -> Option<LinearModel> {
     let total: f32 = models.iter().map(|(_, n)| *n as f32).sum();
+    if models.is_empty() || total <= 0.0 {
+        return None;
+    }
+    let dim = models[0].0.w.len();
     let mut out = LinearModel::zeros(dim);
     for (m, n) in models {
         let a = *n as f32 / total;
@@ -112,7 +168,7 @@ pub fn fedavg(models: &[(LinearModel, usize)]) -> LinearModel {
         }
         out.b += a * m.b;
     }
-    out
+    Some(out)
 }
 
 pub fn accuracy(m: &LinearModel, shard: &Shard) -> f64 {
@@ -128,6 +184,74 @@ pub fn accuracy(m: &LinearModel, shard: &Shard) -> f64 {
     correct as f64 / shard.len() as f64
 }
 
+/// Outcome of [`train_schedule`]: the aggregated global model plus the
+/// round-by-round accounting the fleet report surfaces.
+#[derive(Clone, Debug)]
+pub struct FleetTrainingReport {
+    pub global: LinearModel,
+    /// Global test accuracy after each round (held rounds repeat the
+    /// previous value — the global did not move).
+    pub acc_history: Vec<f64>,
+    /// Total weight bytes the participating workers uplinked.
+    pub uplink_bytes: u64,
+    /// Rounds where FedAvg aggregated at least one sample-bearing model.
+    pub rounds_aggregated: usize,
+    /// Rounds where no participant contributed samples: the previous
+    /// global was kept (the [`fedavg`] guard in action).
+    pub rounds_held: usize,
+}
+
+impl FleetTrainingReport {
+    pub fn final_accuracy(&self) -> f64 {
+        self.acc_history.last().copied().unwrap_or(0.0)
+    }
+}
+
+/// Partial-participation FedAvg over `rounds` rounds: worker `w` trains
+/// in round `r` only when `participates(r, w)`.  With full participation
+/// this is exactly the classic loop [`run_federated`] runs; with a
+/// power-gated schedule each round averages whichever subset the
+/// satellites' batteries allowed, and an empty round keeps the previous
+/// global.
+pub fn train_schedule(
+    shards: &[Shard],
+    test: &Shard,
+    rounds: usize,
+    mut participates: impl FnMut(usize, usize) -> bool,
+    epochs: usize,
+    lr: f32,
+    dim: usize,
+    seed: u64,
+) -> FleetTrainingReport {
+    let n_workers = shards.len();
+    let mut global = LinearModel::zeros(dim);
+    let mut acc_history = Vec::with_capacity(rounds);
+    let mut uplink_bytes = 0u64;
+    let mut rounds_aggregated = 0usize;
+    let mut rounds_held = 0usize;
+    for r in 0..rounds {
+        let locals: Vec<(LinearModel, usize)> = shards
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| participates(r, *i))
+            .map(|(i, s)| {
+                let m = local_train(&global, s, epochs, lr, seed + 100 + (r * n_workers + i) as u64);
+                uplink_bytes += m.wire_bytes();
+                (m, s.len())
+            })
+            .collect();
+        match fedavg(&locals) {
+            Some(g) => {
+                global = g;
+                rounds_aggregated += 1;
+            }
+            None => rounds_held += 1,
+        }
+        acc_history.push(accuracy(&global, test));
+    }
+    FleetTrainingReport { global, acc_history, uplink_bytes, rounds_aggregated, rounds_held }
+}
+
 /// Run `rounds` of federated training over `n_workers` non-IID shards.
 /// Returns (model, per-round test accuracy, total uplink bytes).
 pub fn run_federated(
@@ -137,34 +261,131 @@ pub fn run_federated(
     dim: usize,
     seed: u64,
 ) -> (LinearModel, Vec<f64>, u64) {
-    let shards: Vec<Shard> = (0..n_workers)
-        .map(|i| {
-            let skew = if n_workers == 1 {
-                0.0
-            } else {
-                -1.0 + 2.0 * i as f32 / (n_workers - 1) as f32
-            };
-            make_shard(seed + i as u64, samples_per_worker, dim, skew)
-        })
-        .collect();
+    let shards = fleet_shards(n_workers, samples_per_worker, dim, seed);
     let test = make_shard(seed + 10_000, 2000, dim, 0.0);
-    let mut global = LinearModel::zeros(dim);
-    let mut acc_history = Vec::with_capacity(rounds);
-    let mut uplink_bytes = 0u64;
-    for r in 0..rounds {
-        let locals: Vec<(LinearModel, usize)> = shards
-            .iter()
-            .enumerate()
-            .map(|(i, s)| {
-                let m = local_train(&global, s, 2, 0.05, seed + 100 + (r * n_workers + i) as u64);
-                uplink_bytes += m.wire_bytes();
-                (m, s.len())
-            })
-            .collect();
-        global = fedavg(&locals);
-        acc_history.push(accuracy(&global, &test));
+    let rep = train_schedule(&shards, &test, rounds, |_, _| true, 2, 0.05, dim, seed);
+    (rep.global, rep.acc_history, rep.uplink_bytes)
+}
+
+/// Per-satellite federated scheduling outcome — the counters that must
+/// reconcile (`rounds_completed + rounds_skipped_power ==
+/// rounds_scheduled`) and the per-round participant record the fleet
+/// aggregation replays.
+#[derive(Clone, Debug, Default)]
+pub struct FederatedStats {
+    /// Rounds the mission horizon schedules (one per `round_interval_s`).
+    pub rounds_scheduled: u64,
+    /// Rounds this satellite trained and uplinked weights for.
+    pub rounds_completed: u64,
+    /// Rounds skipped because SoC sat below the `min_soc` gate.
+    pub rounds_skipped_power: u64,
+    /// Weight bytes queued for uplink (`wire_bytes` per completed round).
+    pub uplink_bytes: u64,
+    /// Per-round participation, indexed by round.
+    pub participated: Vec<bool>,
+}
+
+/// One scheduling decision: round `round` fired at virtual time `due_s`.
+#[derive(Clone, Copy, Debug)]
+pub struct RoundDecision {
+    pub round: usize,
+    pub due_s: f64,
+    pub participated: bool,
+}
+
+/// Mission-time round clock for one satellite.  Rounds are due at
+/// `round_interval_s * (r + 1)`; the caller polls with its current
+/// mission time and (when the power subsystem is on) battery SoC, and
+/// the scheduler decides every round that has come due: participate at
+/// or above `min_soc`, skip below it.  Decisions are functions of
+/// mission time and SoC alone, so governed runs stay deterministic.
+#[derive(Clone, Debug)]
+pub struct FedScheduler {
+    interval_s: f64,
+    min_soc: f64,
+    wire_bytes: u64,
+    rounds_scheduled: usize,
+    next_round: usize,
+    pub stats: FederatedStats,
+}
+
+impl FedScheduler {
+    pub fn new(fed: &FederatedConfig, horizon_s: f64) -> FedScheduler {
+        let rounds_scheduled = Self::rounds_in(horizon_s, fed.round_interval_s);
+        FedScheduler {
+            interval_s: fed.round_interval_s,
+            min_soc: fed.min_soc,
+            wire_bytes: wire_bytes_for_dim(fed.dim),
+            rounds_scheduled,
+            next_round: 0,
+            stats: FederatedStats {
+                rounds_scheduled: rounds_scheduled as u64,
+                ..FederatedStats::default()
+            },
+        }
     }
-    (global, acc_history, uplink_bytes)
+
+    /// Rounds a mission horizon schedules at a given interval — shared
+    /// by the scheduler and the fleet aggregation so they can never
+    /// disagree on the round count.
+    pub fn rounds_in(horizon_s: f64, interval_s: f64) -> usize {
+        if interval_s <= 0.0 {
+            return 0;
+        }
+        (horizon_s / interval_s).floor().max(0.0) as usize
+    }
+
+    /// Uplink bytes one completed round queues.
+    pub fn wire_bytes(&self) -> u64 {
+        self.wire_bytes
+    }
+
+    /// Due time of the next undecided round, if any remain.
+    pub fn due_next(&self) -> Option<f64> {
+        if self.next_round < self.rounds_scheduled {
+            Some((self.next_round as f64 + 1.0) * self.interval_s)
+        } else {
+            None
+        }
+    }
+
+    /// Decide every round due by mission time `t` with the SoC observed
+    /// now (`None` = no power subsystem, nothing skips).
+    pub fn poll(&mut self, t: f64, soc: Option<f64>) -> Vec<RoundDecision> {
+        let mut out = Vec::new();
+        while let Some(due) = self.due_next().filter(|d| *d <= t) {
+            out.push(self.decide(due, soc));
+        }
+        out
+    }
+
+    /// Decide every round still outstanding — the end-of-mission flush,
+    /// immune to f64 rounding at the horizon boundary.
+    pub fn finish(&mut self, soc: Option<f64>) -> Vec<RoundDecision> {
+        let mut out = Vec::new();
+        while let Some(due) = self.due_next() {
+            out.push(self.decide(due, soc));
+        }
+        out
+    }
+
+    fn decide(&mut self, due_s: f64, soc: Option<f64>) -> RoundDecision {
+        // `None` = no power subsystem: the gate is inert
+        let participated = match soc {
+            Some(s) => s >= self.min_soc,
+            None => true,
+        };
+        let round = self.next_round;
+        self.next_round += 1;
+        self.stats.participated.push(participated);
+        if participated {
+            self.stats.rounds_completed += 1;
+            self.stats.uplink_bytes += self.wire_bytes;
+        } else {
+            self.stats.rounds_skipped_power += 1;
+        }
+        RoundDecision { round, due_s, participated }
+    }
 }
 
 #[cfg(test)]
@@ -175,10 +396,97 @@ mod tests {
     fn fedavg_weighted_mean() {
         let a = LinearModel { w: vec![1.0, 0.0], b: 1.0 };
         let b = LinearModel { w: vec![0.0, 1.0], b: 0.0 };
-        let m = fedavg(&[(a, 100), (b, 300)]);
+        let m = fedavg(&[(a, 100), (b, 300)]).unwrap();
         assert!((m.w[0] - 0.25).abs() < 1e-6);
         assert!((m.w[1] - 0.75).abs() < 1e-6);
         assert!((m.b - 0.25).abs() < 1e-6);
+    }
+
+    #[test]
+    fn fedavg_guards_zero_total() {
+        // regression: an empty round or all-empty shards used to divide
+        // by zero and fill the global with NaNs
+        assert!(fedavg(&[]).is_none());
+        let m = LinearModel::zeros(4);
+        assert!(fedavg(&[(m.clone(), 0), (m, 0)]).is_none());
+    }
+
+    #[test]
+    fn empty_participation_keeps_previous_global_nan_free() {
+        let shards = fleet_shards(3, 100, 8, 1);
+        let test = make_shard(10_001, 500, 8, 0.0);
+        // every round skipped: the global never moves and never poisons
+        let rep = train_schedule(&shards, &test, 5, |_, _| false, 2, 0.05, 8, 1);
+        assert_eq!(rep.rounds_aggregated, 0);
+        assert_eq!(rep.rounds_held, 5);
+        assert_eq!(rep.uplink_bytes, 0);
+        assert!(rep.global.w.iter().all(|w| w.is_finite()) && rep.global.b.is_finite());
+        // zero-sample shards participating must not poison either: the
+        // models cross the wire but there is nothing to average
+        let empty = fleet_shards(3, 0, 8, 1);
+        let rep2 = train_schedule(&empty, &test, 3, |_, _| true, 2, 0.05, 8, 1);
+        assert_eq!(rep2.rounds_held, 3);
+        assert_eq!(rep2.uplink_bytes, 3 * 3 * 36);
+        assert!(rep2.global.w.iter().all(|w| w.is_finite()) && rep2.global.b.is_finite());
+    }
+
+    #[test]
+    fn partial_participation_still_converges() {
+        let shards = fleet_shards(4, 400, 8, 7);
+        let test = make_shard(7 + 10_000, 2000, 8, 0.0);
+        // a rotating worker drops out every round
+        let rep = train_schedule(&shards, &test, 12, |r, w| w != r % 4, 2, 0.05, 8, 7);
+        assert_eq!(rep.rounds_aggregated, 12);
+        assert_eq!(rep.rounds_held, 0);
+        let f = rep.final_accuracy();
+        assert!(f > 0.8, "partial-participation accuracy {f}");
+        // 3 of 4 workers ship weights each round
+        assert_eq!(rep.uplink_bytes, 12 * 3 * 36);
+    }
+
+    #[test]
+    fn scheduler_counters_reconcile() {
+        let fed = FederatedConfig {
+            enabled: true,
+            round_interval_s: 100.0,
+            ..FederatedConfig::default()
+        };
+        let mut s = FedScheduler::new(&fed, 1000.0);
+        assert_eq!(s.stats.rounds_scheduled, 10);
+        // below the gate for the first half of the mission
+        let d1 = s.poll(500.0, Some(fed.min_soc - 0.1));
+        assert_eq!(d1.len(), 5);
+        assert!(d1.iter().all(|d| !d.participated));
+        assert!((d1[0].due_s - 100.0).abs() < 1e-9);
+        // nothing new until time moves
+        assert!(s.poll(500.0, Some(1.0)).is_empty());
+        // above the gate for the rest; finish flushes to the horizon
+        let d2 = s.finish(Some(fed.min_soc + 0.1));
+        assert_eq!(d2.len(), 5);
+        assert!(d2.iter().all(|d| d.participated));
+        assert_eq!(
+            s.stats.rounds_completed + s.stats.rounds_skipped_power,
+            s.stats.rounds_scheduled
+        );
+        assert_eq!(s.stats.participated.len() as u64, s.stats.rounds_scheduled);
+        assert_eq!(s.stats.uplink_bytes, 5 * s.wire_bytes());
+    }
+
+    #[test]
+    fn scheduler_without_power_never_skips() {
+        let fed = FederatedConfig {
+            enabled: true,
+            round_interval_s: 500.0,
+            min_soc: 0.99,
+            ..FederatedConfig::default()
+        };
+        let mut s = FedScheduler::new(&fed, 5_000.0);
+        // soc = None (power subsystem off): the gate is inert
+        let d = s.poll(5_000.0, None);
+        assert_eq!(d.len(), 10);
+        assert!(d.iter().all(|x| x.participated));
+        assert!(s.finish(None).is_empty());
+        assert_eq!(s.stats.rounds_skipped_power, 0);
     }
 
     #[test]
@@ -215,12 +523,14 @@ mod tests {
         let (_, _, bytes) = run_federated(3, 5, 100, 8, 1);
         // 3 workers * 5 rounds * (8+1)*4 bytes
         assert_eq!(bytes, 3 * 5 * 36);
+        assert_eq!(wire_bytes_for_dim(8), 36);
     }
 
     #[test]
     fn only_weights_cross_the_wire() {
         let m = LinearModel::zeros(16);
         assert_eq!(m.wire_bytes(), 17 * 4);
+        assert_eq!(m.wire_bytes(), wire_bytes_for_dim(16));
         // raw shard would be orders of magnitude larger
         let shard_bytes = 400 * 16 * 4;
         assert!(m.wire_bytes() * 100 < shard_bytes);

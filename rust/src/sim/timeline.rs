@@ -138,7 +138,12 @@ impl Timeline {
     /// result is ready).  Duty cycles come out at the configured nominal
     /// values, which keeps pre-`sim` results bit-identical.
     pub fn degenerate(timing: &TimingConfig, horizon_s: f64) -> Timeline {
-        let contacts = vec![ContactWindow { aos: 0.0, los: horizon_s, max_elevation_deg: 90.0 }];
+        let contacts = vec![ContactWindow {
+            aos: 0.0,
+            los: horizon_s,
+            max_elevation_deg: 90.0,
+            truncated: false,
+        }];
         Timeline {
             clock: MissionClock::new(),
             timing: timing.clone(),
@@ -247,6 +252,9 @@ impl Timeline {
                         aos: start,
                         los: end,
                         max_elevation_deg: w.max_elevation_deg,
+                        // slices inherit the source pass's flag; being a
+                        // mid-pass clip is what `closes_pass` expresses
+                        truncated: w.truncated,
                     },
                     closes_pass,
                 });
@@ -353,6 +361,65 @@ mod tests {
         assert_eq!(tail[0].window.aos, 60.0);
         assert_eq!(tail[0].window.los, 100.0);
         assert!(tail[0].closes_pass, "the horizon closes the pass");
+        assert!(tl.remaining_contacts().is_empty());
+    }
+
+    /// Two back-to-back physical passes sharing the t = 200 boundary.
+    fn two_windows() -> Timeline {
+        let w = |aos: f64, los: f64| ContactWindow {
+            aos,
+            los,
+            max_elevation_deg: 45.0,
+            truncated: false,
+        };
+        Timeline {
+            clock: MissionClock::new(),
+            timing: timing(),
+            contacts: vec![w(100.0, 200.0), w(200.0, 300.0)],
+            next_contact: 0,
+            consumed_to: 0.0,
+            sunlit: None,
+            horizon_s: 400.0,
+        }
+    }
+
+    #[test]
+    fn due_contacts_at_exact_los_neither_double_spends_nor_drops() {
+        let mut tl = two_windows();
+        // query exactly at the first window's LOS (half-open [aos, los)):
+        // the whole first pass comes out, closed, and none of the second
+        let first = tl.due_contacts(200.0);
+        assert_eq!(first.len(), 1);
+        assert_eq!(first[0].window.aos, 100.0);
+        assert_eq!(first[0].window.los, 200.0);
+        assert!(first[0].closes_pass);
+        // same instant again: the shared boundary was consumed exactly once
+        assert!(tl.due_contacts(200.0).is_empty());
+        // the second pass starts at the shared boundary, intact
+        let second = tl.due_contacts(300.0);
+        assert_eq!(second.len(), 1);
+        assert_eq!(second[0].window.aos, 200.0);
+        assert_eq!(second[0].window.los, 300.0);
+        assert!(second[0].closes_pass);
+        assert!(tl.remaining_contacts().is_empty());
+    }
+
+    #[test]
+    fn back_to_back_windows_conserve_airtime_across_query_patterns() {
+        let mut tl = two_windows();
+        let mut total = 0.0;
+        let mut slices = 0;
+        // repeated instants, a query landing on the shared boundary, and
+        // mid-pass queries: every slice positive, airtime conserved
+        for t in [150.0, 200.0, 200.0, 250.0, 260.0, 400.0] {
+            for s in tl.due_contacts(t) {
+                assert!(s.window.los > s.window.aos, "zero-length slice handed out");
+                total += s.window.duration_s();
+                slices += 1;
+            }
+        }
+        assert!((total - 200.0).abs() < 1e-9, "consumed {total} of 200 s");
+        assert_eq!(slices, 5);
         assert!(tl.remaining_contacts().is_empty());
     }
 

@@ -1,0 +1,214 @@
+//! Power-aware federated scheduling invariants (ISSUE 4 acceptance):
+//!
+//! * round counters reconcile per satellite
+//!   (`rounds_completed + rounds_skipped_power == rounds_scheduled`);
+//! * an eclipse-heavy mission on an undersized battery skips rounds for
+//!   power and still completes others once sunlight recovers the SoC;
+//! * with `federated.enabled = false` (the default) no federated state
+//!   exists anywhere in the reports or telemetry;
+//! * federated uplink bytes appear in the downlink/link accounting when
+//!   rounds run through the constellation.
+//!
+//! The flight-profile tests are artifact-free (they exercise
+//! `power::fly_federated_mission` over a real orbital [`Timeline`]); the
+//! constellation tests need `rust/artifacts/` like every other
+//! integration test and skip when it is absent.
+
+use tiansuan::config::{Config, EnergyConfig, FederatedConfig, PowerConfig, TimingConfig};
+use tiansuan::coordinator::run_constellation;
+use tiansuan::data::Version;
+use tiansuan::orbit::{baoyun, beijing_station};
+use tiansuan::power::{fly_federated_mission, PowerState};
+use tiansuan::runtime::Runtime;
+use tiansuan::sedna::federated::{self, FedScheduler};
+use tiansuan::sim::{DutyCycles, Timeline};
+
+fn rt() -> Option<Runtime> {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    if !std::path::Path::new(dir).join("manifest.json").exists() {
+        eprintln!("skipping: artifacts/ not built");
+        return None;
+    }
+    Some(Runtime::open(dir).unwrap())
+}
+
+/// Baoyun over Beijing: ~38% of every revolution in Earth's shadow.
+fn orbital_timeline(horizon_s: f64) -> Timeline {
+    Timeline::orbital(&TimingConfig::default(), &baoyun(), &beijing_station(), horizon_s, 10.0)
+}
+
+/// Undersized for the full-duty mission (same profile as the power
+/// invariant tests): the governor and the SoC gate must both bite.
+fn eclipse_heavy_power(battery_wh: f64) -> PowerConfig {
+    PowerConfig {
+        enabled: true,
+        battery_wh,
+        panel_w: 95.0,
+        cosine_derate: 0.8,
+        charge_eff: 0.95,
+        discharge_eff: 0.95,
+        initial_soc: 0.4,
+        soc_defer: 0.6,
+        soc_critical: 0.3,
+        defer_tighten: 0.2,
+    }
+}
+
+fn low_idle() -> EnergyConfig {
+    EnergyConfig { pi_idle_floor: 0.0, comm_idle_floor: 0.0 }
+}
+
+fn fed_cfg(round_interval_s: f64, min_soc: f64) -> FederatedConfig {
+    FederatedConfig { enabled: true, round_interval_s, min_soc, ..FederatedConfig::default() }
+}
+
+#[test]
+fn soc_gate_skips_rounds_in_eclipse_and_counters_reconcile() {
+    let horizon = 23_000.0; // ~4 revolutions
+    let tl = orbital_timeline(horizon);
+    let fed = fed_cfg(600.0, 0.6);
+    let train_s = federated::train_seconds(fed.epochs, fed.samples_per_node);
+    let mut state = PowerState::new(&eclipse_heavy_power(60.0), &low_idle());
+    let mut sched = FedScheduler::new(&fed, horizon);
+    let active = DutyCycles { compute: 1.0, comm: 1.0, camera: 1.0 };
+    fly_federated_mission(&mut state, &mut sched, &tl, active, 30.0, train_s);
+
+    let s = &sched.stats;
+    assert_eq!(s.rounds_scheduled, 38, "23000 s / 600 s rounds");
+    assert_eq!(s.rounds_completed + s.rounds_skipped_power, s.rounds_scheduled);
+    assert_eq!(s.participated.len() as u64, s.rounds_scheduled);
+    assert!(
+        s.rounds_skipped_power > 0,
+        "an undersized battery through eclipse must skip rounds (completed {})",
+        s.rounds_completed
+    );
+    assert!(
+        s.rounds_completed > 0,
+        "sunlit recovery above min_soc must complete rounds (skipped {})",
+        s.rounds_skipped_power
+    );
+    assert_eq!(s.uplink_bytes, s.rounds_completed * sched.wire_bytes());
+    assert!(state.stats.training_wh > 0.0, "completed rounds must draw training energy");
+    // the training draw is part of total consumption, not beside it
+    assert!(state.stats.consumed_wh > state.stats.training_wh);
+}
+
+#[test]
+fn federated_mission_is_deterministic() {
+    let horizon = 12_000.0;
+    let tl = orbital_timeline(horizon);
+    let fed = fed_cfg(700.0, 0.55);
+    let train_s = federated::train_seconds(fed.epochs, fed.samples_per_node);
+    let active = DutyCycles { compute: 0.9, comm: 0.1, camera: 0.1 };
+    let fly = || {
+        let mut state = PowerState::new(&eclipse_heavy_power(40.0), &low_idle());
+        let mut sched = FedScheduler::new(&fed, horizon);
+        fly_federated_mission(&mut state, &mut sched, &tl, active, 30.0, train_s);
+        (sched.stats.participated.clone(), state.stats.final_soc_frac.to_bits())
+    };
+    assert_eq!(fly(), fly(), "participation and SoC must be pure mission-time functions");
+}
+
+#[test]
+fn oversized_battery_never_skips_a_round() {
+    let horizon = 23_000.0;
+    let tl = orbital_timeline(horizon);
+    let fed = fed_cfg(600.0, 0.6);
+    let train_s = federated::train_seconds(fed.epochs, fed.samples_per_node);
+    let mut power = eclipse_heavy_power(100_000.0);
+    power.initial_soc = 1.0;
+    let mut state = PowerState::new(&power, &low_idle());
+    let mut sched = FedScheduler::new(&fed, horizon);
+    let active = DutyCycles { compute: 1.0, comm: 1.0, camera: 1.0 };
+    fly_federated_mission(&mut state, &mut sched, &tl, active, 30.0, train_s);
+    assert_eq!(sched.stats.rounds_skipped_power, 0);
+    assert_eq!(sched.stats.rounds_completed, sched.stats.rounds_scheduled);
+}
+
+fn small_cfg() -> Config {
+    let mut cfg = Config::default();
+    cfg.scene_cells = 4;
+    cfg.constellation.satellites = 1;
+    cfg.constellation.scenes_per_satellite = 3;
+    cfg.loss_profile = "lossless".into();
+    cfg
+}
+
+#[test]
+fn disabled_federated_reports_nothing() {
+    let Some(rt) = rt() else { return };
+    let report = run_constellation(&rt, &small_cfg(), Version::V2).unwrap();
+    assert!(report.federated.is_none());
+    let sat = &report.satellites[0];
+    assert!(sat.federated.is_none());
+    assert!(sat.result.federated.is_none());
+    assert_eq!(sat.downlink.weights_bytes, 0);
+    assert!(!report.telemetry.contains("federated."), "{}", report.telemetry);
+}
+
+#[test]
+fn constellation_rounds_reconcile_and_weights_cross_the_link() {
+    let Some(rt) = rt() else { return };
+    let mut cfg = small_cfg();
+    cfg.constellation.satellites = 2;
+    cfg.constellation.ideal_contact = true; // every queued weight gets airtime
+    cfg.federated.enabled = true;
+    // 21 rounds, the last due 600 s before the horizon so its weights
+    // are ready while the window is still open
+    cfg.federated.round_interval_s = 1000.0;
+    let rounds =
+        FedScheduler::rounds_in(cfg.constellation.horizon_s, cfg.federated.round_interval_s);
+    let report = run_constellation(&rt, &cfg, Version::V2).unwrap();
+
+    let fleet = report.federated.as_ref().expect("fleet training report");
+    assert_eq!(fleet.acc_history.len(), rounds);
+    assert_eq!(fleet.rounds_aggregated + fleet.rounds_held, rounds);
+    assert!(
+        fleet.final_accuracy() > 0.5,
+        "two honest workers must beat a coin flip: {}",
+        fleet.final_accuracy()
+    );
+    let wire = federated::wire_bytes_for_dim(cfg.federated.dim);
+    for sat in &report.satellites {
+        let f = sat.federated.as_ref().expect("per-sat federated stats");
+        assert_eq!(f.rounds_scheduled as usize, rounds);
+        assert_eq!(f.rounds_completed + f.rounds_skipped_power, f.rounds_scheduled);
+        assert_eq!(f.rounds_skipped_power, 0, "power disabled: nothing skips");
+        assert_eq!(f.uplink_bytes, f.rounds_completed * wire);
+        // federated uplink shows up in the link books
+        assert_eq!(sat.downlink.weights_bytes, f.uplink_bytes);
+        assert_eq!(
+            sat.downlink.total_bytes(),
+            sat.downlink.results_bytes + sat.downlink.image_bytes + sat.downlink.weights_bytes
+        );
+        assert_eq!(sat.result.federated.as_ref().unwrap().rounds_completed, f.rounds_completed);
+    }
+    assert!(report.telemetry.contains("federated.rounds.sat-0"), "{}", report.telemetry);
+    assert!(report.telemetry.contains("gauge federated.accuracy_pct"), "{}", report.telemetry);
+}
+
+#[test]
+fn eclipse_heavy_constellation_skips_rounds_for_power() {
+    let Some(rt) = rt() else { return };
+    let mut cfg = small_cfg();
+    cfg.federated.enabled = true;
+    cfg.federated.round_interval_s = 600.0;
+    cfg.federated.min_soc = 0.6;
+    cfg.power = eclipse_heavy_power(60.0);
+    cfg.energy = low_idle();
+    let report = run_constellation(&rt, &cfg, Version::V2).unwrap();
+    let sat = &report.satellites[0];
+    let f = sat.federated.as_ref().expect("per-sat federated stats");
+    assert!(
+        f.rounds_skipped_power > 0,
+        "eclipse-heavy undersized mission must report rounds_skipped_power"
+    );
+    assert_eq!(f.rounds_completed + f.rounds_skipped_power, f.rounds_scheduled);
+    assert!(report.telemetry.contains("federated.skipped_power.sat-0"), "{}", report.telemetry);
+    let fleet = report.federated.as_ref().expect("fleet report");
+    assert_eq!(
+        fleet.rounds_aggregated + fleet.rounds_held,
+        f.rounds_scheduled as usize,
+        "every scheduled round is either aggregated or held"
+    );
+}
