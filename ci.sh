@@ -56,4 +56,14 @@ grep '^{"bench"' "$bench_log" >> ../BENCH_federated.json || true
 rm -f "$bench_log"
 echo "BENCH_federated.json now holds $(wc -l < ../BENCH_federated.json) records"
 
+echo "== bench artifact: perf_datapath -> BENCH_datapath.json =="
+# artifact-free (pooled tiling + marshalling vs retained naive path, stub
+# onboard loop): always recorded
+bench_log=$(mktemp)
+cargo bench --bench perf_datapath | tee "$bench_log"
+echo "{\"bench\":\"run\",\"commit\":\"$(git rev-parse --short HEAD 2>/dev/null || echo unknown)\",\"date\":\"$(date -u +%FT%TZ)\"}" >> ../BENCH_datapath.json
+grep '^{"bench"' "$bench_log" >> ../BENCH_datapath.json || true
+rm -f "$bench_log"
+echo "BENCH_datapath.json now holds $(wc -l < ../BENCH_datapath.json) records"
+
 echo "ci: all gates passed"

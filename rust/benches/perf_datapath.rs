@@ -1,0 +1,229 @@
+//! Perf: the zero-copy hot data path — pooled row-sliced tiling +
+//! scratch-batched marshalling vs the retained pre-refactor naive path.
+//!
+//! Artifact-free by design (no PJRT runtime): the measured work is the
+//! data movement *around* the model — cut, batch, gather, tail pad —
+//! which is exactly what the zero-copy PR rebuilt.  The naive reference
+//! (`naive_split` + `naive_marshal`) is the seed implementation kept
+//! verbatim for comparison; the acceptance bar is ≥2× tiles/sec on the
+//! combined tiling+marshalling flow.  A stub-runtime `onboard_scene`
+//! loop (split → cloud-filter stub → batcher → gather → decode → NMS →
+//! route) reports scenes/sec and the pool hit rate.  Emits the standard
+//! bench JSON that `ci.sh` greps into `BENCH_datapath.json`.
+
+use std::hint::black_box;
+use std::time::Duration;
+
+use tiansuan::coordinator::batcher::Batcher;
+use tiansuan::coordinator::router::{route, RouterPolicy, RouterStats};
+use tiansuan::data::{
+    gather_pixels, reference_cut, split_scene_pooled, Scene, SceneGen, Tile, Version, MODEL_TILE,
+    TILE_PX,
+};
+use tiansuan::detect::{decode_rows, nms};
+use tiansuan::util::bench;
+use tiansuan::util::buffer::PixelPool;
+use tiansuan::util::rng::Rng;
+
+/// Largest exported artifact batch (manifest.batch_sizes max in the
+/// real runtime) — the marshalling chunk size.
+const MAX_BATCH: usize = 8;
+
+/// The seed split: [`reference_cut`] (the frozen pre-refactor per-pixel
+/// implementation, shared with `tests/datapath_golden.rs` so the perf
+/// baseline and the correctness golden can never diverge) over the
+/// fragment grid, fresh 48 KB Vec + GT rescale per tile.
+fn naive_split(scene: &Scene, frag: usize) -> Vec<Vec<f32>> {
+    let mut tiles = Vec::with_capacity((scene.width / frag) * (scene.height / frag));
+    for y0 in (0..scene.height).step_by(frag) {
+        for x0 in (0..scene.width).step_by(frag) {
+            let (pixels, gt) = reference_cut(scene, x0, y0, frag);
+            black_box(gt); // the pooled path builds GT too — keep it fair
+            tiles.push(pixels);
+        }
+    }
+    tiles
+}
+
+/// The seed marshal: per-chunk concat Vec, tail re-copied + resized —
+/// the `infer` + `execute` allocation chain before the scratch pool.
+fn naive_marshal(tiles: &[Vec<f32>]) -> f32 {
+    let mut acc = 0.0f32;
+    for chunk in tiles.chunks(MAX_BATCH) {
+        let mut input = Vec::with_capacity(chunk.len() * TILE_PX);
+        for t in chunk {
+            input.extend_from_slice(t);
+        }
+        if chunk.len() < MAX_BATCH {
+            let mut padded = input.to_vec();
+            padded.resize(MAX_BATCH * TILE_PX, 0.0);
+            acc += padded[0] + padded[MAX_BATCH * TILE_PX - 1];
+        } else {
+            acc += input[0];
+        }
+    }
+    acc
+}
+
+/// Tiles marshalled per scene: all but the last 3, so every frag size
+/// ends on a ragged tail and both paths pay their padding step.
+fn marshal_count(n_tiles: usize) -> usize {
+    n_tiles - 3
+}
+
+/// The zero-copy flow: pooled row-sliced split, gather into pooled
+/// dirty scratch, ragged tail padded in place (only the pad rows are
+/// zeroed) — the same steps `infer` + `execute` take.
+fn pooled_flow(scene: &Scene, frag: usize, tiles: &PixelPool, marshal: &PixelPool) -> f32 {
+    let split = split_scene_pooled(scene, frag, tiles);
+    let batch = &split[..marshal_count(split.len())];
+    let mut scratch = marshal.checkout_dirty();
+    let mut acc = 0.0f32;
+    for chunk in batch.chunks(MAX_BATCH) {
+        let n = gather_pixels(chunk, &mut scratch);
+        if chunk.len() < MAX_BATCH {
+            let mut padded = marshal.checkout_dirty();
+            padded[..n].copy_from_slice(&scratch[..n]);
+            padded[n..MAX_BATCH * TILE_PX].fill(0.0);
+            acc += padded[0] + padded[MAX_BATCH * TILE_PX - 1];
+        } else {
+            acc += scratch[0];
+        }
+    }
+    acc
+}
+
+fn main() {
+    let scene = SceneGen::new(7, Version::V2.spec(), 8, 8).capture(); // 512x512
+    let tile_pool = PixelPool::new(TILE_PX);
+    let marshal_pool = PixelPool::new(MAX_BATCH * TILE_PX);
+
+    println!("=== perf_datapath: pooled row-sliced tiling + scratch marshalling vs naive ===");
+    let mut naive_total_s = 0.0;
+    let mut pooled_total_s = 0.0;
+    let mut total_tiles = 0.0;
+    for frag in [32usize, 64, 128] {
+        let n_tiles = ((scene.width / frag) * (scene.height / frag)) as f64;
+        let naive = bench::run(
+            &format!("datapath/naive/frag{frag}"),
+            10,
+            Duration::from_millis(300),
+            || {
+                let tiles = naive_split(&scene, frag);
+                black_box(naive_marshal(&tiles[..marshal_count(tiles.len())]));
+            },
+        );
+        let pooled = bench::run(
+            &format!("datapath/pooled/frag{frag}"),
+            10,
+            Duration::from_millis(300),
+            || {
+                black_box(pooled_flow(&scene, frag, &tile_pool, &marshal_pool));
+            },
+        );
+        let naive_tps = n_tiles / naive.median.as_secs_f64();
+        let pooled_tps = n_tiles / pooled.median.as_secs_f64();
+        bench::json_line(
+            "perf_datapath.tile_marshal",
+            &[
+                ("frag", frag as f64),
+                ("tiles", n_tiles),
+                ("naive_tiles_per_s", naive_tps),
+                ("pooled_tiles_per_s", pooled_tps),
+                ("speedup", pooled_tps / naive_tps),
+            ],
+        );
+        naive_total_s += naive.median.as_secs_f64();
+        pooled_total_s += pooled.median.as_secs_f64();
+        total_tiles += n_tiles;
+    }
+    let stats = tile_pool.stats();
+    let agg_naive = total_tiles / naive_total_s;
+    let agg_pooled = total_tiles / pooled_total_s;
+    println!(
+        "datapath aggregate: naive {agg_naive:.0} tiles/s, pooled {agg_pooled:.0} tiles/s \
+         ({:.2}x), tile-pool hit rate {:.1}% ({} allocs / {} checkouts)",
+        agg_pooled / agg_naive,
+        100.0 * stats.hit_rate(),
+        stats.allocs,
+        stats.checkouts,
+    );
+    bench::json_line(
+        "perf_datapath.tile_marshal_total",
+        &[
+            ("naive_tiles_per_s", agg_naive),
+            ("pooled_tiles_per_s", agg_pooled),
+            ("speedup", agg_pooled / agg_naive),
+            ("pool_hit_rate", stats.hit_rate()),
+            ("pool_allocs", stats.allocs as f64),
+        ],
+    );
+
+    // ---- scenes/sec through the onboard hot loop with a stub runtime ----
+    // Split → cloud-filter stub (the CloudScore white-fraction statistic
+    // recomputed in rust) → batcher → gather → decode → NMS → route: the
+    // full onboard data movement with inference stubbed by synthetic
+    // model rows, so the bench isolates the coordinator's share.
+    let (grid, head_d) = (8usize, 13usize);
+    let cols = grid * grid * head_d;
+    let mut rng = Rng::new(3);
+    let rows: Vec<f32> = (0..MAX_BATCH * cols).map(|_| rng.f32()).collect();
+    let policy = RouterPolicy::default();
+    let pool = PixelPool::new(TILE_PX);
+    let scratch_pool = PixelPool::new(MAX_BATCH * TILE_PX);
+    let mut gen = SceneGen::new(21, Version::V2.spec(), 8, 8);
+    let scene = gen.capture();
+    let tiles_per_scene = (scene.width / 64) * (scene.height / 64);
+    let onboard = bench::run(
+        "datapath/onboard_scene_stub",
+        5,
+        Duration::from_millis(500),
+        || {
+            let split = split_scene_pooled(&scene, 64, &pool);
+            // cloud-filter stub: white fraction > 0.6 ⇒ redundant
+            let kept: Vec<Tile> = split
+                .into_iter()
+                .filter(|t| {
+                    let white = t
+                        .pixels
+                        .chunks_exact(3)
+                        .filter(|p| p[0].min(p[1]).min(p[2]) > 0.82)
+                        .count();
+                    (white as f32) < 0.6 * (MODEL_TILE * MODEL_TILE) as f32
+                })
+                .collect();
+            let mut batcher = Batcher::new(MAX_BATCH, 0.05);
+            for t in kept {
+                batcher.push(t, 0.0);
+            }
+            let mut stats = RouterStats::default();
+            let mut delays = Vec::with_capacity(MAX_BATCH);
+            let mut scratch = scratch_pool.checkout_dirty();
+            while let Some(batch) = batcher.pop(0.0, true, &mut delays) {
+                let n = gather_pixels(&batch, &mut scratch);
+                black_box(&scratch[..n]); // stub: the PJRT literal copy
+                for (i, t) in batch.iter().enumerate() {
+                    let r = &rows[i * cols..(i + 1) * cols];
+                    let dets = nms(decode_rows(r, head_d, 0.25), 0.45);
+                    let best = r.chunks_exact(head_d).map(|c| c[4]).fold(f32::MIN, f32::max);
+                    black_box(route(&policy, &dets, best, &mut stats));
+                    black_box(t.scene_id);
+                }
+            }
+        },
+    );
+    let s = pool.stats();
+    bench::json_line(
+        "perf_datapath.onboard_stub",
+        &[
+            ("scenes_per_s", 1.0 / onboard.median.as_secs_f64()),
+            ("tiles_per_scene", tiles_per_scene as f64),
+            (
+                "tiles_per_s",
+                tiles_per_scene as f64 / onboard.median.as_secs_f64(),
+            ),
+            ("pool_hit_rate", s.hit_rate()),
+            ("pool_allocs", s.allocs as f64),
+        ],
+    );
+}

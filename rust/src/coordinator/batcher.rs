@@ -31,8 +31,13 @@ impl Batcher {
 
     /// Pop a batch if (a) a full batch is available, or (b) the oldest
     /// tile has waited past the deadline, or (c) `flush` is set.
-    /// Returns (tiles, queue_delays).
-    pub fn pop(&mut self, now: f64, flush: bool) -> Option<(Vec<Tile>, Vec<f64>)> {
+    ///
+    /// Queue delays are returned through the caller-supplied `delays`
+    /// (cleared, then one entry per popped tile) so a hot loop that
+    /// polls per batch reuses one allocation instead of making — and
+    /// immediately discarding — a fresh `Vec` every pop.
+    pub fn pop(&mut self, now: f64, flush: bool, delays: &mut Vec<f64>) -> Option<Vec<Tile>> {
+        delays.clear();
         if self.queue.is_empty() {
             return None;
         }
@@ -40,13 +45,13 @@ impl Batcher {
         if self.queue.len() >= self.max_batch || oldest_wait >= self.max_wait_s || flush {
             let n = self.queue.len().min(self.max_batch);
             let mut tiles = Vec::with_capacity(n);
-            let mut delays = Vec::with_capacity(n);
+            delays.reserve(n);
             for _ in 0..n {
                 let (t, at) = self.queue.pop_front().unwrap();
                 tiles.push(t);
                 delays.push(now - at);
             }
-            Some((tiles, delays))
+            Some(tiles)
         } else {
             None
         }
@@ -58,7 +63,8 @@ mod tests {
     use super::*;
 
     fn tile() -> Tile {
-        Tile { scene_id: 0, x0: 0, y0: 0, frag: 64, pixels: vec![0.0; 64 * 64 * 3], gt: vec![] }
+        let pixels = vec![0.0; 64 * 64 * 3].into();
+        Tile { scene_id: 0, x0: 0, y0: 0, frag: 64, pixels, gt: vec![] }
     }
 
     #[test]
@@ -67,8 +73,10 @@ mod tests {
         for _ in 0..4 {
             b.push(tile(), 0.0);
         }
-        let (tiles, _) = b.pop(0.0, false).unwrap();
+        let mut delays = Vec::new();
+        let tiles = b.pop(0.0, false, &mut delays).unwrap();
         assert_eq!(tiles.len(), 4);
+        assert_eq!(delays.len(), 4);
         assert_eq!(b.pending(), 0);
     }
 
@@ -76,7 +84,7 @@ mod tests {
     fn partial_batch_waits() {
         let mut b = Batcher::new(4, 10.0);
         b.push(tile(), 0.0);
-        assert!(b.pop(1.0, false).is_none());
+        assert!(b.pop(1.0, false, &mut Vec::new()).is_none());
         assert_eq!(b.pending(), 1);
     }
 
@@ -84,7 +92,8 @@ mod tests {
     fn deadline_forces_partial_batch() {
         let mut b = Batcher::new(4, 10.0);
         b.push(tile(), 0.0);
-        let (tiles, delays) = b.pop(11.0, false).unwrap();
+        let mut delays = Vec::new();
+        let tiles = b.pop(11.0, false, &mut delays).unwrap();
         assert_eq!(tiles.len(), 1);
         assert!(delays[0] >= 10.0);
     }
@@ -94,7 +103,7 @@ mod tests {
         let mut b = Batcher::new(4, 10.0);
         b.push(tile(), 0.0);
         b.push(tile(), 0.0);
-        let (tiles, _) = b.pop(0.1, true).unwrap();
+        let tiles = b.pop(0.1, true, &mut Vec::new()).unwrap();
         assert_eq!(tiles.len(), 2);
     }
 
@@ -104,13 +113,15 @@ mod tests {
         for _ in 0..9 {
             b.push(tile(), 0.0);
         }
-        let (t1, _) = b.pop(0.0, false).unwrap();
+        let mut delays = Vec::new();
+        let t1 = b.pop(0.0, false, &mut delays).unwrap();
         assert_eq!(t1.len(), 4);
         assert_eq!(b.pending(), 5);
-        let (t2, _) = b.pop(0.0, false).unwrap();
+        let t2 = b.pop(0.0, false, &mut delays).unwrap();
         assert_eq!(t2.len(), 4);
-        let (t3, _) = b.pop(0.0, true).unwrap();
+        let t3 = b.pop(0.0, true, &mut delays).unwrap();
         assert_eq!(t3.len(), 1);
+        assert_eq!(delays.len(), 1, "delays must be cleared and refilled per pop");
     }
 
     #[test]
@@ -122,7 +133,7 @@ mod tests {
         t2.scene_id = 2;
         b.push(t1, 0.0);
         b.push(t2, 0.0);
-        let (tiles, _) = b.pop(0.0, false).unwrap();
+        let tiles = b.pop(0.0, false, &mut Vec::new()).unwrap();
         assert_eq!(tiles[0].scene_id, 1);
         assert_eq!(tiles[1].scene_id, 2);
     }

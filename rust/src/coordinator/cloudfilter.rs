@@ -7,7 +7,7 @@
 
 use anyhow::Result;
 
-use crate::data::Tile;
+use crate::data::{gather_pixels, Tile};
 use crate::runtime::{Model, Runtime};
 
 /// Per-tile cloud statistics (mirrors the kernel output row).
@@ -31,15 +31,14 @@ impl<'rt> CloudFilter<'rt> {
 
     /// Score a batch of tiles (any count; internally padded).
     pub fn score(&self, tiles: &[Tile]) -> Result<Vec<CloudStats>> {
-        let t = self.rt.manifest.tile;
         let max_b = self.rt.max_batch();
         let mut out = Vec::with_capacity(tiles.len());
+        // marshal through the runtime's pooled scratch instead of a
+        // fresh concat Vec per chunk
+        let mut scratch = self.rt.scratch_buf();
         for chunk in tiles.chunks(max_b) {
-            let mut input = Vec::with_capacity(chunk.len() * t * t * 3);
-            for tile in chunk {
-                input.extend_from_slice(&tile.pixels);
-            }
-            let rows = self.rt.execute(Model::CloudScore, chunk.len(), &input)?;
+            let n_px = gather_pixels(chunk, &mut scratch);
+            let rows = self.rt.execute(Model::CloudScore, chunk.len(), &scratch[..n_px])?;
             for r in rows.chunks_exact(3) {
                 out.push(CloudStats { mean_lum: r[0], var_lum: r[1], white_frac: r[2] });
             }

@@ -277,6 +277,12 @@ pub fn run_constellation(rt: &Runtime, cfg: &Config, version: Version) -> Result
         }
     })?;
 
+    // zero-copy path health: marshalling scratch is pooled on the shared
+    // runtime, so its alloc count is the fleet's peak marshal concurrency
+    metrics
+        .gauge("constellation.runtime.scratch_allocs")
+        .set(rt.scratch_stats().allocs as i64);
+
     gm.lock().unwrap().report(task, &ground_node, TaskPhase::Completed)?;
     let task_completed =
         gm.lock().unwrap().get(task).map(|(_, st)| st.phase) == Some(TaskPhase::Completed);
@@ -929,6 +935,15 @@ fn run_satellite(
             f.stats.rounds_scheduled
         );
     }
+
+    // per-satellite tile-pool health: allocs plateau at the satellite's
+    // max tiles in flight (split + pending offload clones), then every
+    // further scene is allocation-free
+    let ps = pipeline.tile_pool_stats();
+    metrics.gauge(&format!("constellation.pool.tile_allocs.{node}")).set(ps.allocs as i64);
+    metrics
+        .gauge(&format!("constellation.pool.tile_hit_pct.{node}"))
+        .set((ps.hit_rate() * 100.0).round() as i64);
 
     lc.finish(task, true);
     gm.lock().unwrap().report(task, &node, TaskPhase::Completed)?;

@@ -298,6 +298,14 @@ impl<'p, 'rt> StagedEngine<'p, 'rt> {
             "staged engine lost scenes: folded {} of {n_scenes}",
             acc.scenes()
         );
+        // zero-copy path health: a warmed tile pool allocates only its
+        // steady-state population, so the gauges expose per-tile
+        // allocation behaviour without a profiler
+        let ps = p.tile_pool_stats();
+        self.metrics.gauge("engine.pool.tile_allocs").set(ps.allocs as i64);
+        self.metrics
+            .gauge("engine.pool.tile_hit_pct")
+            .set((ps.hit_rate() * 100.0).round() as i64);
         Ok(acc.finish(version, frag))
     }
 }

@@ -15,11 +15,12 @@
 use anyhow::Result;
 
 use crate::config::Config;
-use crate::data::{split_scene, SceneGen, Tile, Version};
+use crate::data::{gather_pixels, split_scene_pooled, SceneGen, Tile, Version, TILE_PX};
 use crate::detect::{decode_rows, nms, Detection, Evaluator, MapReport};
 use crate::energy::EnergyMeter;
 use crate::runtime::{Model, Runtime};
 use crate::sim::{DutyCycles, Timeline};
+use crate::util::buffer::{PixelPool, PoolStats};
 
 use super::batcher::Batcher;
 use super::cloudfilter::CloudFilter;
@@ -288,6 +289,11 @@ pub struct Pipeline<'rt> {
     pub cfg: Config,
     pub policy: RouterPolicy,
     pub onboard_model: Model,
+    /// Tile-buffer pool for the split→batch→infer hot path: `cut` checks
+    /// buffers out here and every downstream clone (ground offload,
+    /// constellation dispatch) draws from the same pool, so steady-state
+    /// scene processing performs zero per-tile pixel allocations.
+    tile_pool: PixelPool,
 }
 
 impl<'rt> Pipeline<'rt> {
@@ -309,7 +315,14 @@ impl<'rt> Pipeline<'rt> {
                 None
             },
         };
-        Pipeline { rt, cfg, policy, onboard_model: Model::Tiny }
+        Pipeline { rt, cfg, policy, onboard_model: Model::Tiny, tile_pool: PixelPool::new(TILE_PX) }
+    }
+
+    /// Tile-pool accounting: `allocs` stops growing once the pool has
+    /// warmed to the maximum number of tiles in flight (asserted by the
+    /// zero-copy path tests; exported as engine/constellation gauges).
+    pub fn tile_pool_stats(&self) -> PoolStats {
+        self.tile_pool.stats()
     }
 
     /// Deterministic scene source for one scenario run — shared by the
@@ -333,13 +346,13 @@ impl<'rt> Pipeline<'rt> {
         let mut dets = Vec::with_capacity(tiles.len());
         let mut best_obj = Vec::with_capacity(tiles.len());
         let mut wall = 0.0;
+        // one pooled scratch for every chunk of this call — the PJRT
+        // marshal is a slice copy into reused storage, not a fresh Vec
+        let mut scratch = self.rt.scratch_buf();
         for chunk in tiles.chunks(max_b) {
-            let mut input = Vec::with_capacity(chunk.len() * m.tile * m.tile * 3);
-            for t in chunk {
-                input.extend_from_slice(&t.pixels);
-            }
+            let n_px = gather_pixels(chunk, &mut scratch);
             let t0 = std::time::Instant::now();
-            let rows = self.rt.execute(model, chunk.len(), &input)?;
+            let rows = self.rt.execute(model, chunk.len(), &scratch[..n_px])?;
             wall += t0.elapsed().as_secs_f64();
             for i in 0..chunk.len() {
                 let r = &rows[i * cols..(i + 1) * cols];
@@ -365,12 +378,13 @@ impl<'rt> Pipeline<'rt> {
         scene: &crate::data::Scene,
         router_stats: &mut RouterStats,
     ) -> Result<(Vec<ProcessedTile>, usize, f64)> {
-        let tiles = split_scene(scene, self.cfg.fragment_px);
+        let tiles = split_scene_pooled(scene, self.cfg.fragment_px, &self.tile_pool);
         let filter = CloudFilter::new(self.rt, self.cfg.policy.redundancy_threshold);
         let (kept, redundant) = filter.filter(tiles)?;
         let n_filtered = redundant.len();
         // redundant tiles are simply dropped (their GT is lost — the
-        // communication/accuracy trade the paper accepts)
+        // communication/accuracy trade the paper accepts); their buffers
+        // go straight back to the tile pool
         drop(redundant);
 
         let mut batcher = Batcher::new(self.rt.max_batch(), self.cfg.engine.batch_max_wait_s);
@@ -379,7 +393,10 @@ impl<'rt> Pipeline<'rt> {
         }
         let mut processed: Vec<ProcessedTile> = Vec::new();
         let mut wall = 0.0;
-        while let Some((batch, _delays)) = batcher.pop(0.0, true) {
+        // queue delays land in one reused vec (this facade discards them;
+        // latency-aware callers read them between pops)
+        let mut delays = Vec::with_capacity(self.rt.max_batch());
+        while let Some(batch) = batcher.pop(0.0, true, &mut delays) {
             let (dets, best_obj, w) = self.infer(self.onboard_model, &batch)?;
             wall += w;
             for ((tile, onboard_dets), best) in batch.into_iter().zip(dets).zip(best_obj) {

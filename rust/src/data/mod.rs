@@ -13,7 +13,9 @@ mod scene;
 mod tiler;
 
 pub use scene::{Scene, SceneGen, SceneSpec, GtBox, CLASS_NAMES, NUM_CLASSES};
-pub use tiler::{split_scene, Tile};
+pub use tiler::{gather_pixels, split_scene, split_scene_pooled, Tile, MODEL_TILE, TILE_PX};
+#[doc(hidden)]
+pub use tiler::reference_cut;
 
 /// A dataset "version" as in Fig 6: v1 ≈ 90% cloud-redundant, v2 ≈ 40%.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

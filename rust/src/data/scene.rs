@@ -5,6 +5,7 @@
 //! (python/compile/data.py): land/sea background, 0–4 objects from the 8
 //! class signatures, and (version-dependent) a dense cloud layer.
 
+use crate::util::buffer::{PixelBuf, PixelPool, PoolStats};
 use crate::util::rng::Rng;
 
 pub const CELL: usize = 64;
@@ -65,8 +66,11 @@ pub struct SceneSpec {
 pub struct Scene {
     pub width: usize,
     pub height: usize,
-    /// Row-major H×W×3, f32 in [0, 1].
-    pub pixels: Vec<f32>,
+    /// Row-major H×W×3, f32 in [0, 1].  Checked out of the generator's
+    /// buffer pool: dropping the scene returns the storage, so a
+    /// generator allocates exactly one buffer per scene *in flight*,
+    /// not one per capture.
+    pub pixels: PixelBuf,
     pub boxes: Vec<GtBox>,
     /// Scene id (capture counter) for tracing through the pipeline.
     pub id: u64,
@@ -100,11 +104,20 @@ pub struct SceneGen {
     pub cells_x: usize,
     pub cells_y: usize,
     counter: u64,
+    /// Scene-buffer pool: dropped scenes hand their pixel storage back
+    /// here, so steady-state capture is allocation-free.
+    pool: PixelPool,
 }
 
 impl SceneGen {
     pub fn new(seed: u64, spec: SceneSpec, cells_x: usize, cells_y: usize) -> SceneGen {
-        SceneGen { rng: Rng::new(seed), spec, cells_x, cells_y, counter: 0 }
+        let pool = PixelPool::new(cells_x * CELL * cells_y * CELL * 3);
+        SceneGen { rng: Rng::new(seed), spec, cells_x, cells_y, counter: 0, pool }
+    }
+
+    /// Scene-buffer pool accounting (allocs == max scenes in flight).
+    pub fn pool_stats(&self) -> PoolStats {
+        self.pool.stats()
     }
 
     /// Capture the next scene.
@@ -112,7 +125,11 @@ impl SceneGen {
         let (w, h) = (self.cells_x * CELL, self.cells_y * CELL);
         let id = self.counter;
         self.counter += 1;
-        let mut scene = Scene { width: w, height: h, pixels: vec![0.0; w * h * 3], boxes: Vec::new(), id };
+        // dirty checkout: draw_background assigns every pixel of every
+        // cell before objects/clouds read-modify them, so the clear the
+        // zeroed checkout would do is pure overhead
+        let pixels = self.pool.checkout_dirty();
+        let mut scene = Scene { width: w, height: h, pixels, boxes: Vec::new(), id };
         for cy in 0..self.cells_y {
             for cx in 0..self.cells_x {
                 let mut cell_rng = self.rng.fork((cy * self.cells_x + cx) as u64 + 1);
@@ -319,6 +336,16 @@ mod tests {
             v2 += lum(&gen(Version::V2, seed));
         }
         assert!(v1 > v2, "v1 lum {v1} should exceed v2 {v2}");
+    }
+
+    #[test]
+    fn capture_reuses_the_scene_buffer() {
+        let mut g = SceneGen::new(3, Version::V2.spec(), 2, 2);
+        drop(g.capture());
+        drop(g.capture());
+        let s = g.pool_stats();
+        assert_eq!(s.checkouts, 2);
+        assert_eq!(s.allocs, 1, "second capture must reuse the returned buffer");
     }
 
     #[test]

@@ -7,10 +7,24 @@
 //! `split_scene` cuts a captured scene into `frag`-pixel fragments and
 //! resamples each to the model's 64-px input (nearest-neighbor up, box
 //! filter down) — fragment size is the Fig 6 sweep variable.
+//!
+//! Zero-copy hot path: [`split_scene_pooled`] checks tile buffers out of
+//! a [`PixelPool`] instead of allocating 48 KB per tile, and `cut`
+//! operates on scene *row slices* (one bounds check per row span instead
+//! of three per pixel).  The float accumulation order of the box filter
+//! is pinned to the pre-refactor per-pixel loop — per output pixel,
+//! source rows add in `sy` then `sx` order, channels 0..3 — so the
+//! resampled pixels are bit-identical to the naive implementation
+//! (`tests/datapath_golden.rs` enforces this byte-for-byte).
 
 use super::scene::{GtBox, Scene};
+use crate::util::buffer::{PixelBuf, PixelPool};
 
 pub const MODEL_TILE: usize = 64;
+/// f32 count of one model-input tile (64×64×3) — the hot-path pool size.
+pub const TILE_PX: usize = MODEL_TILE * MODEL_TILE * 3;
+/// f32 count of one model-input row (64×3).
+const ROW3: usize = MODEL_TILE * 3;
 
 /// One fragment, resampled to the 64-px model input.
 #[derive(Clone)]
@@ -22,8 +36,9 @@ pub struct Tile {
     pub y0: usize,
     /// Fragment edge length in scene pixels (before resampling).
     pub frag: usize,
-    /// 64×64×3 f32 model input.
-    pub pixels: Vec<f32>,
+    /// 64×64×3 f32 model input.  Pooled on the hot path (cloning a
+    /// pooled tile draws its pixel copy from the same pool).
+    pub pixels: PixelBuf,
     /// Ground truth whose centers fall inside the fragment, in *model
     /// input* coordinates (scaled by 64/frag).
     pub gt: Vec<GtBox>,
@@ -43,20 +58,135 @@ impl Tile {
     }
 }
 
-/// Split `scene` into frag×frag fragments (frag must divide the scene).
+/// Split `scene` into frag×frag fragments (frag must divide the scene),
+/// allocating a fresh buffer per tile — the cold-path variant for tests
+/// and one-shot callers.
 pub fn split_scene(scene: &Scene, frag: usize) -> Vec<Tile> {
+    split_with(scene, frag, || PixelBuf::zeroed(TILE_PX))
+}
+
+/// Split `scene` with tile buffers checked out of `pool` — the hot-path
+/// variant: at steady state (tiles dropped or returned between scenes)
+/// no per-tile allocation happens.
+pub fn split_scene_pooled(scene: &Scene, frag: usize, pool: &PixelPool) -> Vec<Tile> {
+    debug_assert_eq!(pool.buf_len(), TILE_PX);
+    // dirty checkout: `cut` writes every output element on every path,
+    // so the per-checkout clear would be pure overhead
+    split_with(scene, frag, || pool.checkout_dirty())
+}
+
+fn split_with(scene: &Scene, frag: usize, mut buf: impl FnMut() -> PixelBuf) -> Vec<Tile> {
     assert!(frag > 0 && scene.width % frag == 0 && scene.height % frag == 0,
             "fragment {frag} must divide scene {}x{}", scene.width, scene.height);
     let mut tiles = Vec::with_capacity((scene.width / frag) * (scene.height / frag));
     for y0 in (0..scene.height).step_by(frag) {
         for x0 in (0..scene.width).step_by(frag) {
-            tiles.push(cut(scene, x0, y0, frag));
+            tiles.push(cut(scene, x0, y0, frag, buf()));
         }
     }
     tiles
 }
 
-fn cut(scene: &Scene, x0: usize, y0: usize, frag: usize) -> Tile {
+/// Gather `tiles`' pixels contiguously into `scratch` (NHWC batch
+/// layout, the PJRT marshalling step); returns the f32 count written.
+/// `scratch` must hold at least `tiles.len() * TILE_PX` elements.
+pub fn gather_pixels(tiles: &[Tile], scratch: &mut [f32]) -> usize {
+    for (i, t) in tiles.iter().enumerate() {
+        scratch[i * TILE_PX..(i + 1) * TILE_PX].copy_from_slice(&t.pixels);
+    }
+    tiles.len() * TILE_PX
+}
+
+/// Resample one fragment into `pixels` (a `TILE_PX` buffer whose prior
+/// contents are irrelevant) via row slices.  Every output element is
+/// written on every path — which is what lets the pooled caller hand in
+/// a dirty buffer.
+fn cut(scene: &Scene, x0: usize, y0: usize, frag: usize, mut pixels: PixelBuf) -> Tile {
+    debug_assert_eq!(pixels.len(), TILE_PX);
+    let scale = frag as f32 / MODEL_TILE as f32;
+    let w3 = scene.width * 3;
+    let src = &scene.pixels[..];
+    let out = &mut pixels[..];
+    if frag == MODEL_TILE {
+        // identity fragment: each output row is a contiguous scene span
+        for ty in 0..MODEL_TILE {
+            let s = (y0 + ty) * w3 + x0 * 3;
+            out[ty * ROW3..(ty + 1) * ROW3].copy_from_slice(&src[s..s + ROW3]);
+        }
+    } else if frag > MODEL_TILE {
+        // Box-filter downsample (frag = k * 64 for integer k).  The adds
+        // feeding each output accumulator run in the exact (sy, sx, c)
+        // order of the pre-refactor per-pixel loop — bit-identical f32.
+        let k = frag / MODEL_TILE;
+        let norm = 1.0 / (k * k) as f32;
+        let mut acc = [0.0f32; ROW3];
+        for ty in 0..MODEL_TILE {
+            acc.fill(0.0);
+            for sy in 0..k {
+                let s = (y0 + ty * k + sy) * w3 + x0 * 3;
+                let row = &src[s..s + frag * 3];
+                for tx in 0..MODEL_TILE {
+                    let a = &mut acc[tx * 3..tx * 3 + 3];
+                    for p in row[tx * k * 3..(tx * k + k) * 3].chunks_exact(3) {
+                        a[0] += p[0];
+                        a[1] += p[1];
+                        a[2] += p[2];
+                    }
+                }
+            }
+            for (dst, a) in out[ty * ROW3..(ty + 1) * ROW3].iter_mut().zip(&acc) {
+                *dst = a * norm;
+            }
+        }
+    } else {
+        // Nearest-neighbor upsample (frag = 64 / k): build the first
+        // output row of each source-row group from pixel repeats, then
+        // duplicate it k-1 times with whole-row copies.
+        let k = MODEL_TILE / frag;
+        for ty in 0..MODEL_TILE {
+            let o = ty * ROW3;
+            if ty % k != 0 {
+                let (prev, cur) = out.split_at_mut(o);
+                cur[..ROW3].copy_from_slice(&prev[o - ROW3..]);
+                continue;
+            }
+            let s = (y0 + ty / k) * w3 + x0 * 3;
+            let row = &src[s..s + frag * 3];
+            let dst = &mut out[o..o + ROW3];
+            for (sx, p) in row.chunks_exact(3).enumerate() {
+                for r in 0..k {
+                    let d = (sx * k + r) * 3;
+                    dst[d..d + 3].copy_from_slice(p);
+                }
+            }
+        }
+    }
+    let gt = scene
+        .boxes
+        .iter()
+        .filter(|b| {
+            b.cx >= x0 as f32 && b.cx < (x0 + frag) as f32
+                && b.cy >= y0 as f32 && b.cy < (y0 + frag) as f32
+        })
+        .map(|b| GtBox {
+            cx: (b.cx - x0 as f32) / scale,
+            cy: (b.cy - y0 as f32) / scale,
+            w: b.w / scale,
+            h: b.h / scale,
+            class: b.class,
+        })
+        .collect();
+    Tile { scene_id: scene.id, x0, y0, frag, pixels, gt }
+}
+
+/// The pre-refactor per-pixel `cut`, retained **verbatim and frozen** as
+/// the normative reference: `tests/datapath_golden.rs` pins the pooled
+/// row-sliced path against it byte-for-byte, and `benches/perf_datapath.rs`
+/// uses it as the naive comparison baseline.  One copy, shared by both,
+/// so the correctness golden and the perf baseline can never diverge.
+/// Not part of the public API surface proper.
+#[doc(hidden)]
+pub fn reference_cut(scene: &Scene, x0: usize, y0: usize, frag: usize) -> (Vec<f32>, Vec<GtBox>) {
     let scale = frag as f32 / MODEL_TILE as f32;
     let mut pixels = vec![0.0f32; MODEL_TILE * MODEL_TILE * 3];
     if frag >= MODEL_TILE {
@@ -106,7 +236,7 @@ fn cut(scene: &Scene, x0: usize, y0: usize, frag: usize) -> Tile {
             class: b.class,
         })
         .collect();
-    Tile { scene_id: scene.id, x0, y0, frag, pixels, gt }
+    (pixels, gt)
 }
 
 #[cfg(test)]
@@ -183,5 +313,44 @@ mod tests {
     fn non_divisible_fragment_panics() {
         let s = scene();
         split_scene(&s, 48);
+    }
+
+    #[test]
+    fn pooled_split_is_bit_identical_and_reuses_buffers() {
+        let s = scene();
+        let pool = PixelPool::new(TILE_PX);
+        for frag in [32usize, 64, 128] {
+            let plain = split_scene(&s, frag);
+            let pooled = split_scene_pooled(&s, frag, &pool);
+            assert_eq!(plain.len(), pooled.len());
+            for (a, b) in plain.iter().zip(&pooled) {
+                assert!(b.pixels.is_pooled());
+                assert!(
+                    a.pixels.iter().zip(b.pixels.iter()).all(|(x, y)| x.to_bits() == y.to_bits()),
+                    "frag={frag} ({}, {}): pooled pixels diverge",
+                    a.x0,
+                    a.y0
+                );
+                assert_eq!(a.gt, b.gt);
+            }
+        }
+        let after_warmup = pool.stats().allocs;
+        // steady state: the buffers returned above serve the next scene
+        let _again = split_scene_pooled(&s, 64, &pool);
+        assert_eq!(pool.stats().allocs, after_warmup, "warm pool must not allocate");
+    }
+
+    #[test]
+    fn gather_pixels_is_the_concat_of_tiles() {
+        let s = scene();
+        let tiles = split_scene(&s, 64);
+        let chunk = &tiles[..3];
+        let mut scratch = vec![0.0f32; 4 * TILE_PX];
+        let n = gather_pixels(chunk, &mut scratch);
+        assert_eq!(n, 3 * TILE_PX);
+        for (i, t) in chunk.iter().enumerate() {
+            assert_eq!(&scratch[i * TILE_PX..(i + 1) * TILE_PX], &t.pixels[..]);
+        }
+        assert!(scratch[n..].iter().all(|&v| v == 0.0));
     }
 }

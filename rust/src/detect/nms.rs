@@ -5,15 +5,42 @@ use super::Detection;
 /// Standard greedy NMS: sort by score desc, drop boxes overlapping a kept
 /// box of the *same class* above `iou_thresh`.  Returns kept detections
 /// sorted by descending score.
+///
+/// Scores sort with [`f32::total_cmp`] — NaN scores (a poisoned model
+/// output) order first and *deterministically*, where the previous
+/// `partial_cmp(..).unwrap_or(Equal)` fallback made the comparator
+/// non-transitive and the kept order unspecified.  For finite positive
+/// scores (everything `decode_rows` emits) the order is unchanged.
+///
+/// Candidates are compared only against kept boxes of their own class
+/// (class-bucketed suppression), so dense multi-class scenes pay
+/// O(n·k_class) IoU checks instead of O(n²) across all classes.  The
+/// comparisons that remain are exactly the same-class subset of the
+/// naive scan (suppression is an any-overlap test, so iteration order
+/// within the bucket is immaterial) and the kept set is identical.
+/// Buckets are flat per-class chains through two scratch vectors — no
+/// per-class nested allocations on this per-tile hot path.
 pub fn nms(mut dets: Vec<Detection>, iou_thresh: f32) -> Vec<Detection> {
-    dets.sort_by(|a, b| b.score.partial_cmp(&a.score).unwrap_or(std::cmp::Ordering::Equal));
+    const NONE: usize = usize::MAX;
+    dets.sort_by(|a, b| b.score.total_cmp(&a.score));
     let mut kept: Vec<Detection> = Vec::with_capacity(dets.len());
+    // head[class] = most recently kept index of that class; link[i] =
+    // previously kept index of kept[i]'s class (NONE terminates)
+    let mut head: Vec<usize> = Vec::new();
+    let mut link: Vec<usize> = Vec::with_capacity(dets.len());
     'outer: for d in dets {
-        for k in &kept {
-            if k.class == d.class && k.iou(&d) > iou_thresh {
+        if d.class >= head.len() {
+            head.resize(d.class + 1, NONE);
+        }
+        let mut ki = head[d.class];
+        while ki != NONE {
+            if kept[ki].iou(&d) > iou_thresh {
                 continue 'outer;
             }
+            ki = link[ki];
         }
+        link.push(head[d.class]);
+        head[d.class] = kept.len();
         kept.push(d);
     }
     kept
@@ -22,9 +49,25 @@ pub fn nms(mut dets: Vec<Detection>, iou_thresh: f32) -> Vec<Detection> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::rng::Rng;
 
     fn det(cx: f32, score: f32, class: usize) -> Detection {
         Detection { cx, cy: 10.0, w: 8.0, h: 8.0, score, class }
+    }
+
+    /// The pre-bucketing reference: full quadratic scan over kept boxes.
+    fn nms_naive(mut dets: Vec<Detection>, iou_thresh: f32) -> Vec<Detection> {
+        dets.sort_by(|a, b| b.score.total_cmp(&a.score));
+        let mut kept: Vec<Detection> = Vec::with_capacity(dets.len());
+        'outer: for d in dets {
+            for k in &kept {
+                if k.class == d.class && k.iou(&d) > iou_thresh {
+                    continue 'outer;
+                }
+            }
+            kept.push(d);
+        }
+        kept
     }
 
     #[test]
@@ -58,5 +101,42 @@ mod tests {
     #[test]
     fn empty_input_ok() {
         assert!(nms(Vec::new(), 0.5).is_empty());
+    }
+
+    #[test]
+    fn nan_scores_are_ordered_deterministically() {
+        // Regression: total_cmp gives NaN a defined slot (first, under
+        // descending order) regardless of input permutation; the old
+        // Equal fallback left the kept order unspecified.
+        let a = vec![det(10.0, 0.9, 0), det(40.0, f32::NAN, 0), det(70.0, 0.8, 0)];
+        let b = vec![det(70.0, 0.8, 0), det(40.0, f32::NAN, 0), det(10.0, 0.9, 0)];
+        let ka = nms(a, 0.5);
+        let kb = nms(b, 0.5);
+        assert_eq!(ka.len(), 3);
+        assert!(ka[0].score.is_nan(), "NaN must sort first: {ka:?}");
+        let order = |k: &[Detection]| k.iter().map(|d| d.cx.to_bits()).collect::<Vec<_>>();
+        assert_eq!(order(&ka), order(&kb), "kept order must not depend on input order");
+        assert_eq!(ka[1].score, 0.9);
+        assert_eq!(ka[2].score, 0.8);
+    }
+
+    #[test]
+    fn class_buckets_match_naive_quadratic_scan() {
+        let mut rng = Rng::new(17);
+        for case in 0..100 {
+            let n = rng.range_usize(0, 60);
+            let dets: Vec<Detection> = (0..n)
+                .map(|_| {
+                    det(rng.range_f32(0.0, 64.0), rng.f32(), rng.below(8) as usize)
+                })
+                .collect();
+            let thresh = rng.range_f32(0.1, 0.9);
+            let fast = nms(dets.clone(), thresh);
+            let slow = nms_naive(dets, thresh);
+            assert_eq!(fast.len(), slow.len(), "case {case}");
+            for (f, s) in fast.iter().zip(&slow) {
+                assert_eq!(f, s, "case {case}");
+            }
+        }
     }
 }

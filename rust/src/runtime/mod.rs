@@ -20,6 +20,8 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, Context, Result};
 
+use crate::util::buffer::{PixelBuf, PixelPool, PoolStats};
+
 /// Names of the detector artifacts (file stem prefix in artifacts/).
 #[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
 pub enum Model {
@@ -79,6 +81,10 @@ pub struct Runtime {
     /// same model serialize — CPU-PJRT gains nothing from oversubscribing
     /// one executable and the lock keeps its arena usage bounded.
     exec_locks: Mutex<HashMap<Model, Arc<Mutex<()>>>>,
+    /// Marshalling scratch pool (`max_batch * tile_px` f32 per buffer):
+    /// callers gather ragged batches into a checkout instead of building
+    /// per-chunk `Vec`s, and `execute` pads tail calls in place here.
+    scratch: PixelPool,
 }
 
 impl Runtime {
@@ -88,6 +94,8 @@ impl Runtime {
         let manifest = Manifest::load(dir.join("manifest.json"))
             .with_context(|| format!("loading manifest from {}", dir.display()))?;
         let client = xla::PjRtClient::cpu().map_err(wrap_xla)?;
+        let max_batch = manifest.batch_sizes.iter().copied().max().unwrap_or(1);
+        let scratch = PixelPool::new(max_batch * manifest.tile * manifest.tile * 3);
         Ok(Runtime {
             client,
             dir,
@@ -95,7 +103,22 @@ impl Runtime {
             exes: Mutex::new(HashMap::new()),
             costs: Mutex::new(HashMap::new()),
             exec_locks: Mutex::new(HashMap::new()),
+            scratch,
         })
+    }
+
+    /// Check out a marshalling scratch buffer (`max_batch * tile_px`
+    /// f32, contents unspecified).  Callers gather tile batches into it
+    /// and pass only the filled prefix to [`Runtime::execute`]; dropping
+    /// it returns the storage, so steady-state marshalling is
+    /// allocation-free and pays no per-checkout clear.
+    pub fn scratch_buf(&self) -> PixelBuf {
+        self.scratch.checkout_dirty()
+    }
+
+    /// Scratch-pool accounting (asserted by the zero-copy path tests).
+    pub fn scratch_stats(&self) -> PoolStats {
+        self.scratch.stats()
     }
 
     pub fn platform(&self) -> String {
@@ -258,10 +281,12 @@ impl Runtime {
                     &input[done * px..(done + b) * px],
                 )?);
             } else {
-                // pad the tail call
-                let mut padded = input[done * px..].to_vec();
-                padded.resize(b * px, 0.0);
-                let full = self.execute_exact(model, b, &padded)?;
+                // pad the tail call in place in pooled scratch, zeroing
+                // only the pad rows the executable will actually read
+                let mut padded = self.scratch.checkout_dirty();
+                padded[..take * px].copy_from_slice(&input[done * px..]);
+                padded[take * px..b * px].fill(0.0);
+                let full = self.execute_exact(model, b, &padded[..b * px])?;
                 out.extend_from_slice(&full[..take * cols]);
             }
             done += take;

@@ -1,0 +1,319 @@
+//! Pooled fixed-size f32 pixel buffers — the zero-copy hot data path.
+//!
+//! The capture→tile→infer path used to allocate (and zero) a fresh
+//! `Vec<f32>` for every tile and every scene; at steady state those
+//! buffers have a bounded population (channel depths × batch sizes), so
+//! a checkout/return pool removes every per-item allocation after
+//! warmup.  [`PixelPool`] hands out [`PixelBuf`]s that return themselves
+//! to the pool on drop; a buffer cloned from a pooled buffer is drawn
+//! from the same pool (the ground-offload copy path), and stats expose
+//! the checkout/return/alloc balance the invariant tests and the
+//! `perf_datapath` bench assert on.
+//!
+//! Ownership rules (see DESIGN.md "Hot data path"):
+//! * the pool owner (SceneGen, Pipeline, Runtime) decides the buffer
+//!   length at construction; every checkout is that exact length;
+//! * `checkout()` returns a **zeroed** buffer — semantically identical
+//!   to `vec![0.0; len]`, which is what the pre-pool code allocated —
+//!   while `checkout_dirty()` skips the clear for callers that
+//!   overwrite every element they later read;
+//! * dropping a pooled `PixelBuf` returns the storage; dropping the
+//!   pool itself only drops the free list — outstanding buffers keep
+//!   the shared inner state alive and still return storage harmlessly.
+
+use std::fmt;
+use std::ops::{Deref, DerefMut};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Checkout/return pool of fixed-length `f32` buffers.
+///
+/// Cloning the pool handle is cheap (shared `Arc`); all clones draw
+/// from the same free list, so a pool may be shared across worker
+/// threads (checkout/return is one short mutex hold around a `Vec`
+/// push/pop).
+#[derive(Clone)]
+pub struct PixelPool {
+    inner: Arc<PoolInner>,
+}
+
+struct PoolInner {
+    buf_len: usize,
+    free: Mutex<Vec<Vec<f32>>>,
+    checkouts: AtomicU64,
+    returns: AtomicU64,
+    allocs: AtomicU64,
+}
+
+/// Point-in-time pool accounting.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Buffers handed out over the pool's lifetime.
+    pub checkouts: u64,
+    /// Buffers returned (dropped while pooled).
+    pub returns: u64,
+    /// Checkouts that had to allocate (free list empty).
+    pub allocs: u64,
+    /// Buffers currently sitting on the free list.
+    pub free: usize,
+}
+
+impl PoolStats {
+    /// Checkouts served from the free list without allocating.
+    /// Saturating: the counters are independent relaxed reads, so a
+    /// snapshot taken while another thread is mid-checkout may observe
+    /// `allocs` ahead of `checkouts` by one.
+    pub fn hits(&self) -> u64 {
+        self.checkouts.saturating_sub(self.allocs)
+    }
+
+    /// Fraction of checkouts served without allocating (0 when unused).
+    pub fn hit_rate(&self) -> f64 {
+        if self.checkouts == 0 {
+            0.0
+        } else {
+            self.hits() as f64 / self.checkouts as f64
+        }
+    }
+
+    /// Buffers currently checked out (the pool's live population).
+    /// Saturating, like [`Self::hits`].
+    pub fn live(&self) -> u64 {
+        self.checkouts.saturating_sub(self.returns)
+    }
+}
+
+impl PixelPool {
+    /// A pool of `buf_len`-element buffers (e.g. one tile or one scene).
+    pub fn new(buf_len: usize) -> PixelPool {
+        PixelPool {
+            inner: Arc::new(PoolInner {
+                buf_len,
+                free: Mutex::new(Vec::new()),
+                checkouts: AtomicU64::new(0),
+                returns: AtomicU64::new(0),
+                allocs: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    /// Buffer length every checkout of this pool has.
+    pub fn buf_len(&self) -> usize {
+        self.inner.buf_len
+    }
+
+    /// Check out a zeroed buffer (reused storage is cleared, fresh
+    /// storage is born zeroed, so this is exactly `vec![0.0; buf_len]`
+    /// without the steady-state allocation).
+    pub fn checkout(&self) -> PixelBuf {
+        let (mut data, reused) = self.inner.take();
+        if reused {
+            data.fill(0.0);
+        }
+        PixelBuf { data, pool: Some(Arc::clone(&self.inner)) }
+    }
+
+    /// Check out a buffer with **unspecified contents** — for hot-path
+    /// callers that overwrite every element they read back (the tiler
+    /// writes every output f32; batch gathers read only the prefix they
+    /// just wrote).  Skips the per-checkout memset that would otherwise
+    /// re-pay, per item, the cost the pool exists to remove.  Use
+    /// [`Self::checkout`] wherever zeroed semantics matter.
+    pub fn checkout_dirty(&self) -> PixelBuf {
+        let (data, _reused) = self.inner.take();
+        PixelBuf { data, pool: Some(Arc::clone(&self.inner)) }
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        self.inner.stats()
+    }
+}
+
+impl PoolInner {
+    /// Pop a free buffer (`true`: contents are stale) or allocate one
+    /// (`false`: born zeroed) — so `checkout` clears only reused storage.
+    fn take(&self) -> (Vec<f32>, bool) {
+        self.checkouts.fetch_add(1, Ordering::Relaxed);
+        let reused = self.free.lock().unwrap().pop();
+        match reused {
+            Some(v) => (v, true),
+            None => {
+                self.allocs.fetch_add(1, Ordering::Relaxed);
+                (vec![0.0; self.buf_len], false)
+            }
+        }
+    }
+
+    fn stats(&self) -> PoolStats {
+        PoolStats {
+            checkouts: self.checkouts.load(Ordering::Relaxed),
+            returns: self.returns.load(Ordering::Relaxed),
+            allocs: self.allocs.load(Ordering::Relaxed),
+            free: self.free.lock().unwrap().len(),
+        }
+    }
+}
+
+/// An owned f32 buffer, optionally backed by a [`PixelPool`].
+///
+/// Derefs to `[f32]`; drops return pooled storage to the pool.  A plain
+/// (unpooled) buffer behaves exactly like the `Vec<f32>` it wraps, so
+/// tests and cold paths can keep constructing pixel data directly.
+pub struct PixelBuf {
+    data: Vec<f32>,
+    pool: Option<Arc<PoolInner>>,
+}
+
+impl PixelBuf {
+    /// Unpooled zeroed buffer — the cold-path equivalent of `checkout`.
+    pub fn zeroed(len: usize) -> PixelBuf {
+        PixelBuf { data: vec![0.0; len], pool: None }
+    }
+
+    /// Whether dropping this buffer returns storage to a pool.
+    pub fn is_pooled(&self) -> bool {
+        self.pool.is_some()
+    }
+}
+
+impl From<Vec<f32>> for PixelBuf {
+    fn from(data: Vec<f32>) -> PixelBuf {
+        PixelBuf { data, pool: None }
+    }
+}
+
+impl Deref for PixelBuf {
+    type Target = [f32];
+    fn deref(&self) -> &[f32] {
+        &self.data
+    }
+}
+
+impl DerefMut for PixelBuf {
+    fn deref_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+}
+
+impl Clone for PixelBuf {
+    /// A clone of a pooled buffer is drawn from the same pool (no fresh
+    /// allocation at steady state) and carries a bit-identical copy of
+    /// the contents; unpooled buffers clone like a `Vec`.
+    fn clone(&self) -> PixelBuf {
+        match &self.pool {
+            Some(pool) if self.data.len() == pool.buf_len => {
+                let (mut data, _reused) = pool.take();
+                data.copy_from_slice(&self.data);
+                PixelBuf { data, pool: Some(Arc::clone(pool)) }
+            }
+            _ => PixelBuf { data: self.data.clone(), pool: None },
+        }
+    }
+}
+
+impl Drop for PixelBuf {
+    fn drop(&mut self) {
+        if let Some(pool) = self.pool.take() {
+            pool.returns.fetch_add(1, Ordering::Relaxed);
+            pool.free.lock().unwrap().push(std::mem::take(&mut self.data));
+        }
+    }
+}
+
+impl PartialEq for PixelBuf {
+    fn eq(&self, other: &PixelBuf) -> bool {
+        self.data == other.data
+    }
+}
+
+impl fmt::Debug for PixelBuf {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("PixelBuf")
+            .field("len", &self.data.len())
+            .field("pooled", &self.pool.is_some())
+            .field("head", &&self.data[..self.data.len().min(4)])
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn checkout_allocates_then_reuses() {
+        let pool = PixelPool::new(8);
+        let a = pool.checkout();
+        drop(a);
+        let b = pool.checkout();
+        drop(b);
+        let s = pool.stats();
+        assert_eq!(s.checkouts, 2);
+        assert_eq!(s.returns, 2);
+        assert_eq!(s.allocs, 1, "second checkout must reuse the first buffer");
+        assert_eq!(s.hits(), 1);
+        assert_eq!(s.free, 1);
+    }
+
+    #[test]
+    fn checkout_is_zeroed_after_dirty_return() {
+        let pool = PixelPool::new(4);
+        let mut a = pool.checkout();
+        a.fill(7.5);
+        drop(a);
+        let b = pool.checkout();
+        assert!(b.iter().all(|&v| v == 0.0), "reused buffer not cleared: {b:?}");
+    }
+
+    #[test]
+    fn concurrent_checkouts_grow_capacity_once() {
+        let pool = PixelPool::new(4);
+        let bufs: Vec<PixelBuf> = (0..3).map(|_| pool.checkout()).collect();
+        assert_eq!(pool.stats().allocs, 3);
+        assert_eq!(pool.stats().live(), 3);
+        drop(bufs);
+        let again: Vec<PixelBuf> = (0..3).map(|_| pool.checkout()).collect();
+        assert_eq!(pool.stats().allocs, 3, "warm pool must not allocate");
+        drop(again);
+        let s = pool.stats();
+        assert_eq!(s.checkouts, s.returns);
+        assert_eq!(s.free, 3);
+    }
+
+    #[test]
+    fn checkout_dirty_reuses_without_affecting_balance() {
+        let pool = PixelPool::new(4);
+        drop(pool.checkout());
+        let d = pool.checkout_dirty();
+        assert!(d.is_pooled());
+        assert_eq!(d.len(), 4);
+        drop(d);
+        let s = pool.stats();
+        assert_eq!(s.checkouts, 2);
+        assert_eq!(s.returns, 2);
+        assert_eq!(s.allocs, 1, "dirty checkout must reuse the freed buffer");
+    }
+
+    #[test]
+    fn clone_draws_from_the_same_pool() {
+        let pool = PixelPool::new(4);
+        let mut a = pool.checkout();
+        a.copy_from_slice(&[1.0, 2.0, 3.0, 4.0]);
+        drop(pool.checkout()); // park one free buffer for the clone
+        let b = a.clone();
+        assert!(b.is_pooled());
+        assert_eq!(&a[..], &b[..]);
+        let a_stats = PixelPool { inner: Arc::clone(a.pool.as_ref().unwrap()) }.stats();
+        assert_eq!(a_stats.allocs, 2, "clone must reuse the parked buffer");
+    }
+
+    #[test]
+    fn unpooled_buf_behaves_like_vec() {
+        let v: PixelBuf = vec![1.0f32, 2.0].into();
+        assert!(!v.is_pooled());
+        let w = v.clone();
+        assert_eq!(v, w);
+        assert_eq!(v.len(), 2);
+        assert_eq!(PixelBuf::zeroed(3)[..], [0.0, 0.0, 0.0]);
+    }
+}

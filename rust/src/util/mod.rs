@@ -2,6 +2,7 @@
 //! the offline vendor set (rand, serde_json, clap, criterion, tokio).
 
 pub mod bench;
+pub mod buffer;
 pub mod cli;
 pub mod json;
 pub mod pool;

@@ -1,0 +1,161 @@
+//! Zero-copy hot-data-path correctness.
+//!
+//! The row-sliced tiler and pooled buffers must be *byte-for-byte*
+//! equivalent to the pre-refactor per-pixel implementation:
+//! `data::reference_cut` is that implementation, retained verbatim and
+//! frozen in `data::tiler` (one copy, shared with the perf baseline in
+//! `benches/perf_datapath.rs`), and every
+//! `split_scene`/`split_scene_pooled` output is pinned against it
+//! (pixels by f32 bit pattern + FNV checksum, ground truth exactly).
+//! The pool tests assert the ISSUE's steady-state invariant: after
+//! warmup, scene processing performs zero per-tile pixel-buffer
+//! allocations.
+
+use tiansuan::config::Config;
+use tiansuan::coordinator::router::RouterStats;
+use tiansuan::coordinator::Pipeline;
+use tiansuan::data::{
+    reference_cut, split_scene, split_scene_pooled, SceneGen, Version, TILE_PX,
+};
+use tiansuan::runtime::Runtime;
+use tiansuan::util::buffer::PixelPool;
+
+/// FNV-1a over the f32 bit patterns — the "golden checksum".
+fn checksum(pixels: &[f32]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for p in pixels {
+        for b in p.to_bits().to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    }
+    h
+}
+
+#[test]
+fn split_scene_matches_naive_reference_byte_for_byte() {
+    for (version, seed) in [(Version::V1, 3u64), (Version::V2, 9), (Version::V2, 41)] {
+        let scene = SceneGen::new(seed, version.spec(), 4, 4).capture();
+        let pool = PixelPool::new(TILE_PX);
+        for frag in [32usize, 64, 128] {
+            let plain = split_scene(&scene, frag);
+            let pooled = split_scene_pooled(&scene, frag, &pool);
+            let mut i = 0;
+            for y0 in (0..scene.height).step_by(frag) {
+                for x0 in (0..scene.width).step_by(frag) {
+                    let (want_px, want_gt) = reference_cut(&scene, x0, y0, frag);
+                    for t in [&plain[i], &pooled[i]] {
+                        assert_eq!(
+                            checksum(&t.pixels),
+                            checksum(&want_px),
+                            "{} seed {seed} frag {frag} tile ({x0},{y0}): checksum diverged",
+                            version.name()
+                        );
+                        assert!(
+                            t.pixels.iter().zip(&want_px).all(|(a, b)| a.to_bits() == b.to_bits()),
+                            "{} seed {seed} frag {frag} tile ({x0},{y0}): pixels diverged",
+                            version.name()
+                        );
+                        assert_eq!(t.gt, want_gt, "frag {frag} tile ({x0},{y0}): gt rescale");
+                    }
+                    i += 1;
+                }
+            }
+            assert_eq!(i, plain.len());
+        }
+    }
+}
+
+#[test]
+fn pool_checkout_return_balance_and_clearing() {
+    let pool = PixelPool::new(TILE_PX);
+    let scene = SceneGen::new(5, Version::V2.spec(), 4, 4).capture();
+    {
+        let mut tiles = split_scene_pooled(&scene, 64, &pool);
+        // dirty one buffer beyond what the next split will overwrite is
+        // impossible (cut writes every element) — dirty it anyway to
+        // prove checkout clears reused storage
+        tiles[0].pixels.fill(42.0);
+        let s = pool.stats();
+        assert_eq!(s.checkouts, 16);
+        assert_eq!(s.live(), 16);
+    }
+    let s = pool.stats();
+    assert_eq!(s.returns, 16, "dropped tiles must return their buffers");
+    assert_eq!(s.free, 16);
+    let buf = pool.checkout();
+    assert!(buf.iter().all(|&v| v == 0.0), "reused checkout must be zeroed");
+}
+
+#[test]
+fn steady_state_split_performs_zero_allocations() {
+    let pool = PixelPool::new(TILE_PX);
+    let mut gen = SceneGen::new(11, Version::V2.spec(), 4, 4);
+    let warmed = {
+        let warm = gen.capture();
+        drop(split_scene_pooled(&warm, 32, &pool)); // 64 tiles: the high-water mark
+        pool.stats().allocs
+    }; // warm scene drops here, returning the generator's buffer
+    for _ in 0..3 {
+        let scene = gen.capture();
+        for frag in [32usize, 64, 128] {
+            drop(split_scene_pooled(&scene, frag, &pool));
+        }
+    }
+    let s = pool.stats();
+    assert_eq!(s.allocs, warmed, "warm pool allocated on the steady-state path");
+    assert_eq!(s.checkouts - warmed, s.hits());
+    // scene buffers are pooled too: captures beyond the first in-flight
+    // scene reuse the generator's buffer
+    assert_eq!(gen.pool_stats().allocs, 1, "scene buffer must be reused across captures");
+}
+
+// ---- artifact-gated: the full onboard path over the real runtime ----
+
+fn rt() -> Option<Runtime> {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    if !std::path::Path::new(dir).join("manifest.json").exists() {
+        eprintln!("skipping: artifacts/ not built");
+        return None;
+    }
+    Some(Runtime::open(dir).unwrap())
+}
+
+#[test]
+fn onboard_scene_is_allocation_free_after_warmup() {
+    let Some(rt) = rt() else { return };
+    let mut cfg = Config::default();
+    cfg.scene_cells = 4;
+    let p = Pipeline::new(&rt, cfg);
+    let mut gen = p.scene_gen(Version::V2);
+    let mut router = RouterStats::default();
+
+    // warmup: first scene populates the tile pool; the marshal scratch
+    // is pre-warmed to its single-thread worst case (a gather checkout
+    // and an execute tail-pad checkout live at once — whether a scene
+    // hits the ragged-tail path depends on its kept-tile count)
+    drop((rt.scratch_buf(), rt.scratch_buf()));
+    let warm = gen.capture();
+    drop(p.onboard_scene(&warm, &mut router).unwrap());
+    let tile_warm = p.tile_pool_stats().allocs;
+    let scratch_warm = rt.scratch_stats().allocs;
+
+    for _ in 0..3 {
+        let scene = gen.capture();
+        let (processed, _, _) = p.onboard_scene(&scene, &mut router).unwrap();
+        drop(processed); // fold done; tiles return to the pool
+        assert_eq!(
+            p.tile_pool_stats().allocs,
+            tile_warm,
+            "steady-state onboard_scene allocated a tile buffer"
+        );
+        assert_eq!(
+            rt.scratch_stats().allocs,
+            scratch_warm,
+            "steady-state marshalling allocated a scratch buffer"
+        );
+    }
+    let s = p.tile_pool_stats();
+    assert_eq!(s.checkouts - s.allocs, s.hits());
+    assert!(s.hit_rate() > 0.5, "tile pool hit rate {}", s.hit_rate());
+}

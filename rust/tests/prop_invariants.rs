@@ -114,20 +114,22 @@ fn prop_batcher_bounds_and_conservation() {
         let n = rng.range_usize(0, 40);
         let mut now = 0.0;
         let mut popped = 0usize;
+        let mut delays = Vec::new();
         for _ in 0..n {
             b.push(
-                Tile { scene_id: 0, x0: 0, y0: 0, frag: 64, pixels: vec![], gt: vec![] },
+                Tile { scene_id: 0, x0: 0, y0: 0, frag: 64, pixels: vec![].into(), gt: vec![] },
                 now,
             );
             now += rng.range_f64(0.0, 1.0);
-            if let Some((tiles, delays)) = b.pop(now, false) {
+            if let Some(tiles) = b.pop(now, false, &mut delays) {
                 assert!(tiles.len() <= max_b, "case {case}: batch too big");
                 assert!(!tiles.is_empty());
+                assert_eq!(delays.len(), tiles.len(), "case {case}: delays refilled per pop");
                 assert!(delays.iter().all(|&d| d >= 0.0));
                 popped += tiles.len();
             }
         }
-        while let Some((tiles, _)) = b.pop(now, true) {
+        while let Some(tiles) = b.pop(now, true, &mut delays) {
             popped += tiles.len();
         }
         assert_eq!(popped, n, "case {case}: tiles lost or duplicated");
