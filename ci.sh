@@ -6,6 +6,16 @@
 set -euo pipefail
 cd "$(dirname "$0")/rust"
 
+# Toolchain preflight: fail fast with one clear message instead of dying
+# partway through the gate with a bare "command not found".
+for tool in cargo rustc; do
+  if ! command -v "$tool" >/dev/null 2>&1; then
+    echo "ci: '$tool' not found on PATH — install a Rust toolchain (https://rustup.rs)" >&2
+    echo "ci: no gates were run" >&2
+    exit 1
+  fi
+done
+
 echo "== tier-1: cargo build --release =="
 cargo build --release
 

@@ -107,6 +107,10 @@ fn main() -> anyhow::Result<()> {
                 p.scenes_shed,
                 p.shortfall_wh,
             );
+            println!(
+                "    battery: {:.1} Wh cumulative discharge = {:.2} cycle equivalents",
+                p.discharge_wh, p.cycle_equivalents,
+            );
         }
         if let Some(f) = &sat.federated {
             println!(

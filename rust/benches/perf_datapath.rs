@@ -15,6 +15,10 @@ use std::hint::black_box;
 use std::time::Duration;
 
 use tiansuan::coordinator::batcher::Batcher;
+use tiansuan::coordinator::cloudfilter::{
+    is_redundant_f32, is_redundant_quant, quant_threshold, quantize_pixels, white_count_quant,
+    white_frac_f32,
+};
 use tiansuan::coordinator::router::{route, RouterPolicy, RouterStats};
 use tiansuan::data::{
     gather_pixels, reference_cut, split_scene_pooled, Scene, SceneGen, Tile, Version, MODEL_TILE,
@@ -22,7 +26,7 @@ use tiansuan::data::{
 };
 use tiansuan::detect::{decode_rows, nms};
 use tiansuan::util::bench;
-use tiansuan::util::buffer::PixelPool;
+use tiansuan::util::buffer::{PixelPool, QuantPool};
 use tiansuan::util::rng::Rng;
 
 /// Largest exported artifact batch (manifest.batch_sizes max in the
@@ -159,6 +163,126 @@ fn main() {
         ],
     );
 
+    // ---- per-kernel: frozen scalar reference vs vectorized lane kernels ----
+    // `naive_split` IS `reference_cut` — the frozen per-pixel scalar —
+    // while `split_scene_pooled` runs the channel-lane kernels (lane-array
+    // box filter, wide-copy upsample/identity) over pooled buffers.
+    // Byte-for-byte equality is pinned in tests/datapath_golden.rs; this
+    // section measures what the lane rewrite buys per kernel shape (deep
+    // upsample 16→64 through deep box filter 256→64).
+    println!("=== perf_datapath: scalar reference vs vectorized tile kernels ===");
+    for frag in [16usize, 32, 64, 128, 256] {
+        let n_tiles = ((scene.width / frag) * (scene.height / frag)) as f64;
+        let scalar = bench::run(
+            &format!("datapath/kernel_scalar/frag{frag}"),
+            10,
+            Duration::from_millis(300),
+            || {
+                black_box(naive_split(&scene, frag));
+            },
+        );
+        let simd = bench::run(
+            &format!("datapath/kernel_simd/frag{frag}"),
+            10,
+            Duration::from_millis(300),
+            || {
+                black_box(split_scene_pooled(&scene, frag, &tile_pool));
+            },
+        );
+        let scalar_tps = n_tiles / scalar.median.as_secs_f64();
+        let simd_tps = n_tiles / simd.median.as_secs_f64();
+        bench::json_line(
+            "perf_datapath.kernels",
+            &[
+                ("frag", frag as f64),
+                ("tiles", n_tiles),
+                ("scalar_tiles_per_s", scalar_tps),
+                ("simd_tiles_per_s", simd_tps),
+                ("speedup", simd_tps / scalar_tps),
+            ],
+        );
+    }
+
+    // ---- f32 vs i8 cloud-filter scoring over one scene's tiles ----
+    // Decisions use the CloudScore kernel's white threshold (0.72) and
+    // the manifest's redundancy threshold (0.5); mismatches (tiles the
+    // two paths partition differently — legal only inside the 1/127
+    // quantization band, see tests/datapath_golden.rs) are reported
+    // alongside the throughputs.
+    const KERNEL_WHITE: f32 = 0.72;
+    const REDUNDANT_FRAC: f32 = 0.5;
+    let filter_tiles = split_scene_pooled(&scene, 64, &tile_pool);
+    let quant_pool = QuantPool::new(TILE_PX);
+    let f32_run = bench::run(
+        "datapath/filter_f32",
+        10,
+        Duration::from_millis(300),
+        || {
+            let mut dropped = 0usize;
+            for t in &filter_tiles {
+                if is_redundant_f32(white_frac_f32(&t.pixels, KERNEL_WHITE), REDUNDANT_FRAC) {
+                    dropped += 1;
+                }
+            }
+            black_box(dropped);
+        },
+    );
+    let i8_run = bench::run(
+        "datapath/filter_i8",
+        10,
+        Duration::from_millis(300),
+        || {
+            let qthr = quant_threshold(KERNEL_WHITE);
+            let mut scratch = quant_pool.checkout_dirty();
+            let mut dropped = 0usize;
+            for t in &filter_tiles {
+                let q = &mut scratch[..t.pixels.len()];
+                quantize_pixels(&t.pixels, q);
+                let white = white_count_quant(q, qthr);
+                if is_redundant_quant(white, t.pixels.len() / 3, REDUNDANT_FRAC) {
+                    dropped += 1;
+                }
+            }
+            black_box(dropped);
+        },
+    );
+    // decision-agreement audit, outside the timed loops
+    let mut mismatches = 0usize;
+    {
+        let qthr = quant_threshold(KERNEL_WHITE);
+        let mut scratch = quant_pool.checkout_dirty();
+        for t in &filter_tiles {
+            let f = is_redundant_f32(white_frac_f32(&t.pixels, KERNEL_WHITE), REDUNDANT_FRAC);
+            let q = &mut scratch[..t.pixels.len()];
+            quantize_pixels(&t.pixels, q);
+            let i =
+                is_redundant_quant(white_count_quant(q, qthr), t.pixels.len() / 3, REDUNDANT_FRAC);
+            if f != i {
+                mismatches += 1;
+            }
+        }
+    }
+    let n_filter_tiles = filter_tiles.len() as f64;
+    let f32_tps = n_filter_tiles / f32_run.median.as_secs_f64();
+    let i8_tps = n_filter_tiles / i8_run.median.as_secs_f64();
+    println!(
+        "filter: f32 {f32_tps:.0} tiles/s, i8 {i8_tps:.0} tiles/s ({:.2}x), \
+         {mismatches} decision mismatches over {} tiles",
+        i8_tps / f32_tps,
+        filter_tiles.len(),
+    );
+    bench::json_line(
+        "perf_datapath.filter",
+        &[
+            ("tiles", n_filter_tiles),
+            ("f32_tiles_per_s", f32_tps),
+            ("i8_tiles_per_s", i8_tps),
+            ("speedup", i8_tps / f32_tps),
+            ("decision_mismatches", mismatches as f64),
+        ],
+    );
+    drop(filter_tiles);
+
     // ---- scenes/sec through the onboard hot loop with a stub runtime ----
     // Split → cloud-filter stub (the CloudScore white-fraction statistic
     // recomputed in rust) → batcher → gather → decode → NMS → route: the
@@ -224,6 +348,66 @@ fn main() {
             ),
             ("pool_hit_rate", s.hit_rate()),
             ("pool_allocs", s.allocs as f64),
+        ],
+    );
+
+    // ---- the same stub loop with the quantized cloud filter ----
+    // Identical decision rule (0.6·4096 = 2457.6: `white < 2457.6` ⟺
+    // `white <= 2457 = floor(0.6·n)`), but the whiteness statistic comes
+    // from pooled-i8 quantize + integer count instead of the f32 sweep —
+    // the `policy.filter_precision = "i8"` hot loop, scenes/sec headline.
+    let stub_quant = QuantPool::new(TILE_PX);
+    let onboard_i8 = bench::run(
+        "datapath/onboard_scene_stub_i8",
+        5,
+        Duration::from_millis(500),
+        || {
+            let split = split_scene_pooled(&scene, 64, &pool);
+            let qthr = quant_threshold(0.82);
+            let mut qscratch = stub_quant.checkout_dirty();
+            let kept: Vec<Tile> = split
+                .into_iter()
+                .filter(|t| {
+                    let q = &mut qscratch[..t.pixels.len()];
+                    quantize_pixels(&t.pixels, q);
+                    let white = white_count_quant(q, qthr);
+                    !is_redundant_quant(white, t.pixels.len() / 3, 0.6)
+                })
+                .collect();
+            let mut batcher = Batcher::new(MAX_BATCH, 0.05);
+            for t in kept {
+                batcher.push(t, 0.0);
+            }
+            let mut stats = RouterStats::default();
+            let mut delays = Vec::with_capacity(MAX_BATCH);
+            let mut scratch = scratch_pool.checkout_dirty();
+            while let Some(batch) = batcher.pop(0.0, true, &mut delays) {
+                let n = gather_pixels(&batch, &mut scratch);
+                black_box(&scratch[..n]);
+                for (i, t) in batch.iter().enumerate() {
+                    let r = &rows[i * cols..(i + 1) * cols];
+                    let dets = nms(decode_rows(r, head_d, 0.25), 0.45);
+                    let best = r.chunks_exact(head_d).map(|c| c[4]).fold(f32::MIN, f32::max);
+                    black_box(route(&policy, &dets, best, &mut stats));
+                    black_box(t.scene_id);
+                }
+            }
+        },
+    );
+    let f32_scenes = 1.0 / onboard.median.as_secs_f64();
+    let i8_scenes = 1.0 / onboard_i8.median.as_secs_f64();
+    println!(
+        "onboard stub: f32 filter {f32_scenes:.1} scenes/s, i8 filter {i8_scenes:.1} scenes/s \
+         ({:.2}x)",
+        i8_scenes / f32_scenes,
+    );
+    bench::json_line(
+        "perf_datapath.onboard_stub_i8",
+        &[
+            ("scenes_per_s", i8_scenes),
+            ("tiles_per_scene", tiles_per_scene as f64),
+            ("tiles_per_s", tiles_per_scene as f64 * i8_scenes),
+            ("speedup_vs_f32", i8_scenes / f32_scenes),
         ],
     );
 }

@@ -56,6 +56,27 @@ pub struct PolicyConfig {
     /// How far it rises when the link is clearly idle (offload more,
     /// harvesting collaborative accuracy while the window is cheap).
     pub adaptive_relax: f32,
+    /// Cloud-filter numeric path: `"f32"` (default — runs the CloudScore
+    /// artifact, every result bit-identical to the pre-quantization
+    /// pipeline) or `"i8"` (CPU fixed-point white counts; keep/drop
+    /// decisions can differ from f32 only for tiles whose pixels
+    /// straddle the white threshold within one quantization step — see
+    /// [`crate::coordinator::cloudfilter`]).
+    pub filter_precision: String,
+}
+
+impl PolicyConfig {
+    /// An unknown precision string would silently fall back deep inside
+    /// the pipeline; fail at the surface instead, like the other
+    /// sections' validators.
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(
+            matches!(self.filter_precision.as_str(), "f32" | "i8"),
+            "policy.filter_precision must be \"f32\" or \"i8\", got {:?}",
+            self.filter_precision
+        );
+        Ok(())
+    }
 }
 
 impl Default for PolicyConfig {
@@ -72,6 +93,7 @@ impl Default for PolicyConfig {
             adaptive_loss_rate: 0.2,
             adaptive_tighten: 0.2,
             adaptive_relax: 0.05,
+            filter_precision: "f32".into(),
         }
     }
 }
@@ -90,11 +112,17 @@ pub struct EngineConfig {
     /// deadline only bites once tiles stream into the batcher
     /// asynchronously (streaming capture is future work).
     pub batch_max_wait_s: f64,
+    /// Tile-pool free-list cap ([`crate::util::buffer::Pool::with_cap`]):
+    /// parked tile buffers beyond this are freed instead of kept, so
+    /// large fleets bound their idle-buffer footprint.  0 (default) is
+    /// unbounded — the allocation-pinning behaviour every existing
+    /// result was measured under.
+    pub tile_pool_cap: usize,
 }
 
 impl Default for EngineConfig {
     fn default() -> EngineConfig {
-        EngineConfig { workers: 2, channel_depth: 4, batch_max_wait_s: 5.0 }
+        EngineConfig { workers: 2, channel_depth: 4, batch_max_wait_s: 5.0, tile_pool_cap: 0 }
     }
 }
 
@@ -522,6 +550,11 @@ impl Config {
                     .unwrap_or(cfg.policy.adaptive_loss_rate),
                 adaptive_tighten: f("adaptive_tighten", cfg.policy.adaptive_tighten),
                 adaptive_relax: f("adaptive_relax", cfg.policy.adaptive_relax),
+                filter_precision: p
+                    .get("filter_precision")
+                    .and_then(|v| v.as_str())
+                    .map(|s| s.to_string())
+                    .unwrap_or(cfg.policy.filter_precision),
             };
         }
         if let Some(e) = j.get("engine") {
@@ -535,6 +568,10 @@ impl Config {
                     .get("batch_max_wait_s")
                     .and_then(|v| v.as_f64())
                     .unwrap_or(cfg.engine.batch_max_wait_s),
+                tile_pool_cap: e
+                    .get("tile_pool_cap")
+                    .and_then(|v| v.as_usize())
+                    .unwrap_or(cfg.engine.tile_pool_cap),
             };
         }
         if let Some(t) = j.get("timing") {
@@ -636,6 +673,7 @@ impl Config {
         if let Some(v) = j.get("seed").and_then(|v| v.as_f64()) {
             cfg.seed = v as u64;
         }
+        cfg.policy.validate().context("policy config")?;
         cfg.energy.validate().context("energy config")?;
         cfg.power.validate().context("power config")?;
         cfg.federated.validate().context("federated config")?;
@@ -708,6 +746,24 @@ mod tests {
         assert_eq!(c.energy.comm_idle_floor, 0.15);
         assert!(!c.power.enabled, "power subsystem must default off");
         assert!(!c.federated.enabled, "federated scheduling must default off");
+    }
+
+    #[test]
+    fn parse_filter_precision_and_pool_cap() {
+        let c = Config::parse(
+            r#"{"policy": {"filter_precision": "i8"},
+                "engine": {"tile_pool_cap": 128}}"#,
+        )
+        .unwrap();
+        assert_eq!(c.policy.filter_precision, "i8");
+        assert_eq!(c.engine.tile_pool_cap, 128);
+        // defaults: bit-identical f32 path, unbounded pool
+        let d = Config::default();
+        assert_eq!(d.policy.filter_precision, "f32");
+        assert_eq!(d.engine.tile_pool_cap, 0);
+        // unknown precision fails at parse, not deep in the pipeline
+        assert!(Config::parse(r#"{"policy": {"filter_precision": "fp16"}}"#).is_err());
+        assert!(Config::parse(r#"{"policy": {"filter_precision": ""}}"#).is_err());
     }
 
     #[test]

@@ -4,11 +4,26 @@
 //!
 //! Thin wrapper over the CloudScore artifact: batches tiles through the
 //! kernel and thresholds the white-fraction statistic.
+//!
+//! Quantized path (`policy.filter_precision = "i8"`): the keep/drop
+//! decision only needs the white-*count* compared against a pre-scaled
+//! integer threshold, so the filter can quantize each tile once into a
+//! pooled i8 scratch (`q = round(p·127)`, saturating; NaN casts to 0)
+//! and integer-accumulate instead of running the f32 kernel.  The i8
+//! scale is 127 = `i8::MAX`, the largest scale whose quantized range
+//! covers [0, 1] pixels exactly; the integer tile decision
+//! `white_count > floor(threshold · n_px)` is *exactly* equivalent to
+//! the f32 `white_count / n_px > threshold` (n_px = 4096 = 2¹² makes the
+//! f32 division exact and `count` is far below 2²⁴), so the only place
+//! the two paths can disagree is per-pixel whiteness within one
+//! quantization step (1/127) of `white_thresh` — the documented decision
+//! tolerance, equivalence-tested in `tests/datapath_golden.rs`.
 
 use anyhow::Result;
 
 use crate::data::{gather_pixels, Tile};
 use crate::runtime::{Model, Runtime};
+use crate::util::buffer::QuantPool;
 
 /// Per-tile cloud statistics (mirrors the kernel output row).
 #[derive(Clone, Copy, Debug)]
@@ -18,19 +33,152 @@ pub struct CloudStats {
     pub white_frac: f32,
 }
 
+/// Numeric path the filter scores tiles with.  `F32` (default) runs the
+/// CloudScore artifact and keeps every result bit-identical; `I8`
+/// quantizes on the CPU and decides from integer white counts.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum FilterPrecision {
+    #[default]
+    F32,
+    I8,
+}
+
+impl FilterPrecision {
+    /// Parse the `policy.filter_precision` config value.
+    pub fn parse(s: &str) -> Option<FilterPrecision> {
+        match s {
+            "f32" => Some(FilterPrecision::F32),
+            "i8" => Some(FilterPrecision::I8),
+            _ => None,
+        }
+    }
+}
+
+/// Fixed-point scale: pixels in [0, 1] map to [0, 127].
+pub const QUANT_SCALE: f32 = 127.0;
+
+/// Quantize `pixels` into `out` (`q = round(p·127)`, saturating to the
+/// i8 range).  `NaN as i8` is defined to saturate to 0 in Rust, so a NaN
+/// channel quantizes to 0 — never white.
+pub fn quantize_pixels(pixels: &[f32], out: &mut [i8]) {
+    debug_assert_eq!(pixels.len(), out.len());
+    for (q, &p) in out.iter_mut().zip(pixels) {
+        *q = (p * QUANT_SCALE).round() as i8;
+    }
+}
+
+/// Integer white threshold: `q > quant_threshold(t)` approximates
+/// `p > t` (exact outside the 1/127-wide quantization band around `t`).
+pub fn quant_threshold(white_thresh: f32) -> i8 {
+    (white_thresh as f64 * QUANT_SCALE as f64).floor().clamp(-128.0, 127.0) as i8
+}
+
+/// White pixels in a quantized tile: min channel strictly above `qthr`.
+pub fn white_count_quant(quant: &[i8], qthr: i8) -> usize {
+    quant
+        .chunks_exact(3)
+        .filter(|p| p[0].min(p[1]).min(p[2]) > qthr)
+        .count()
+}
+
+/// CPU f32 reference for the kernel's white fraction: the fraction of
+/// pixels whose min channel exceeds `white_thresh`.  Rust's `f32::min`
+/// chain skips NaN operands, so an all-NaN pixel compares NaN > t =
+/// false — never white (matching the i8 path; a *partially* NaN pixel is
+/// where the two definitions may differ, see the module docs).
+pub fn white_frac_f32(pixels: &[f32], white_thresh: f32) -> f32 {
+    let n = pixels.len() / 3;
+    let white = pixels
+        .chunks_exact(3)
+        .filter(|p| p[0].min(p[1]).min(p[2]) > white_thresh)
+        .count();
+    white as f32 / n.max(1) as f32
+}
+
+/// Pre-scaled integer decision threshold: a tile with `white_count`
+/// white pixels out of `n_px` is redundant iff
+/// `white_count > scaled_count_threshold(threshold, n_px)`.
+pub fn scaled_count_threshold(threshold: f32, n_px: usize) -> i64 {
+    (threshold as f64 * n_px as f64).floor() as i64
+}
+
+/// The f32 keep/drop rule (strict: exactly-at-threshold keeps).
+pub fn is_redundant_f32(white_frac: f32, threshold: f32) -> bool {
+    white_frac > threshold
+}
+
+/// The integer keep/drop rule — exactly equivalent to
+/// [`is_redundant_f32`] for equal white counts (see module docs).
+pub fn is_redundant_quant(white_count: usize, n_px: usize, threshold: f32) -> bool {
+    white_count as i64 > scaled_count_threshold(threshold, n_px)
+}
+
+/// Per-tile stats from the quantized pixels, integer-accumulated:
+/// `white_frac` is exact given the quantized whiteness; the luminance
+/// moments are fixed-point approximations (the filter decision never
+/// reads them — they exist so `score` has the same shape on both paths).
+pub fn cloud_stats_quant(quant: &[i8], qthr: i8) -> CloudStats {
+    let n = (quant.len() / 3).max(1);
+    let mut sum: i64 = 0;
+    let mut sumsq: i64 = 0;
+    let mut white: usize = 0;
+    for p in quant.chunks_exact(3) {
+        let l = p[0] as i64 + p[1] as i64 + p[2] as i64; // 3·127·lum
+        sum += l;
+        sumsq += l * l;
+        if p[0].min(p[1]).min(p[2]) > qthr {
+            white += 1;
+        }
+    }
+    let scale = 3.0 * QUANT_SCALE as f64; // lum = l / (3·127)
+    let mean = sum as f64 / (n as f64 * scale);
+    let var = sumsq as f64 / (n as f64 * scale * scale) - mean * mean;
+    CloudStats {
+        mean_lum: mean as f32,
+        var_lum: var.max(0.0) as f32,
+        white_frac: white as f32 / n as f32,
+    }
+}
+
 pub struct CloudFilter<'rt> {
     rt: &'rt Runtime,
     /// white_frac above this ⇒ redundant.
     pub threshold: f32,
+    precision: FilterPrecision,
+    /// Pooled i8 scratch for the quantized path (shared with the owning
+    /// pipeline so steady-state filtering is allocation-free).
+    quant: Option<QuantPool>,
 }
 
 impl<'rt> CloudFilter<'rt> {
+    /// The default f32 filter — bit-identical to every pre-quantization
+    /// result.
     pub fn new(rt: &'rt Runtime, threshold: f32) -> CloudFilter<'rt> {
-        CloudFilter { rt, threshold }
+        CloudFilter { rt, threshold, precision: FilterPrecision::F32, quant: None }
     }
 
-    /// Score a batch of tiles (any count; internally padded).
+    /// Select the scoring path; `quant` backs the i8 scratch (cheap
+    /// handle clone — the pool is shared).
+    pub fn with_precision(
+        rt: &'rt Runtime,
+        threshold: f32,
+        precision: FilterPrecision,
+        quant: QuantPool,
+    ) -> CloudFilter<'rt> {
+        CloudFilter { rt, threshold, precision, quant: Some(quant) }
+    }
+
+    /// Score a batch of tiles (any count; internally padded).  Dispatches
+    /// on the configured precision: f32 runs the CloudScore artifact, i8
+    /// quantizes into pooled scratch and integer-accumulates on the CPU.
     pub fn score(&self, tiles: &[Tile]) -> Result<Vec<CloudStats>> {
+        match self.precision {
+            FilterPrecision::F32 => self.score_f32(tiles),
+            FilterPrecision::I8 => Ok(self.score_i8(tiles)),
+        }
+    }
+
+    fn score_f32(&self, tiles: &[Tile]) -> Result<Vec<CloudStats>> {
         let max_b = self.rt.max_batch();
         let mut out = Vec::with_capacity(tiles.len());
         // marshal through the runtime's pooled scratch instead of a
@@ -46,16 +194,61 @@ impl<'rt> CloudFilter<'rt> {
         Ok(out)
     }
 
+    /// The quantized scorer: one pooled i8 scratch reused across the
+    /// whole batch, no runtime execution at all.
+    fn score_i8(&self, tiles: &[Tile]) -> Vec<CloudStats> {
+        let qthr = quant_threshold(self.rt.manifest.white_thresh);
+        let mut scratch = self.quant_scratch();
+        tiles
+            .iter()
+            .map(|t| {
+                let q = &mut scratch[..t.pixels.len()];
+                quantize_pixels(&t.pixels, q);
+                cloud_stats_quant(q, qthr)
+            })
+            .collect()
+    }
+
+    fn quant_scratch(&self) -> crate::util::buffer::QuantBuf {
+        match &self.quant {
+            Some(pool) => pool.checkout_dirty(),
+            // cold path (a filter built for i8 without a pool is only
+            // possible through tests): allocate once for this call
+            None => crate::util::buffer::QuantBuf::zeroed(crate::data::TILE_PX),
+        }
+    }
+
     /// Partition tiles into (kept, redundant) preserving order.
     pub fn filter(&self, tiles: Vec<Tile>) -> Result<(Vec<Tile>, Vec<Tile>)> {
-        let stats = self.score(&tiles)?;
         let mut kept = Vec::new();
         let mut redundant = Vec::new();
-        for (tile, s) in tiles.into_iter().zip(stats) {
-            if s.white_frac > self.threshold {
-                redundant.push(tile);
-            } else {
-                kept.push(tile);
+        match self.precision {
+            FilterPrecision::F32 => {
+                let stats = self.score_f32(&tiles)?;
+                for (tile, s) in tiles.into_iter().zip(stats) {
+                    if is_redundant_f32(s.white_frac, self.threshold) {
+                        redundant.push(tile);
+                    } else {
+                        kept.push(tile);
+                    }
+                }
+            }
+            FilterPrecision::I8 => {
+                // integer fast path: quantize once per tile, count white
+                // pixels, compare against the pre-scaled threshold —
+                // never materializing a float statistic
+                let qthr = quant_threshold(self.rt.manifest.white_thresh);
+                let mut scratch = self.quant_scratch();
+                for tile in tiles {
+                    let q = &mut scratch[..tile.pixels.len()];
+                    quantize_pixels(&tile.pixels, q);
+                    let white = white_count_quant(q, qthr);
+                    if is_redundant_quant(white, tile.pixels.len() / 3, self.threshold) {
+                        redundant.push(tile);
+                    } else {
+                        kept.push(tile);
+                    }
+                }
             }
         }
         Ok((kept, redundant))
@@ -65,7 +258,7 @@ impl<'rt> CloudFilter<'rt> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::data::{split_scene, SceneGen, Version};
+    use crate::data::{split_scene, SceneGen, Version, TILE_PX};
 
     fn rt() -> Option<Runtime> {
         let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
@@ -109,13 +302,150 @@ mod tests {
         let tiles = split_scene(&scene, 64);
         let stats = f.score(&tiles).unwrap();
         for (tile, s) in tiles.iter().zip(&stats) {
-            let white = tile
-                .pixels
-                .chunks_exact(3)
-                .filter(|p| p[0].min(p[1]).min(p[2]) > rt.manifest.white_thresh)
-                .count() as f32
-                / (64.0 * 64.0);
+            let white = white_frac_f32(&tile.pixels, rt.manifest.white_thresh);
             assert!((white - s.white_frac).abs() < 1e-4, "{white} vs {}", s.white_frac);
         }
+    }
+
+    #[test]
+    fn i8_filter_partitions_like_f32_on_real_scenes() {
+        let Some(rt) = rt() else { return };
+        let quant = QuantPool::new(TILE_PX);
+        let scene = SceneGen::new(45, Version::V1.spec(), 4, 4).capture();
+        let f32_filter = CloudFilter::new(&rt, rt.manifest.redundant_white_frac);
+        let i8_filter = CloudFilter::with_precision(
+            &rt,
+            rt.manifest.redundant_white_frac,
+            FilterPrecision::I8,
+            quant,
+        );
+        let (k32, r32) = f32_filter.filter(split_scene(&scene, 64)).unwrap();
+        let (k8, r8) = i8_filter.filter(split_scene(&scene, 64)).unwrap();
+        // synthetic scenes put pixels well away from the white threshold,
+        // so the quantization band is empty and the partitions agree
+        assert_eq!(k32.len(), k8.len(), "i8 kept set diverged");
+        assert_eq!(r32.len(), r8.len());
+        for (a, b) in k32.iter().zip(&k8) {
+            assert_eq!((a.x0, a.y0), (b.x0, b.y0));
+        }
+    }
+
+    // ---- artifact-free: the quantization/decision primitives ----
+
+    /// The kernel's white threshold (python/compile/kernels/cloudscore.py);
+    /// tests pin against the constant so they run artifact-free.
+    const WHITE: f32 = 0.72;
+
+    fn tile_pixels(white_px: usize, n_px: usize) -> Vec<f32> {
+        // `white_px` pixels of pure white, the rest dark grey
+        let mut v = vec![0.1f32; n_px * 3];
+        for p in v[..white_px * 3].iter_mut() {
+            *p = 1.0;
+        }
+        v
+    }
+
+    fn decisions(pixels: &[f32], threshold: f32) -> (bool, bool) {
+        let f = is_redundant_f32(white_frac_f32(pixels, WHITE), threshold);
+        let mut q = vec![0i8; pixels.len()];
+        quantize_pixels(pixels, &mut q);
+        let white = white_count_quant(&q, quant_threshold(WHITE));
+        let i = is_redundant_quant(white, pixels.len() / 3, threshold);
+        (f, i)
+    }
+
+    #[test]
+    fn exactly_at_threshold_keeps_on_both_paths() {
+        // white_frac == threshold exactly: the strict `>` keeps the tile
+        // on the f32 path, and `count > floor(t·n)` keeps it on the i8
+        // path — count == floor(t·n) when t·n is integral.
+        let n = 4096;
+        let thr = 0.5f32; // 2048 / 4096, exactly representable
+        let px = tile_pixels(2048, n);
+        let (f, i) = decisions(&px, thr);
+        assert!(!f, "f32: exactly-at-threshold must be kept (strict >)");
+        assert!(!i, "i8: exactly-at-threshold must be kept");
+        // one more white pixel tips both over
+        let px = tile_pixels(2049, n);
+        let (f, i) = decisions(&px, thr);
+        assert!(f && i, "one pixel past the threshold must drop on both paths");
+    }
+
+    #[test]
+    fn all_white_and_all_black_agree() {
+        let n = 4096;
+        let white = vec![1.0f32; n * 3];
+        let black = vec![0.0f32; n * 3];
+        let (f, i) = decisions(&white, 0.5);
+        assert!(f && i, "all-white must drop on both paths");
+        let (f, i) = decisions(&black, 0.5);
+        assert!(!f && !i, "all-black must keep on both paths");
+        // threshold 1.0 is unreachable: even all-white keeps (frac == 1.0
+        // is not > 1.0, and count 4096 is not > floor(1.0·4096))
+        let (f, i) = decisions(&white, 1.0);
+        assert!(!f && !i);
+    }
+
+    #[test]
+    fn nan_pixels_are_never_white_on_either_path() {
+        let n = 64;
+        let mut px = vec![1.0f32; n * 3]; // fully white baseline
+        // all-NaN pixel: f32 min chain yields NaN (NaN > t is false),
+        // i8 quantizes NaN to 0 — non-white on both paths
+        px[0] = f32::NAN;
+        px[1] = f32::NAN;
+        px[2] = f32::NAN;
+        let wf = white_frac_f32(&px, WHITE);
+        assert!((wf - (n as f32 - 1.0) / n as f32).abs() < 1e-6, "NaN pixel counted white: {wf}");
+        let mut q = vec![0i8; px.len()];
+        quantize_pixels(&px, &mut q);
+        assert_eq!(q[0], 0, "NaN must quantize to 0");
+        assert_eq!(white_count_quant(&q, quant_threshold(WHITE)), n - 1);
+        // decision identical wherever both are defined
+        let (f, i) = decisions(&px, (n as f32 - 1.5) / n as f32);
+        assert!(f && i);
+    }
+
+    #[test]
+    fn quantization_is_saturating_and_monotone() {
+        let mut q = [0i8; 6];
+        quantize_pixels(&[-5.0, 0.0, 0.5, 1.0, 5.0, f32::INFINITY], &mut q);
+        assert_eq!(q, [-128, 0, 64, 127, 127, 127]);
+        // the integer threshold brackets the float one
+        let qt = quant_threshold(WHITE);
+        assert!(qt as f32 / QUANT_SCALE <= WHITE);
+        assert!((qt + 1) as f32 / QUANT_SCALE > WHITE);
+    }
+
+    #[test]
+    fn scaled_threshold_matches_f32_division_for_every_count() {
+        // `count/4096 > t` (exact f32 division) ⟺ `count > floor(t·4096)`
+        // for every possible count — the exact-equivalence claim
+        for thr in [0.0f32, 0.3, 0.5, 0.6, 0.72, 0.9999, 1.0] {
+            let scaled = scaled_count_threshold(thr, 4096);
+            for count in 0..=4096usize {
+                let f = is_redundant_f32(count as f32 / 4096.0, thr);
+                let i = (count as i64) > scaled;
+                assert_eq!(f, i, "thr {thr} count {count}");
+            }
+        }
+    }
+
+    #[test]
+    fn quant_stats_track_f32_moments() {
+        let mut rng = crate::util::rng::Rng::new(9);
+        let px: Vec<f32> = (0..TILE_PX).map(|_| rng.f32()).collect();
+        let mut q = vec![0i8; TILE_PX];
+        quantize_pixels(&px, &mut q);
+        let s = cloud_stats_quant(&q, quant_threshold(WHITE));
+        // f64 reference moments
+        let n = (TILE_PX / 3) as f64;
+        let lums: Vec<f64> =
+            px.chunks_exact(3).map(|p| (p[0] + p[1] + p[2]) as f64 / 3.0).collect();
+        let mean = lums.iter().sum::<f64>() / n;
+        let var = lums.iter().map(|l| (l - mean) * (l - mean)).sum::<f64>() / n;
+        assert!((s.mean_lum as f64 - mean).abs() < 0.01, "{} vs {mean}", s.mean_lum);
+        assert!((s.var_lum as f64 - var).abs() < 0.01, "{} vs {var}", s.var_lum);
+        assert!((s.white_frac - white_frac_f32(&px, WHITE)).abs() < 0.05);
     }
 }

@@ -944,6 +944,9 @@ fn run_satellite(
     metrics
         .gauge(&format!("constellation.pool.tile_hit_pct.{node}"))
         .set((ps.hit_rate() * 100.0).round() as i64);
+    metrics
+        .gauge(&format!("constellation.pool.tile_evictions.{node}"))
+        .set(ps.evictions as i64);
 
     lc.finish(task, true);
     gm.lock().unwrap().report(task, &node, TaskPhase::Completed)?;

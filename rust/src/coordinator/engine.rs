@@ -306,6 +306,9 @@ impl<'p, 'rt> StagedEngine<'p, 'rt> {
         self.metrics
             .gauge("engine.pool.tile_hit_pct")
             .set((ps.hit_rate() * 100.0).round() as i64);
+        // nonzero only with a capped pool (engine.tile_pool_cap): returns
+        // whose storage was freed instead of parked
+        self.metrics.gauge("engine.pool.tile_evictions").set(ps.evictions as i64);
         Ok(acc.finish(version, frag))
     }
 }

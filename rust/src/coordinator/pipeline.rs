@@ -20,10 +20,10 @@ use crate::detect::{decode_rows, nms, Detection, Evaluator, MapReport};
 use crate::energy::EnergyMeter;
 use crate::runtime::{Model, Runtime};
 use crate::sim::{DutyCycles, Timeline};
-use crate::util::buffer::{PixelPool, PoolStats};
+use crate::util::buffer::{PixelPool, PoolStats, QuantPool};
 
 use super::batcher::Batcher;
-use super::cloudfilter::CloudFilter;
+use super::cloudfilter::{CloudFilter, FilterPrecision};
 use super::router::{route, AdaptiveRouting, RouterPolicy, RouterStats};
 use super::TileFate;
 
@@ -292,8 +292,15 @@ pub struct Pipeline<'rt> {
     /// Tile-buffer pool for the split→batch→infer hot path: `cut` checks
     /// buffers out here and every downstream clone (ground offload,
     /// constellation dispatch) draws from the same pool, so steady-state
-    /// scene processing performs zero per-tile pixel allocations.
+    /// scene processing performs zero per-tile pixel allocations.  Capped
+    /// at `engine.tile_pool_cap` parked buffers (0 = unbounded).
     tile_pool: PixelPool,
+    /// Scoring path for the redundancy filter, parsed from the validated
+    /// `policy.filter_precision` knob ("f32" keeps every result
+    /// bit-identical; "i8" decides from integer white counts).
+    filter_precision: FilterPrecision,
+    /// Pooled i8 scratch backing the quantized filter path.
+    quant_pool: QuantPool,
 }
 
 impl<'rt> Pipeline<'rt> {
@@ -315,7 +322,20 @@ impl<'rt> Pipeline<'rt> {
                 None
             },
         };
-        Pipeline { rt, cfg, policy, onboard_model: Model::Tiny, tile_pool: PixelPool::new(TILE_PX) }
+        // config::parse already validated the knob; unreachable fallback
+        // keeps a hand-built Config with a bad string on the default path
+        let filter_precision =
+            FilterPrecision::parse(&cfg.policy.filter_precision).unwrap_or_default();
+        let tile_pool = PixelPool::with_cap(TILE_PX, cfg.engine.tile_pool_cap);
+        Pipeline {
+            rt,
+            cfg,
+            policy,
+            onboard_model: Model::Tiny,
+            tile_pool,
+            filter_precision,
+            quant_pool: QuantPool::new(TILE_PX),
+        }
     }
 
     /// Tile-pool accounting: `allocs` stops growing once the pool has
@@ -379,7 +399,20 @@ impl<'rt> Pipeline<'rt> {
         router_stats: &mut RouterStats,
     ) -> Result<(Vec<ProcessedTile>, usize, f64)> {
         let tiles = split_scene_pooled(scene, self.cfg.fragment_px, &self.tile_pool);
-        let filter = CloudFilter::new(self.rt, self.cfg.policy.redundancy_threshold);
+        // default (f32) takes the exact pre-quantization code path, so
+        // default-config results stay bit-identical; i8 shares the
+        // pipeline's pooled quantization scratch
+        let filter = match self.filter_precision {
+            FilterPrecision::F32 => {
+                CloudFilter::new(self.rt, self.cfg.policy.redundancy_threshold)
+            }
+            FilterPrecision::I8 => CloudFilter::with_precision(
+                self.rt,
+                self.cfg.policy.redundancy_threshold,
+                FilterPrecision::I8,
+                self.quant_pool.clone(),
+            ),
+        };
         let (kept, redundant) = filter.filter(tiles)?;
         let n_filtered = redundant.len();
         // redundant tiles are simply dropped (their GT is lost — the

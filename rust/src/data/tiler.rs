@@ -11,10 +11,13 @@
 //! Zero-copy hot path: [`split_scene_pooled`] checks tile buffers out of
 //! a [`PixelPool`] instead of allocating 48 KB per tile, and `cut`
 //! operates on scene *row slices* (one bounds check per row span instead
-//! of three per pixel).  The float accumulation order of the box filter
-//! is pinned to the pre-refactor per-pixel loop — per output pixel,
-//! source rows add in `sy` then `sx` order, channels 0..3 — so the
-//! resampled pixels are bit-identical to the naive implementation
+//! of three per pixel).  The box filter accumulates into a fixed-width
+//! channel-lane array (one f32 lane per output channel, swept
+//! contiguously per source column offset) so the independent per-lane
+//! adds autovectorize; the float accumulation order per lane is pinned
+//! to the pre-refactor per-pixel loop — per output pixel, source rows
+//! add in `sy` then `sx` order, channels 0..3 — so the resampled pixels
+//! are bit-identical to the naive implementation
 //! (`tests/datapath_golden.rs` enforces this byte-for-byte).
 
 use super::scene::{GtBox, Scene};
@@ -114,9 +117,19 @@ fn cut(scene: &Scene, x0: usize, y0: usize, frag: usize, mut pixels: PixelBuf) -
             out[ty * ROW3..(ty + 1) * ROW3].copy_from_slice(&src[s..s + ROW3]);
         }
     } else if frag > MODEL_TILE {
-        // Box-filter downsample (frag = k * 64 for integer k).  The adds
-        // feeding each output accumulator run in the exact (sy, sx, c)
-        // order of the pre-refactor per-pixel loop — bit-identical f32.
+        // Box-filter downsample (frag = k * 64 for integer k) over a
+        // channel-lane accumulator: `acc` is the whole output row as 192
+        // f32 lanes (64 pixels × 3 channels), and each (sy, sx) pass
+        // sweeps the lane array *contiguously* while reading the source
+        // at stride k·3 — the autovectorization-friendly layout (the
+        // per-lane adds are independent, so LLVM can widen them).
+        //
+        // Bit-identity: each accumulator lane acc[tx*3+c] receives its
+        // addends in (sy asc, then sx asc) order — exactly the
+        // (sy, sx, c) order of the pre-refactor per-pixel loop — because
+        // swapping the tx/sx loops only interleaves adds between
+        // *different* lanes, which never interact until the final
+        // normalize.  Enforced byte-for-byte by tests/datapath_golden.rs.
         let k = frag / MODEL_TILE;
         let norm = 1.0 / (k * k) as f32;
         let mut acc = [0.0f32; ROW3];
@@ -125,9 +138,14 @@ fn cut(scene: &Scene, x0: usize, y0: usize, frag: usize, mut pixels: PixelBuf) -
             for sy in 0..k {
                 let s = (y0 + ty * k + sy) * w3 + x0 * 3;
                 let row = &src[s..s + frag * 3];
-                for tx in 0..MODEL_TILE {
-                    let a = &mut acc[tx * 3..tx * 3 + 3];
-                    for p in row[tx * k * 3..(tx * k + k) * 3].chunks_exact(3) {
+                for sx in 0..k {
+                    // chunk tx of `row[sx*3..]` at width k·3 starts at
+                    // source pixel tx·k + sx; only its first 3 lanes are
+                    // read.  `chunks` (not `_exact`): for sx > 0 the last
+                    // chunk is short but still holds ≥ 3 elements.
+                    for (a, p) in
+                        acc.chunks_exact_mut(3).zip(row[sx * 3..].chunks(k * 3))
+                    {
                         a[0] += p[0];
                         a[1] += p[1];
                         a[2] += p[2];
@@ -140,8 +158,9 @@ fn cut(scene: &Scene, x0: usize, y0: usize, frag: usize, mut pixels: PixelBuf) -
         }
     } else {
         // Nearest-neighbor upsample (frag = 64 / k): build the first
-        // output row of each source-row group from pixel repeats, then
-        // duplicate it k-1 times with whole-row copies.
+        // output row of each source-row group with one contiguous k-wide
+        // span per source pixel, then duplicate it k-1 times with
+        // whole-row copies.  Pure copies — trivially bit-identical.
         let k = MODEL_TILE / frag;
         for ty in 0..MODEL_TILE {
             let o = ty * ROW3;
@@ -153,10 +172,9 @@ fn cut(scene: &Scene, x0: usize, y0: usize, frag: usize, mut pixels: PixelBuf) -
             let s = (y0 + ty / k) * w3 + x0 * 3;
             let row = &src[s..s + frag * 3];
             let dst = &mut out[o..o + ROW3];
-            for (sx, p) in row.chunks_exact(3).enumerate() {
-                for r in 0..k {
-                    let d = (sx * k + r) * 3;
-                    dst[d..d + 3].copy_from_slice(p);
+            for (span, p) in dst.chunks_exact_mut(k * 3).zip(row.chunks_exact(3)) {
+                for q in span.chunks_exact_mut(3) {
+                    q.copy_from_slice(p);
                 }
             }
         }

@@ -65,17 +65,19 @@ pub fn iou_xywh(a: (f32, f32, f32, f32), b: (f32, f32, f32, f32)) -> f32 {
 /// `rows` is `G*G * head_d` f32s; `head_d = 5 + classes`.
 pub fn decode_rows(rows: &[f32], head_d: usize, conf_thresh: f32) -> Vec<Detection> {
     assert_eq!(rows.len() % head_d, 0);
-    let classes = head_d - 5;
     let mut dets = Vec::new();
     for r in rows.chunks_exact(head_d) {
         let obj = r[4];
         if obj < conf_thresh {
             continue; // cheap reject before argmax
         }
+        // argmax over the class slice: one bounds check for the whole
+        // sweep instead of one per probe; strict `>` keeps the original
+        // first-max tie-breaking exactly
         let (mut best_c, mut best_p) = (0usize, f32::MIN);
-        for c in 0..classes {
-            if r[5 + c] > best_p {
-                best_p = r[5 + c];
+        for (c, &p) in r[5..].iter().enumerate() {
+            if p > best_p {
+                best_p = p;
                 best_c = c;
             }
         }

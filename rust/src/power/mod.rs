@@ -62,6 +62,9 @@ pub struct Battery {
     pub charge_eff: f64,
     pub discharge_eff: f64,
     soc_wh: f64,
+    /// Cumulative energy drawn out of the store, Wh (the
+    /// depth-of-discharge ledger; charging never decrements it).
+    discharged_wh: f64,
 }
 
 impl Battery {
@@ -72,6 +75,7 @@ impl Battery {
             charge_eff: charge_eff.clamp(0.0, 1.0),
             discharge_eff: discharge_eff.clamp(1e-9, 1.0),
             soc_wh: capacity_wh * initial_soc.clamp(0.0, 1.0),
+            discharged_wh: 0.0,
         }
     }
 
@@ -82,6 +86,18 @@ impl Battery {
     /// State of charge as a fraction of capacity, in [0, 1].
     pub fn soc_frac(&self) -> f64 {
         self.soc_wh / self.capacity_wh
+    }
+
+    /// Cumulative energy drawn out of the store over the battery's
+    /// lifetime, Wh.
+    pub fn discharged_wh(&self) -> f64 {
+        self.discharged_wh
+    }
+
+    /// Cumulative depth of discharge in full-capacity cycle equivalents
+    /// (`discharged_wh / capacity_wh`) — the standard battery-wear proxy.
+    pub fn cycle_equivalents(&self) -> f64 {
+        self.discharged_wh / self.capacity_wh
     }
 
     /// Apply one period's energy flow: `gen_wh` in from the array,
@@ -97,9 +113,11 @@ impl Battery {
             let need_wh = -net / self.discharge_eff;
             if need_wh <= self.soc_wh {
                 self.soc_wh -= need_wh;
+                self.discharged_wh += need_wh;
                 0.0
             } else {
                 let supplied = self.soc_wh * self.discharge_eff;
+                self.discharged_wh += self.soc_wh;
                 self.soc_wh = 0.0;
                 -net - supplied
             }
@@ -161,6 +179,13 @@ pub struct PowerStats {
     /// Federated local-training energy drawn from the battery (already
     /// included in `consumed_wh`; broken out for the H2 ledger).
     pub training_wh: f64,
+    /// Cumulative energy drawn out of the battery store, Wh — the
+    /// depth-of-discharge ledger (includes conversion losses; charging
+    /// never decrements it).
+    pub discharge_wh: f64,
+    /// `discharge_wh` in full-capacity cycle equivalents — the standard
+    /// battery-wear proxy for sizing a mission's battery.
+    pub cycle_equivalents: f64,
     soc_sum: f64,
     soc_n: u64,
 }
@@ -176,6 +201,8 @@ impl PowerStats {
             scenes_deferred: 0,
             scenes_shed: 0,
             training_wh: 0.0,
+            discharge_wh: 0.0,
+            cycle_equivalents: 0.0,
             soc_sum: 0.0,
             soc_n: 0,
         }
@@ -282,6 +309,8 @@ impl PowerState {
         self.stats.final_soc_frac = f;
         self.stats.soc_sum += f;
         self.stats.soc_n += 1;
+        self.stats.discharge_wh = self.battery.discharged_wh();
+        self.stats.cycle_equivalents = self.battery.cycle_equivalents();
     }
 
     /// Charge one federated local-training burst at a round boundary:
@@ -299,6 +328,8 @@ impl PowerState {
         let f = self.battery.soc_frac();
         self.stats.min_soc_frac = self.stats.min_soc_frac.min(f);
         self.stats.final_soc_frac = f;
+        self.stats.discharge_wh = self.battery.discharged_wh();
+        self.stats.cycle_equivalents = self.battery.cycle_equivalents();
     }
 }
 
@@ -412,6 +443,38 @@ mod tests {
         let shortfall = b.step(0.0, 4.0);
         assert_eq!(b.soc_wh(), 0.0);
         assert!((shortfall - 1.0).abs() < 1e-12, "unmet load is reported, not invented");
+    }
+
+    #[test]
+    fn depth_of_discharge_accumulates_cycle_equivalents() {
+        let mut b = Battery::new(10.0, 1.0, 1.0, 1.0);
+        assert_eq!(b.discharged_wh(), 0.0);
+        b.step(0.0, 4.0); // drain 4 Wh
+        b.step(100.0, 0.0); // recharge to full — DoD must NOT rewind
+        b.step(0.0, 6.0); // drain 6 Wh
+        assert!((b.discharged_wh() - 10.0).abs() < 1e-12);
+        assert!((b.cycle_equivalents() - 1.0).abs() < 1e-12, "10 Wh through a 10 Wh pack = 1 cycle");
+        // emptying the pack counts only what was actually stored
+        let mut e = Battery::new(10.0, 1.0, 0.5, 0.5);
+        e.step(0.0, 100.0);
+        assert_eq!(e.soc_wh(), 0.0);
+        assert!((e.discharged_wh() - 5.0).abs() < 1e-12, "5 Wh stored is all that can discharge");
+    }
+
+    #[test]
+    fn power_stats_surface_depth_of_discharge() {
+        let mut s = state(80.0);
+        let dark = DutyCycles { compute: 1.0, comm: 1.0, camera: 1.0 };
+        s.advance_period(3600.0, dark, 0.0);
+        assert!(s.stats.discharge_wh > 0.0, "an hour of dark full duty must discharge");
+        assert!(
+            (s.stats.cycle_equivalents - s.stats.discharge_wh / 80.0).abs() < 1e-12,
+            "cycle equivalents are discharge over capacity"
+        );
+        // training bursts land in the same ledger
+        let before = s.stats.discharge_wh;
+        s.charge_training(3600.0);
+        assert!(s.stats.discharge_wh > before);
     }
 
     #[test]

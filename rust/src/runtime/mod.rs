@@ -15,6 +15,7 @@ mod manifest;
 pub use manifest::{Manifest, ModelInfo};
 
 use std::collections::HashMap;
+use std::fmt;
 use std::path::{Path, PathBuf};
 use std::sync::{Arc, Mutex};
 
@@ -85,6 +86,53 @@ pub struct Runtime {
     /// callers gather ragged batches into a checkout instead of building
     /// per-chunk `Vec`s, and `execute` pads tail calls in place here.
     scratch: PixelPool,
+    /// Output-row pool (`max_batch * widest out_cols` f32 per buffer):
+    /// [`Runtime::execute`] assembles its result directly into a pooled
+    /// buffer instead of growing a fresh `Vec` per call, so the steady
+    /// state batch→rows hop is allocation-free too.  Requests wider than
+    /// one buffer (n beyond `max_batch`) fall back to a one-off `Vec`.
+    rows: PixelPool,
+}
+
+/// Inference output rows (`n * out_cols` f32s) from [`Runtime::execute`],
+/// backed by the runtime's row pool when the request fits one pooled
+/// buffer.  Derefs to the filled `[f32]` prefix; dropping it returns the
+/// storage, so a steady-state infer loop recycles its output rows the
+/// same way it recycles its marshalling scratch.
+pub struct OutputRows {
+    buf: PixelBuf,
+    len: usize,
+}
+
+impl OutputRows {
+    /// The filled rows (`n * out_cols` f32s).
+    pub fn as_slice(&self) -> &[f32] {
+        &self.buf[..self.len]
+    }
+}
+
+impl std::ops::Deref for OutputRows {
+    type Target = [f32];
+    fn deref(&self) -> &[f32] {
+        self.as_slice()
+    }
+}
+
+impl<'a> IntoIterator for &'a OutputRows {
+    type Item = &'a f32;
+    type IntoIter = std::slice::Iter<'a, f32>;
+    fn into_iter(self) -> Self::IntoIter {
+        self.as_slice().iter()
+    }
+}
+
+impl fmt::Debug for OutputRows {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("OutputRows")
+            .field("len", &self.len)
+            .field("pooled", &self.buf.is_pooled())
+            .finish()
+    }
 }
 
 impl Runtime {
@@ -96,6 +144,10 @@ impl Runtime {
         let client = xla::PjRtClient::cpu().map_err(wrap_xla)?;
         let max_batch = manifest.batch_sizes.iter().copied().max().unwrap_or(1);
         let scratch = PixelPool::new(max_batch * manifest.tile * manifest.tile * 3);
+        // widest per-image output across models: detector head rows
+        // (grid² · head_d) dwarf cloudscore's 3, so one pool serves both
+        let max_cols = (manifest.grid * manifest.grid * manifest.head_d).max(3);
+        let rows = PixelPool::new(max_batch * max_cols);
         Ok(Runtime {
             client,
             dir,
@@ -104,6 +156,7 @@ impl Runtime {
             costs: Mutex::new(HashMap::new()),
             exec_locks: Mutex::new(HashMap::new()),
             scratch,
+            rows,
         })
     }
 
@@ -265,21 +318,30 @@ impl Runtime {
 
     /// Execute `model` on `n` images (any count), splitting/padding across
     /// the exported batch variants along the cheapest calibrated plan.
-    pub fn execute(&self, model: Model, n: usize, input: &[f32]) -> Result<Vec<f32>> {
+    /// The result rows come from the pooled output buffers when `n * cols`
+    /// fits one buffer (every coordinator chunk does); dropping the
+    /// [`OutputRows`] recycles the storage.
+    pub fn execute(&self, model: Model, n: usize, input: &[f32]) -> Result<OutputRows> {
         let t = self.manifest.tile;
         let px = t * t * 3;
         assert_eq!(input.len(), n * px, "input length mismatch");
         let cols = self.out_cols(model);
-        let mut out = Vec::with_capacity(n * cols);
+        let total = n * cols;
+        let mut out = if total <= self.rows.buf_len() {
+            self.rows.checkout_dirty()
+        } else {
+            // oversize request (n beyond max_batch): one-off allocation,
+            // never parked in the pool (pooled buffers are fixed-length)
+            PixelBuf::from(vec![0.0f32; total])
+        };
         let mut done = 0usize;
         for b in self.plan(model, n) {
             let take = b.min(n - done);
+            let dst = &mut out[done * cols..(done + take) * cols];
             if take == b {
-                out.extend_from_slice(&self.execute_exact(
-                    model,
-                    b,
-                    &input[done * px..(done + b) * px],
-                )?);
+                let full =
+                    self.execute_exact(model, b, &input[done * px..(done + b) * px])?;
+                dst.copy_from_slice(&full);
             } else {
                 // pad the tail call in place in pooled scratch, zeroing
                 // only the pad rows the executable will actually read
@@ -287,15 +349,20 @@ impl Runtime {
                 padded[..take * px].copy_from_slice(&input[done * px..]);
                 padded[take * px..b * px].fill(0.0);
                 let full = self.execute_exact(model, b, &padded[..b * px])?;
-                out.extend_from_slice(&full[..take * cols]);
+                dst.copy_from_slice(&full[..take * cols]);
             }
             done += take;
             if done >= n {
                 break;
             }
         }
-        debug_assert_eq!(out.len(), n * cols);
-        Ok(out)
+        debug_assert_eq!(done, n);
+        Ok(OutputRows { buf: out, len: total })
+    }
+
+    /// Output-row pool accounting (asserted by the zero-copy path tests).
+    pub fn rows_stats(&self) -> PoolStats {
+        self.rows.stats()
     }
 
     /// Largest exported batch — the coordinator's batcher targets this.

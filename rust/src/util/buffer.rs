@@ -1,4 +1,4 @@
-//! Pooled fixed-size f32 pixel buffers — the zero-copy hot data path.
+//! Pooled fixed-size buffers — the zero-copy hot data path.
 //!
 //! The capture→tile→infer path used to allocate (and zero) a fresh
 //! `Vec<f32>` for every tile and every scene; at steady state those
@@ -10,6 +10,11 @@
 //! the checkout/return/alloc balance the invariant tests and the
 //! `perf_datapath` bench assert on.
 //!
+//! The pool is generic over the element ([`Pool<T>`]): the f32 pixel
+//! pools and the quantized cloud filter's i8 scratch ([`QuantPool`])
+//! share one implementation, so the accounting and eviction semantics
+//! can never diverge between precisions.
+//!
 //! Ownership rules (see DESIGN.md "Hot data path"):
 //! * the pool owner (SceneGen, Pipeline, Runtime) decides the buffer
 //!   length at construction; every checkout is that exact length;
@@ -17,32 +22,51 @@
 //!   to `vec![0.0; len]`, which is what the pre-pool code allocated —
 //!   while `checkout_dirty()` skips the clear for callers that
 //!   overwrite every element they later read;
-//! * dropping a pooled `PixelBuf` returns the storage; dropping the
+//! * dropping a pooled buffer returns the storage; dropping the
 //!   pool itself only drops the free list — outstanding buffers keep
-//!   the shared inner state alive and still return storage harmlessly.
+//!   the shared inner state alive and still return storage harmlessly;
+//! * a pool built with [`Pool::with_cap`] bounds its free list: returns
+//!   beyond the cap *evict* (free) the storage instead of parking it,
+//!   so large fleets bound their idle-buffer footprint.  The default
+//!   (`cap = 0`) is unbounded — the pre-cap behaviour, bit-for-bit.
 
 use std::fmt;
 use std::ops::{Deref, DerefMut};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
-/// Checkout/return pool of fixed-length `f32` buffers.
+/// Checkout/return pool of fixed-length buffers over element `T`.
 ///
 /// Cloning the pool handle is cheap (shared `Arc`); all clones draw
 /// from the same free list, so a pool may be shared across worker
 /// threads (checkout/return is one short mutex hold around a `Vec`
 /// push/pop).
-#[derive(Clone)]
-pub struct PixelPool {
-    inner: Arc<PoolInner>,
+pub struct Pool<T> {
+    inner: Arc<PoolInner<T>>,
 }
 
-struct PoolInner {
+/// The hot-path f32 pixel pool (tiles, scenes, marshalling scratch).
+pub type PixelPool = Pool<f32>;
+/// Pooled i8 scratch for the quantized cloud filter.
+pub type QuantPool = Pool<i8>;
+
+// Derived Clone would bound T: Clone; the handle only clones the Arc.
+impl<T> Clone for Pool<T> {
+    fn clone(&self) -> Pool<T> {
+        Pool { inner: Arc::clone(&self.inner) }
+    }
+}
+
+struct PoolInner<T> {
     buf_len: usize,
-    free: Mutex<Vec<Vec<f32>>>,
+    /// Free-list cap: returns beyond this evict instead of parking.
+    /// 0 = unbounded.
+    cap: usize,
+    free: Mutex<Vec<Vec<T>>>,
     checkouts: AtomicU64,
     returns: AtomicU64,
     allocs: AtomicU64,
+    evictions: AtomicU64,
 }
 
 /// Point-in-time pool accounting.
@@ -50,10 +74,13 @@ struct PoolInner {
 pub struct PoolStats {
     /// Buffers handed out over the pool's lifetime.
     pub checkouts: u64,
-    /// Buffers returned (dropped while pooled).
+    /// Buffers returned (dropped while pooled) — includes evictions.
     pub returns: u64,
     /// Checkouts that had to allocate (free list empty).
     pub allocs: u64,
+    /// Returns whose storage was freed instead of parked (free list at
+    /// its cap), plus buffers freed by [`Pool::shrink_to`].
+    pub evictions: u64,
     /// Buffers currently sitting on the free list.
     pub free: usize,
 }
@@ -83,16 +110,27 @@ impl PoolStats {
     }
 }
 
-impl PixelPool {
-    /// A pool of `buf_len`-element buffers (e.g. one tile or one scene).
-    pub fn new(buf_len: usize) -> PixelPool {
-        PixelPool {
+impl<T: Copy + Default> Pool<T> {
+    /// A pool of `buf_len`-element buffers (e.g. one tile or one scene)
+    /// with an unbounded free list.
+    pub fn new(buf_len: usize) -> Pool<T> {
+        Pool::with_cap(buf_len, 0)
+    }
+
+    /// A pool whose free list is capped at `cap` parked buffers:
+    /// returns beyond the cap free their storage (counted as
+    /// `evictions`) instead of parking it.  `cap = 0` means unbounded —
+    /// identical to [`Pool::new`].
+    pub fn with_cap(buf_len: usize, cap: usize) -> Pool<T> {
+        Pool {
             inner: Arc::new(PoolInner {
                 buf_len,
+                cap,
                 free: Mutex::new(Vec::new()),
                 checkouts: AtomicU64::new(0),
                 returns: AtomicU64::new(0),
                 allocs: AtomicU64::new(0),
+                evictions: AtomicU64::new(0),
             }),
         }
     }
@@ -103,14 +141,14 @@ impl PixelPool {
     }
 
     /// Check out a zeroed buffer (reused storage is cleared, fresh
-    /// storage is born zeroed, so this is exactly `vec![0.0; buf_len]`
+    /// storage is born zeroed, so this is exactly `vec![T::default(); buf_len]`
     /// without the steady-state allocation).
-    pub fn checkout(&self) -> PixelBuf {
+    pub fn checkout(&self) -> PoolBuf<T> {
         let (mut data, reused) = self.inner.take();
         if reused {
-            data.fill(0.0);
+            data.fill(T::default());
         }
-        PixelBuf { data, pool: Some(Arc::clone(&self.inner)) }
+        PoolBuf { data, pool: Some(Arc::clone(&self.inner)) }
     }
 
     /// Check out a buffer with **unspecified contents** — for hot-path
@@ -119,9 +157,26 @@ impl PixelPool {
     /// just wrote).  Skips the per-checkout memset that would otherwise
     /// re-pay, per item, the cost the pool exists to remove.  Use
     /// [`Self::checkout`] wherever zeroed semantics matter.
-    pub fn checkout_dirty(&self) -> PixelBuf {
+    pub fn checkout_dirty(&self) -> PoolBuf<T> {
         let (data, _reused) = self.inner.take();
-        PixelBuf { data, pool: Some(Arc::clone(&self.inner)) }
+        PoolBuf { data, pool: Some(Arc::clone(&self.inner)) }
+    }
+
+    /// Free parked buffers beyond `keep`, counting them as evictions —
+    /// an explicit trim for fleet-scale callers that want to release
+    /// warmup overshoot without waiting for capped returns.
+    pub fn shrink_to(&self, keep: usize) {
+        let mut freed = 0u64;
+        {
+            let mut free = self.inner.free.lock().unwrap();
+            while free.len() > keep {
+                free.pop();
+                freed += 1;
+            }
+        }
+        if freed > 0 {
+            self.inner.evictions.fetch_add(freed, Ordering::Relaxed);
+        }
     }
 
     pub fn stats(&self) -> PoolStats {
@@ -129,106 +184,124 @@ impl PixelPool {
     }
 }
 
-impl PoolInner {
+impl<T: Copy + Default> PoolInner<T> {
     /// Pop a free buffer (`true`: contents are stale) or allocate one
     /// (`false`: born zeroed) — so `checkout` clears only reused storage.
-    fn take(&self) -> (Vec<f32>, bool) {
+    fn take(&self) -> (Vec<T>, bool) {
         self.checkouts.fetch_add(1, Ordering::Relaxed);
         let reused = self.free.lock().unwrap().pop();
         match reused {
             Some(v) => (v, true),
             None => {
                 self.allocs.fetch_add(1, Ordering::Relaxed);
-                (vec![0.0; self.buf_len], false)
+                (vec![T::default(); self.buf_len], false)
             }
         }
     }
+}
 
+impl<T> PoolInner<T> {
     fn stats(&self) -> PoolStats {
         PoolStats {
             checkouts: self.checkouts.load(Ordering::Relaxed),
             returns: self.returns.load(Ordering::Relaxed),
             allocs: self.allocs.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
             free: self.free.lock().unwrap().len(),
         }
     }
 }
 
-/// An owned f32 buffer, optionally backed by a [`PixelPool`].
+/// An owned buffer, optionally backed by a [`Pool`].
 ///
-/// Derefs to `[f32]`; drops return pooled storage to the pool.  A plain
-/// (unpooled) buffer behaves exactly like the `Vec<f32>` it wraps, so
+/// Derefs to `[T]`; drops return pooled storage to the pool.  A plain
+/// (unpooled) buffer behaves exactly like the `Vec<T>` it wraps, so
 /// tests and cold paths can keep constructing pixel data directly.
-pub struct PixelBuf {
-    data: Vec<f32>,
-    pool: Option<Arc<PoolInner>>,
+pub struct PoolBuf<T> {
+    data: Vec<T>,
+    pool: Option<Arc<PoolInner<T>>>,
 }
 
-impl PixelBuf {
-    /// Unpooled zeroed buffer — the cold-path equivalent of `checkout`.
-    pub fn zeroed(len: usize) -> PixelBuf {
-        PixelBuf { data: vec![0.0; len], pool: None }
-    }
+/// The hot-path f32 buffer handed out by a [`PixelPool`].
+pub type PixelBuf = PoolBuf<f32>;
+/// i8 quantization scratch handed out by a [`QuantPool`].
+pub type QuantBuf = PoolBuf<i8>;
 
+impl<T: Copy + Default> PoolBuf<T> {
+    /// Unpooled zeroed buffer — the cold-path equivalent of `checkout`.
+    pub fn zeroed(len: usize) -> PoolBuf<T> {
+        PoolBuf { data: vec![T::default(); len], pool: None }
+    }
+}
+
+impl<T> PoolBuf<T> {
     /// Whether dropping this buffer returns storage to a pool.
     pub fn is_pooled(&self) -> bool {
         self.pool.is_some()
     }
 }
 
-impl From<Vec<f32>> for PixelBuf {
-    fn from(data: Vec<f32>) -> PixelBuf {
-        PixelBuf { data, pool: None }
+impl<T> From<Vec<T>> for PoolBuf<T> {
+    fn from(data: Vec<T>) -> PoolBuf<T> {
+        PoolBuf { data, pool: None }
     }
 }
 
-impl Deref for PixelBuf {
-    type Target = [f32];
-    fn deref(&self) -> &[f32] {
+impl<T> Deref for PoolBuf<T> {
+    type Target = [T];
+    fn deref(&self) -> &[T] {
         &self.data
     }
 }
 
-impl DerefMut for PixelBuf {
-    fn deref_mut(&mut self) -> &mut [f32] {
+impl<T> DerefMut for PoolBuf<T> {
+    fn deref_mut(&mut self) -> &mut [T] {
         &mut self.data
     }
 }
 
-impl Clone for PixelBuf {
+impl<T: Copy + Default> Clone for PoolBuf<T> {
     /// A clone of a pooled buffer is drawn from the same pool (no fresh
     /// allocation at steady state) and carries a bit-identical copy of
     /// the contents; unpooled buffers clone like a `Vec`.
-    fn clone(&self) -> PixelBuf {
+    fn clone(&self) -> PoolBuf<T> {
         match &self.pool {
             Some(pool) if self.data.len() == pool.buf_len => {
                 let (mut data, _reused) = pool.take();
                 data.copy_from_slice(&self.data);
-                PixelBuf { data, pool: Some(Arc::clone(pool)) }
+                PoolBuf { data, pool: Some(Arc::clone(pool)) }
             }
-            _ => PixelBuf { data: self.data.clone(), pool: None },
+            _ => PoolBuf { data: self.data.clone(), pool: None },
         }
     }
 }
 
-impl Drop for PixelBuf {
+impl<T> Drop for PoolBuf<T> {
     fn drop(&mut self) {
         if let Some(pool) = self.pool.take() {
             pool.returns.fetch_add(1, Ordering::Relaxed);
-            pool.free.lock().unwrap().push(std::mem::take(&mut self.data));
+            let data = std::mem::take(&mut self.data);
+            let mut free = pool.free.lock().unwrap();
+            if pool.cap > 0 && free.len() >= pool.cap {
+                drop(free); // release the lock before freeing the Vec
+                pool.evictions.fetch_add(1, Ordering::Relaxed);
+                // data drops here: evicted, not parked
+            } else {
+                free.push(data);
+            }
         }
     }
 }
 
-impl PartialEq for PixelBuf {
-    fn eq(&self, other: &PixelBuf) -> bool {
+impl<T: PartialEq> PartialEq for PoolBuf<T> {
+    fn eq(&self, other: &PoolBuf<T>) -> bool {
         self.data == other.data
     }
 }
 
-impl fmt::Debug for PixelBuf {
+impl<T: fmt::Debug> fmt::Debug for PoolBuf<T> {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        f.debug_struct("PixelBuf")
+        f.debug_struct("PoolBuf")
             .field("len", &self.data.len())
             .field("pooled", &self.pool.is_some())
             .field("head", &&self.data[..self.data.len().min(4)])
@@ -253,6 +326,7 @@ mod tests {
         assert_eq!(s.allocs, 1, "second checkout must reuse the first buffer");
         assert_eq!(s.hits(), 1);
         assert_eq!(s.free, 1);
+        assert_eq!(s.evictions, 0);
     }
 
     #[test]
@@ -315,5 +389,62 @@ mod tests {
         assert_eq!(v, w);
         assert_eq!(v.len(), 2);
         assert_eq!(PixelBuf::zeroed(3)[..], [0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn capped_pool_evicts_beyond_cap() {
+        let pool = PixelPool::with_cap(4, 2);
+        let bufs: Vec<PixelBuf> = (0..4).map(|_| pool.checkout()).collect();
+        drop(bufs); // 4 returns against a cap of 2: last 2 evict
+        let s = pool.stats();
+        assert_eq!(s.returns, 4, "evicted buffers still count as returned");
+        assert_eq!(s.free, 2, "free list must stay at its cap");
+        assert_eq!(s.evictions, 2);
+        assert_eq!(s.live(), 0, "live accounting unaffected by eviction");
+        // the parked two still serve checkouts without allocating
+        let a = pool.checkout();
+        let b = pool.checkout();
+        assert_eq!(pool.stats().allocs, 4, "capped pool must reuse parked buffers");
+        drop((a, b));
+    }
+
+    #[test]
+    fn uncapped_pool_never_evicts() {
+        let pool = PixelPool::new(4); // cap 0 = unbounded
+        let bufs: Vec<PixelBuf> = (0..8).map(|_| pool.checkout()).collect();
+        drop(bufs);
+        let s = pool.stats();
+        assert_eq!(s.free, 8);
+        assert_eq!(s.evictions, 0);
+    }
+
+    #[test]
+    fn shrink_to_frees_parked_buffers() {
+        let pool = PixelPool::new(4);
+        let bufs: Vec<PixelBuf> = (0..5).map(|_| pool.checkout()).collect();
+        drop(bufs);
+        pool.shrink_to(2);
+        let s = pool.stats();
+        assert_eq!(s.free, 2);
+        assert_eq!(s.evictions, 3);
+        pool.shrink_to(3); // already below: no-op
+        assert_eq!(pool.stats().evictions, 3);
+    }
+
+    #[test]
+    fn quant_pool_shares_the_pool_semantics() {
+        let pool = QuantPool::new(6);
+        let mut a = pool.checkout();
+        assert!(a.iter().all(|&v| v == 0), "i8 checkout is zeroed");
+        a.fill(-3);
+        drop(a);
+        let b = pool.checkout_dirty();
+        assert!(b.is_pooled());
+        assert_eq!(b.len(), 6);
+        drop(b);
+        let s = pool.stats();
+        assert_eq!(s.checkouts, 2);
+        assert_eq!(s.allocs, 1, "quant pool must reuse the freed buffer");
+        assert_eq!(s.returns, 2);
     }
 }

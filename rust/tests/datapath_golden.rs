@@ -12,6 +12,10 @@
 //! allocations.
 
 use tiansuan::config::Config;
+use tiansuan::coordinator::cloudfilter::{
+    is_redundant_f32, is_redundant_quant, quant_threshold, quantize_pixels, white_count_quant,
+    white_frac_f32, QUANT_SCALE,
+};
 use tiansuan::coordinator::router::RouterStats;
 use tiansuan::coordinator::Pipeline;
 use tiansuan::data::{
@@ -37,7 +41,9 @@ fn split_scene_matches_naive_reference_byte_for_byte() {
     for (version, seed) in [(Version::V1, 3u64), (Version::V2, 9), (Version::V2, 41)] {
         let scene = SceneGen::new(seed, version.spec(), 4, 4).capture();
         let pool = PixelPool::new(TILE_PX);
-        for frag in [32usize, 64, 128] {
+        // every kernel shape: deep upsample (16→64), 2× both ways, the
+        // identity copy, and deep box filter (256→64) — all byte-for-byte
+        for frag in [16usize, 32, 64, 128, 256] {
             let plain = split_scene(&scene, frag);
             let pooled = split_scene_pooled(&scene, frag, &pool);
             let mut i = 0;
@@ -110,6 +116,96 @@ fn steady_state_split_performs_zero_allocations() {
     assert_eq!(gen.pool_stats().allocs, 1, "scene buffer must be reused across captures");
 }
 
+// ---- quantized-filter equivalence (artifact-free) ----
+//
+// Decision tolerance (see DESIGN.md and coordinator::cloudfilter): the
+// integer tile rule `count > floor(t·n)` is *exactly* the f32 rule
+// `count/n > t` for equal counts, so the i8 and f32 keep/drop decisions
+// can differ only when per-pixel whiteness flips across quantization —
+// pixels whose min channel lies within one quantization step (1/127) of
+// the white threshold.  A disagreeing tile must therefore (a) contain
+// such ambiguous pixels and (b) have its white fraction within
+// `ambiguous/n` of the decision threshold.
+
+/// The CloudScore kernel's white threshold
+/// (python/compile/kernels/cloudscore.py, mirrored in the manifest).
+const WHITE: f32 = 0.72;
+
+/// Pixels whose min channel is within one quantization step of WHITE —
+/// the only pixels whose whiteness may differ between f32 and i8.
+fn ambiguous_pixels(pixels: &[f32]) -> usize {
+    pixels
+        .chunks_exact(3)
+        .filter(|p| {
+            let m = p[0].min(p[1]).min(p[2]);
+            (m - WHITE).abs() <= 1.0 / QUANT_SCALE
+        })
+        .count()
+}
+
+fn tile_decisions(pixels: &[f32], threshold: f32) -> (bool, bool) {
+    let f = is_redundant_f32(white_frac_f32(pixels, WHITE), threshold);
+    let mut q = vec![0i8; pixels.len()];
+    quantize_pixels(pixels, &mut q);
+    let white = white_count_quant(&q, quant_threshold(WHITE));
+    let i = is_redundant_quant(white, pixels.len() / 3, threshold);
+    (f, i)
+}
+
+#[test]
+fn i8_decisions_match_f32_within_the_quantization_band() {
+    for (version, seed) in
+        [(Version::V1, 7u64), (Version::V1, 19), (Version::V2, 23), (Version::V2, 57)]
+    {
+        let scene = SceneGen::new(seed, version.spec(), 4, 4).capture();
+        for threshold in [0.3f32, 0.5, 0.72] {
+            for (ti, tile) in split_scene(&scene, 64).iter().enumerate() {
+                let (f, i) = tile_decisions(&tile.pixels, threshold);
+                if f == i {
+                    continue;
+                }
+                // disagreement is only legal inside the documented band
+                let amb = ambiguous_pixels(&tile.pixels);
+                let n = (tile.pixels.len() / 3) as f32;
+                let wf = white_frac_f32(&tile.pixels, WHITE);
+                assert!(
+                    amb > 0 && (wf - threshold).abs() <= amb as f32 / n,
+                    "{} seed {seed} thr {threshold} tile {ti}: paths disagree \
+                     (f32 {f}, i8 {i}) outside the tolerance (wf {wf}, ambiguous {amb})",
+                    version.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn threshold_straddling_tiles_diverge_only_inside_the_band() {
+    // 4096-pixel tile, decision threshold 0.5: 2048 solid-white pixels
+    // plus one probe pixel decide the tile.
+    let n = 4096usize;
+    let build = |probe: f32| {
+        let mut px = vec![0.1f32; n * 3];
+        for p in px[..2048 * 3].iter_mut() {
+            *p = 1.0;
+        }
+        px[2048 * 3..2049 * 3].fill(probe);
+        px
+    };
+    // probe inside the band: > WHITE for f32 but quantizes to
+    // round(0.7202·127) = 91 = floor(WHITE·127), not > — the one legal
+    // divergence, and the tile's wf sits exactly at the threshold edge
+    let px = build(0.7202);
+    let (f, i) = tile_decisions(&px, 0.5);
+    assert!(f && !i, "band probe must drop on f32 (2049/4096) and keep on i8 (2048/4096)");
+    assert_eq!(ambiguous_pixels(&px), 1);
+    // probes clear of the band agree on both sides
+    let (f, i) = tile_decisions(&build(0.73), 0.5);
+    assert!(f && i, "clearly-white probe must drop on both paths");
+    let (f, i) = tile_decisions(&build(0.71), 0.5);
+    assert!(!f && !i, "clearly-grey probe must keep on both paths");
+}
+
 // ---- artifact-gated: the full onboard path over the real runtime ----
 
 fn rt() -> Option<Runtime> {
@@ -139,6 +235,7 @@ fn onboard_scene_is_allocation_free_after_warmup() {
     drop(p.onboard_scene(&warm, &mut router).unwrap());
     let tile_warm = p.tile_pool_stats().allocs;
     let scratch_warm = rt.scratch_stats().allocs;
+    let rows_warm = rt.rows_stats().allocs;
 
     for _ in 0..3 {
         let scene = gen.capture();
@@ -153,6 +250,11 @@ fn onboard_scene_is_allocation_free_after_warmup() {
             rt.scratch_stats().allocs,
             scratch_warm,
             "steady-state marshalling allocated a scratch buffer"
+        );
+        assert_eq!(
+            rt.rows_stats().allocs,
+            rows_warm,
+            "steady-state execute allocated an output-row buffer"
         );
     }
     let s = p.tile_pool_stats();
