@@ -76,4 +76,13 @@ grep '^{"bench"' "$bench_log" >> ../BENCH_datapath.json || true
 rm -f "$bench_log"
 echo "BENCH_datapath.json now holds $(wc -l < ../BENCH_datapath.json) records"
 
+echo "== bench artifact: perf_fleet -> BENCH_fleet.json =="
+# artifact-free (sharded event scheduler over stub machines): always recorded
+bench_log=$(mktemp)
+cargo bench --bench perf_fleet | tee "$bench_log"
+echo "{\"bench\":\"run\",\"commit\":\"$(git rev-parse --short HEAD 2>/dev/null || echo unknown)\",\"date\":\"$(date -u +%FT%TZ)\"}" >> ../BENCH_fleet.json
+grep '^{"bench"' "$bench_log" >> ../BENCH_fleet.json || true
+rm -f "$bench_log"
+echo "BENCH_fleet.json now holds $(wc -l < ../BENCH_fleet.json) records"
+
 echo "ci: all gates passed"

@@ -1,0 +1,87 @@
+//! Fleet-engine scaling sweep: sats-simulated/sec and the peak-RSS
+//! proxy (live machine count) at 10 → 100k satellites.
+//!
+//! Artifact-free by design: it steps [`tiansuan::sim::StubSat`]
+//! machines — real [`Timeline`]s and the real sharded event scheduler,
+//! synthetic capture/drain workload, no inference runtime — so CI can
+//! always record the sweep.  The whole fleet runs in ONE process with
+//! thread count = shard count (the thread-per-satellite driver this
+//! engine replaces would need 2×N threads at these sizes).  Emits the
+//! standard bench JSON (one object per line) that `ci.sh` greps into
+//! `BENCH_fleet.json`.
+
+use tiansuan::sim::{run_sharded, StubSat};
+use tiansuan::util::bench;
+
+fn main() {
+    let shards = 8usize;
+    let horizon_s = 21_600.0; // 6 h mission
+    let scenes = 4usize;
+
+    println!(
+        "=== perf_fleet: sharded event scheduler, {shards} shards, \
+         {scenes} scenes over {:.0} h ===",
+        horizon_s / 3600.0
+    );
+    for n_sats in [10usize, 100, 1_000, 10_000, 100_000] {
+        // uncapped (every machine live at once) vs the default
+        // admission cap — same results, bounded peak footprint
+        for cap in [0usize, 64] {
+            let t0 = std::time::Instant::now();
+            let (reports, stats) =
+                run_sharded(n_sats, shards, cap, |id| Ok(StubSat::new(id, 42, scenes, horizon_s)))
+                    .unwrap();
+            let wall = t0.elapsed().as_secs_f64();
+            assert_eq!(reports.len(), n_sats);
+            let tiles: u64 = reports.iter().map(|r| r.tiles).sum();
+            println!(
+                "fleet {n_sats:>7} sats cap {cap:>3}: {:>8.0} sats/s, \
+                 {:>9} events ({:>9.0}/s), peak {:>7} live machines, {tiles} tiles",
+                n_sats as f64 / wall.max(1e-12),
+                stats.events,
+                stats.events as f64 / wall.max(1e-12),
+                stats.peak_live,
+            );
+            bench::json_line(
+                "perf_fleet.scaling",
+                &[
+                    ("sats", n_sats as f64),
+                    ("shards", shards as f64),
+                    ("max_events_in_flight", cap as f64),
+                    ("wall_s", wall),
+                    ("sats_per_s", n_sats as f64 / wall.max(1e-12)),
+                    ("events", stats.events as f64),
+                    ("events_per_s", stats.events as f64 / wall.max(1e-12)),
+                    ("peak_live_machines", stats.peak_live as f64),
+                    ("tiles", tiles as f64),
+                ],
+            );
+        }
+    }
+
+    // shard-count sweep at a fixed fleet: the parallelism dial's
+    // throughput curve (results are invariant; only wall time moves)
+    let n_sats = 10_000usize;
+    for shards in [1usize, 2, 4, 8, 16] {
+        let t0 = std::time::Instant::now();
+        let (_, stats) =
+            run_sharded(n_sats, shards, 64, |id| Ok(StubSat::new(id, 42, scenes, horizon_s)))
+                .unwrap();
+        let wall = t0.elapsed().as_secs_f64();
+        println!(
+            "shards {shards:>2}: {n_sats} sats in {wall:.3} s ({:>8.0} sats/s, peak {} live)",
+            n_sats as f64 / wall.max(1e-12),
+            stats.peak_live,
+        );
+        bench::json_line(
+            "perf_fleet.shard_sweep",
+            &[
+                ("sats", n_sats as f64),
+                ("shards", shards as f64),
+                ("wall_s", wall),
+                ("sats_per_s", n_sats as f64 / wall.max(1e-12)),
+                ("peak_live_machines", stats.peak_live as f64),
+            ],
+        );
+    }
+}

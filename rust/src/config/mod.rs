@@ -190,6 +190,11 @@ pub struct PowerConfig {
     /// How far the router confidence threshold drops while deferring
     /// (composes with the adaptive path's `RouterPolicy::effective`).
     pub defer_tighten: f32,
+    /// Linear battery capacity fade per full-capacity cycle equivalent:
+    /// effective capacity is `battery_wh * (1 - fade_per_cycle *
+    /// cycle_equivalents)` ([`crate::power::Battery`]).  0.0 (default)
+    /// disables fade and keeps every existing result bit-identical.
+    pub fade_per_cycle: f64,
 }
 
 impl PowerConfig {
@@ -243,6 +248,13 @@ impl PowerConfig {
             "power.defer_tighten must be non-negative, got {}",
             self.defer_tighten
         );
+        // fade > 1 would let effective capacity shrink faster than the
+        // discharge that caused it, breaking the SoC <= capacity invariant
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.fade_per_cycle),
+            "power.fade_per_cycle must be in [0, 1], got {}",
+            self.fade_per_cycle
+        );
         Ok(())
     }
 }
@@ -260,7 +272,39 @@ impl Default for PowerConfig {
             soc_defer: 0.4,
             soc_critical: 0.2,
             defer_tighten: 0.2,
+            fade_per_cycle: 0.0,
         }
+    }
+}
+
+/// Fleet engine ([`crate::sim::fleet`]): the sharded virtual-time event
+/// scheduler that steps 10k–100k satellite state machines on a bounded
+/// worker pool instead of a thread per satellite.
+#[derive(Clone, Copy, Debug)]
+pub struct FleetConfig {
+    /// Event-scheduler shards (= worker threads).  Satellites are
+    /// assigned by `sat_id % shards`; results are invariant under this
+    /// knob (`tests/fleet_determinism.rs`), so it is purely a
+    /// parallelism/throughput dial.
+    pub shards: usize,
+    /// Cap on concurrently-live satellite machines per shard; pending
+    /// satellites are admitted lazily in `sat_id` order as earlier ones
+    /// retire, bounding the shard's event-heap and scene-buffer
+    /// footprint.  0 = unbounded.  Results are unchanged — satellites
+    /// are independent between barriers.
+    pub max_events_in_flight: usize,
+}
+
+impl FleetConfig {
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.shards >= 1, "fleet.shards must be at least 1");
+        Ok(())
+    }
+}
+
+impl Default for FleetConfig {
+    fn default() -> FleetConfig {
+        FleetConfig { shards: 4, max_events_in_flight: 64 }
     }
 }
 
@@ -404,6 +448,7 @@ pub struct Config {
     pub energy: EnergyConfig,
     pub power: PowerConfig,
     pub federated: FederatedConfig,
+    pub fleet: FleetConfig,
     /// Scene size in 64-px cells.
     pub scene_cells: usize,
     /// Fragment edge length in px for the splitter.
@@ -449,6 +494,7 @@ impl Default for Config {
             energy: EnergyConfig::default(),
             power: PowerConfig::default(),
             federated: FederatedConfig::default(),
+            fleet: FleetConfig::default(),
             scene_cells: 8,
             fragment_px: 64,
             loss_profile: "stable".into(),
@@ -643,6 +689,16 @@ impl Config {
                 soc_defer: n("soc_defer", cfg.power.soc_defer),
                 soc_critical: n("soc_critical", cfg.power.soc_critical),
                 defer_tighten: n("defer_tighten", cfg.power.defer_tighten as f64) as f32,
+                fade_per_cycle: n("fade_per_cycle", cfg.power.fade_per_cycle),
+            };
+        }
+        if let Some(f) = j.get("fleet") {
+            cfg.fleet = FleetConfig {
+                shards: f.get("shards").and_then(|v| v.as_usize()).unwrap_or(cfg.fleet.shards),
+                max_events_in_flight: f
+                    .get("max_events_in_flight")
+                    .and_then(|v| v.as_usize())
+                    .unwrap_or(cfg.fleet.max_events_in_flight),
             };
         }
         if let Some(f) = j.get("federated") {
@@ -677,6 +733,7 @@ impl Config {
         cfg.energy.validate().context("energy config")?;
         cfg.power.validate().context("power config")?;
         cfg.federated.validate().context("federated config")?;
+        cfg.fleet.validate().context("fleet config")?;
         cfg.validate_cross().context("config cross-checks")?;
         Ok(cfg)
     }
@@ -871,6 +928,37 @@ mod tests {
             r#"{"power": {"enabled": true, "soc_defer": 0.2, "soc_critical": 0.5}}"#
         )
         .is_ok());
+    }
+
+    #[test]
+    fn parse_fleet_section_and_fade() {
+        let c = Config::parse(
+            r#"{"fleet": {"shards": 8, "max_events_in_flight": 256},
+                "power": {"enabled": true, "fade_per_cycle": 0.002}}"#,
+        )
+        .unwrap();
+        assert_eq!(c.fleet.shards, 8);
+        assert_eq!(c.fleet.max_events_in_flight, 256);
+        assert_eq!(c.power.fade_per_cycle, 0.002);
+        // defaults: 4 shards, bounded in-flight, zero fade
+        let d = Config::default();
+        assert_eq!(d.fleet.shards, 4);
+        assert_eq!(d.fleet.max_events_in_flight, 64);
+        assert_eq!(d.power.fade_per_cycle, 0.0);
+        // partial override keeps the other defaults
+        let p = Config::parse(r#"{"fleet": {"shards": 2}}"#).unwrap();
+        assert_eq!(p.fleet.shards, 2);
+        assert_eq!(p.fleet.max_events_in_flight, 64);
+        // zero shards / out-of-range fade fail at parse
+        assert!(Config::parse(r#"{"fleet": {"shards": 0}}"#).is_err());
+        assert!(
+            Config::parse(r#"{"power": {"enabled": true, "fade_per_cycle": 1.5}}"#).is_err()
+        );
+        assert!(
+            Config::parse(r#"{"power": {"enabled": true, "fade_per_cycle": -0.1}}"#).is_err()
+        );
+        // disabled power: fade is inert and unvalidated, like the rest
+        assert!(Config::parse(r#"{"power": {"fade_per_cycle": 9}}"#).is_ok());
     }
 
     #[test]

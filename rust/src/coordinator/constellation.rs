@@ -69,6 +69,13 @@
 //! satellite registers as an Edge node and heartbeats during contact
 //! windows, and the whole run is scheduled as a Sedna `JointInference`
 //! task whose per-worker phases aggregate into the report.
+//!
+//! This runner is the *small-N facade*: it spawns a capture thread plus
+//! onboard workers per satellite, which tops out at tens of sats.  The
+//! event-driven fleet engine ([`super::fleet::run_fleet`]) produces the
+//! same [`ConstellationReport`] from sharded virtual-time state
+//! machines and is the path that scales to 10k–100k satellites
+//! (`tests/fleet_parity.rs` pins the two together).
 
 use std::collections::{BTreeMap, BTreeSet};
 use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, TryRecvError};
@@ -100,10 +107,10 @@ use super::router::{route, LinkSnapshot, RouterStats};
 use super::TileFate;
 
 /// Downlink tag encoding: scene index * stride + tile index.
-const TAG_STRIDE: u64 = 1_000_000;
+pub(super) const TAG_STRIDE: u64 = 1_000_000;
 /// Tag base for federated weight items (tag = base + round index),
 /// disjoint from the scene/tile tag space.
-const FED_TAG_BASE: u64 = u64::MAX - TAG_STRIDE;
+pub(super) const FED_TAG_BASE: u64 = u64::MAX - TAG_STRIDE;
 
 /// One satellite's share of the constellation run.
 pub struct SatelliteReport {
@@ -172,18 +179,20 @@ struct GroundInflight {
 }
 
 /// A scene waiting for its offloaded tiles to clear the downlink.
-struct PendingScene {
-    bentpipe_bytes: u64,
-    n_scene_tiles: usize,
-    processed: Vec<ProcessedTile>,
-    n_filtered: usize,
-    wall: f64,
-    router: RouterStats,
+/// Shared with the event-driven fleet engine (`super::fleet`), whose
+/// machines keep the same per-scene ledger.
+pub(super) struct PendingScene {
+    pub(super) bentpipe_bytes: u64,
+    pub(super) n_scene_tiles: usize,
+    pub(super) processed: Vec<ProcessedTile>,
+    pub(super) n_filtered: usize,
+    pub(super) wall: f64,
+    pub(super) router: RouterStats,
     /// Duty cycles observed over this scene's period on the mission
     /// timeline (comm from link airtime, camera from the capture event).
-    duties: DutyCycles,
+    pub(super) duties: DutyCycles,
     /// Offloaded tiles not yet ground-inferred (delivery pending).
-    outstanding: usize,
+    pub(super) outstanding: usize,
 }
 
 /// Run `cfg.constellation.satellites` satellites against one ground
@@ -289,13 +298,53 @@ pub fn run_constellation(rt: &Runtime, cfg: &Config, version: Version) -> Result
     reports.sort_by_key(|r| r.index);
     let tiles_total = reports.iter().map(|r| r.result.tiles_total).sum();
 
-    // fleet aggregation: replay the recorded per-round participant sets
-    // with partial-participation FedAvg.  The satellites already paid the
-    // schedule's costs in mission time (training energy, weight airtime);
-    // the weight arithmetic itself has no feedback into mission dynamics,
-    // so running it once after the threads join keeps the round sequence
-    // strictly ordered without cross-satellite blocking.
-    let fed_report = cfg.federated.enabled.then(|| {
+    set_fleet_power_gauges(&metrics, &reports);
+    let fed_report = fleet_fed_report(cfg, &reports, &metrics);
+
+    Ok(ConstellationReport {
+        satellites: reports,
+        tiles_total,
+        wall_s: t0.elapsed().as_secs_f64(),
+        task_completed,
+        federated: fed_report,
+        telemetry: metrics.render(),
+    })
+}
+
+/// Fleet-level power gauges, aggregated deterministically at the join
+/// barrier from the index-sorted reports.  Per-satellite SoC stays on
+/// its suffixed `power.soc_pct.<node>` gauge; these two summarize the
+/// fleet without any thread racing to write last (the
+/// last-write-wins hazard a single shared gauge would have).
+pub(super) fn set_fleet_power_gauges(metrics: &Registry, reports: &[SatelliteReport]) {
+    let socs: Vec<i64> = reports
+        .iter()
+        .filter_map(|r| r.power.as_ref().map(|p| (p.final_soc_frac * 100.0).round() as i64))
+        .collect();
+    if socs.is_empty() {
+        return;
+    }
+    metrics.gauge("power.soc_pct.fleet_min").set(socs.iter().copied().min().unwrap_or(0));
+    metrics
+        .gauge("power.soc_pct.fleet_mean")
+        .set(socs.iter().sum::<i64>() / socs.len() as i64);
+}
+
+/// Fleet aggregation: replay the recorded per-round participant sets
+/// with partial-participation FedAvg.  The satellites already paid the
+/// schedule's costs in mission time (training energy, weight airtime);
+/// the weight arithmetic itself has no feedback into mission dynamics,
+/// so running it once after the satellites join keeps the round
+/// sequence strictly ordered without cross-satellite blocking — this is
+/// the round-barrier aggregation both the thread driver and the fleet
+/// engine share.  `None` when `federated.enabled` is off.
+pub(super) fn fleet_fed_report(
+    cfg: &Config,
+    reports: &[SatelliteReport],
+    metrics: &Registry,
+) -> Option<federated::FleetTrainingReport> {
+    cfg.federated.enabled.then(|| {
+        let n_sats = cfg.constellation.satellites.max(1);
         let fed = &cfg.federated;
         let shards = federated::fleet_shards(n_sats, fed.samples_per_node, fed.dim, cfg.seed);
         let test = federated::make_shard(cfg.seed + 10_000, 2000, fed.dim, 0.0);
@@ -320,24 +369,15 @@ pub fn run_constellation(rt: &Runtime, cfg: &Config, version: Version) -> Result
             .gauge("federated.accuracy_pct")
             .set((rep.final_accuracy() * 100.0).round() as i64);
         rep
-    });
-
-    Ok(ConstellationReport {
-        satellites: reports,
-        tiles_total,
-        wall_s: t0.elapsed().as_secs_f64(),
-        task_completed,
-        federated: fed_report,
-        telemetry: metrics.render(),
     })
 }
 
 /// Apply federated round decisions: a participating round queues its
 /// weights for uplink (contending with imagery for window airtime) and
 /// charges the training burst to the battery and the H2 energy ledger;
-/// a skipped round only counts.  Shared by the scene loop and the
-/// mission tail.
-fn apply_fed_rounds(
+/// a skipped round only counts.  Shared by the scene loop, the mission
+/// tail, and the fleet engine's event handlers.
+pub(super) fn apply_fed_rounds(
     decisions: Vec<RoundDecision>,
     wire_bytes: u64,
     train_s: f64,
@@ -423,7 +463,7 @@ fn poll_ground(
 /// camera never fired).  With `force`, outstanding offloads no longer
 /// gate the fold — the end-of-mission path, where undelivered offloads
 /// are evaluated with their onboard detections.
-fn fold_ready(
+pub(super) fn fold_ready(
     pending: &mut BTreeMap<usize, PendingScene>,
     shed_idx: &mut BTreeSet<usize>,
     next_fold: &mut usize,
@@ -497,8 +537,11 @@ fn run_satellite(
     // driver decision exactly as the power-blind code path made it
     let mut power = cfg.power.enabled.then(|| PowerState::new(&cfg.power, &cfg.energy));
     // the SoC gauge is per-satellite (a fleet-shared gauge would be
-    // last-write-wins across threads); the defer/shed counters sum
-    // correctly across the fleet and stay shared
+    // last-write-wins across threads); fleet-level SoC is aggregated
+    // deterministically at the join barrier instead
+    // (`set_fleet_power_gauges` → power.soc_pct.fleet_min/fleet_mean).
+    // The defer/shed counters sum correctly across the fleet and stay
+    // shared.
     let power_metrics = power.as_ref().map(|_| {
         (
             metrics.gauge(&format!("power.soc_pct.{node}")),

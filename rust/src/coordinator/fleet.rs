@@ -1,0 +1,786 @@
+//! Event-driven mega-constellation engine: the scalable sibling of
+//! [`super::constellation::run_constellation`].
+//!
+//! The thread-per-satellite runner spawns a capture thread plus onboard
+//! stage workers for every satellite, so its fleet size is bounded by
+//! thread count.  Here each satellite is a [`FleetSat`] — a virtual-time
+//! [`SatMachine`](crate::sim::SatMachine) owning the satellite's entire
+//! world (scene RNG stream, [`Timeline`] cursor, [`DownlinkQueue`],
+//! link, [`PowerState`], [`FedScheduler`], fold accumulator) — and the
+//! whole fleet is stepped by [`crate::sim::run_sharded`]: `fleet.shards`
+//! worker threads, each draining a binary heap of `(virtual_time,
+//! sat_id, event_kind)` keys.  Thread count equals shard count, never
+//! satellite count, and `fleet.max_events_in_flight` bounds how many
+//! satellites a shard materializes at once.
+//!
+//! # Parity with the thread driver
+//!
+//! [`run_fleet`] reproduces `run_constellation`'s report for the same
+//! config (`tests/fleet_parity.rs`): each event handler is the
+//! corresponding slice of the thread driver's loop, executed at the
+//! same virtual time with the same per-satellite state.  Two deliberate
+//! mechanical differences, neither observable in the report:
+//!
+//! * **Synchronous ground segment.**  The driver dispatches delivered
+//!   imagery to a ground thread and folds replies when they land; here
+//!   the machine calls the shared ground [`Pipeline`] inline, one
+//!   `infer` per drain slice with tiles in delivered order — the same
+//!   batch composition, so ground detections are bit-identical.  Calls
+//!   from different shards serialize on the runtime's per-model
+//!   execution lock (exactly one ground GPU), and each call is a pure
+//!   function of its batch, so cross-shard interleaving is
+//!   unobservable.  Everything order-sensitive — report ordering,
+//!   fleet FedAvg, fleet gauges — happens after the shards join.
+//! * **Shed captures skip onboard inference.**  The thread driver's
+//!   stage workers run ahead of the governor, so a shed scene has
+//!   already paid its (discarded) onboard inference in wallclock.  The
+//!   fleet machine knows the verdict before the stage runs and skips
+//!   it; the capture RNG still advances (stream parity) and a shed
+//!   scene folds nothing, so only wallclock and stage telemetry differ.
+//!
+//! Federated aggregation stays a round-barrier operation: satellites
+//! record per-round participation during their missions, and FedAvg
+//! replays the recorded sets once after the join, in `sat_id` order —
+//! shard count cannot reorder it.
+
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::cluster::registry::Registry as NodeRegistry;
+use crate::cluster::{NodeId, NodeRole};
+use crate::config::Config;
+use crate::data::{SceneGen, Tile, Version};
+use crate::detect::Detection;
+use crate::link::{Link, LinkConfig};
+use crate::orbit::{baoyun, beijing_station, GroundStation};
+use crate::power::{PowerState, PowerVerdict};
+use crate::runtime::{Model, Runtime};
+use crate::sedna::federated::{self, FedScheduler};
+use crate::sedna::{GlobalManager, LocalController, TaskKind, TaskPhase, TaskSpec};
+use crate::sim::{
+    run_sharded, scene_timing, ContactSlice, DutyCycles, EventKind, MachineStep, SatMachine,
+    Timeline,
+};
+use crate::telemetry::{Counter, Gauge, Histogram, Registry};
+
+use super::constellation::{
+    apply_fed_rounds, fleet_fed_report, fold_ready, set_fleet_power_gauges, ConstellationReport,
+    PendingScene, SatelliteReport, TAG_STRIDE,
+};
+use super::downlink::{Delivered, DownlinkItem, DownlinkQueue, ItemKind};
+use super::engine::{OnboardStage, SceneJob, Stage};
+use super::pipeline::{Pipeline, ScenarioAccumulator, RESULT_HEADER_BYTES};
+use super::router::{route, LinkSnapshot, RouterStats};
+use super::TileFate;
+
+/// Everything the fleet's machines share: the ground segment, control
+/// plane, telemetry, and the immutable run parameters.  All fields are
+/// `Sync`; per-satellite mutable state lives in the machines.
+struct FleetShared<'a, 'rt> {
+    rt: &'rt Runtime,
+    cfg: &'a Config,
+    version: Version,
+    scenes: usize,
+    horizon: f64,
+    gs: GroundStation,
+    /// Shared ground HeavyDet segment — one pipeline, called inline
+    /// from shard workers, serialized by the runtime's per-model lock.
+    ground_pipe: Pipeline<'rt>,
+    registry: Mutex<NodeRegistry>,
+    gm: Mutex<GlobalManager>,
+    task: &'a str,
+    metrics: &'a Registry,
+    fed_train_s: f64,
+    produced: Arc<Counter>,
+    delivered_items: Arc<Counter>,
+    served: Arc<Counter>,
+    ground_svc: Arc<Histogram>,
+    onboard_items: Arc<Counter>,
+    onboard_svc: Arc<Histogram>,
+}
+
+/// Mission-tail bookkeeping, created when the last scene has been
+/// driven: the unconsumed contact slices plus the power-integration
+/// cursor the thread driver keeps in its tail loop.
+struct TailState {
+    start: f64,
+    comm_before: f64,
+    power_cursor: f64,
+    power_step: f64,
+    slices: VecDeque<ContactSlice>,
+}
+
+/// One satellite as a virtual-time state machine.  Field-for-field this
+/// is the local state of `run_satellite`; the event handlers are that
+/// function's loop bodies, re-cut along event boundaries.
+struct FleetSat<'a, 'rt> {
+    sh: &'a FleetShared<'a, 'rt>,
+    index: usize,
+    node: NodeId,
+    lc: LocalController,
+    timeline: Timeline,
+    pipeline: Pipeline<'rt>,
+    gen: SceneGen,
+    acc: ScenarioAccumulator,
+    queue: DownlinkQueue,
+    link: Link,
+    power: Option<PowerState>,
+    power_metrics: Option<(Arc<Gauge>, Arc<Counter>, Arc<Counter>)>,
+    fed: Option<FedScheduler>,
+    fed_metrics: Option<(Arc<Counter>, Arc<Counter>)>,
+    pending: BTreeMap<usize, PendingScene>,
+    shed_idx: BTreeSet<usize>,
+    next_fold: usize,
+    next_drive: usize,
+    prev_sent: u64,
+    prev_lost: u64,
+    recent_loss: f64,
+    frag: usize,
+    tail: Option<TailState>,
+    first: (f64, EventKind),
+}
+
+impl<'a, 'rt> FleetSat<'a, 'rt> {
+    fn new(sh: &'a FleetShared<'a, 'rt>, index: usize, node: NodeId) -> Result<FleetSat<'a, 'rt>> {
+        let cfg = sh.cfg;
+        let mut lc = LocalController::new(node.clone());
+        lc.start(sh.task);
+        sh.gm.lock().unwrap().report(sh.task, &node, TaskPhase::Running)?;
+
+        // one orbital plane per satellite, phased around the
+        // constellation — identical seeding to the thread driver
+        let mut sat = baoyun();
+        sat.name = node.to_string();
+        sat.raan_rad = index as f64 * cfg.constellation.raan_step_rad;
+        sat.phase_rad =
+            index as f64 * std::f64::consts::TAU / cfg.constellation.satellites.max(1) as f64;
+        let timeline = if cfg.constellation.ideal_contact {
+            Timeline::degenerate(&cfg.timing, sh.horizon)
+        } else {
+            Timeline::orbital(&cfg.timing, &sat, &sh.gs, sh.horizon, 10.0)
+        };
+
+        let mut sat_cfg = cfg.clone();
+        sat_cfg.seed = cfg.seed.wrapping_add(1 + index as u64 * 101);
+        let pipeline = Pipeline::new(sh.rt, sat_cfg);
+        let gen = pipeline.scene_gen(sh.version);
+        let acc = ScenarioAccumulator::new(&pipeline.cfg, sh.rt.manifest.classes);
+        let link = Link::new(LinkConfig::downlink(pipeline.cfg.loss()), pipeline.cfg.seed);
+        let power = cfg.power.enabled.then(|| PowerState::new(&cfg.power, &cfg.energy));
+        let power_metrics = power.as_ref().map(|_| {
+            (
+                sh.metrics.gauge(&format!("power.soc_pct.{node}")),
+                sh.metrics.counter("power.scenes_deferred"),
+                sh.metrics.counter("power.scenes_shed"),
+            )
+        });
+        let fed = cfg.federated.enabled.then(|| FedScheduler::new(&cfg.federated, sh.horizon));
+        let fed_metrics = fed.as_ref().map(|_| {
+            (
+                sh.metrics.counter(&format!("federated.rounds.{node}")),
+                sh.metrics.counter(&format!("federated.skipped_power.{node}")),
+            )
+        });
+        let frag = pipeline.cfg.fragment_px;
+        let mut m = FleetSat {
+            sh,
+            index,
+            node,
+            lc,
+            timeline,
+            pipeline,
+            gen,
+            acc,
+            queue: DownlinkQueue::new(),
+            link,
+            power,
+            power_metrics,
+            fed,
+            fed_metrics,
+            pending: BTreeMap::new(),
+            shed_idx: BTreeSet::new(),
+            next_fold: 0,
+            next_drive: 0,
+            prev_sent: 0,
+            prev_lost: 0,
+            recent_loss: 0.0,
+            frag,
+            tail: None,
+            first: (0.0, EventKind::Capture),
+        };
+        m.first = if sh.scenes > 0 {
+            (m.timeline.now_s(), EventKind::Capture)
+        } else {
+            m.enter_tail();
+            m.next_tail_key()
+        };
+        Ok(m)
+    }
+
+    /// One synchronous ground round-trip for a drain's delivered items —
+    /// the machine-world `dispatch_ground` + `apply_ground_reply`.  One
+    /// `infer` per drain slice, tiles in delivered order: the same batch
+    /// composition as the async dispatch, so ground detections are
+    /// bit-identical to the thread driver's.
+    fn ground_round_trip(&mut self, delivered: Vec<Delivered>) -> Result<()> {
+        self.sh.delivered_items.add(delivered.len() as u64);
+        let mut pairs: Vec<(usize, usize)> = Vec::new();
+        let mut tiles: Vec<Tile> = Vec::new();
+        for d in &delivered {
+            if d.item.kind != ItemKind::Image {
+                continue;
+            }
+            let sidx = (d.item.tag / TAG_STRIDE) as usize;
+            let tidx = (d.item.tag % TAG_STRIDE) as usize;
+            let scene = self
+                .pending
+                .get(&sidx)
+                .ok_or_else(|| anyhow!("delivered tile for unknown scene {sidx}"))?;
+            tiles.push(scene.processed[tidx].tile.clone());
+            pairs.push((sidx, tidx));
+        }
+        if tiles.is_empty() {
+            return Ok(());
+        }
+        let t = Instant::now();
+        let (dets, _, wall) = self.sh.ground_pipe.infer(Model::Heavy, &tiles)?;
+        self.sh.ground_svc.observe_secs(t.elapsed().as_secs_f64());
+        self.sh.served.add(tiles.len() as u64);
+        let wall_each = wall / pairs.len().max(1) as f64;
+        for (&(sidx, tidx), d) in pairs.iter().zip(dets) {
+            let scene = self.pending.get_mut(&sidx).expect("scene vanished mid-delivery");
+            scene.processed[tidx].ground_dets = Some(d);
+            scene.outstanding -= 1;
+            scene.wall += wall_each;
+        }
+        Ok(())
+    }
+
+    /// Poll the federated scheduler at virtual time `t` and apply the
+    /// decisions — the `fed.poll` + `apply_fed_rounds` pair the thread
+    /// driver inlines at every decision point.
+    fn fed_poll(&mut self, t: f64) {
+        if let Some(f) = self.fed.as_mut() {
+            let decisions = f.poll(t, self.power.as_ref().map(|p| p.soc_frac()));
+            let wire = f.wire_bytes();
+            apply_fed_rounds(
+                decisions,
+                wire,
+                self.sh.fed_train_s,
+                &mut self.queue,
+                &mut self.power,
+                &mut self.acc,
+                &self.fed_metrics,
+            );
+        }
+    }
+
+    /// Scene-capture event: capture + onboard + one iteration of the
+    /// thread driver's scene loop (shed path or normal path), then
+    /// either the next capture or the mission tail.
+    fn on_capture(&mut self) -> Result<MachineStep> {
+        let idx = self.next_drive;
+        let scene = self.gen.capture();
+        self.sh.produced.inc();
+        let verdict = self.power.as_ref().map(|p| p.verdict()).unwrap_or(PowerVerdict::Nominal);
+        if verdict == PowerVerdict::Shed {
+            // capture RNG advanced (stream parity with the thread
+            // driver), but the shed scene's onboard inference is
+            // skipped: the driver had already paid it on its
+            // run-ahead stage workers, here the verdict precedes the
+            // stage.  A shed scene folds nothing, so only wallclock
+            // and stage telemetry differ.
+            drop(scene);
+            let (_, period) = scene_timing(self.timeline.timing(), 0);
+            let t_start = self.timeline.now_s();
+            let t = self.timeline.advance(period);
+            let _ = self.timeline.due_contacts(t);
+            let duties = DutyCycles::default();
+            self.acc.extend_mission(period, duties);
+            let p = self.power.as_mut().expect("shed verdict implies power state");
+            p.advance_period(period, duties, self.timeline.sunlit_s(t_start, t));
+            p.stats.scenes_shed += 1;
+            if let Some((soc, _, shed)) = &self.power_metrics {
+                shed.inc();
+                soc.set(p.soc_pct());
+            }
+            self.fed_poll(t);
+            self.shed_idx.insert(idx);
+            self.next_drive += 1;
+            fold_ready(&mut self.pending, &mut self.shed_idx, &mut self.next_fold, &mut self.acc, false);
+            return self.after_scene();
+        }
+        let deferring = verdict == PowerVerdict::Defer;
+
+        let t0 = Instant::now();
+        let mut stage = OnboardStage { p: &self.pipeline, frag: self.frag };
+        let mut d = stage.process(SceneJob { idx, scene })?;
+        self.sh.onboard_svc.observe_secs(t0.elapsed().as_secs_f64());
+        self.sh.onboard_items.inc();
+
+        // link-aware adaptive routing at this scene's virtual capture
+        // time — verbatim from the thread driver
+        if self.pipeline.policy.adaptive.is_some() || deferring {
+            let mut eff = if self.pipeline.policy.adaptive.is_some() {
+                let d_sent = self.link.stats.packets_sent - self.prev_sent;
+                if d_sent > 0 {
+                    self.recent_loss =
+                        (self.link.stats.packets_lost - self.prev_lost) as f64 / d_sent as f64;
+                } else {
+                    // no traffic since the last decision: decay the
+                    // stale estimate rather than latching it
+                    self.recent_loss *= 0.5;
+                }
+                self.prev_sent = self.link.stats.packets_sent;
+                self.prev_lost = self.link.stats.packets_lost;
+                let snap = LinkSnapshot {
+                    backlog_bytes: self.queue.pending_bytes(),
+                    loss_rate: self.recent_loss,
+                };
+                self.pipeline.policy.effective(&snap)
+            } else {
+                self.pipeline.policy
+            };
+            if deferring {
+                let step = self
+                    .power
+                    .as_ref()
+                    .expect("defer verdict implies power state")
+                    .governor()
+                    .defer_tighten;
+                eff = eff.tightened(step);
+            }
+            let mut restats = RouterStats::default();
+            for p in d.processed.iter_mut() {
+                p.fate = route(&eff, &p.onboard_dets, p.best_objectness, &mut restats);
+            }
+            d.router = restats;
+        }
+
+        let (busy, period) = scene_timing(self.timeline.timing(), d.processed.len());
+        let t_capture = self.timeline.now_s();
+        let ready = t_capture + busy;
+        let mut outstanding = 0usize;
+        for (tidx, p) in d.processed.iter().enumerate() {
+            let tag = idx as u64 * TAG_STRIDE + tidx as u64;
+            match p.fate {
+                TileFate::OnboardFinal => self.queue.push(DownlinkItem {
+                    kind: ItemKind::Results,
+                    bytes: RESULT_HEADER_BYTES
+                        + Detection::WIRE_BYTES * p.onboard_dets.len() as u64,
+                    ready_at: ready,
+                    tag,
+                }),
+                TileFate::Offloaded => {
+                    outstanding += 1;
+                    self.queue.push(DownlinkItem {
+                        kind: ItemKind::Image,
+                        bytes: p.tile.raw_bytes(),
+                        ready_at: ready,
+                        tag,
+                    });
+                }
+                TileFate::Filtered => unreachable!("filtered tiles are not processed"),
+            }
+        }
+        self.pending.insert(
+            idx,
+            PendingScene {
+                bentpipe_bytes: d.bentpipe_bytes,
+                n_scene_tiles: d.n_scene_tiles,
+                processed: d.processed,
+                n_filtered: d.n_filtered,
+                wall: d.wall,
+                router: d.router,
+                duties: DutyCycles::default(),
+                outstanding,
+            },
+        );
+
+        // advance one scene period, then spend the elapsed contact time;
+        // a deferring governor keeps the transmitter off
+        let comm_before = self.link.stats.busy_s;
+        let t = self.timeline.advance(period);
+        if deferring {
+            let _ = self.timeline.due_contacts(t);
+        } else {
+            for slice in self.timeline.due_contacts(t) {
+                let at_ms = (slice.window.aos * 1000.0) as u64;
+                self.sh.registry.lock().unwrap().heartbeat(&self.node, at_ms);
+                let got =
+                    self.queue.drain_window_sliced(&mut self.link, &slice.window, slice.closes_pass);
+                self.ground_round_trip(got)?;
+            }
+        }
+        let comm_busy = self.link.stats.busy_s - comm_before;
+        let duties = self.timeline.observed_duties(
+            busy,
+            period,
+            comm_busy,
+            self.timeline.timing().capture_overhead_s,
+        );
+        self.pending.get_mut(&idx).expect("scene just inserted").duties = duties;
+        if let Some(p) = self.power.as_mut() {
+            p.advance_period(period, duties, self.timeline.sunlit_s(t_capture, t));
+            if deferring {
+                p.stats.scenes_deferred += 1;
+            }
+            if let Some((soc, deferred, _)) = &self.power_metrics {
+                if deferring {
+                    deferred.inc();
+                }
+                soc.set(p.soc_pct());
+            }
+        }
+        self.fed_poll(t);
+        self.next_drive += 1;
+        fold_ready(&mut self.pending, &mut self.shed_idx, &mut self.next_fold, &mut self.acc, false);
+        self.after_scene()
+    }
+
+    fn after_scene(&mut self) -> Result<MachineStep> {
+        if self.next_drive < self.sh.scenes {
+            Ok(MachineStep::Yield(self.timeline.now_s(), EventKind::Capture))
+        } else {
+            self.enter_tail();
+            let (t, kind) = self.next_tail_key();
+            Ok(MachineStep::Yield(t, kind))
+        }
+    }
+
+    /// Materialize the mission tail: every still-unconsumed contact
+    /// slice (the thread driver's `remaining_contacts()` loop), plus the
+    /// power cursor that integrates the idle time between them.
+    fn enter_tail(&mut self) {
+        let start = self.timeline.now_s();
+        let slices: VecDeque<ContactSlice> = self.timeline.remaining_contacts().into();
+        self.tail = Some(TailState {
+            start,
+            comm_before: self.link.stats.busy_s,
+            power_cursor: start,
+            power_step: self.timeline.timing().scene_period_floor_s.max(1.0),
+            slices,
+        });
+    }
+
+    /// Next tail event: the next contact slice at its AOS, then any
+    /// post-pass federated round at its due time, then mission end at
+    /// the horizon.
+    fn next_tail_key(&self) -> (f64, EventKind) {
+        let tail = self.tail.as_ref().expect("tail state");
+        if let Some(s) = tail.slices.front() {
+            (s.window.aos, EventKind::ContactSlice)
+        } else if let Some(due) = self.fed.as_ref().and_then(|f| f.due_next()) {
+            (due, EventKind::RoundBoundary)
+        } else {
+            (self.sh.horizon, EventKind::MissionEnd)
+        }
+    }
+
+    /// One tail contact slice — the body of the thread driver's
+    /// `remaining_contacts()` loop for a single slice.
+    fn on_contact_slice(&mut self) -> Result<MachineStep> {
+        let mut tail = self.tail.take().expect("tail state");
+        let slice = tail.slices.pop_front().expect("slice event without a slice");
+        // federated rounds due by the end of this pass fire first so
+        // their weights can ride it; power integrates idle time to each
+        // round boundary, clamped at AOS
+        if let Some(f) = self.fed.as_mut() {
+            while let Some(due) = f.due_next().filter(|d| *d <= slice.window.los) {
+                if let Some(p) = self.power.as_mut() {
+                    let target = due.min(slice.window.aos);
+                    p.advance_chunked(
+                        &self.timeline,
+                        tail.power_cursor,
+                        target,
+                        DutyCycles::default(),
+                        tail.power_step,
+                    );
+                    tail.power_cursor = tail.power_cursor.max(target);
+                }
+                let decisions = f.poll(due, self.power.as_ref().map(|p| p.soc_frac()));
+                let wire = f.wire_bytes();
+                apply_fed_rounds(
+                    decisions,
+                    wire,
+                    self.sh.fed_train_s,
+                    &mut self.queue,
+                    &mut self.power,
+                    &mut self.acc,
+                    &self.fed_metrics,
+                );
+            }
+        }
+        if let Some(p) = self.power.as_mut() {
+            // idle mission time up to this pass, so the verdict
+            // reflects SoC at AOS
+            let aos = slice.window.aos;
+            p.advance_chunked(
+                &self.timeline,
+                tail.power_cursor,
+                aos,
+                DutyCycles::default(),
+                tail.power_step,
+            );
+            tail.power_cursor = aos;
+            if p.verdict() == PowerVerdict::Shed {
+                // transmitter stays off through this pass; the AOS→LOS
+                // stretch is integrated by the next event's idle
+                // advance from `power_cursor`, exactly like the thread
+                // driver's `continue`
+                self.tail = Some(tail);
+                let (t, kind) = self.next_tail_key();
+                return Ok(MachineStep::Yield(t, kind));
+            }
+        }
+        let at_ms = (slice.window.aos * 1000.0) as u64;
+        self.sh.registry.lock().unwrap().heartbeat(&self.node, at_ms);
+        let busy_before = self.link.stats.busy_s;
+        let got = self.queue.drain_window_sliced(&mut self.link, &slice.window, slice.closes_pass);
+        self.tail = Some(tail);
+        self.ground_round_trip(got)?;
+        let mut tail = self.tail.take().expect("tail state");
+        if let Some(p) = self.power.as_mut() {
+            let comm = self.link.stats.busy_s - busy_before;
+            let duties = self.timeline.observed_duties(0.0, slice.window.duration_s(), comm, 0.0);
+            let (aos, los) = (slice.window.aos, slice.window.los);
+            p.advance_chunked(&self.timeline, aos, los, duties, tail.power_step);
+            tail.power_cursor = los;
+        }
+        self.tail = Some(tail);
+        let (t, kind) = self.next_tail_key();
+        Ok(MachineStep::Yield(t, kind))
+    }
+
+    /// One federated round due after the last pass — the thread
+    /// driver's post-pass `while let Some(due) = f.due_next()` loop,
+    /// one iteration per event.
+    fn on_round_boundary(&mut self) -> Result<MachineStep> {
+        let tail = self.tail.as_mut().expect("tail state");
+        let f = self.fed.as_mut().expect("round event without a scheduler");
+        let due = f.due_next().expect("round event without a due round");
+        if let Some(p) = self.power.as_mut() {
+            p.advance_chunked(
+                &self.timeline,
+                tail.power_cursor,
+                due,
+                DutyCycles::default(),
+                tail.power_step,
+            );
+            tail.power_cursor = tail.power_cursor.max(due);
+        }
+        let decisions = f.poll(due, self.power.as_ref().map(|p| p.soc_frac()));
+        let wire = f.wire_bytes();
+        apply_fed_rounds(
+            decisions,
+            wire,
+            self.sh.fed_train_s,
+            &mut self.queue,
+            &mut self.power,
+            &mut self.acc,
+            &self.fed_metrics,
+        );
+        let (t, kind) = self.next_tail_key();
+        Ok(MachineStep::Yield(t, kind))
+    }
+
+    /// Mission horizon: force-fold the remaining scenes (undelivered
+    /// offloads are evaluated with their onboard detections), account
+    /// the tail's energy, and integrate power to the horizon.
+    fn on_mission_end(&mut self) -> Result<MachineStep> {
+        // ground replies already folded in at their drain points (the
+        // synchronous segment has no in-flight completions to await)
+        fold_ready(&mut self.pending, &mut self.shed_idx, &mut self.next_fold, &mut self.acc, true);
+        let tail = self.tail.as_ref().expect("mission end before tail");
+        let tail_dt = self.sh.horizon - tail.start;
+        if tail_dt > 0.0 {
+            let tail_comm = self.link.stats.busy_s - tail.comm_before;
+            self.acc
+                .extend_mission(tail_dt, self.timeline.observed_duties(0.0, tail_dt, tail_comm, 0.0));
+        }
+        if let Some(p) = self.power.as_mut() {
+            p.advance_chunked(
+                &self.timeline,
+                tail.power_cursor,
+                self.sh.horizon,
+                DutyCycles::default(),
+                tail.power_step,
+            );
+            if let Some((soc, _, _)) = &self.power_metrics {
+                soc.set(p.soc_pct());
+            }
+        }
+        Ok(MachineStep::Done)
+    }
+
+    /// Consume the machine into its report — the thread driver's
+    /// post-scope accounting, verbatim.
+    fn into_report(mut self) -> Result<SatelliteReport> {
+        let scenes = self.sh.scenes;
+        let shed = self.power.as_ref().map(|p| p.stats.scenes_shed as usize).unwrap_or(0);
+        anyhow::ensure!(
+            self.acc.scenes() + shed == scenes,
+            "satellite {} lost scenes: folded {} + shed {shed} of {scenes}",
+            self.index,
+            self.acc.scenes()
+        );
+        if let Some(f) = &self.fed {
+            anyhow::ensure!(
+                f.stats.rounds_completed + f.stats.rounds_skipped_power == f.stats.rounds_scheduled,
+                "satellite {} lost federated rounds: {} + {} of {}",
+                self.index,
+                f.stats.rounds_completed,
+                f.stats.rounds_skipped_power,
+                f.stats.rounds_scheduled
+            );
+        }
+        let ps = self.pipeline.tile_pool_stats();
+        let node = &self.node;
+        self.sh.metrics.gauge(&format!("constellation.pool.tile_allocs.{node}")).set(ps.allocs as i64);
+        self.sh
+            .metrics
+            .gauge(&format!("constellation.pool.tile_hit_pct.{node}"))
+            .set((ps.hit_rate() * 100.0).round() as i64);
+        self.sh
+            .metrics
+            .gauge(&format!("constellation.pool.tile_evictions.{node}"))
+            .set(ps.evictions as i64);
+        self.lc.finish(self.sh.task, true);
+        self.sh.gm.lock().unwrap().report(self.sh.task, &self.node, TaskPhase::Completed)?;
+        let power_stats = self.power.map(|p| p.stats);
+        let fed_stats = self.fed.map(|f| f.stats);
+        let mut result = self.acc.finish(self.sh.version, self.sh.cfg.fragment_px);
+        result.power = power_stats;
+        result.federated = fed_stats.clone();
+        Ok(SatelliteReport {
+            index: self.index,
+            name: self.node.to_string(),
+            result,
+            downlink: self.queue.stats,
+            link: self.link.stats,
+            windows: self.timeline.n_contacts(),
+            contact_s: self.timeline.contact_total_s(),
+            sunlit_s: self.timeline.sunlit_s(0.0, self.sh.horizon),
+            power: power_stats,
+            federated: fed_stats,
+        })
+    }
+}
+
+impl SatMachine for FleetSat<'_, '_> {
+    type Report = SatelliteReport;
+
+    fn start(&mut self) -> (f64, EventKind) {
+        self.first
+    }
+
+    fn on_event(&mut self, _time_s: f64, kind: EventKind) -> Result<MachineStep> {
+        match kind {
+            EventKind::Capture => self.on_capture(),
+            EventKind::ContactSlice => self.on_contact_slice(),
+            EventKind::RoundBoundary => self.on_round_boundary(),
+            EventKind::MissionEnd => self.on_mission_end(),
+        }
+    }
+
+    fn finish(self) -> Result<SatelliteReport> {
+        self.into_report()
+    }
+}
+
+/// Run the constellation as an event-driven fleet: `fleet.shards`
+/// worker threads step every satellite's state machine in virtual time.
+/// Produces the same [`ConstellationReport`] as
+/// [`super::constellation::run_constellation`] for any config (bit-wise
+/// for its deterministic fields), but scales to fleets five orders of
+/// magnitude past the thread-per-satellite design — see
+/// `benches/perf_fleet.rs` for the 10k/100k regime.
+pub fn run_fleet(rt: &Runtime, cfg: &Config, version: Version) -> Result<ConstellationReport> {
+    cfg.energy.validate()?;
+    cfg.power.validate()?;
+    cfg.federated.validate()?;
+    cfg.fleet.validate()?;
+    cfg.validate_cross()?;
+    let n_sats = cfg.constellation.satellites.max(1);
+    let scenes = cfg.constellation.scenes_per_satellite;
+    let metrics = Registry::new();
+
+    // control plane: node registry + Sedna JointInference task,
+    // identical to the thread driver's
+    let ground_node = NodeId::new("ground-1");
+    let sat_nodes: Vec<NodeId> = (0..n_sats).map(|i| NodeId::new(format!("sat-{i}"))).collect();
+    let registry = Mutex::new(NodeRegistry::new(60_000, 600_000));
+    {
+        let mut reg = registry.lock().unwrap();
+        reg.register(ground_node.clone(), NodeRole::Cloud, 64_000, 262_144, 0);
+        for id in &sat_nodes {
+            reg.register(id.clone(), NodeRole::Edge, 4_000, 8_192, 0);
+        }
+    }
+    let gm = Mutex::new(GlobalManager::new());
+    let task = "joint-inference";
+    {
+        let mut workers = sat_nodes.clone();
+        workers.push(ground_node.clone());
+        gm.lock().unwrap().create(TaskSpec {
+            name: task.into(),
+            kind: TaskKind::JointInference,
+            workers,
+            params: BTreeMap::new(),
+        })?;
+    }
+
+    let t0 = Instant::now();
+    let shared = FleetShared {
+        rt,
+        cfg,
+        version,
+        scenes,
+        horizon: cfg.constellation.horizon_s,
+        gs: beijing_station(),
+        ground_pipe: Pipeline::new(rt, cfg.clone()),
+        registry,
+        gm,
+        task,
+        metrics: &metrics,
+        fed_train_s: federated::train_seconds(cfg.federated.epochs, cfg.federated.samples_per_node),
+        produced: metrics.counter("constellation.capture.items"),
+        delivered_items: metrics.counter("constellation.downlink.items_delivered"),
+        served: metrics.counter("constellation.ground.tiles"),
+        ground_svc: metrics.histogram("constellation.ground.service_s"),
+        onboard_items: metrics.counter("constellation.onboard.items"),
+        onboard_svc: metrics.histogram("constellation.onboard.service_s"),
+    };
+
+    let (reports, fstats) = run_sharded(
+        n_sats,
+        cfg.fleet.shards,
+        cfg.fleet.max_events_in_flight,
+        |i| FleetSat::new(&shared, i, sat_nodes[i].clone()),
+    )?;
+
+    metrics.gauge("fleet.events_processed").set(fstats.events as i64);
+    metrics.gauge("fleet.peak_live_machines").set(fstats.peak_live as i64);
+    metrics
+        .gauge("constellation.runtime.scratch_allocs")
+        .set(rt.scratch_stats().allocs as i64);
+
+    shared.gm.lock().unwrap().report(task, &ground_node, TaskPhase::Completed)?;
+    let task_completed =
+        shared.gm.lock().unwrap().get(task).map(|(_, st)| st.phase) == Some(TaskPhase::Completed);
+    let tiles_total = reports.iter().map(|r| r.result.tiles_total).sum();
+    set_fleet_power_gauges(&metrics, &reports);
+    let fed_report = fleet_fed_report(cfg, &reports, &metrics);
+
+    Ok(ConstellationReport {
+        satellites: reports,
+        tiles_total,
+        wall_s: t0.elapsed().as_secs_f64(),
+        task_completed,
+        federated: fed_report,
+        telemetry: metrics.render(),
+    })
+}

@@ -28,17 +28,23 @@
 //!   windows, eclipse phases, derived energy duties), with ground
 //!   round-trips as asynchronous completions, cluster/sedna bookkeeping,
 //!   and per-stage telemetry.
+//! * [`fleet`] — the same constellation as sharded virtual-time state
+//!   machines ([`crate::sim::run_sharded`]): thread count = shard
+//!   count, not satellite count, so missions scale to 10k–100k
+//!   satellites while reproducing the thread driver's report.
 
 pub mod batcher;
 pub mod cloudfilter;
 pub mod constellation;
 pub mod downlink;
 pub mod engine;
+pub mod fleet;
 pub mod pipeline;
 pub mod router;
 
 pub use constellation::{run_constellation, ConstellationReport, SatelliteReport};
 pub use engine::StagedEngine;
+pub use fleet::run_fleet;
 pub use pipeline::{Pipeline, ScenarioAccumulator, ScenarioResult};
 
 /// Where a tile ended up — the router's conservation invariant is that

@@ -61,6 +61,10 @@ pub struct Battery {
     pub capacity_wh: f64,
     pub charge_eff: f64,
     pub discharge_eff: f64,
+    /// Linear capacity fade per full-capacity cycle equivalent (e.g.
+    /// 2e-4 ≈ 20% fade after 1000 cycles).  0.0 disables fade and keeps
+    /// every pre-fade result bit-identical.
+    pub fade_per_cycle: f64,
     soc_wh: f64,
     /// Cumulative energy drawn out of the store, Wh (the
     /// depth-of-discharge ledger; charging never decrements it).
@@ -74,18 +78,36 @@ impl Battery {
             capacity_wh,
             charge_eff: charge_eff.clamp(0.0, 1.0),
             discharge_eff: discharge_eff.clamp(1e-9, 1.0),
+            fade_per_cycle: 0.0,
             soc_wh: capacity_wh * initial_soc.clamp(0.0, 1.0),
             discharged_wh: 0.0,
         }
+    }
+
+    /// Builder: enable linear capacity fade (clamped non-negative).
+    pub fn with_fade(mut self, fade_per_cycle: f64) -> Battery {
+        self.fade_per_cycle = fade_per_cycle.max(0.0);
+        self
     }
 
     pub fn soc_wh(&self) -> f64 {
         self.soc_wh
     }
 
-    /// State of charge as a fraction of capacity, in [0, 1].
+    /// Capacity after wear: `capacity_wh * (1 - fade_per_cycle *
+    /// cycle_equivalents)`, floored at 1% of nameplate so a pathological
+    /// fade config degrades gracefully instead of dividing by ~0.  With
+    /// `fade_per_cycle == 0.0` the multiplier is exactly 1.0, so every
+    /// downstream value is bit-identical to the pre-fade model.
+    pub fn effective_capacity_wh(&self) -> f64 {
+        self.capacity_wh * (1.0 - self.fade_per_cycle * self.cycle_equivalents()).max(0.01)
+    }
+
+    /// State of charge as a fraction of *effective* (faded) capacity, in
+    /// [0, 1] — the quantity governor thresholds compare against, so an
+    /// aged battery trips Defer/Shed earlier at the same stored Wh.
     pub fn soc_frac(&self) -> f64 {
-        self.soc_wh / self.capacity_wh
+        self.soc_wh / self.effective_capacity_wh()
     }
 
     /// Cumulative energy drawn out of the store over the battery's
@@ -101,13 +123,14 @@ impl Battery {
     }
 
     /// Apply one period's energy flow: `gen_wh` in from the array,
-    /// `load_wh` out to the bus.  SoC stays within `[0, capacity]`;
-    /// returns the unmet load (Wh) clipped when the battery empties —
-    /// the brownout indicator a governor exists to keep at zero.
+    /// `load_wh` out to the bus.  SoC stays within `[0, effective
+    /// capacity]` (= nameplate while `fade_per_cycle == 0.0`); returns
+    /// the unmet load (Wh) clipped when the battery empties — the
+    /// brownout indicator a governor exists to keep at zero.
     pub fn step(&mut self, gen_wh: f64, load_wh: f64) -> f64 {
         let net = gen_wh - load_wh;
         if net >= 0.0 {
-            self.soc_wh = (self.soc_wh + net * self.charge_eff).min(self.capacity_wh);
+            self.soc_wh = (self.soc_wh + net * self.charge_eff).min(self.effective_capacity_wh());
             0.0
         } else {
             let need_wh = -net / self.discharge_eff;
@@ -186,12 +209,15 @@ pub struct PowerStats {
     /// `discharge_wh` in full-capacity cycle equivalents — the standard
     /// battery-wear proxy for sizing a mission's battery.
     pub cycle_equivalents: f64,
+    /// Effective (fade-degraded) capacity at end of mission, Wh.  Equals
+    /// nameplate `battery_wh` while `power.fade_per_cycle` is 0.0.
+    pub capacity_wh_now: f64,
     soc_sum: f64,
     soc_n: u64,
 }
 
 impl PowerStats {
-    fn new(initial_soc_frac: f64) -> PowerStats {
+    fn new(initial_soc_frac: f64, capacity_wh: f64) -> PowerStats {
         PowerStats {
             min_soc_frac: initial_soc_frac,
             final_soc_frac: initial_soc_frac,
@@ -203,6 +229,7 @@ impl PowerStats {
             training_wh: 0.0,
             discharge_wh: 0.0,
             cycle_equivalents: 0.0,
+            capacity_wh_now: capacity_wh,
             soc_sum: 0.0,
             soc_n: 0,
         }
@@ -237,10 +264,11 @@ impl PowerState {
             power.charge_eff,
             power.discharge_eff,
             power.initial_soc,
-        );
+        )
+        .with_fade(power.fade_per_cycle);
         PowerState {
             array: SolarArray { panel_w: power.panel_w, cosine_derate: power.cosine_derate },
-            stats: PowerStats::new(battery.soc_frac()),
+            stats: PowerStats::new(battery.soc_frac(), battery.effective_capacity_wh()),
             battery,
             governor: PowerGovernor {
                 soc_defer: power.soc_defer,
@@ -311,6 +339,7 @@ impl PowerState {
         self.stats.soc_n += 1;
         self.stats.discharge_wh = self.battery.discharged_wh();
         self.stats.cycle_equivalents = self.battery.cycle_equivalents();
+        self.stats.capacity_wh_now = self.battery.effective_capacity_wh();
     }
 
     /// Charge one federated local-training burst at a round boundary:
@@ -330,6 +359,7 @@ impl PowerState {
         self.stats.final_soc_frac = f;
         self.stats.discharge_wh = self.battery.discharged_wh();
         self.stats.cycle_equivalents = self.battery.cycle_equivalents();
+        self.stats.capacity_wh_now = self.battery.effective_capacity_wh();
     }
 }
 
@@ -475,6 +505,63 @@ mod tests {
         let before = s.stats.discharge_wh;
         s.charge_training(3600.0);
         assert!(s.stats.discharge_wh > before);
+    }
+
+    #[test]
+    fn zero_fade_is_bit_identical_to_prefade_model() {
+        // fade_per_cycle = 0.0 must not perturb a single bit of the
+        // trajectory: the capacity multiplier is exactly 1.0.
+        let mut plain = Battery::new(10.0, 0.9, 0.8, 0.7);
+        let mut faded = Battery::new(10.0, 0.9, 0.8, 0.7).with_fade(0.0);
+        for (g, l) in [(0.0, 2.0), (5.0, 1.0), (0.0, 7.0), (9.0, 0.5)] {
+            assert_eq!(plain.step(g, l).to_bits(), faded.step(g, l).to_bits());
+            assert_eq!(plain.soc_wh().to_bits(), faded.soc_wh().to_bits());
+            assert_eq!(plain.soc_frac().to_bits(), faded.soc_frac().to_bits());
+        }
+        assert_eq!(faded.effective_capacity_wh().to_bits(), 10.0f64.to_bits());
+    }
+
+    #[test]
+    fn fade_shrinks_effective_capacity_with_cycling() {
+        let mut b = Battery::new(10.0, 1.0, 1.0, 1.0).with_fade(0.1);
+        assert_eq!(b.effective_capacity_wh(), 10.0, "fresh pack at nameplate");
+        b.step(0.0, 5.0); // half a cycle equivalent
+        assert!((b.cycle_equivalents() - 0.5).abs() < 1e-12);
+        assert!((b.effective_capacity_wh() - 9.5).abs() < 1e-12, "10 * (1 - 0.1*0.5)");
+        // recharging clamps at the faded capacity, not nameplate
+        b.step(100.0, 0.0);
+        assert!((b.soc_wh() - 9.5).abs() < 1e-12);
+        assert!((b.soc_frac() - 1.0).abs() < 1e-12, "full relative to effective capacity");
+        // SoC never exceeds effective capacity as fade progresses
+        for _ in 0..20 {
+            b.step(0.0, 3.0);
+            b.step(100.0, 0.0);
+            assert!(b.soc_wh() <= b.effective_capacity_wh() + 1e-12);
+        }
+        assert!(b.effective_capacity_wh() >= 0.01 * 10.0, "floored at 1% of nameplate");
+    }
+
+    #[test]
+    fn power_stats_surface_effective_capacity() {
+        let power = PowerConfig {
+            enabled: true,
+            battery_wh: 80.0,
+            fade_per_cycle: 0.05,
+            ..PowerConfig::default()
+        };
+        let mut s = PowerState::new(&power, &EnergyConfig::default());
+        assert_eq!(s.stats.capacity_wh_now, 80.0);
+        let dark = DutyCycles { compute: 1.0, comm: 1.0, camera: 1.0 };
+        s.advance_period(3600.0, dark, 0.0);
+        assert!(s.stats.capacity_wh_now < 80.0, "an hour of dark full duty wears the pack");
+        assert!(
+            (s.stats.capacity_wh_now - 80.0 * (1.0 - 0.05 * s.stats.cycle_equivalents)).abs()
+                < 1e-9
+        );
+        // a zero-fade state reports nameplate forever
+        let mut z = state(80.0);
+        z.advance_period(3600.0, dark, 0.0);
+        assert_eq!(z.stats.capacity_wh_now, 80.0);
     }
 
     #[test]

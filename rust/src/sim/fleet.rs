@@ -1,0 +1,514 @@
+//! Sharded virtual-time event scheduler — the mega-constellation core.
+//!
+//! The constellation runner used to spawn a capture thread plus onboard
+//! stage workers *per satellite*, topping out at tens of sats.  This
+//! module makes fleet size a data-structure problem instead: each
+//! satellite is a [`SatMachine`] — a virtual-time state machine owning
+//! its whole per-sat world (RNG streams, timeline cursor, downlink
+//! queue, power state, fold accumulator) — advanced by typed mission
+//! events drawn from a per-shard binary heap.
+//!
+//! # Event taxonomy
+//!
+//! [`EventKind`] names the four mission event classes:
+//!
+//! * `Capture` — a scene capture at its virtual capture time, including
+//!   the scene-period drains that follow it;
+//! * `ContactSlice` — one unconsumed contact-window slice of the
+//!   mission tail (plus any federated rounds due by its LOS, which fire
+//!   first so their weights can ride the pass);
+//! * `RoundBoundary` — a federated round due after the last pass;
+//! * `MissionEnd` — the horizon: force-fold, tail energy, report.
+//!
+//! # Deterministic ordering
+//!
+//! Heap keys order by `(virtual_time, sat_id, event_kind)` ascending
+//! ([`EventKey`]'s `Ord`, using `f64::total_cmp`), so two events at the
+//! same instant — a capture coinciding with another satellite's LOS
+//! slice, a round boundary coinciding with an AOS — pop in one
+//! documented order on every run and every shard count.
+//!
+//! Each machine keeps exactly ONE event in flight: its handler returns
+//! the next event to arm ([`MachineStep::Yield`]) or retires the
+//! machine ([`MachineStep::Done`]).  The heap therefore only
+//! interleaves *independent* satellites; a satellite's own mission is
+//! sequenced by its machine, which is what makes the fleet result
+//! bit-identical to the thread-per-sat driver and invariant under shard
+//! count (`tests/fleet_determinism.rs`, `tests/fleet_parity.rs`).
+//!
+//! # Shard ownership
+//!
+//! Satellites are assigned to shards by `sat_id % shards`; each shard
+//! is stepped by one [`crate::util::pool`] scoped worker and owns its
+//! machines exclusively — no locks between barriers.  Cross-shard
+//! interaction (the shared ground HeavyDet segment, fleet FedAvg,
+//! fleet-level gauges) happens only at round barriers: ground calls are
+//! value-deterministic per call so their cross-shard interleaving is
+//! unobservable, and everything order-sensitive (report sorting, FedAvg
+//! replay, gauge aggregation) runs after the shards join, on reports
+//! sorted by `sat_id` — which is why the barrier discipline preserves
+//! the pinned fold order.
+//!
+//! `max_events_in_flight` caps concurrently-live machines per shard
+//! (one in-flight event each): pending satellites are admitted lazily
+//! in `sat_id` order as earlier ones retire, bounding heap and
+//! scene-buffer footprint for 100k-sat fleets without changing any
+//! result — satellites are independent between barriers.
+
+use std::cmp::Reverse;
+use std::collections::{BTreeMap, BinaryHeap};
+
+use anyhow::Result;
+
+use crate::config::TimingConfig;
+use crate::orbit::ContactWindow;
+use crate::util::pool;
+
+use super::timeline::{scene_timing, Span, Timeline};
+
+/// Mission event classes, in documented tie-break order (the `u8`
+/// discriminant is the third key of [`EventKey`]'s ordering).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventKind {
+    /// Scene capture at its virtual capture time.
+    Capture = 0,
+    /// One tail contact-window slice (AOS..LOS drain opportunity).
+    ContactSlice = 1,
+    /// Federated round boundary after the last pass.
+    RoundBoundary = 2,
+    /// Mission horizon reached.
+    MissionEnd = 3,
+}
+
+/// Scheduler heap key: events pop in ascending `(virtual_time, sat_id,
+/// event_kind)` order.  `f64::total_cmp` gives a total order (no NaN
+/// panics, -0.0 < +0.0), so equal-timestamp events across satellites
+/// tie-break on `sat_id` and then on the event taxonomy.
+#[derive(Clone, Copy, Debug)]
+pub struct EventKey {
+    pub time_s: f64,
+    pub sat_id: usize,
+    pub kind: EventKind,
+}
+
+impl PartialEq for EventKey {
+    fn eq(&self, other: &EventKey) -> bool {
+        self.cmp(other) == std::cmp::Ordering::Equal
+    }
+}
+
+impl Eq for EventKey {}
+
+impl PartialOrd for EventKey {
+    fn partial_cmp(&self, other: &EventKey) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for EventKey {
+    fn cmp(&self, other: &EventKey) -> std::cmp::Ordering {
+        self.time_s
+            .total_cmp(&other.time_s)
+            .then(self.sat_id.cmp(&other.sat_id))
+            .then((self.kind as u8).cmp(&(other.kind as u8)))
+    }
+}
+
+/// What a machine's event handler tells the scheduler to do next.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum MachineStep {
+    /// Re-arm: the machine's next event fires at this time.
+    Yield(f64, EventKind),
+    /// Mission complete; the scheduler retires the machine.
+    Done,
+}
+
+/// One satellite as a virtual-time state machine.  The machine owns all
+/// per-satellite state and sequences its own mission: `start` arms the
+/// first event, each `on_event` runs one handler and arms the next, and
+/// `finish` consumes the machine into its report after `Done`.
+///
+/// Machines never cross threads (they are built and stepped on their
+/// shard's worker), so they need not be `Send` — only the constructor
+/// closure and the report do.
+pub trait SatMachine: Sized {
+    type Report;
+
+    /// First event to arm: `(virtual_time, kind)`.
+    fn start(&mut self) -> (f64, EventKind);
+
+    /// Handle the event that just fired.
+    fn on_event(&mut self, time_s: f64, kind: EventKind) -> Result<MachineStep>;
+
+    /// Consume the machine into its report (called after `Done`).
+    fn finish(self) -> Result<Self::Report>;
+}
+
+/// Fleet-run accounting: the bench's throughput and memory-proxy axes.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FleetRunStats {
+    /// Total mission events processed across all shards.
+    pub events: u64,
+    /// Sum of per-shard peak live machine counts — an upper bound on
+    /// concurrently-materialized satellites (each live machine holds
+    /// one in-flight event plus its scene buffers), the RSS proxy
+    /// `max_events_in_flight` exists to bound.
+    pub peak_live: usize,
+}
+
+/// Step `n_sats` machines to completion on `shards` scoped workers.
+///
+/// `make(sat_id)` constructs the machine — called lazily on the owning
+/// shard's worker at admission time, so a capped fleet never
+/// materializes more than `shards * max_in_flight` satellites at once.
+/// `max_in_flight == 0` means unbounded.  Reports come back sorted by
+/// `sat_id` regardless of shard count or completion order.
+pub fn run_sharded<M, F>(
+    n_sats: usize,
+    shards: usize,
+    max_in_flight: usize,
+    make: F,
+) -> Result<(Vec<M::Report>, FleetRunStats)>
+where
+    M: SatMachine,
+    M::Report: Send,
+    F: Fn(usize) -> Result<M> + Sync,
+{
+    let shards = shards.max(1).min(n_sats.max(1));
+    let shard_results = pool::scoped_map(shards, (0..shards).collect(), |shard| {
+        run_shard::<M, F>(n_sats, shards, shard, max_in_flight, &make)
+    });
+    let mut tagged: Vec<(usize, M::Report)> = Vec::with_capacity(n_sats);
+    let mut stats = FleetRunStats::default();
+    for r in shard_results {
+        let (reports, events, peak) = r?;
+        tagged.extend(reports);
+        stats.events += events;
+        stats.peak_live += peak;
+    }
+    tagged.sort_by_key(|(id, _)| *id);
+    Ok((tagged.into_iter().map(|(_, r)| r).collect(), stats))
+}
+
+/// One shard's event loop: admit machines in `sat_id` order up to the
+/// in-flight cap, then pop-step-rearm until heap and backlog drain.
+fn run_shard<M, F>(
+    n_sats: usize,
+    shards: usize,
+    shard: usize,
+    max_in_flight: usize,
+    make: &F,
+) -> Result<(Vec<(usize, M::Report)>, u64, usize)>
+where
+    M: SatMachine,
+    F: Fn(usize) -> Result<M> + Sync,
+{
+    let cap = if max_in_flight == 0 { usize::MAX } else { max_in_flight };
+    // this shard's satellites, ascending: shard, shard+shards, ...
+    let mut backlog = (shard..n_sats).step_by(shards);
+    let mut heap: BinaryHeap<Reverse<EventKey>> = BinaryHeap::new();
+    let mut live: BTreeMap<usize, M> = BTreeMap::new();
+    let mut reports: Vec<(usize, M::Report)> = Vec::new();
+    let mut events = 0u64;
+    let mut peak = 0usize;
+    loop {
+        while live.len() < cap {
+            let Some(sat_id) = backlog.next() else { break };
+            let mut m = make(sat_id)?;
+            let (time_s, kind) = m.start();
+            heap.push(Reverse(EventKey { time_s, sat_id, kind }));
+            live.insert(sat_id, m);
+            peak = peak.max(live.len());
+        }
+        let Some(Reverse(key)) = heap.pop() else { break };
+        events += 1;
+        let machine = live.get_mut(&key.sat_id).expect("live machine for queued event");
+        match machine.on_event(key.time_s, key.kind)? {
+            MachineStep::Yield(time_s, kind) => {
+                heap.push(Reverse(EventKey { time_s, sat_id: key.sat_id, kind }));
+            }
+            MachineStep::Done => {
+                let machine = live.remove(&key.sat_id).expect("machine just stepped");
+                reports.push((key.sat_id, machine.finish()?));
+            }
+        }
+    }
+    Ok((reports, events, peak))
+}
+
+/// Artifact-free stub satellite: a [`SatMachine`] over a real
+/// [`Timeline`] with a synthetic capture/backlog/drain workload (no
+/// pixels, no inference runtime).  Deterministic in `(sat_id, seed)`
+/// alone, so it drives the shard-invariance tests and
+/// `benches/perf_fleet.rs` at 100k-sat scale.
+pub struct StubSat {
+    sat_id: usize,
+    rng: u64,
+    timeline: Timeline,
+    scenes_left: usize,
+    /// Queued downlink backlog, bytes; drained at `drain_bps` inside
+    /// contact slices.
+    backlog_bytes: u64,
+    drain_bps: f64,
+    report: StubReport,
+    tail: std::collections::VecDeque<(f64, f64)>,
+}
+
+/// What a stub mission leaves behind — enough structure to bit-compare
+/// across shard counts.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct StubReport {
+    pub sat_id: usize,
+    pub scenes: usize,
+    pub tiles: u64,
+    pub queued_bytes: u64,
+    pub delivered_bytes: u64,
+    pub final_t: f64,
+    /// Order-sensitive checksum over the event sequence: any deviation
+    /// in event order or arithmetic shows up here.
+    pub checksum: u64,
+}
+
+impl StubSat {
+    /// `horizon_s` of mission with `scenes` captures and periodic
+    /// analytic contact windows (no orbital geometry scan — this is the
+    /// 100k-sat bulk path [`Timeline::from_parts`] exists for).
+    pub fn new(sat_id: usize, seed: u64, scenes: usize, horizon_s: f64) -> StubSat {
+        let timing = TimingConfig::default();
+        // windows phased per satellite: ~8 min pass every ~95 min
+        let period = 5700.0;
+        let pass = 480.0;
+        let phase = (sat_id as f64 * 131.0) % (period - pass);
+        let mut contacts = Vec::new();
+        let mut aos = phase;
+        while aos < horizon_s {
+            contacts.push(ContactWindow {
+                aos,
+                los: (aos + pass).min(horizon_s),
+                max_elevation_deg: 45.0,
+                truncated: aos + pass > horizon_s,
+            });
+            aos += period;
+        }
+        let sunlit: Vec<Span> = contacts
+            .iter()
+            .map(|w| Span { start: w.aos, end: w.los + 1200.0_f64.min(horizon_s - w.los) })
+            .collect();
+        let timeline = Timeline::from_parts(&timing, contacts, Some(sunlit), horizon_s);
+        StubSat {
+            sat_id,
+            rng: seed ^ (sat_id as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+            timeline,
+            scenes_left: scenes,
+            backlog_bytes: 0,
+            drain_bps: 5_000_000.0,
+            report: StubReport { sat_id, ..StubReport::default() },
+            tail: std::collections::VecDeque::new(),
+        }
+    }
+
+    fn next_u64(&mut self) -> u64 {
+        // xorshift64*: one private stream per satellite
+        let mut x = self.rng;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.rng = x;
+        x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+    }
+
+    fn mix(&mut self, v: u64) {
+        self.report.checksum = self.report.checksum.rotate_left(7) ^ v;
+    }
+
+    fn drain(&mut self, duration_s: f64) {
+        let can = (self.drain_bps * duration_s / 8.0) as u64;
+        let sent = can.min(self.backlog_bytes);
+        self.backlog_bytes -= sent;
+        self.report.delivered_bytes += sent;
+        self.mix(sent);
+    }
+
+    fn enter_tail(&mut self) -> MachineStep {
+        self.tail = self
+            .timeline
+            .remaining_contacts()
+            .into_iter()
+            .map(|s| (s.window.aos, s.window.los))
+            .collect();
+        match self.tail.front() {
+            Some(&(aos, _)) => MachineStep::Yield(aos, EventKind::ContactSlice),
+            None => MachineStep::Yield(self.timeline.horizon_s(), EventKind::MissionEnd),
+        }
+    }
+}
+
+impl SatMachine for StubSat {
+    type Report = StubReport;
+
+    fn start(&mut self) -> (f64, EventKind) {
+        if self.scenes_left > 0 {
+            (self.timeline.now_s(), EventKind::Capture)
+        } else {
+            (self.timeline.horizon_s(), EventKind::MissionEnd)
+        }
+    }
+
+    fn on_event(&mut self, _time_s: f64, kind: EventKind) -> Result<MachineStep> {
+        match kind {
+            EventKind::Capture => {
+                let tiles = 8 + (self.next_u64() % 57) as usize; // 8..=64
+                let (_, period) = scene_timing(self.timeline.timing(), tiles);
+                let bytes = tiles as u64 * 49_152;
+                self.backlog_bytes += bytes;
+                self.report.scenes += 1;
+                self.report.tiles += tiles as u64;
+                self.report.queued_bytes += bytes;
+                self.mix(tiles as u64);
+                let t = self.timeline.advance(period);
+                for slice in self.timeline.due_contacts(t) {
+                    self.drain(slice.window.duration_s());
+                }
+                self.scenes_left -= 1;
+                if self.scenes_left > 0 {
+                    Ok(MachineStep::Yield(self.timeline.now_s(), EventKind::Capture))
+                } else {
+                    Ok(self.enter_tail())
+                }
+            }
+            EventKind::ContactSlice => {
+                let (aos, los) = self.tail.pop_front().expect("slice event without a slice");
+                self.drain(los - aos);
+                match self.tail.front() {
+                    Some(&(next_aos, _)) => {
+                        Ok(MachineStep::Yield(next_aos, EventKind::ContactSlice))
+                    }
+                    None => {
+                        Ok(MachineStep::Yield(self.timeline.horizon_s(), EventKind::MissionEnd))
+                    }
+                }
+            }
+            EventKind::RoundBoundary => {
+                // the stub schedules no federated rounds; a spurious
+                // round event would corrupt the checksum, loudly
+                self.mix(u64::MAX);
+                Ok(MachineStep::Yield(self.timeline.horizon_s(), EventKind::MissionEnd))
+            }
+            EventKind::MissionEnd => {
+                self.report.final_t = self.timeline.horizon_s();
+                self.mix(self.report.delivered_bytes);
+                Ok(MachineStep::Done)
+            }
+        }
+    }
+
+    fn finish(self) -> Result<StubReport> {
+        Ok(self.report)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn event_keys_order_by_time_then_sat_then_kind() {
+        let k = |t: f64, sat: usize, kind: EventKind| EventKey { time_s: t, sat_id: sat, kind };
+        // time dominates
+        assert!(k(1.0, 9, EventKind::MissionEnd) < k(2.0, 0, EventKind::Capture));
+        // equal time: sat_id breaks the tie
+        assert!(k(5.0, 0, EventKind::RoundBoundary) < k(5.0, 1, EventKind::Capture));
+        // equal time and sat: documented taxonomy order
+        assert!(k(5.0, 3, EventKind::Capture) < k(5.0, 3, EventKind::ContactSlice));
+        assert!(k(5.0, 3, EventKind::ContactSlice) < k(5.0, 3, EventKind::RoundBoundary));
+        assert!(k(5.0, 3, EventKind::RoundBoundary) < k(5.0, 3, EventKind::MissionEnd));
+    }
+
+    #[test]
+    fn same_timestamp_events_pop_in_documented_order() {
+        // capture coinciding with a LOS-slice and a round boundary
+        // coinciding with an AOS, all at t = 300 across two satellites:
+        // the pop order must be (time, sat_id, kind) ascending.
+        let mut heap: BinaryHeap<Reverse<EventKey>> = BinaryHeap::new();
+        let push = |h: &mut BinaryHeap<Reverse<EventKey>>, t: f64, sat: usize, kind| {
+            h.push(Reverse(EventKey { time_s: t, sat_id: sat, kind }))
+        };
+        push(&mut heap, 300.0, 1, EventKind::RoundBoundary); // round @ sat 1's AOS
+        push(&mut heap, 300.0, 0, EventKind::ContactSlice); // sat 0's LOS slice
+        push(&mut heap, 300.0, 0, EventKind::Capture); // capture @ sat 0's LOS
+        push(&mut heap, 120.0, 1, EventKind::Capture);
+        push(&mut heap, 300.0, 1, EventKind::ContactSlice);
+        let mut popped = Vec::new();
+        while let Some(Reverse(k)) = heap.pop() {
+            popped.push((k.time_s, k.sat_id, k.kind));
+        }
+        assert_eq!(
+            popped,
+            vec![
+                (120.0, 1, EventKind::Capture),
+                (300.0, 0, EventKind::Capture),
+                (300.0, 0, EventKind::ContactSlice),
+                (300.0, 1, EventKind::ContactSlice),
+                (300.0, 1, EventKind::RoundBoundary),
+            ]
+        );
+    }
+
+    fn stub_fleet(n: usize, shards: usize, cap: usize) -> (Vec<StubReport>, FleetRunStats) {
+        run_sharded(n, shards, cap, |id| Ok(StubSat::new(id, 42, 6, 21_600.0))).unwrap()
+    }
+
+    #[test]
+    fn stub_fleet_reports_ordered_and_complete() {
+        let (reports, stats) = stub_fleet(17, 4, 0);
+        assert_eq!(reports.len(), 17);
+        for (i, r) in reports.iter().enumerate() {
+            assert_eq!(r.sat_id, i, "reports sorted by sat_id");
+            assert_eq!(r.scenes, 6);
+            assert!(r.tiles >= 6 * 8);
+            assert!(r.delivered_bytes <= r.queued_bytes);
+        }
+        // every machine fires at least capture×6 + mission-end
+        assert!(stats.events >= 17 * 7, "events {}", stats.events);
+        assert!(stats.peak_live >= 1);
+    }
+
+    #[test]
+    fn shard_count_does_not_change_results() {
+        let (one, _) = stub_fleet(23, 1, 0);
+        for shards in [2, 3, 8, 23, 64] {
+            let (many, _) = stub_fleet(23, shards, 0);
+            assert_eq!(one, many, "shards={shards}");
+        }
+    }
+
+    #[test]
+    fn in_flight_cap_bounds_live_machines_without_changing_results() {
+        let (uncapped, ustats) = stub_fleet(32, 2, 0);
+        let (capped, cstats) = stub_fleet(32, 2, 3);
+        assert_eq!(uncapped, capped, "lazy admission must not change any report");
+        assert!(cstats.peak_live <= 2 * 3, "peak {} over cap", cstats.peak_live);
+        assert!(ustats.peak_live >= cstats.peak_live);
+        assert_eq!(ustats.events, cstats.events, "same missions, same event count");
+    }
+
+    #[test]
+    fn zero_scene_machines_still_retire() {
+        let (reports, stats) =
+            run_sharded(3, 2, 0, |id| Ok(StubSat::new(id, 7, 0, 1000.0))).unwrap();
+        assert_eq!(reports.len(), 3);
+        assert!(reports.iter().all(|r| r.scenes == 0 && r.final_t == 1000.0));
+        assert_eq!(stats.events, 3, "one MissionEnd each");
+    }
+
+    #[test]
+    fn constructor_error_propagates() {
+        let r = run_sharded::<StubSat, _>(4, 2, 0, |id| {
+            if id == 2 {
+                anyhow::bail!("boom at {id}")
+            }
+            Ok(StubSat::new(id, 1, 1, 1000.0))
+        });
+        assert!(r.is_err());
+    }
+}

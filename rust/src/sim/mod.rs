@@ -14,14 +14,22 @@
 //!   sunlit/eclipse spans, scene cadence ([`scene_timing`]), and duty
 //!   derivation ([`DutyCycles`]).  Degenerate (always-in-contact) for
 //!   single-satellite paths, orbital for the constellation.
+//! * [`fleet`] — the sharded virtual-time event scheduler that steps
+//!   [`SatMachine`] state machines (one per satellite) from per-shard
+//!   binary heaps, making fleet size a data-structure problem instead
+//!   of a thread-count problem.
 //!
 //! See DESIGN.md §"Mission-time simulation core" for which module
-//! derives which duty cycle.
+//! derives which duty cycle, and §"Fleet engine" for the scheduler.
 
 mod clock;
+mod fleet;
 mod timeline;
 
 pub use clock::MissionClock;
+pub use fleet::{
+    run_sharded, EventKey, EventKind, FleetRunStats, MachineStep, SatMachine, StubReport, StubSat,
+};
 pub use timeline::{
     scan_spans, scene_timing, ContactSlice, DutyCycles, Span, Timeline, GROUND_S_PER_TILE,
     ONBOARD_S_PER_TILE,

@@ -118,13 +118,18 @@ pub struct ContactSlice {
 }
 
 /// One satellite's mission timeline.
+///
+/// Contact consumption is tracked by `consumed_to` alone: windows are
+/// sorted by AOS and pairwise disjoint (`next.aos >= prev.los`), so a
+/// window is fully spent exactly when `los <= consumed_to`, and the
+/// resume point is an O(log windows) `partition_point` query instead of
+/// a stored linear cursor — what lets a 100k-satellite fleet step
+/// without paying O(windows) per event.
 #[derive(Clone, Debug)]
 pub struct Timeline {
     clock: MissionClock,
     timing: TimingConfig,
     contacts: Vec<ContactWindow>,
-    /// Cursor into `contacts` for incremental consumption.
-    next_contact: usize,
     /// Contact time at or before this instant has been handed out.
     consumed_to: f64,
     /// Sunlit spans; `None` means always sunlit (degenerate timeline).
@@ -144,15 +149,7 @@ impl Timeline {
             max_elevation_deg: 90.0,
             truncated: false,
         }];
-        Timeline {
-            clock: MissionClock::new(),
-            timing: timing.clone(),
-            contacts,
-            next_contact: 0,
-            consumed_to: 0.0,
-            sunlit: None,
-            horizon_s,
-        }
+        Timeline::from_parts(timing, contacts, None, horizon_s)
     }
 
     /// Timeline for one orbital plane over a ground station: contact
@@ -167,13 +164,38 @@ impl Timeline {
     ) -> Timeline {
         let contacts = crate::orbit::contact_windows(sat, gs, 0.0, horizon_s, step_s);
         let sunlit = scan_spans(|t| !sat.in_eclipse(t), 0.0, horizon_s, step_s);
+        Timeline::from_parts(timing, contacts, Some(sunlit), horizon_s)
+    }
+
+    /// Build a timeline directly from precomputed parts — the fleet
+    /// engine's bulk path: 100k synthetic satellites should not each
+    /// rescan orbital geometry.  `contacts` must be sorted by AOS and
+    /// pairwise disjoint (`next.aos >= prev.los`), and `sunlit` spans
+    /// likewise (use `None` for always-sunlit), matching what
+    /// [`crate::orbit::contact_windows`] / [`scan_spans`] produce —
+    /// the invariants the indexed lookups rely on.
+    pub fn from_parts(
+        timing: &TimingConfig,
+        contacts: Vec<ContactWindow>,
+        sunlit: Option<Vec<Span>>,
+        horizon_s: f64,
+    ) -> Timeline {
+        debug_assert!(
+            contacts.windows(2).all(|w| w[1].aos >= w[0].los),
+            "contact windows must be sorted and disjoint"
+        );
+        if let Some(spans) = &sunlit {
+            debug_assert!(
+                spans.windows(2).all(|w| w[1].start >= w[0].end),
+                "sunlit spans must be sorted and disjoint"
+            );
+        }
         Timeline {
             clock: MissionClock::new(),
             timing: timing.clone(),
             contacts,
-            next_contact: 0,
             consumed_to: 0.0,
-            sunlit: Some(sunlit),
+            sunlit,
             horizon_s,
         }
     }
@@ -204,13 +226,19 @@ impl Timeline {
     }
 
     pub fn in_contact(&self, t: f64) -> bool {
-        self.contacts.iter().any(|w| w.contains(t))
+        // Windows are sorted and disjoint: the only candidate is the
+        // first window whose LOS lies beyond t.
+        let idx = self.contacts.partition_point(|w| w.los <= t);
+        self.contacts.get(idx).is_some_and(|w| w.contains(t))
     }
 
     pub fn sunlit(&self, t: f64) -> bool {
         match &self.sunlit {
             None => true,
-            Some(spans) => spans.iter().any(|s| s.contains(t)),
+            Some(spans) => {
+                let idx = spans.partition_point(|s| s.end <= t);
+                spans.get(idx).is_some_and(|s| s.contains(t))
+            }
         }
     }
 
@@ -218,7 +246,14 @@ impl Timeline {
     pub fn sunlit_s(&self, t0: f64, t1: f64) -> f64 {
         match &self.sunlit {
             None => (t1 - t0).max(0.0),
-            Some(spans) => spans.iter().map(|s| s.overlap_s(t0, t1)).sum(),
+            Some(spans) => {
+                // Sum only spans that can overlap [t0, t1).  Skipped
+                // spans would each have contributed exactly +0.0, so
+                // the indexed sum is bit-identical to the full scan.
+                let lo = spans.partition_point(|s| s.end <= t0);
+                let hi = spans.partition_point(|s| s.start < t1);
+                spans[lo..hi.max(lo)].iter().map(|s| s.overlap_s(t0, t1)).sum()
+            }
         }
     }
 
@@ -238,8 +273,12 @@ impl Timeline {
     /// it is never offered again.
     pub fn due_contacts(&mut self, t: f64) -> Vec<ContactSlice> {
         let mut out = Vec::new();
-        while self.next_contact < self.contacts.len() {
-            let w = &self.contacts[self.next_contact];
+        // Indexed resume point: a window is fully spent exactly when its
+        // LOS is at or before `consumed_to` (a closed pass sets
+        // `consumed_to` to its clipped LOS, and successors start no
+        // earlier), so binary search replaces the linear cursor scan.
+        let first = self.contacts.partition_point(|w| w.los <= self.consumed_to);
+        for w in &self.contacts[first..] {
             if w.aos >= t {
                 break;
             }
@@ -260,9 +299,7 @@ impl Timeline {
                 });
                 self.consumed_to = end;
             }
-            if closes_pass {
-                self.next_contact += 1;
-            } else {
+            if !closes_pass {
                 break;
             }
         }
@@ -372,15 +409,7 @@ mod tests {
             max_elevation_deg: 45.0,
             truncated: false,
         };
-        Timeline {
-            clock: MissionClock::new(),
-            timing: timing(),
-            contacts: vec![w(100.0, 200.0), w(200.0, 300.0)],
-            next_contact: 0,
-            consumed_to: 0.0,
-            sunlit: None,
-            horizon_s: 400.0,
-        }
+        Timeline::from_parts(&timing(), vec![w(100.0, 200.0), w(200.0, 300.0)], None, 400.0)
     }
 
     #[test]
@@ -436,6 +465,44 @@ mod tests {
             total += s.window.duration_s();
         }
         assert!((total - 500.0).abs() < 1e-9, "consumed {total} of 500 s");
+    }
+
+    #[test]
+    fn indexed_lookup_matches_linear_scan_over_many_windows() {
+        // The partition_point resume/lookup must agree with the naive
+        // O(n) definitions on a fleet-scale window list, including
+        // exact-edge queries at AOS/LOS boundaries.
+        let w = |aos: f64, los: f64| ContactWindow {
+            aos,
+            los,
+            max_elevation_deg: 30.0,
+            truncated: false,
+        };
+        let contacts: Vec<ContactWindow> =
+            (0..200).map(|i| w(i as f64 * 100.0, i as f64 * 100.0 + 40.0)).collect();
+        let spans: Vec<Span> =
+            (0..200).map(|i| Span { start: i as f64 * 100.0 + 50.0, end: i as f64 * 100.0 + 90.0 }).collect();
+        let tl = Timeline::from_parts(&timing(), contacts.clone(), Some(spans.clone()), 20_000.0);
+        for i in 0..400 {
+            let t = i as f64 * 50.0; // lands exactly on every boundary
+            assert_eq!(tl.in_contact(t), contacts.iter().any(|c| c.contains(t)), "t={t}");
+            assert_eq!(tl.sunlit(t), spans.iter().any(|s| s.contains(t)), "t={t}");
+            let naive: f64 = spans.iter().map(|s| s.overlap_s(0.0, t)).sum();
+            assert_eq!(tl.sunlit_s(0.0, t).to_bits(), naive.to_bits(), "t={t}");
+        }
+        // incremental consumption across all 200 passes conserves airtime
+        let mut tl = tl;
+        let mut total = 0.0;
+        for i in 0..100 {
+            for s in tl.due_contacts(i as f64 * 190.0) {
+                assert!(s.window.los > s.window.aos);
+                total += s.window.duration_s();
+            }
+        }
+        for s in tl.remaining_contacts() {
+            total += s.window.duration_s();
+        }
+        assert!((total - 200.0 * 40.0).abs() < 1e-9, "consumed {total} of 8000 s");
     }
 
     #[test]

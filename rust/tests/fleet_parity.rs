@@ -1,0 +1,203 @@
+//! Fleet engine ↔ thread driver parity.
+//!
+//! `run_fleet` must reproduce `run_constellation`'s report for the same
+//! config, and must itself be invariant under `fleet.shards` /
+//! `fleet.max_events_in_flight` (pure parallelism dials).
+//!
+//! Comparison discipline:
+//!
+//! * **Always bitwise**: every integer (tiles, router, downlink, link
+//!   packet counts, windows, round counts) and every virtual-time f64
+//!   (mAP, mean confidence, duties, link airtime, contact/sunlit
+//!   seconds) — these are pure functions of mission time.
+//! * **Never compared**: wallclock fields (`wall_s`, `wall_infer_s`,
+//!   ground service wall) and the rendered telemetry string.
+//! * **Energy/power f64s**: bit-compared between the two engines only
+//!   when `federated.enabled` is off — with rounds on, the thread
+//!   driver's accumulator interleaves training folds with scene folds
+//!   in ground-reply wallclock order, so its energy bits are not even
+//!   reproducible run-to-run.  Fleet-vs-fleet (shard invariance) they
+//!   are always bit-compared: virtual time has no wallclock anywhere.
+
+use tiansuan::config::Config;
+use tiansuan::coordinator::{run_constellation, run_fleet, ConstellationReport, SatelliteReport};
+use tiansuan::data::Version;
+use tiansuan::runtime::Runtime;
+
+fn rt() -> Option<Runtime> {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    if !std::path::Path::new(dir).join("manifest.json").exists() {
+        eprintln!("skipping: artifacts/ not built");
+        return None;
+    }
+    Some(Runtime::open(dir).unwrap())
+}
+
+fn small_cfg() -> Config {
+    let mut cfg = Config::default();
+    cfg.scene_cells = 4;
+    cfg.constellation.satellites = 3;
+    cfg.constellation.scenes_per_satellite = 2;
+    cfg
+}
+
+/// Compare the deterministic surface of two per-satellite reports.
+/// `energy_bits` additionally bit-compares the energy/power-derived
+/// f64s (see module doc for when that is sound).
+fn assert_sat_parity(a: &SatelliteReport, b: &SatelliteReport, energy_bits: bool, ctx: &str) {
+    assert_eq!(a.index, b.index, "{ctx}: index");
+    assert_eq!(a.name, b.name, "{ctx}: name");
+
+    // scenario fold: integers + detection-derived f64s, bitwise
+    let (ra, rb) = (&a.result, &b.result);
+    assert_eq!(ra.scenes, rb.scenes, "{ctx}: scenes");
+    assert_eq!(ra.tiles_total, rb.tiles_total, "{ctx}: tiles_total");
+    assert_eq!(ra.tiles_filtered, rb.tiles_filtered, "{ctx}: tiles_filtered");
+    assert_eq!(ra.router.onboard_final, rb.router.onboard_final, "{ctx}: onboard_final");
+    assert_eq!(ra.router.offloaded, rb.router.offloaded, "{ctx}: offloaded");
+    assert_eq!(
+        ra.router.confidently_empty, rb.router.confidently_empty,
+        "{ctx}: confidently_empty"
+    );
+    assert_eq!(ra.map_inorbit.to_bits(), rb.map_inorbit.to_bits(), "{ctx}: map_inorbit");
+    assert_eq!(ra.map_collab.to_bits(), rb.map_collab.to_bits(), "{ctx}: map_collab");
+    assert_eq!(ra.report_inorbit.det_total, rb.report_inorbit.det_total, "{ctx}: inorbit dets");
+    assert_eq!(ra.report_collab.det_total, rb.report_collab.det_total, "{ctx}: collab dets");
+    assert_eq!(ra.bentpipe_bytes, rb.bentpipe_bytes, "{ctx}: bentpipe_bytes");
+    assert_eq!(ra.collab_bytes, rb.collab_bytes, "{ctx}: collab_bytes");
+    assert_eq!(
+        ra.mean_confidence.to_bits(),
+        rb.mean_confidence.to_bits(),
+        "{ctx}: mean_confidence"
+    );
+
+    // downlink + link: virtual-time accounting, bitwise
+    assert_eq!(a.downlink.items_delivered, b.downlink.items_delivered, "{ctx}: dl delivered");
+    assert_eq!(a.downlink.items_dropped, b.downlink.items_dropped, "{ctx}: dl dropped");
+    assert_eq!(a.downlink.bytes_dropped, b.downlink.bytes_dropped, "{ctx}: dl bytes_dropped");
+    assert_eq!(a.downlink.total_bytes(), b.downlink.total_bytes(), "{ctx}: dl bytes");
+    assert_eq!(a.link.packets_sent, b.link.packets_sent, "{ctx}: packets_sent");
+    assert_eq!(a.link.packets_lost, b.link.packets_lost, "{ctx}: packets_lost");
+    assert_eq!(a.link.bytes_delivered, b.link.bytes_delivered, "{ctx}: link bytes");
+    assert_eq!(a.link.busy_s.to_bits(), b.link.busy_s.to_bits(), "{ctx}: link busy_s");
+
+    // timeline geometry, bitwise
+    assert_eq!(a.windows, b.windows, "{ctx}: windows");
+    assert_eq!(a.contact_s.to_bits(), b.contact_s.to_bits(), "{ctx}: contact_s");
+    assert_eq!(a.sunlit_s.to_bits(), b.sunlit_s.to_bits(), "{ctx}: sunlit_s");
+
+    // federated round accounting (integers + participation sets)
+    assert_eq!(a.federated.is_some(), b.federated.is_some(), "{ctx}: fed presence");
+    if let (Some(fa), Some(fb)) = (&a.federated, &b.federated) {
+        assert_eq!(fa.rounds_scheduled, fb.rounds_scheduled, "{ctx}: rounds_scheduled");
+        assert_eq!(fa.rounds_completed, fb.rounds_completed, "{ctx}: rounds_completed");
+        assert_eq!(fa.rounds_skipped_power, fb.rounds_skipped_power, "{ctx}: rounds_skipped");
+        assert_eq!(fa.participated, fb.participated, "{ctx}: participation");
+    }
+
+    assert_eq!(a.power.is_some(), b.power.is_some(), "{ctx}: power presence");
+    if let (Some(pa), Some(pb)) = (&a.power, &b.power) {
+        assert_eq!(pa.scenes_deferred, pb.scenes_deferred, "{ctx}: scenes_deferred");
+        assert_eq!(pa.scenes_shed, pb.scenes_shed, "{ctx}: scenes_shed");
+        if energy_bits {
+            assert_eq!(pa.min_soc_frac.to_bits(), pb.min_soc_frac.to_bits(), "{ctx}: min_soc");
+            assert_eq!(
+                pa.final_soc_frac.to_bits(),
+                pb.final_soc_frac.to_bits(),
+                "{ctx}: final_soc"
+            );
+            assert_eq!(pa.generated_wh.to_bits(), pb.generated_wh.to_bits(), "{ctx}: generated");
+            assert_eq!(pa.consumed_wh.to_bits(), pb.consumed_wh.to_bits(), "{ctx}: consumed");
+            assert_eq!(pa.discharge_wh.to_bits(), pb.discharge_wh.to_bits(), "{ctx}: discharge");
+            assert_eq!(
+                pa.capacity_wh_now.to_bits(),
+                pb.capacity_wh_now.to_bits(),
+                "{ctx}: capacity_now"
+            );
+        }
+    }
+    if energy_bits {
+        assert_eq!(ra.compute_duty.to_bits(), rb.compute_duty.to_bits(), "{ctx}: compute_duty");
+        assert_eq!(
+            ra.energy_compute_share.to_bits(),
+            rb.energy_compute_share.to_bits(),
+            "{ctx}: energy_compute_share"
+        );
+    }
+}
+
+fn assert_report_parity(a: &ConstellationReport, b: &ConstellationReport, energy_bits: bool) {
+    assert_eq!(a.satellites.len(), b.satellites.len(), "fleet size");
+    for (sa, sb) in a.satellites.iter().zip(&b.satellites) {
+        assert_sat_parity(sa, sb, energy_bits, &format!("sat {}", sa.index));
+    }
+    assert_eq!(a.tiles_total, b.tiles_total, "tiles_total");
+    assert_eq!(a.task_completed, b.task_completed, "task_completed");
+    assert_eq!(a.federated.is_some(), b.federated.is_some(), "fed report presence");
+    if let (Some(fa), Some(fb)) = (&a.federated, &b.federated) {
+        assert_eq!(
+            fa.final_accuracy().to_bits(),
+            fb.final_accuracy().to_bits(),
+            "fleet FedAvg accuracy"
+        );
+    }
+}
+
+#[test]
+fn one_satellite_ideal_contact_fleet_matches_thread_driver() {
+    let Some(rt) = rt() else { return };
+    let mut cfg = small_cfg();
+    cfg.constellation.satellites = 1;
+    cfg.constellation.scenes_per_satellite = 3;
+    cfg.constellation.ideal_contact = true;
+    cfg.loss_profile = "lossless".into();
+    let threads = run_constellation(&rt, &cfg, Version::V2).unwrap();
+    let fleet = run_fleet(&rt, &cfg, Version::V2).unwrap();
+    assert_report_parity(&threads, &fleet, true);
+}
+
+#[test]
+fn orbital_lossy_multisat_fleet_matches_thread_driver() {
+    let Some(rt) = rt() else { return };
+    let mut cfg = small_cfg();
+    cfg.loss_profile = "makersat".into();
+    let threads = run_constellation(&rt, &cfg, Version::V2).unwrap();
+    let fleet = run_fleet(&rt, &cfg, Version::V2).unwrap();
+    // fed off, power off: the fold order is pinned in both engines, so
+    // the energy f64s must match bitwise too
+    assert_report_parity(&threads, &fleet, true);
+}
+
+#[test]
+fn governed_federated_fleet_matches_thread_driver() {
+    let Some(rt) = rt() else { return };
+    let mut cfg = small_cfg();
+    cfg.power.enabled = true;
+    cfg.federated.enabled = true;
+    let threads = run_constellation(&rt, &cfg, Version::V2).unwrap();
+    let fleet = run_fleet(&rt, &cfg, Version::V2).unwrap();
+    // rounds interleave the thread driver's accumulator in reply-order,
+    // so energy bits are not comparable across engines — everything
+    // else (integers, mAP, participation, SoC-governed round skips) is
+    assert_report_parity(&threads, &fleet, false);
+}
+
+#[test]
+fn fleet_report_is_invariant_under_shard_count_and_admission_cap() {
+    let Some(rt) = rt() else { return };
+    let mut cfg = small_cfg();
+    cfg.constellation.satellites = 4;
+    cfg.power.enabled = true;
+    cfg.federated.enabled = true;
+    cfg.fleet.shards = 1;
+    cfg.fleet.max_events_in_flight = 0;
+    let one = run_fleet(&rt, &cfg, Version::V2).unwrap();
+    for (shards, cap) in [(2, 0), (4, 0), (3, 1), (8, 2)] {
+        cfg.fleet.shards = shards;
+        cfg.fleet.max_events_in_flight = cap;
+        let many = run_fleet(&rt, &cfg, Version::V2).unwrap();
+        // fleet-vs-fleet is wallclock-free: full bit parity, energy
+        // f64s included, at every shard count and admission cap
+        assert_report_parity(&one, &many, true);
+    }
+}
