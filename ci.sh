@@ -22,6 +22,10 @@ cargo build --release
 echo "== tier-1: cargo test -q =="
 cargo test -q
 
+echo "== determinism: merged flight-recorder trace across shard counts =="
+# pins the trace stream byte-for-byte across shards × admission caps
+cargo test -q --test trace_determinism
+
 if [[ "${1:-}" == "fast" ]]; then
   exit 0
 fi
@@ -84,5 +88,14 @@ echo "{\"bench\":\"run\",\"commit\":\"$(git rev-parse --short HEAD 2>/dev/null |
 grep '^{"bench"' "$bench_log" >> ../BENCH_fleet.json || true
 rm -f "$bench_log"
 echo "BENCH_fleet.json now holds $(wc -l < ../BENCH_fleet.json) records"
+
+echo "== bench artifact: perf_observability -> BENCH_observability.json =="
+# artifact-free (trace off vs on vs baseline on a stub fleet): always recorded
+bench_log=$(mktemp)
+cargo bench --bench perf_observability | tee "$bench_log"
+echo "{\"bench\":\"run\",\"commit\":\"$(git rev-parse --short HEAD 2>/dev/null || echo unknown)\",\"date\":\"$(date -u +%FT%TZ)\"}" >> ../BENCH_observability.json
+grep '^{"bench"' "$bench_log" >> ../BENCH_observability.json || true
+rm -f "$bench_log"
+echo "BENCH_observability.json now holds $(wc -l < ../BENCH_observability.json) records"
 
 echo "ci: all gates passed"

@@ -15,12 +15,17 @@
 //!                                                        [--sats N] [--scenes N]
 //!                                                        [--battery-wh W] [--soc0 F] [--power]
 //!                                                        [--federated] [--round-interval-s S]
+//!                                                        [--trace-out PATH] [--trace-chrome PATH]
 //!
 //! `--power` enables the power subsystem (solar array + battery +
 //! governor) for part 1; `--battery-wh` / `--soc0` size the battery and
 //! its initial state of charge.  `--federated` schedules federated
 //! training rounds as a mission workload (SoC-gated when `--power` is
 //! also on), with weights contending for downlink airtime.
+//! `--trace-out` / `--trace-chrome` enable the flight recorder for
+//! part 1 and write the merged virtual-time trace as JSONL / Chrome
+//! `trace_event` JSON (load the latter in `chrome://tracing` or
+//! Perfetto), printing a per-kind record summary.
 
 use tiansuan::cluster::metastore::{EdgeReplica, MetaStore};
 use tiansuan::cluster::orchestrator::{AppSpec, Orchestrator, Placement};
@@ -61,6 +66,9 @@ fn main() -> anyhow::Result<()> {
     ccfg.federated.enabled = args.flag("federated");
     ccfg.federated.round_interval_s =
         args.opt_f64("round-interval-s", ccfg.federated.round_interval_s);
+    let trace_out = args.opt("trace-out");
+    let trace_chrome = args.opt("trace-chrome");
+    ccfg.trace.enabled = trace_out.is_some() || trace_chrome.is_some();
     println!(
         "=== run_constellation: {} satellites × {} scenes, shared ground segment{}{} ===",
         ccfg.constellation.satellites,
@@ -141,6 +149,25 @@ fn main() -> anyhow::Result<()> {
         report.task_completed
     );
     println!("--- per-stage telemetry ---\n{}", report.telemetry);
+    if let Some(trace) = &report.trace {
+        let mut summary = String::new();
+        for (kind, n) in trace.kind_counts() {
+            summary.push_str(&format!(" {}={n}", kind.name()));
+        }
+        println!(
+            "--- flight recorder: {} records ({} evicted) ---{summary}",
+            trace.len(),
+            trace.evicted(),
+        );
+        if let Some(path) = trace_out {
+            std::fs::write(path, trace.to_jsonl())?;
+            println!("trace JSONL written to {path}");
+        }
+        if let Some(path) = trace_chrome {
+            std::fs::write(path, trace.to_chrome())?;
+            println!("chrome trace_event JSON written to {path} (open in chrome://tracing)");
+        }
+    }
 
     // Part 2: the 24-hour two-satellite mission timeline.
 

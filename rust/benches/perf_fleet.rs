@@ -34,13 +34,17 @@ fn main() {
             let wall = t0.elapsed().as_secs_f64();
             assert_eq!(reports.len(), n_sats);
             let tiles: u64 = reports.iter().map(|r| r.tiles).sum();
+            let wait = stats.admission_wait();
             println!(
                 "fleet {n_sats:>7} sats cap {cap:>3}: {:>8.0} sats/s, \
-                 {:>9} events ({:>9.0}/s), peak {:>7} live machines, {tiles} tiles",
+                 {:>9} events ({:>9.0}/s), peak {:>7} live machines, \
+                 heap≤{:>6}, admission wait p99 {:>9.1}s, {tiles} tiles",
                 n_sats as f64 / wall.max(1e-12),
                 stats.events,
                 stats.events as f64 / wall.max(1e-12),
                 stats.peak_live,
+                stats.max_heap_depth,
+                wait.p99_s,
             );
             bench::json_line(
                 "perf_fleet.scaling",
@@ -53,6 +57,9 @@ fn main() {
                     ("events", stats.events as f64),
                     ("events_per_s", stats.events as f64 / wall.max(1e-12)),
                     ("peak_live_machines", stats.peak_live as f64),
+                    ("max_heap_depth", stats.max_heap_depth as f64),
+                    ("admission_wait_mean_s", wait.mean_s),
+                    ("admission_wait_p99_s", wait.p99_s),
                     ("tiles", tiles as f64),
                 ],
             );
@@ -68,8 +75,13 @@ fn main() {
             run_sharded(n_sats, shards, 64, |id| Ok(StubSat::new(id, 42, scenes, horizon_s)))
                 .unwrap();
         let wall = t0.elapsed().as_secs_f64();
+        // load balance across shards: sat_id % shards striping should
+        // keep per-shard event counts within a few percent
+        let ev_max = stats.events_per_shard.iter().copied().max().unwrap_or(0);
+        let ev_min = stats.events_per_shard.iter().copied().min().unwrap_or(0);
         println!(
-            "shards {shards:>2}: {n_sats} sats in {wall:.3} s ({:>8.0} sats/s, peak {} live)",
+            "shards {shards:>2}: {n_sats} sats in {wall:.3} s ({:>8.0} sats/s, peak {} live, \
+             shard events {ev_min}..{ev_max})",
             n_sats as f64 / wall.max(1e-12),
             stats.peak_live,
         );
@@ -81,6 +93,8 @@ fn main() {
                 ("wall_s", wall),
                 ("sats_per_s", n_sats as f64 / wall.max(1e-12)),
                 ("peak_live_machines", stats.peak_live as f64),
+                ("shard_events_min", ev_min as f64),
+                ("shard_events_max", ev_max as f64),
             ],
         );
     }

@@ -1,0 +1,146 @@
+//! Flight-recorder overhead budget: scenes/sec with tracing **off**
+//! vs **on**, against a no-trace baseline on the same fleet.
+//!
+//! The tentpole's promise is that `trace.enabled=false` costs one
+//! predictable branch per instrumentation site — within noise (≤ 2%)
+//! of the pre-instrumentation hot path — and that turning tracing on
+//! stays cheap enough to leave on for mission forensics.  Artifact-free
+//! by design (steps [`tiansuan::sim::StubSat`] machines through the
+//! real sharded event scheduler), so CI can always record it.  Emits
+//! the standard bench JSON that `ci.sh` greps into
+//! `BENCH_observability.json`.
+//!
+//! Modes:
+//!   * `baseline` — no tracer constructed at all (the pre-PR hot path:
+//!     every site's `Option<SatTracer>` is `None`, no sink allocated);
+//!   * `off`      — identical code path measured a second time, which
+//!     doubles as the run-to-run noise floor for the overhead numbers;
+//!   * `on`       — every satellite records into its shard's ring of a
+//!     shared [`TraceSink`], merged once at the post-join barrier.
+
+use std::sync::Arc;
+
+use tiansuan::sim::{run_sharded, StubSat};
+use tiansuan::telemetry::trace::TraceSink;
+use tiansuan::util::bench;
+
+const N_SATS: usize = 10_000;
+const SHARDS: usize = 8;
+const SCENES: usize = 4;
+const HORIZON_S: f64 = 21_600.0; // 6 h mission
+const SEED: u64 = 42;
+const REPEATS: usize = 3;
+// StubSat records one Capture per scene plus one DownlinkSlice per
+// contact pass (~4 in 6 h): ~10 records/sat, ~12.5k per ring at
+// 10k sats / 8 shards.  2^15 leaves eviction far out of reach.
+const RING_CAP: usize = 1 << 15;
+
+/// Best-of-N wall time for one fleet run; the per-run closure builds
+/// the satellite factory so the `on` mode can hand out tracers.
+fn measure<F>(mut run: F) -> f64
+where
+    F: FnMut() -> f64,
+{
+    let mut best = f64::INFINITY;
+    for _ in 0..REPEATS {
+        best = best.min(run());
+    }
+    best
+}
+
+fn plain_run() -> f64 {
+    let t0 = std::time::Instant::now();
+    let (reports, _) =
+        run_sharded(N_SATS, SHARDS, 64, |id| Ok(StubSat::new(id, SEED, SCENES, HORIZON_S)))
+            .unwrap();
+    let wall = t0.elapsed().as_secs_f64();
+    assert_eq!(reports.len(), N_SATS);
+    wall
+}
+
+fn traced_run() -> (f64, u64, usize) {
+    let sink = Arc::new(TraceSink::new(SHARDS.min(N_SATS), RING_CAP));
+    let sink_ref = &sink;
+    let t0 = std::time::Instant::now();
+    let (reports, _) = run_sharded(N_SATS, SHARDS, 64, |id| {
+        Ok(StubSat::new(id, SEED, SCENES, HORIZON_S).with_trace(sink_ref.tracer(id, id)))
+    })
+    .unwrap();
+    let wall = t0.elapsed().as_secs_f64();
+    assert_eq!(reports.len(), N_SATS);
+    let log = sink.merge();
+    (wall, log.evicted(), log.len())
+}
+
+fn main() {
+    let scenes_total = (N_SATS * SCENES) as f64;
+    println!(
+        "=== perf_observability: {N_SATS} sats, {SHARDS} shards, \
+         {SCENES} scenes over {:.0} h, best of {REPEATS} ===",
+        HORIZON_S / 3600.0
+    );
+
+    // warm-up: fault in the scheduler allocations before timing
+    let _ = plain_run();
+
+    let base_wall = measure(plain_run);
+    let base_sps = scenes_total / base_wall.max(1e-12);
+    println!("baseline (no trace code engaged): {base_wall:.3} s, {base_sps:>9.0} scenes/s");
+    bench::json_line(
+        "perf_observability.baseline",
+        &[
+            ("sats", N_SATS as f64),
+            ("wall_s", base_wall),
+            ("scenes_per_s", base_sps),
+        ],
+    );
+
+    let off_wall = measure(plain_run);
+    let off_sps = scenes_total / off_wall.max(1e-12);
+    let off_overhead_pct = (off_wall / base_wall - 1.0) * 100.0;
+    println!(
+        "trace off (sites branch on None):  {off_wall:.3} s, {off_sps:>9.0} scenes/s \
+         ({off_overhead_pct:+.2}% vs baseline — budget ≤ 2%)"
+    );
+    bench::json_line(
+        "perf_observability.off",
+        &[
+            ("sats", N_SATS as f64),
+            ("wall_s", off_wall),
+            ("scenes_per_s", off_sps),
+            ("overhead_pct", off_overhead_pct),
+        ],
+    );
+
+    let mut records = 0usize;
+    let on_wall = measure(|| {
+        let (wall, evicted, len) = traced_run();
+        assert_eq!(evicted, 0, "bench ring must not evict (cap {RING_CAP})");
+        records = len;
+        wall
+    });
+    let on_sps = scenes_total / on_wall.max(1e-12);
+    let on_overhead_pct = (on_wall / base_wall - 1.0) * 100.0;
+    println!(
+        "trace on ({records} records + merge): {on_wall:.3} s, {on_sps:>9.0} scenes/s \
+         ({on_overhead_pct:+.2}% vs baseline)"
+    );
+    bench::json_line(
+        "perf_observability.on",
+        &[
+            ("sats", N_SATS as f64),
+            ("wall_s", on_wall),
+            ("scenes_per_s", on_sps),
+            ("overhead_pct", on_overhead_pct),
+            ("records", records as f64),
+        ],
+    );
+
+    bench::json_line(
+        "perf_observability.overhead",
+        &[
+            ("off_pct", off_overhead_pct),
+            ("on_pct", on_overhead_pct),
+        ],
+    );
+}

@@ -378,6 +378,54 @@ impl Default for FederatedConfig {
     }
 }
 
+/// Mission flight recorder ([`crate::telemetry::trace`]): virtual-time
+/// spans/events recorded per satellite and merged at the post-join
+/// barrier.  Disabled by default — zero records, one predictable branch
+/// per instrumentation site, every existing result bit-identical.
+#[derive(Clone, Copy, Debug)]
+pub struct TraceConfig {
+    /// Master switch: off ⇒ no `TraceSink` exists and every tracer
+    /// handle is `None`.
+    pub enabled: bool,
+    /// Per-shard ring-buffer capacity, records.  When a ring fills, the
+    /// oldest records evict (counted in `TraceLog::evicted`); evicted
+    /// traces are no longer shard-count invariant, so size this to the
+    /// mission (records ≈ scenes + slices + rounds per shard).
+    pub ring_cap: usize,
+}
+
+impl TraceConfig {
+    pub fn validate(&self) -> Result<()> {
+        if !self.enabled {
+            return Ok(());
+        }
+        anyhow::ensure!(self.ring_cap >= 1, "trace.ring_cap must be at least 1");
+        Ok(())
+    }
+}
+
+impl Default for TraceConfig {
+    fn default() -> TraceConfig {
+        TraceConfig { enabled: false, ring_cap: 65_536 }
+    }
+}
+
+/// Telemetry cardinality policy ([`crate::telemetry`]).
+#[derive(Clone, Copy, Debug)]
+pub struct TelemetryConfig {
+    /// Fleets at or below this size keep exact per-satellite `.<node>`
+    /// gauges (the pre-digest output, bit-for-bit); larger fleets record
+    /// fixed-size `Digest` aggregates instead, bounding the rendered
+    /// metric set at any fleet size.
+    pub per_node_limit: usize,
+}
+
+impl Default for TelemetryConfig {
+    fn default() -> TelemetryConfig {
+        TelemetryConfig { per_node_limit: 64 }
+    }
+}
+
 /// Scenario virtual-time constants (previously hardcoded in
 /// `Pipeline::run_scenario`), consumed through [`crate::sim::Timeline`].
 #[derive(Clone, Debug)]
@@ -449,6 +497,8 @@ pub struct Config {
     pub power: PowerConfig,
     pub federated: FederatedConfig,
     pub fleet: FleetConfig,
+    pub trace: TraceConfig,
+    pub telemetry: TelemetryConfig,
     /// Scene size in 64-px cells.
     pub scene_cells: usize,
     /// Fragment edge length in px for the splitter.
@@ -495,6 +545,8 @@ impl Default for Config {
             power: PowerConfig::default(),
             federated: FederatedConfig::default(),
             fleet: FleetConfig::default(),
+            trace: TraceConfig::default(),
+            telemetry: TelemetryConfig::default(),
             scene_cells: 8,
             fragment_px: 64,
             loss_profile: "stable".into(),
@@ -717,6 +769,23 @@ impl Config {
                 min_soc: n("min_soc", cfg.federated.min_soc),
             };
         }
+        if let Some(t) = j.get("trace") {
+            cfg.trace = TraceConfig {
+                enabled: t.get("enabled").and_then(|v| v.as_bool()).unwrap_or(cfg.trace.enabled),
+                ring_cap: t
+                    .get("ring_cap")
+                    .and_then(|v| v.as_usize())
+                    .unwrap_or(cfg.trace.ring_cap),
+            };
+        }
+        if let Some(t) = j.get("telemetry") {
+            cfg.telemetry = TelemetryConfig {
+                per_node_limit: t
+                    .get("per_node_limit")
+                    .and_then(|v| v.as_usize())
+                    .unwrap_or(cfg.telemetry.per_node_limit),
+            };
+        }
         if let Some(v) = j.get("scene_cells").and_then(|v| v.as_usize()) {
             cfg.scene_cells = v;
         }
@@ -734,6 +803,7 @@ impl Config {
         cfg.power.validate().context("power config")?;
         cfg.federated.validate().context("federated config")?;
         cfg.fleet.validate().context("fleet config")?;
+        cfg.trace.validate().context("trace config")?;
         cfg.validate_cross().context("config cross-checks")?;
         Ok(cfg)
     }
@@ -803,6 +873,8 @@ mod tests {
         assert_eq!(c.energy.comm_idle_floor, 0.15);
         assert!(!c.power.enabled, "power subsystem must default off");
         assert!(!c.federated.enabled, "federated scheduling must default off");
+        assert!(!c.trace.enabled, "flight recorder must default off");
+        assert_eq!(c.telemetry.per_node_limit, 64);
     }
 
     #[test]
@@ -959,6 +1031,25 @@ mod tests {
         );
         // disabled power: fade is inert and unvalidated, like the rest
         assert!(Config::parse(r#"{"power": {"fade_per_cycle": 9}}"#).is_ok());
+    }
+
+    #[test]
+    fn parse_trace_and_telemetry_sections() {
+        let c = Config::parse(
+            r#"{"trace": {"enabled": true, "ring_cap": 1024},
+                "telemetry": {"per_node_limit": 8}}"#,
+        )
+        .unwrap();
+        assert!(c.trace.enabled);
+        assert_eq!(c.trace.ring_cap, 1024);
+        assert_eq!(c.telemetry.per_node_limit, 8);
+        // partial override keeps the other defaults
+        let p = Config::parse(r#"{"trace": {"enabled": true}}"#).unwrap();
+        assert!(p.trace.enabled);
+        assert_eq!(p.trace.ring_cap, TraceConfig::default().ring_cap);
+        // zero-capacity ring fails at parse, but only when tracing is on
+        assert!(Config::parse(r#"{"trace": {"enabled": true, "ring_cap": 0}}"#).is_err());
+        assert!(Config::parse(r#"{"trace": {"ring_cap": 0}}"#).is_ok());
     }
 
     #[test]

@@ -96,14 +96,15 @@ use crate::runtime::{Model, Runtime};
 use crate::sedna::federated::{self, FedScheduler, RoundDecision};
 use crate::sedna::{GlobalManager, LocalController, TaskKind, TaskPhase, TaskSpec};
 use crate::sim::{scene_timing, DutyCycles, Timeline};
-use crate::telemetry::{Counter, Registry};
+use crate::telemetry::trace::{SatTracer, SpanKind, TraceLog, TracePayload, TraceSink};
+use crate::telemetry::{per_node_gauges_enabled, Counter, Gauge, Registry};
 
 use super::downlink::{Delivered, DownlinkItem, DownlinkQueue, DownlinkStats, ItemKind};
-use super::engine::{worker_loop, Envelope, OnboardDone, OnboardStage, SceneJob};
+use super::engine::{trace_onboard, worker_loop, Envelope, OnboardDone, OnboardStage, SceneJob};
 use super::pipeline::{
     Pipeline, ProcessedTile, ScenarioAccumulator, ScenarioResult, RESULT_HEADER_BYTES,
 };
-use super::router::{route, LinkSnapshot, RouterStats};
+use super::router::{reroute, LinkSnapshot, LossTracker, RouterStats};
 use super::TileFate;
 
 /// Downlink tag encoding: scene index * stride + tile index.
@@ -154,6 +155,10 @@ pub struct ConstellationReport {
     pub federated: Option<federated::FleetTrainingReport>,
     /// Rendered per-stage telemetry (queue waits, service times, depths).
     pub telemetry: String,
+    /// Mission flight-recorder log, merged deterministically at the join
+    /// barrier from the per-shard rings; `None` when `trace.enabled` is
+    /// off.
+    pub trace: Option<TraceLog>,
 }
 
 impl ConstellationReport {
@@ -233,6 +238,13 @@ pub fn run_constellation(rt: &Runtime, cfg: &Config, version: Version) -> Result
         })?;
     }
 
+    // flight recorder: one single-writer ring per satellite thread here
+    // (the fleet engine uses one per scheduler shard); merge() after the
+    // join produces the same (time, sat, kind)-sorted stream either way
+    let trace_sink =
+        cfg.trace.enabled.then(|| Arc::new(TraceSink::new(n_sats, cfg.trace.ring_cap)));
+    let per_node = per_node_gauges_enabled(n_sats, cfg.telemetry.per_node_limit);
+
     let (ground_tx, ground_rx) = channel::<GroundRequest>();
     let t0 = Instant::now();
     let mut reports: Vec<SatelliteReport> = Vec::with_capacity(n_sats);
@@ -266,8 +278,12 @@ pub fn run_constellation(rt: &Runtime, cfg: &Config, version: Version) -> Result
             let registry = &registry;
             let gm = &gm;
             let gs = &gs;
+            let tracer = trace_sink.as_ref().map(|t| t.tracer(i, i));
             handles.push(s.spawn(move || -> Result<SatelliteReport> {
-                run_satellite(rt, cfg, version, i, node, tx, registry, gm, task, gs, metrics_ref, scenes)
+                run_satellite(
+                    rt, cfg, version, i, node, tx, registry, gm, task, gs, metrics_ref, scenes,
+                    tracer, per_node,
+                )
             }));
         }
         drop(ground_tx); // ground loop ends when the last satellite hangs up
@@ -308,6 +324,7 @@ pub fn run_constellation(rt: &Runtime, cfg: &Config, version: Version) -> Result
         task_completed,
         federated: fed_report,
         telemetry: metrics.render(),
+        trace: trace_sink.map(|s| s.merge()),
     })
 }
 
@@ -328,6 +345,12 @@ pub(super) fn set_fleet_power_gauges(metrics: &Registry, reports: &[SatelliteRep
     metrics
         .gauge("power.soc_pct.fleet_mean")
         .set(socs.iter().sum::<i64>() / socs.len() as i64);
+    // full fleet distribution in fixed space — the view that survives
+    // past the per-node gauge cutoff
+    let dig = metrics.digest("power.soc_pct");
+    for s in &socs {
+        dig.observe(*s);
+    }
 }
 
 /// Fleet aggregation: replay the recorded per-round participant sets
@@ -368,6 +391,16 @@ pub(super) fn fleet_fed_report(
         metrics
             .gauge("federated.accuracy_pct")
             .set((rep.final_accuracy() * 100.0).round() as i64);
+        // per-satellite round participation as fixed-size digests — the
+        // fleet view once `.<node>` counters pass the cardinality cutoff
+        let rounds_dig = metrics.digest("federated.rounds");
+        let skipped_dig = metrics.digest("federated.skipped_power");
+        for r in reports {
+            if let Some(f) = &r.federated {
+                rounds_dig.observe(f.rounds_completed as i64);
+                skipped_dig.observe(f.rounds_skipped_power as i64);
+            }
+        }
         rep
     })
 }
@@ -385,8 +418,20 @@ pub(super) fn apply_fed_rounds(
     power: &mut Option<PowerState>,
     acc: &mut ScenarioAccumulator,
     counters: &Option<(std::sync::Arc<Counter>, std::sync::Arc<Counter>)>,
+    tracer: Option<&SatTracer>,
 ) {
     for d in decisions {
+        if let Some(tr) = tracer {
+            // a participating round spans its training burst; a skipped
+            // round is an instant with the verdict in the payload
+            let t_end = if d.participated { d.due_s + train_s } else { d.due_s };
+            tr.span(
+                SpanKind::TrainingRound,
+                d.due_s,
+                t_end,
+                TracePayload::Verdict(d.trace_verdict()),
+            );
+        }
         if d.participated {
             queue.push(DownlinkItem {
                 kind: ItemKind::Weights,
@@ -505,6 +550,8 @@ fn run_satellite(
     gs: &crate::orbit::GroundStation,
     metrics: &Registry,
     scenes: usize,
+    tracer: Option<SatTracer>,
+    per_node: bool,
 ) -> Result<SatelliteReport> {
     let mut lc = LocalController::new(node.clone());
     lc.start(task);
@@ -541,10 +588,17 @@ fn run_satellite(
     // deterministically at the join barrier instead
     // (`set_fleet_power_gauges` → power.soc_pct.fleet_min/fleet_mean).
     // The defer/shed counters sum correctly across the fleet and stay
-    // shared.
+    // shared.  Past the `telemetry.per_node_limit` cutoff the suffixed
+    // gauge becomes a detached sink: call sites stay branch-free and
+    // cardinality stays fixed (the barrier digest carries the fleet
+    // distribution instead).
     let power_metrics = power.as_ref().map(|_| {
         (
-            metrics.gauge(&format!("power.soc_pct.{node}")),
+            if per_node {
+                metrics.gauge(&format!("power.soc_pct.{node}"))
+            } else {
+                Arc::new(Gauge::default())
+            },
             metrics.counter("power.scenes_deferred"),
             metrics.counter("power.scenes_shed"),
         )
@@ -557,12 +611,17 @@ fn run_satellite(
     let fed_train_s =
         federated::train_seconds(cfg.federated.epochs, cfg.federated.samples_per_node);
     // per-sat counters (a fleet-summed pair would hide which satellite
-    // the eclipse starved)
+    // the eclipse starved); past the cutoff they detach and the
+    // `federated.rounds`/`federated.skipped_power` digests take over
     let fed_metrics = fed.as_ref().map(|_| {
-        (
-            metrics.counter(&format!("federated.rounds.{node}")),
-            metrics.counter(&format!("federated.skipped_power.{node}")),
-        )
+        if per_node {
+            (
+                metrics.counter(&format!("federated.rounds.{node}")),
+                metrics.counter(&format!("federated.skipped_power.{node}")),
+            )
+        } else {
+            (Arc::new(Counter::default()), Arc::new(Counter::default()))
+        }
     });
 
     let mut pending: BTreeMap<usize, PendingScene> = BTreeMap::new();
@@ -584,10 +643,13 @@ fn run_satellite(
     let errs_ref = &errs;
 
     // dispatch one drain's worth of delivered imagery to the ground
-    // segment; the reply is an asynchronous completion on the timeline
+    // segment; the reply is an asynchronous completion on the timeline.
+    // `t` is the drain slice's virtual end time — where ground
+    // re-inference lands in the flight recorder.
     let dispatch_ground = |delivered: Vec<Delivered>,
                           pending: &BTreeMap<usize, PendingScene>,
-                          inflight: &mut Vec<GroundInflight>|
+                          inflight: &mut Vec<GroundInflight>,
+                          t: f64|
      -> Result<()> {
         delivered_items.add(delivered.len() as u64);
         let mut pairs: Vec<(usize, usize)> = Vec::new();
@@ -606,6 +668,9 @@ fn run_satellite(
         }
         if tiles.is_empty() {
             return Ok(());
+        }
+        if let Some(tr) = &tracer {
+            tr.event(SpanKind::GroundInfer, t, TracePayload::Batch(tiles.len()));
         }
         let (reply_tx, reply_rx) = channel();
         queue_depth.inc();
@@ -657,9 +722,7 @@ fn run_satellite(
         // recent loss rate for the adaptive router: rate over the packets
         // sent since the previous scene, not the link's whole lifetime
         // (a bad early pass must not latch the tightened state forever)
-        let mut prev_sent = 0u64;
-        let mut prev_lost = 0u64;
-        let mut recent_loss = 0.0f64;
+        let mut loss = LossTracker::default();
         for env in rx_onboard.iter() {
             held.insert(env.inner.idx, env.inner);
             while let Some(mut d) = held.remove(&next_drive) {
@@ -668,6 +731,13 @@ fn run_satellite(
                 // governed runs stay deterministic
                 let verdict =
                     power.as_ref().map(|p| p.verdict()).unwrap_or(PowerVerdict::Nominal);
+                // governed verdicts are flight-recorder events, stamped
+                // with the SoC the governor read at this capture time
+                if let (Some(tr), Some(kind)) = (&tracer, verdict.trace_kind()) {
+                    let soc =
+                        power.as_ref().expect("governed verdict implies power state").soc_pct();
+                    tr.event(kind, timeline.now_s(), TracePayload::Soc(soc));
+                }
                 if verdict == PowerVerdict::Shed {
                     // below soc_critical the capture is shed: camera and
                     // compute idle this period, transmitter off, and the
@@ -700,7 +770,7 @@ fn run_satellite(
                         let wire = f.wire_bytes();
                         apply_fed_rounds(
                             decisions, wire, fed_train_s, &mut queue, &mut power, &mut acc,
-                            &fed_metrics,
+                            &fed_metrics, tracer.as_ref(),
                         );
                     }
                     shed_idx.insert(next_drive);
@@ -715,47 +785,29 @@ fn run_satellite(
                 // effective under the downlink state at this virtual
                 // capture time (deterministic — no wallclock involved);
                 // a deferring governor tightens on top of whatever the
-                // adaptive path produced
+                // adaptive path produced — the governed re-route shared
+                // with the fleet machine
                 if pipeline.policy.adaptive.is_some() || deferring {
-                    let mut eff = if pipeline.policy.adaptive.is_some() {
-                        let d_sent = link.stats.packets_sent - prev_sent;
-                        if d_sent > 0 {
-                            recent_loss =
-                                (link.stats.packets_lost - prev_lost) as f64 / d_sent as f64;
-                        } else {
-                            // no traffic since the last decision: the old
-                            // estimate goes stale, so decay it instead of
-                            // letting one bad pass latch the tightened state
-                            // through a multi-hour contact gap
-                            recent_loss *= 0.5;
-                        }
-                        prev_sent = link.stats.packets_sent;
-                        prev_lost = link.stats.packets_lost;
-                        let snap = LinkSnapshot {
-                            backlog_bytes: queue.pending_bytes(),
-                            loss_rate: recent_loss,
-                        };
-                        pipeline.policy.effective(&snap)
-                    } else {
-                        pipeline.policy
-                    };
-                    if deferring {
-                        let step = power
+                    let snap = pipeline.policy.adaptive.is_some().then(|| LinkSnapshot {
+                        backlog_bytes: queue.pending_bytes(),
+                        loss_rate: loss.update(link.stats.packets_sent, link.stats.packets_lost),
+                    });
+                    let step = deferring.then(|| {
+                        power
                             .as_ref()
                             .expect("defer verdict implies power state")
                             .governor()
-                            .defer_tighten;
-                        eff = eff.tightened(step);
-                    }
-                    let mut restats = RouterStats::default();
-                    for p in d.processed.iter_mut() {
-                        p.fate = route(&eff, &p.onboard_dets, p.best_objectness, &mut restats);
-                    }
-                    d.router = restats;
+                            .defer_tighten
+                    });
+                    let eff = pipeline.policy.governed(snap.as_ref(), step);
+                    d.router = reroute(&eff, &mut d.processed);
                 }
 
                 let (busy, period) = scene_timing(timeline.timing(), d.processed.len());
                 let t_capture = timeline.now_s();
+                if let Some(tr) = &tracer {
+                    trace_onboard(tr, &d, t_capture, timeline.timing().capture_overhead_s, busy);
+                }
                 let ready = t_capture + busy;
                 let mut outstanding = 0usize;
                 for (tidx, p) in d.processed.iter().enumerate() {
@@ -811,9 +863,13 @@ fn run_satellite(
                     for slice in timeline.due_contacts(t) {
                         let at_ms = (slice.window.aos * 1000.0) as u64;
                         registry.lock().unwrap().heartbeat(&node, at_ms);
-                        let got =
-                            queue.drain_window_sliced(&mut link, &slice.window, slice.closes_pass);
-                        dispatch_ground(got, &pending, &mut inflight)?;
+                        let got = queue.drain_window_sliced_traced(
+                            &mut link,
+                            &slice.window,
+                            slice.closes_pass,
+                            tracer.as_ref(),
+                        );
+                        dispatch_ground(got, &pending, &mut inflight, slice.window.los)?;
                     }
                 }
                 let comm_busy = link.stats.busy_s - comm_before;
@@ -840,7 +896,7 @@ fn run_satellite(
                     let wire = f.wire_bytes();
                     apply_fed_rounds(
                         decisions, wire, fed_train_s, &mut queue, &mut power, &mut acc,
-                        &fed_metrics,
+                        &fed_metrics, tracer.as_ref(),
                     );
                 }
                 next_drive += 1;
@@ -885,7 +941,7 @@ fn run_satellite(
                     let wire = f.wire_bytes();
                     apply_fed_rounds(
                         decisions, wire, fed_train_s, &mut queue, &mut power, &mut acc,
-                        &fed_metrics,
+                        &fed_metrics, tracer.as_ref(),
                     );
                 }
             }
@@ -896,14 +952,22 @@ fn run_satellite(
                 p.advance_chunked(&timeline, power_cursor, aos, DutyCycles::default(), power_step);
                 power_cursor = aos;
                 if p.verdict() == PowerVerdict::Shed {
+                    if let Some(tr) = &tracer {
+                        tr.event(SpanKind::Shed, aos, TracePayload::Soc(p.soc_pct()));
+                    }
                     continue;
                 }
             }
             let at_ms = (slice.window.aos * 1000.0) as u64;
             registry.lock().unwrap().heartbeat(&node, at_ms);
             let busy_before = link.stats.busy_s;
-            let got = queue.drain_window_sliced(&mut link, &slice.window, slice.closes_pass);
-            dispatch_ground(got, &pending, &mut inflight)?;
+            let got = queue.drain_window_sliced_traced(
+                &mut link,
+                &slice.window,
+                slice.closes_pass,
+                tracer.as_ref(),
+            );
+            dispatch_ground(got, &pending, &mut inflight, slice.window.los)?;
             if let Some(p) = power.as_mut() {
                 let comm = link.stats.busy_s - busy_before;
                 let duties =
@@ -932,7 +996,7 @@ fn run_satellite(
                 let wire = f.wire_bytes();
                 apply_fed_rounds(
                     decisions, wire, fed_train_s, &mut queue, &mut power, &mut acc,
-                    &fed_metrics,
+                    &fed_metrics, tracer.as_ref(),
                 );
             }
         }
@@ -983,13 +1047,19 @@ fn run_satellite(
     // max tiles in flight (split + pending offload clones), then every
     // further scene is allocation-free
     let ps = pipeline.tile_pool_stats();
-    metrics.gauge(&format!("constellation.pool.tile_allocs.{node}")).set(ps.allocs as i64);
-    metrics
-        .gauge(&format!("constellation.pool.tile_hit_pct.{node}"))
-        .set((ps.hit_rate() * 100.0).round() as i64);
-    metrics
-        .gauge(&format!("constellation.pool.tile_evictions.{node}"))
-        .set(ps.evictions as i64);
+    let hit_pct = (ps.hit_rate() * 100.0).round() as i64;
+    if per_node {
+        metrics.gauge(&format!("constellation.pool.tile_allocs.{node}")).set(ps.allocs as i64);
+        metrics.gauge(&format!("constellation.pool.tile_hit_pct.{node}")).set(hit_pct);
+        metrics
+            .gauge(&format!("constellation.pool.tile_evictions.{node}"))
+            .set(ps.evictions as i64);
+    }
+    // fixed-size fleet aggregates — digest updates commute, so satellite
+    // threads finishing in any order render identically
+    metrics.digest("constellation.pool.tile_allocs").observe(ps.allocs as i64);
+    metrics.digest("constellation.pool.tile_hit_pct").observe(hit_pct);
+    metrics.digest("constellation.pool.tile_evictions").observe(ps.evictions as i64);
 
     lc.finish(task, true);
     gm.lock().unwrap().report(task, &node, TaskPhase::Completed)?;

@@ -10,6 +10,7 @@ use std::collections::VecDeque;
 
 use crate::link::Link;
 use crate::orbit::ContactWindow;
+use crate::telemetry::trace::{SatTracer, SpanKind, TracePayload};
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ItemKind {
@@ -200,6 +201,38 @@ impl DownlinkQueue {
         out
     }
 
+    /// [`Self::drain_window_sliced`] with flight-recorder accounting:
+    /// every slice becomes a `DownlinkSlice` span (bytes = delivered by
+    /// this slice, straight off the stats delta so the trace can never
+    /// disagree with the books), and a slice whose failures dropped
+    /// bytes adds a `Drop` event at LOS.  `tracer: None` is exactly the
+    /// untraced drain.
+    pub fn drain_window_sliced_traced(
+        &mut self,
+        link: &mut Link,
+        window: &ContactWindow,
+        closes_pass: bool,
+        tracer: Option<&SatTracer>,
+    ) -> Vec<Delivered> {
+        let Some(tr) = tracer else {
+            return self.drain_window_sliced(link, window, closes_pass);
+        };
+        let delivered_before = self.stats.total_bytes();
+        let dropped_before = self.stats.bytes_dropped;
+        let out = self.drain_window_sliced(link, window, closes_pass);
+        tr.span(
+            SpanKind::DownlinkSlice,
+            window.aos,
+            window.los,
+            TracePayload::Bytes(self.stats.total_bytes() - delivered_before),
+        );
+        let dropped = self.stats.bytes_dropped - dropped_before;
+        if dropped > 0 {
+            tr.event(SpanKind::Drop, window.los, TracePayload::Bytes(dropped));
+        }
+        out
+    }
+
     /// Charge the head of one class a failed window; after
     /// `max_window_failures` the item is dropped with its bytes
     /// accounted in `bytes_dropped`.
@@ -383,6 +416,40 @@ mod tests {
         assert_eq!(q.stats.results_bytes, 160);
         assert_eq!(q.stats.image_bytes, 12_288);
         assert_eq!(q.stats.items_delivered, 2);
+    }
+
+    #[test]
+    fn traced_drain_records_slices_and_drops() {
+        use crate::telemetry::trace::TraceSink;
+        use std::sync::Arc;
+        let sink = Arc::new(TraceSink::new(1, 64));
+        let tr = sink.tracer(0, 5);
+        let mut q = DownlinkQueue::new();
+        q.push(item(ItemKind::Results, 160, 0.0, 1));
+        q.drain_window_sliced_traced(&mut link(8), &win(0.0, 60.0), true, Some(&tr));
+        // an undeliverable item fails three pass-closing slices and drops
+        q.push(item(ItemKind::Image, 100_000_000, 0.0, 2));
+        for k in 0..3 {
+            let w = win(100.0 + k as f64 * 100.0, 101.0 + k as f64 * 100.0);
+            q.drain_window_sliced_traced(&mut link(9 + k), &w, true, Some(&tr));
+        }
+        let log = sink.merge();
+        let slices: Vec<_> =
+            log.records().iter().filter(|r| r.kind == SpanKind::DownlinkSlice).collect();
+        assert_eq!(slices.len(), 4, "one span per slice");
+        assert_eq!(slices[0].payload, TracePayload::Bytes(160));
+        assert_eq!(slices[0].t_start, 0.0);
+        assert_eq!(slices[0].t_end, 60.0);
+        let drops: Vec<_> = log.records().iter().filter(|r| r.kind == SpanKind::Drop).collect();
+        assert_eq!(drops.len(), 1);
+        assert_eq!(drops[0].payload, TracePayload::Bytes(100_000_000));
+        // tracer: None is the plain drain — no records
+        let quiet = Arc::new(TraceSink::new(1, 64));
+        let mut q2 = DownlinkQueue::new();
+        q2.push(item(ItemKind::Results, 160, 0.0, 1));
+        q2.drain_window_sliced_traced(&mut link(8), &win(0.0, 60.0), true, None);
+        assert!(quiet.merge().is_empty());
+        assert_eq!(q2.stats.results_bytes, q.stats.results_bytes);
     }
 
     #[test]

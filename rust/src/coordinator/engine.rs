@@ -87,6 +87,35 @@ pub(crate) struct OnboardDone {
     pub(crate) router: RouterStats,
 }
 
+/// Flight-recorder triplet for one scene's onboard work, shared by the
+/// constellation thread driver and the fleet machine so both emit the
+/// identical record shapes: a `Capture` span over the capture overhead
+/// (batch = scene tiles), a `Filter` event for the cloud-filter outcome
+/// (batch = tiles filtered out), and an `OnboardInfer` span over the
+/// scene's busy seconds (batch = tiles inferred onboard).
+pub(crate) fn trace_onboard(
+    tracer: &crate::telemetry::trace::SatTracer,
+    done: &OnboardDone,
+    t_capture: f64,
+    capture_overhead_s: f64,
+    busy_s: f64,
+) {
+    use crate::telemetry::trace::{SpanKind, TracePayload};
+    tracer.span(
+        SpanKind::Capture,
+        t_capture,
+        t_capture + capture_overhead_s,
+        TracePayload::Batch(done.n_scene_tiles),
+    );
+    tracer.event(SpanKind::Filter, t_capture, TracePayload::Batch(done.n_filtered));
+    tracer.span(
+        SpanKind::OnboardInfer,
+        t_capture,
+        t_capture + busy_s,
+        TracePayload::Batch(done.processed.len()),
+    );
+}
+
 pub(crate) struct OnboardStage<'p, 'rt> {
     pub(crate) p: &'p Pipeline<'rt>,
     pub(crate) frag: usize,

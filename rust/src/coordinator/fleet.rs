@@ -62,18 +62,19 @@ use crate::sedna::federated::{self, FedScheduler};
 use crate::sedna::{GlobalManager, LocalController, TaskKind, TaskPhase, TaskSpec};
 use crate::sim::{
     run_sharded, scene_timing, ContactSlice, DutyCycles, EventKind, MachineStep, SatMachine,
-    Timeline,
+    Timeline, ADMISSION_WAIT_BUCKETS, ADMISSION_WAIT_FIRST_BOUND_S,
 };
-use crate::telemetry::{Counter, Gauge, Histogram, Registry};
+use crate::telemetry::trace::{SatTracer, SpanKind, TracePayload, TraceSink};
+use crate::telemetry::{per_node_gauges_enabled, Counter, Gauge, Histogram, Registry};
 
 use super::constellation::{
     apply_fed_rounds, fleet_fed_report, fold_ready, set_fleet_power_gauges, ConstellationReport,
     PendingScene, SatelliteReport, TAG_STRIDE,
 };
 use super::downlink::{Delivered, DownlinkItem, DownlinkQueue, ItemKind};
-use super::engine::{OnboardStage, SceneJob, Stage};
+use super::engine::{trace_onboard, OnboardStage, SceneJob, Stage};
 use super::pipeline::{Pipeline, ScenarioAccumulator, RESULT_HEADER_BYTES};
-use super::router::{route, LinkSnapshot, RouterStats};
+use super::router::{reroute, LinkSnapshot, LossTracker};
 use super::TileFate;
 
 /// Everything the fleet's machines share: the ground segment, control
@@ -93,6 +94,13 @@ struct FleetShared<'a, 'rt> {
     gm: Mutex<GlobalManager>,
     task: &'a str,
     metrics: &'a Registry,
+    /// Flight recorder — `None` when `trace.enabled` is off, which is
+    /// the one branch every instrumentation site pays.
+    trace: Option<Arc<TraceSink>>,
+    /// Exact per-satellite `.<node>` gauges at or below
+    /// `telemetry.per_node_limit`; past the cutoff the per-sat handles
+    /// are detached sinks and only fixed-size digests are recorded.
+    per_node: bool,
     fed_train_s: f64,
     produced: Arc<Counter>,
     delivered_items: Arc<Counter>,
@@ -135,9 +143,10 @@ struct FleetSat<'a, 'rt> {
     shed_idx: BTreeSet<usize>,
     next_fold: usize,
     next_drive: usize,
-    prev_sent: u64,
-    prev_lost: u64,
-    recent_loss: f64,
+    loss: LossTracker,
+    /// Per-satellite flight-recorder handle (rings live in the shared
+    /// sink, one per shard); `None` when tracing is off.
+    tracer: Option<SatTracer>,
     frag: usize,
     tail: Option<TailState>,
     first: (f64, EventKind),
@@ -170,20 +179,37 @@ impl<'a, 'rt> FleetSat<'a, 'rt> {
         let acc = ScenarioAccumulator::new(&pipeline.cfg, sh.rt.manifest.classes);
         let link = Link::new(LinkConfig::downlink(pipeline.cfg.loss()), pipeline.cfg.seed);
         let power = cfg.power.enabled.then(|| PowerState::new(&cfg.power, &cfg.energy));
+        // past the per-node cutoff the suffixed handles become detached
+        // sinks (unregistered, dropped with the machine): call sites
+        // stay branch-free and gauge cardinality stays fixed — fleet
+        // aggregates come from the barrier digests instead
         let power_metrics = power.as_ref().map(|_| {
             (
-                sh.metrics.gauge(&format!("power.soc_pct.{node}")),
+                if sh.per_node {
+                    sh.metrics.gauge(&format!("power.soc_pct.{node}"))
+                } else {
+                    Arc::new(Gauge::default())
+                },
                 sh.metrics.counter("power.scenes_deferred"),
                 sh.metrics.counter("power.scenes_shed"),
             )
         });
         let fed = cfg.federated.enabled.then(|| FedScheduler::new(&cfg.federated, sh.horizon));
         let fed_metrics = fed.as_ref().map(|_| {
-            (
-                sh.metrics.counter(&format!("federated.rounds.{node}")),
-                sh.metrics.counter(&format!("federated.skipped_power.{node}")),
-            )
+            if sh.per_node {
+                (
+                    sh.metrics.counter(&format!("federated.rounds.{node}")),
+                    sh.metrics.counter(&format!("federated.skipped_power.{node}")),
+                )
+            } else {
+                (Arc::new(Counter::default()), Arc::new(Counter::default()))
+            }
         });
+        // ring index: `tracer` reduces it modulo the sink's shard count,
+        // which run_fleet sized to the scheduler's effective shard
+        // count, so each satellite records into the ring owned by the
+        // shard that steps it (`sat_id % shards`) — single-writer rings.
+        let tracer = sh.trace.as_ref().map(|t| t.tracer(index, index));
         let frag = pipeline.cfg.fragment_px;
         let mut m = FleetSat {
             sh,
@@ -204,9 +230,8 @@ impl<'a, 'rt> FleetSat<'a, 'rt> {
             shed_idx: BTreeSet::new(),
             next_fold: 0,
             next_drive: 0,
-            prev_sent: 0,
-            prev_lost: 0,
-            recent_loss: 0.0,
+            loss: LossTracker::default(),
+            tracer,
             frag,
             tail: None,
             first: (0.0, EventKind::Capture),
@@ -224,8 +249,9 @@ impl<'a, 'rt> FleetSat<'a, 'rt> {
     /// the machine-world `dispatch_ground` + `apply_ground_reply`.  One
     /// `infer` per drain slice, tiles in delivered order: the same batch
     /// composition as the async dispatch, so ground detections are
-    /// bit-identical to the thread driver's.
-    fn ground_round_trip(&mut self, delivered: Vec<Delivered>) -> Result<()> {
+    /// bit-identical to the thread driver's.  `t` is the drain slice's
+    /// virtual end time, where the ground-inference trace event lands.
+    fn ground_round_trip(&mut self, delivered: Vec<Delivered>, t: f64) -> Result<()> {
         self.sh.delivered_items.add(delivered.len() as u64);
         let mut pairs: Vec<(usize, usize)> = Vec::new();
         let mut tiles: Vec<Tile> = Vec::new();
@@ -245,10 +271,13 @@ impl<'a, 'rt> FleetSat<'a, 'rt> {
         if tiles.is_empty() {
             return Ok(());
         }
-        let t = Instant::now();
+        let t0 = Instant::now();
         let (dets, _, wall) = self.sh.ground_pipe.infer(Model::Heavy, &tiles)?;
-        self.sh.ground_svc.observe_secs(t.elapsed().as_secs_f64());
+        self.sh.ground_svc.observe_secs(t0.elapsed().as_secs_f64());
         self.sh.served.add(tiles.len() as u64);
+        if let Some(tr) = &self.tracer {
+            tr.event(SpanKind::GroundInfer, t, TracePayload::Batch(tiles.len()));
+        }
         let wall_each = wall / pairs.len().max(1) as f64;
         for (&(sidx, tidx), d) in pairs.iter().zip(dets) {
             let scene = self.pending.get_mut(&sidx).expect("scene vanished mid-delivery");
@@ -274,6 +303,7 @@ impl<'a, 'rt> FleetSat<'a, 'rt> {
                 &mut self.power,
                 &mut self.acc,
                 &self.fed_metrics,
+                self.tracer.as_ref(),
             );
         }
     }
@@ -286,6 +316,12 @@ impl<'a, 'rt> FleetSat<'a, 'rt> {
         let scene = self.gen.capture();
         self.sh.produced.inc();
         let verdict = self.power.as_ref().map(|p| p.verdict()).unwrap_or(PowerVerdict::Nominal);
+        // governed verdicts are flight-recorder events, stamped with the
+        // SoC the governor read at this capture's virtual time
+        if let (Some(tr), Some(kind)) = (&self.tracer, verdict.trace_kind()) {
+            let soc = self.power.as_ref().expect("governed verdict implies power state").soc_pct();
+            tr.event(kind, self.timeline.now_s(), TracePayload::Soc(soc));
+        }
         if verdict == PowerVerdict::Shed {
             // capture RNG advanced (stream parity with the thread
             // driver), but the shed scene's onboard inference is
@@ -322,46 +358,30 @@ impl<'a, 'rt> FleetSat<'a, 'rt> {
         self.sh.onboard_items.inc();
 
         // link-aware adaptive routing at this scene's virtual capture
-        // time — verbatim from the thread driver
+        // time — the governed re-route shared with the thread driver
         if self.pipeline.policy.adaptive.is_some() || deferring {
-            let mut eff = if self.pipeline.policy.adaptive.is_some() {
-                let d_sent = self.link.stats.packets_sent - self.prev_sent;
-                if d_sent > 0 {
-                    self.recent_loss =
-                        (self.link.stats.packets_lost - self.prev_lost) as f64 / d_sent as f64;
-                } else {
-                    // no traffic since the last decision: decay the
-                    // stale estimate rather than latching it
-                    self.recent_loss *= 0.5;
-                }
-                self.prev_sent = self.link.stats.packets_sent;
-                self.prev_lost = self.link.stats.packets_lost;
-                let snap = LinkSnapshot {
-                    backlog_bytes: self.queue.pending_bytes(),
-                    loss_rate: self.recent_loss,
-                };
-                self.pipeline.policy.effective(&snap)
-            } else {
-                self.pipeline.policy
-            };
-            if deferring {
-                let step = self
-                    .power
+            let snap = self.pipeline.policy.adaptive.is_some().then(|| LinkSnapshot {
+                backlog_bytes: self.queue.pending_bytes(),
+                loss_rate: self
+                    .loss
+                    .update(self.link.stats.packets_sent, self.link.stats.packets_lost),
+            });
+            let step = deferring.then(|| {
+                self.power
                     .as_ref()
                     .expect("defer verdict implies power state")
                     .governor()
-                    .defer_tighten;
-                eff = eff.tightened(step);
-            }
-            let mut restats = RouterStats::default();
-            for p in d.processed.iter_mut() {
-                p.fate = route(&eff, &p.onboard_dets, p.best_objectness, &mut restats);
-            }
-            d.router = restats;
+                    .defer_tighten
+            });
+            let eff = self.pipeline.policy.governed(snap.as_ref(), step);
+            d.router = reroute(&eff, &mut d.processed);
         }
 
         let (busy, period) = scene_timing(self.timeline.timing(), d.processed.len());
         let t_capture = self.timeline.now_s();
+        if let Some(tr) = &self.tracer {
+            trace_onboard(tr, &d, t_capture, self.timeline.timing().capture_overhead_s, busy);
+        }
         let ready = t_capture + busy;
         let mut outstanding = 0usize;
         for (tidx, p) in d.processed.iter().enumerate() {
@@ -410,9 +430,13 @@ impl<'a, 'rt> FleetSat<'a, 'rt> {
             for slice in self.timeline.due_contacts(t) {
                 let at_ms = (slice.window.aos * 1000.0) as u64;
                 self.sh.registry.lock().unwrap().heartbeat(&self.node, at_ms);
-                let got =
-                    self.queue.drain_window_sliced(&mut self.link, &slice.window, slice.closes_pass);
-                self.ground_round_trip(got)?;
+                let got = self.queue.drain_window_sliced_traced(
+                    &mut self.link,
+                    &slice.window,
+                    slice.closes_pass,
+                    self.tracer.as_ref(),
+                );
+                self.ground_round_trip(got, slice.window.los)?;
             }
         }
         let comm_busy = self.link.stats.busy_s - comm_before;
@@ -511,6 +535,7 @@ impl<'a, 'rt> FleetSat<'a, 'rt> {
                     &mut self.power,
                     &mut self.acc,
                     &self.fed_metrics,
+                    self.tracer.as_ref(),
                 );
             }
         }
@@ -531,6 +556,9 @@ impl<'a, 'rt> FleetSat<'a, 'rt> {
                 // stretch is integrated by the next event's idle
                 // advance from `power_cursor`, exactly like the thread
                 // driver's `continue`
+                if let Some(tr) = &self.tracer {
+                    tr.event(SpanKind::Shed, aos, TracePayload::Soc(p.soc_pct()));
+                }
                 self.tail = Some(tail);
                 let (t, kind) = self.next_tail_key();
                 return Ok(MachineStep::Yield(t, kind));
@@ -539,9 +567,14 @@ impl<'a, 'rt> FleetSat<'a, 'rt> {
         let at_ms = (slice.window.aos * 1000.0) as u64;
         self.sh.registry.lock().unwrap().heartbeat(&self.node, at_ms);
         let busy_before = self.link.stats.busy_s;
-        let got = self.queue.drain_window_sliced(&mut self.link, &slice.window, slice.closes_pass);
+        let got = self.queue.drain_window_sliced_traced(
+            &mut self.link,
+            &slice.window,
+            slice.closes_pass,
+            self.tracer.as_ref(),
+        );
         self.tail = Some(tail);
-        self.ground_round_trip(got)?;
+        self.ground_round_trip(got, slice.window.los)?;
         let mut tail = self.tail.take().expect("tail state");
         if let Some(p) = self.power.as_mut() {
             let comm = self.link.stats.busy_s - busy_before;
@@ -582,6 +615,7 @@ impl<'a, 'rt> FleetSat<'a, 'rt> {
             &mut self.power,
             &mut self.acc,
             &self.fed_metrics,
+            self.tracer.as_ref(),
         );
         let (t, kind) = self.next_tail_key();
         Ok(MachineStep::Yield(t, kind))
@@ -638,16 +672,25 @@ impl<'a, 'rt> FleetSat<'a, 'rt> {
             );
         }
         let ps = self.pipeline.tile_pool_stats();
-        let node = &self.node;
-        self.sh.metrics.gauge(&format!("constellation.pool.tile_allocs.{node}")).set(ps.allocs as i64);
-        self.sh
-            .metrics
-            .gauge(&format!("constellation.pool.tile_hit_pct.{node}"))
-            .set((ps.hit_rate() * 100.0).round() as i64);
-        self.sh
-            .metrics
-            .gauge(&format!("constellation.pool.tile_evictions.{node}"))
-            .set(ps.evictions as i64);
+        let hit_pct = (ps.hit_rate() * 100.0).round() as i64;
+        if self.sh.per_node {
+            let node = &self.node;
+            self.sh
+                .metrics
+                .gauge(&format!("constellation.pool.tile_allocs.{node}"))
+                .set(ps.allocs as i64);
+            self.sh.metrics.gauge(&format!("constellation.pool.tile_hit_pct.{node}")).set(hit_pct);
+            self.sh
+                .metrics
+                .gauge(&format!("constellation.pool.tile_evictions.{node}"))
+                .set(ps.evictions as i64);
+        }
+        // fixed-size fleet aggregates, observed from shard workers as
+        // machines finish — every digest update commutes, so the render
+        // is identical whatever order the shards retire satellites in
+        self.sh.metrics.digest("constellation.pool.tile_allocs").observe(ps.allocs as i64);
+        self.sh.metrics.digest("constellation.pool.tile_hit_pct").observe(hit_pct);
+        self.sh.metrics.digest("constellation.pool.tile_evictions").observe(ps.evictions as i64);
         self.lc.finish(self.sh.task, true);
         self.sh.gm.lock().unwrap().report(self.sh.task, &self.node, TaskPhase::Completed)?;
         let power_stats = self.power.map(|p| p.stats);
@@ -733,6 +776,12 @@ pub fn run_fleet(rt: &Runtime, cfg: &Config, version: Version) -> Result<Constel
         })?;
     }
 
+    // flight recorder: one single-writer ring per scheduler shard,
+    // merged into a deterministic stream after the join barrier
+    let shards_effective = cfg.fleet.shards.max(1).min(n_sats);
+    let trace_sink =
+        cfg.trace.enabled.then(|| Arc::new(TraceSink::new(shards_effective, cfg.trace.ring_cap)));
+
     let t0 = Instant::now();
     let shared = FleetShared {
         rt,
@@ -746,6 +795,8 @@ pub fn run_fleet(rt: &Runtime, cfg: &Config, version: Version) -> Result<Constel
         gm,
         task,
         metrics: &metrics,
+        trace: trace_sink.clone(),
+        per_node: per_node_gauges_enabled(n_sats, cfg.telemetry.per_node_limit),
         fed_train_s: federated::train_seconds(cfg.federated.epochs, cfg.federated.samples_per_node),
         produced: metrics.counter("constellation.capture.items"),
         delivered_items: metrics.counter("constellation.downlink.items_delivered"),
@@ -764,6 +815,19 @@ pub fn run_fleet(rt: &Runtime, cfg: &Config, version: Version) -> Result<Constel
 
     metrics.gauge("fleet.events_processed").set(fstats.events as i64);
     metrics.gauge("fleet.peak_live_machines").set(fstats.peak_live as i64);
+    // scheduler self-observability: per-shard load balance, checkpoint
+    // heap depths, and the virtual-time admission-wait distribution
+    metrics.gauge("fleet.max_heap_depth").set(fstats.max_heap_depth as i64);
+    for (shard, events) in fstats.events_per_shard.iter().enumerate() {
+        metrics.gauge(&format!("fleet.shard_events.{shard}")).set(*events as i64);
+    }
+    metrics
+        .histogram_with_range(
+            "fleet.admission_wait_s",
+            ADMISSION_WAIT_FIRST_BOUND_S,
+            ADMISSION_WAIT_BUCKETS,
+        )
+        .merge(&fstats.admission_wait_hist);
     metrics
         .gauge("constellation.runtime.scratch_allocs")
         .set(rt.scratch_stats().allocs as i64);
@@ -782,5 +846,6 @@ pub fn run_fleet(rt: &Runtime, cfg: &Config, version: Version) -> Result<Constel
         task_completed,
         federated: fed_report,
         telemetry: metrics.render(),
+        trace: trace_sink.map(|s| s.merge()),
     })
 }

@@ -109,6 +109,22 @@ impl RouterPolicy {
         }
     }
 
+    /// The policy at a governed decision point: [`Self::effective`]
+    /// under the adaptive snapshot when one was sampled, then
+    /// [`Self::tightened`] by the deferring governor's step when one is
+    /// in force.  Shared by the thread driver and the fleet machine so
+    /// the decision stack cannot drift between them.
+    pub fn governed(&self, snapshot: Option<&LinkSnapshot>, tighten: Option<f32>) -> RouterPolicy {
+        let mut eff = match snapshot {
+            Some(s) => self.effective(s),
+            None => *self,
+        };
+        if let Some(step) = tighten {
+            eff = eff.tightened(step);
+        }
+        eff
+    }
+
     /// This policy with the confidence threshold dropped by `step`
     /// (offload less).  The power governor composes it on top of
     /// [`Self::effective`] while deferring downlink drains: raw tiles
@@ -121,6 +137,50 @@ impl RouterPolicy {
             ..*self
         }
     }
+}
+
+/// Recent-loss estimator feeding the adaptive router's snapshots: loss
+/// rate over the packets sent since the previous decision, not the
+/// link's whole lifetime, decayed while the link is silent so one bad
+/// early pass doesn't latch the tightened state through a multi-hour
+/// contact gap.  Both constellation drivers keep one per satellite.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LossTracker {
+    prev_sent: u64,
+    prev_lost: u64,
+    recent_loss: f64,
+}
+
+impl LossTracker {
+    /// Fold the link's cumulative packet counters at a decision point
+    /// and return the loss rate over the window since the last call.
+    pub fn update(&mut self, packets_sent: u64, packets_lost: u64) -> f64 {
+        let d_sent = packets_sent - self.prev_sent;
+        if d_sent > 0 {
+            self.recent_loss = (packets_lost - self.prev_lost) as f64 / d_sent as f64;
+        } else {
+            // no traffic since the last decision: the old estimate goes
+            // stale, so decay it instead of latching it
+            self.recent_loss *= 0.5;
+        }
+        self.prev_sent = packets_sent;
+        self.prev_lost = packets_lost;
+        self.recent_loss
+    }
+}
+
+/// Re-route a scene's processed tiles under `policy`, replacing the
+/// scene's router stats wholesale — the governed re-route both drivers
+/// apply at a scene's virtual capture time.
+pub fn reroute(
+    policy: &RouterPolicy,
+    processed: &mut [super::pipeline::ProcessedTile],
+) -> RouterStats {
+    let mut stats = RouterStats::default();
+    for p in processed.iter_mut() {
+        p.fate = route(policy, &p.onboard_dets, p.best_objectness, &mut stats);
+    }
+    stats
 }
 
 #[derive(Clone, Copy, Debug, Default)]
@@ -332,6 +392,32 @@ mod tests {
         // a policy with no empty bar keeps the absolute 0.05 floor
         p.empty_objectness = 0.0;
         assert!((p.effective(&stressed).confidence_threshold - 0.05).abs() < 1e-6);
+    }
+
+    #[test]
+    fn loss_tracker_windows_and_decays() {
+        let mut lt = LossTracker::default();
+        assert_eq!(lt.update(100, 10), 0.1);
+        // next window: 100 more packets, none lost — the rate is the
+        // window's, not the lifetime's
+        assert_eq!(lt.update(200, 10), 0.0);
+        lt.update(300, 60); // 50 lost of 100 sent
+        assert_eq!(lt.update(300, 60), 0.25, "silent link decays the estimate");
+        assert_eq!(lt.update(300, 60), 0.125);
+    }
+
+    #[test]
+    fn governed_composes_snapshot_then_step() {
+        let p = adaptive_policy();
+        let idle = LinkSnapshot { backlog_bytes: 0, loss_rate: 0.0 };
+        // snapshot relaxes 0.45 → 0.5, governor tightens to 0.3
+        let g = p.governed(Some(&idle), Some(0.2));
+        assert!((g.confidence_threshold - 0.3).abs() < 1e-6, "{}", g.confidence_threshold);
+        // no snapshot: static base, tightened only
+        let g = policy().governed(None, Some(0.1));
+        assert!((g.confidence_threshold - 0.35).abs() < 1e-6);
+        // neither adaptation nor governor: identity
+        assert_eq!(p.governed(None, None).confidence_threshold, p.confidence_threshold);
     }
 
     #[test]

@@ -162,6 +162,20 @@ pub enum PowerVerdict {
     Shed,
 }
 
+impl PowerVerdict {
+    /// Flight-recorder event kind for a governed (non-nominal) verdict:
+    /// `Nominal` is the steady state and traces nothing, the governed
+    /// verdicts become `Defer`/`Shed` events carrying the SoC that
+    /// triggered them.
+    pub fn trace_kind(self) -> Option<crate::telemetry::trace::SpanKind> {
+        match self {
+            PowerVerdict::Nominal => None,
+            PowerVerdict::Defer => Some(crate::telemetry::trace::SpanKind::Defer),
+            PowerVerdict::Shed => Some(crate::telemetry::trace::SpanKind::Shed),
+        }
+    }
+}
+
 /// SoC-threshold policy.  Thresholds are fractions of capacity;
 /// `soc_critical < soc_defer` partitions SoC into Shed / Defer /
 /// Nominal bands.
@@ -581,6 +595,14 @@ mod tests {
         assert_eq!(g.verdict(0.2), PowerVerdict::Defer);
         assert_eq!(g.verdict(0.19), PowerVerdict::Shed);
         assert_eq!(g.verdict(0.0), PowerVerdict::Shed);
+    }
+
+    #[test]
+    fn only_governed_verdicts_trace() {
+        use crate::telemetry::trace::SpanKind;
+        assert_eq!(PowerVerdict::Nominal.trace_kind(), None);
+        assert_eq!(PowerVerdict::Defer.trace_kind(), Some(SpanKind::Defer));
+        assert_eq!(PowerVerdict::Shed.trace_kind(), Some(SpanKind::Shed));
     }
 
     #[test]

@@ -293,6 +293,20 @@ pub struct RoundDecision {
     pub participated: bool,
 }
 
+impl RoundDecision {
+    /// Flight-recorder verdict for this round: the payload of the
+    /// `TrainingRound` span the drivers emit (due time → due + the
+    /// training burst for participated rounds, instantaneous for
+    /// power-skipped ones).
+    pub fn trace_verdict(&self) -> crate::telemetry::trace::RoundVerdict {
+        if self.participated {
+            crate::telemetry::trace::RoundVerdict::Participated
+        } else {
+            crate::telemetry::trace::RoundVerdict::SkippedPower
+        }
+    }
+}
+
 /// Mission-time round clock for one satellite.  Rounds are due at
 /// `round_interval_s * (r + 1)`; the caller polls with its current
 /// mission time and (when the power subsystem is on) battery SoC, and
@@ -487,6 +501,15 @@ mod tests {
         assert!(d.iter().all(|x| x.participated));
         assert!(s.finish(None).is_empty());
         assert_eq!(s.stats.rounds_skipped_power, 0);
+    }
+
+    #[test]
+    fn round_decisions_map_to_trace_verdicts() {
+        use crate::telemetry::trace::RoundVerdict;
+        let went = RoundDecision { round: 0, due_s: 100.0, participated: true };
+        let skipped = RoundDecision { round: 1, due_s: 200.0, participated: false };
+        assert_eq!(went.trace_verdict(), RoundVerdict::Participated);
+        assert_eq!(skipped.trace_verdict(), RoundVerdict::SkippedPower);
     }
 
     #[test]

@@ -62,6 +62,8 @@ use anyhow::Result;
 
 use crate::config::TimingConfig;
 use crate::orbit::ContactWindow;
+use crate::telemetry::trace::{SatTracer, SpanKind, TracePayload};
+use crate::telemetry::Histogram;
 use crate::util::pool;
 
 use super::timeline::{scene_timing, Span, Timeline};
@@ -144,8 +146,38 @@ pub trait SatMachine: Sized {
     fn finish(self) -> Result<Self::Report>;
 }
 
-/// Fleet-run accounting: the bench's throughput and memory-proxy axes.
-#[derive(Clone, Copy, Debug, Default)]
+/// Virtual-time interval between heap-depth / live-machine samples
+/// inside a shard loop.  Sampling on checkpoint crossings (rather than
+/// every pop) keeps the scheduler's self-observation cost independent
+/// of event density.
+pub const CHECKPOINT_S: f64 = 600.0;
+
+/// Bucket layout of the admission-wait histogram: first bound 1 ms,
+/// doubling across 40 buckets (top bound ≈ 1.7e7 years of virtual
+/// time).  Exported so fleet-level registries can allocate a
+/// mergeable histogram with the identical layout.
+pub const ADMISSION_WAIT_FIRST_BOUND_S: f64 = 1e-3;
+/// See [`ADMISSION_WAIT_FIRST_BOUND_S`].
+pub const ADMISSION_WAIT_BUCKETS: usize = 40;
+
+/// Fixed-size summary of the admission-wait distribution, computed
+/// from the merged per-shard histograms at the join barrier.  One
+/// observation per admitted machine: how far virtual time had already
+/// advanced past the machine's first event when the in-flight cap let
+/// it in (0 for the initial fill).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct WaitSummary {
+    pub count: u64,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p99_s: f64,
+    pub max_s: f64,
+}
+
+/// Fleet-run accounting: the bench's throughput and memory-proxy axes,
+/// plus the scheduler's self-observation (per-shard event counts,
+/// checkpoint-sampled heap depth, admission-wait distribution).
+#[derive(Debug)]
 pub struct FleetRunStats {
     /// Total mission events processed across all shards.
     pub events: u64,
@@ -154,6 +186,47 @@ pub struct FleetRunStats {
     /// one in-flight event plus its scene buffers), the RSS proxy
     /// `max_events_in_flight` exists to bound.
     pub peak_live: usize,
+    /// Events processed by each shard, indexed by shard id — the
+    /// load-balance axis (`sat_id % shards` striping should keep these
+    /// within a few percent of each other).
+    pub events_per_shard: Vec<u64>,
+    /// Deepest per-shard event heap observed at any [`CHECKPOINT_S`]
+    /// crossing (including the just-popped event).  With one in-flight
+    /// event per machine this is bounded by the admitted-live count.
+    pub max_heap_depth: usize,
+    /// Merged per-shard admission-wait histogram (layout
+    /// [`ADMISSION_WAIT_FIRST_BOUND_S`] × [`ADMISSION_WAIT_BUCKETS`]).
+    pub admission_wait_hist: Histogram,
+}
+
+impl Default for FleetRunStats {
+    fn default() -> FleetRunStats {
+        FleetRunStats {
+            events: 0,
+            peak_live: 0,
+            events_per_shard: Vec::new(),
+            max_heap_depth: 0,
+            admission_wait_hist: Histogram::with_range(
+                ADMISSION_WAIT_FIRST_BOUND_S,
+                ADMISSION_WAIT_BUCKETS,
+            ),
+        }
+    }
+}
+
+impl FleetRunStats {
+    /// Summarize the admission-wait histogram (quantiles are log₂
+    /// bucket upper bounds clamped to the observed max).
+    pub fn admission_wait(&self) -> WaitSummary {
+        let h = &self.admission_wait_hist;
+        WaitSummary {
+            count: h.count(),
+            mean_s: h.mean_secs(),
+            p50_s: h.quantile_secs(0.5),
+            p99_s: h.quantile_secs(0.99),
+            max_s: h.max_secs(),
+        }
+    }
 }
 
 /// Step `n_sats` machines to completion on `shards` scoped workers.
@@ -181,13 +254,25 @@ where
     let mut tagged: Vec<(usize, M::Report)> = Vec::with_capacity(n_sats);
     let mut stats = FleetRunStats::default();
     for r in shard_results {
-        let (reports, events, peak) = r?;
-        tagged.extend(reports);
-        stats.events += events;
-        stats.peak_live += peak;
+        let shard = r?;
+        tagged.extend(shard.reports);
+        stats.events += shard.events;
+        stats.events_per_shard.push(shard.events);
+        stats.peak_live += shard.peak_live;
+        stats.max_heap_depth = stats.max_heap_depth.max(shard.max_heap_depth);
+        stats.admission_wait_hist.merge(&shard.wait_hist);
     }
     tagged.sort_by_key(|(id, _)| *id);
     Ok((tagged.into_iter().map(|(_, r)| r).collect(), stats))
+}
+
+/// What one shard loop hands back at the join barrier.
+struct ShardRun<R> {
+    reports: Vec<(usize, R)>,
+    events: u64,
+    peak_live: usize,
+    max_heap_depth: usize,
+    wait_hist: Histogram,
 }
 
 /// One shard's event loop: admit machines in `sat_id` order up to the
@@ -198,7 +283,7 @@ fn run_shard<M, F>(
     shard: usize,
     max_in_flight: usize,
     make: &F,
-) -> Result<(Vec<(usize, M::Report)>, u64, usize)>
+) -> Result<ShardRun<M::Report>>
 where
     M: SatMachine,
     F: Fn(usize) -> Result<M> + Sync,
@@ -211,17 +296,34 @@ where
     let mut reports: Vec<(usize, M::Report)> = Vec::new();
     let mut events = 0u64;
     let mut peak = 0usize;
+    let mut max_heap_depth = 0usize;
+    // Admission wait = how far virtual time already ran past a
+    // machine's first event when the cap finally admitted it; the
+    // initial fill happens before any event pops, so it observes 0.
+    let mut retired_at = 0.0f64;
+    let wait_hist = Histogram::with_range(ADMISSION_WAIT_FIRST_BOUND_S, ADMISSION_WAIT_BUCKETS);
+    // First pop crosses checkpoint 0 so even sub-checkpoint missions
+    // record one heap/live sample.
+    let mut next_checkpoint = 0.0f64;
     loop {
         while live.len() < cap {
             let Some(sat_id) = backlog.next() else { break };
             let mut m = make(sat_id)?;
             let (time_s, kind) = m.start();
+            wait_hist.observe_secs((retired_at - time_s).max(0.0));
             heap.push(Reverse(EventKey { time_s, sat_id, kind }));
             live.insert(sat_id, m);
             peak = peak.max(live.len());
         }
         let Some(Reverse(key)) = heap.pop() else { break };
         events += 1;
+        if key.time_s >= next_checkpoint {
+            // +1 counts the event in hand, popped but still in flight
+            max_heap_depth = max_heap_depth.max(heap.len() + 1);
+            while next_checkpoint <= key.time_s {
+                next_checkpoint += CHECKPOINT_S;
+            }
+        }
         let machine = live.get_mut(&key.sat_id).expect("live machine for queued event");
         match machine.on_event(key.time_s, key.kind)? {
             MachineStep::Yield(time_s, kind) => {
@@ -230,10 +332,11 @@ where
             MachineStep::Done => {
                 let machine = live.remove(&key.sat_id).expect("machine just stepped");
                 reports.push((key.sat_id, machine.finish()?));
+                retired_at = retired_at.max(key.time_s);
             }
         }
     }
-    Ok((reports, events, peak))
+    Ok(ShardRun { reports, events, peak_live: peak, max_heap_depth, wait_hist })
 }
 
 /// Artifact-free stub satellite: a [`SatMachine`] over a real
@@ -252,6 +355,9 @@ pub struct StubSat {
     drain_bps: f64,
     report: StubReport,
     tail: std::collections::VecDeque<(f64, f64)>,
+    /// Flight-recorder handle; `None` (the [`StubSat::new`] default)
+    /// emits nothing and leaves every result untouched.
+    trace: Option<SatTracer>,
 }
 
 /// What a stub mission leaves behind — enough structure to bit-compare
@@ -304,7 +410,16 @@ impl StubSat {
             drain_bps: 5_000_000.0,
             report: StubReport { sat_id, ..StubReport::default() },
             tail: std::collections::VecDeque::new(),
+            trace: None,
         }
+    }
+
+    /// Attach a flight-recorder handle: captures become `Capture`
+    /// events (batch = tiles) and every drain becomes a `DownlinkSlice`
+    /// span (bytes = delivered).  Tracing never touches the report.
+    pub fn with_trace(mut self, tracer: SatTracer) -> StubSat {
+        self.trace = Some(tracer);
+        self
     }
 
     fn next_u64(&mut self) -> u64 {
@@ -321,12 +436,15 @@ impl StubSat {
         self.report.checksum = self.report.checksum.rotate_left(7) ^ v;
     }
 
-    fn drain(&mut self, duration_s: f64) {
-        let can = (self.drain_bps * duration_s / 8.0) as u64;
+    fn drain(&mut self, t0: f64, t1: f64) {
+        let can = (self.drain_bps * (t1 - t0) / 8.0) as u64;
         let sent = can.min(self.backlog_bytes);
         self.backlog_bytes -= sent;
         self.report.delivered_bytes += sent;
         self.mix(sent);
+        if let Some(tr) = &self.trace {
+            tr.span(SpanKind::DownlinkSlice, t0, t1, TracePayload::Bytes(sent));
+        }
     }
 
     fn enter_tail(&mut self) -> MachineStep {
@@ -354,7 +472,7 @@ impl SatMachine for StubSat {
         }
     }
 
-    fn on_event(&mut self, _time_s: f64, kind: EventKind) -> Result<MachineStep> {
+    fn on_event(&mut self, time_s: f64, kind: EventKind) -> Result<MachineStep> {
         match kind {
             EventKind::Capture => {
                 let tiles = 8 + (self.next_u64() % 57) as usize; // 8..=64
@@ -365,9 +483,12 @@ impl SatMachine for StubSat {
                 self.report.tiles += tiles as u64;
                 self.report.queued_bytes += bytes;
                 self.mix(tiles as u64);
+                if let Some(tr) = &self.trace {
+                    tr.event(SpanKind::Capture, time_s, TracePayload::Batch(tiles));
+                }
                 let t = self.timeline.advance(period);
                 for slice in self.timeline.due_contacts(t) {
-                    self.drain(slice.window.duration_s());
+                    self.drain(slice.window.aos, slice.window.los);
                 }
                 self.scenes_left -= 1;
                 if self.scenes_left > 0 {
@@ -378,7 +499,7 @@ impl SatMachine for StubSat {
             }
             EventKind::ContactSlice => {
                 let (aos, los) = self.tail.pop_front().expect("slice event without a slice");
-                self.drain(los - aos);
+                self.drain(aos, los);
                 match self.tail.front() {
                     Some(&(next_aos, _)) => {
                         Ok(MachineStep::Yield(next_aos, EventKind::ContactSlice))
@@ -490,6 +611,52 @@ mod tests {
         assert!(cstats.peak_live <= 2 * 3, "peak {} over cap", cstats.peak_live);
         assert!(ustats.peak_live >= cstats.peak_live);
         assert_eq!(ustats.events, cstats.events, "same missions, same event count");
+    }
+
+    #[test]
+    fn scheduler_self_stats_account_for_the_run() {
+        let (_, stats) = stub_fleet(17, 4, 0);
+        assert_eq!(stats.events_per_shard.len(), 4);
+        assert_eq!(stats.events_per_shard.iter().sum::<u64>(), stats.events);
+        assert!(stats.max_heap_depth >= 1);
+        assert!(stats.max_heap_depth <= 17);
+        // uncapped: every machine admits during the initial fill, so
+        // all waits observe as exactly zero
+        let w = stats.admission_wait();
+        assert_eq!(w.count, 17, "one observation per admitted machine");
+        assert_eq!(w.max_s, 0.0);
+    }
+
+    #[test]
+    fn capped_admission_records_virtual_time_waits() {
+        // cap 1: each shard retires a whole mission (at the 21.6 ks
+        // horizon) before admitting its next satellite, so late
+        // admissions wait essentially the whole mission
+        let (_, stats) = stub_fleet(8, 2, 1);
+        let w = stats.admission_wait();
+        assert_eq!(w.count, 8);
+        assert!(w.max_s > 20_000.0, "max wait {}", w.max_s);
+        assert!(w.p99_s >= w.p50_s);
+        assert!(stats.max_heap_depth <= 1, "cap 1 means one in-flight event");
+    }
+
+    #[test]
+    fn stub_trace_is_optional_and_result_neutral() {
+        use crate::telemetry::trace::TraceSink;
+        use std::sync::Arc;
+        let (plain, _) = stub_fleet(6, 2, 0);
+        let sink = Arc::new(TraceSink::new(2, 4096));
+        let (traced, _) = run_sharded(6, 2, 0, |id| {
+            Ok(StubSat::new(id, 42, 6, 21_600.0).with_trace(sink.tracer(id % 2, id)))
+        })
+        .unwrap();
+        assert_eq!(plain, traced, "tracing must not perturb any report");
+        let log = sink.merge();
+        assert_eq!(log.evicted(), 0);
+        let counts = log.kind_counts();
+        let captures = counts.iter().find(|(k, _)| *k == SpanKind::Capture).unwrap().1;
+        assert_eq!(captures, 6 * 6, "one capture event per scene");
+        assert!(counts.iter().any(|(k, n)| *k == SpanKind::DownlinkSlice && *n > 0));
     }
 
     #[test]

@@ -29,6 +29,7 @@ mod timeline;
 pub use clock::MissionClock;
 pub use fleet::{
     run_sharded, EventKey, EventKind, FleetRunStats, MachineStep, SatMachine, StubReport, StubSat,
+    WaitSummary, ADMISSION_WAIT_BUCKETS, ADMISSION_WAIT_FIRST_BOUND_S,
 };
 pub use timeline::{
     scan_spans, scene_timing, ContactSlice, DutyCycles, Span, Timeline, GROUND_S_PER_TILE,

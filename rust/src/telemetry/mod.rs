@@ -1,11 +1,21 @@
-//! Telemetry: counters, gauges, histograms + fixed-format report text.
+//! Telemetry: counters, gauges, histograms, fleet digests + fixed-format
+//! report text.
 //!
 //! The paper's satellites "monitor and manage the operational status and
 //! applications" (§3.1); every pipeline stage and substrate reports here.
 //! Thread-safe via atomics/mutex so worker threads can record freely.
+//! Two cardinality regimes coexist: at small fleet sizes every satellite
+//! keeps its exact `.<node>`-suffixed gauges ([`per_node_gauges_enabled`],
+//! `telemetry.per_node_limit`); past the cutoff, per-satellite values
+//! stream into fixed-size [`Digest`] aggregates instead, so a 100k-sat
+//! run renders a bounded metric set.  [`trace`] is the mission flight
+//! recorder (virtual-time spans/events) built on the same registry-free
+//! discipline.
+
+pub mod trace;
 
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
 use std::sync::Mutex;
 
 /// Monotone counter.
@@ -66,9 +76,28 @@ impl Default for Histogram {
 }
 
 impl Histogram {
+    /// Default range: 1 µs .. ~17.9 min in 31 log2 buckets — right for
+    /// wallclock service latencies, far too short for virtual-time
+    /// observations (a contact pass runs minutes, a mission tail hours).
+    /// Use [`Histogram::with_range`] for those.
     pub fn new() -> Histogram {
-        // 1µs .. ~17min in 31 log2 buckets
-        let bounds: Vec<f64> = (0..31).map(|i| 1.0_f64 * 2f64.powi(i)).collect();
+        Self::with_range(1e-6, 31)
+    }
+
+    /// Log2 buckets starting at `first_bound_s` seconds: bucket `i`'s
+    /// upper bound is `first_bound_s * 2^i`, for `n_buckets` bounds plus
+    /// one overflow bucket.  `with_range(1e-6, 31)` is `new()` exactly.
+    /// Virtual-time histograms use e.g. `with_range(1e-3, 40)` (1 ms ..
+    /// ~17 years), so multi-hour spans resolve instead of saturating the
+    /// overflow bucket.
+    pub fn with_range(first_bound_s: f64, n_buckets: usize) -> Histogram {
+        assert!(
+            first_bound_s > 0.0 && first_bound_s.is_finite(),
+            "histogram first bound must be positive"
+        );
+        assert!(n_buckets >= 1, "histogram needs at least one bucket");
+        let first_us = first_bound_s * 1e6;
+        let bounds: Vec<f64> = (0..n_buckets as i32).map(|i| first_us * 2f64.powi(i)).collect();
         Histogram {
             buckets: (0..bounds.len() + 1).map(|_| AtomicU64::new(0)).collect(),
             bounds,
@@ -76,6 +105,23 @@ impl Histogram {
             sum_micros: AtomicU64::new(0),
             max_micros: AtomicU64::new(0),
         }
+    }
+
+    /// Fold another histogram's observations into this one (the fleet
+    /// barrier merging per-shard admission-wait histograms).  Bucket
+    /// layouts must match; counts add, so merging in any order renders
+    /// identically.
+    pub fn merge(&self, other: &Histogram) {
+        assert_eq!(
+            self.bounds, other.bounds,
+            "histogram merge requires identical bucket bounds"
+        );
+        for (a, b) in self.buckets.iter().zip(&other.buckets) {
+            a.fetch_add(b.load(Ordering::Relaxed), Ordering::Relaxed);
+        }
+        self.count.fetch_add(other.count.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.sum_micros.fetch_add(other.sum_micros.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.max_micros.fetch_max(other.max_micros.load(Ordering::Relaxed), Ordering::Relaxed);
     }
 
     pub fn observe_secs(&self, secs: f64) {
@@ -104,7 +150,13 @@ impl Histogram {
         self.max_micros.load(Ordering::Relaxed) as f64 / 1e6
     }
 
-    /// Approximate quantile from bucket boundaries (upper bound).
+    /// Approximate quantile from bucket boundaries (upper bound).  A
+    /// bucket's upper bound can overshoot the largest value actually
+    /// observed (a single 3 ms sample lands in the 4.096 ms bucket), so
+    /// every per-bucket answer — including the overflow bucket's — is
+    /// clamped to [`Histogram::max_secs`]: a quantile never exceeds the
+    /// true maximum, and p50 of a single observation *is* that
+    /// observation (to µs resolution).
     pub fn quantile_secs(&self, q: f64) -> f64 {
         let total = self.count();
         if total == 0 {
@@ -115,12 +167,123 @@ impl Histogram {
         for (i, b) in self.buckets.iter().enumerate() {
             acc += b.load(Ordering::Relaxed);
             if acc >= target {
-                let upper = self.bounds.get(i).copied().unwrap_or(f64::INFINITY);
-                return upper.min(self.max_secs() * 1e6) / 1e6;
+                let upper_s = self.bounds.get(i).map(|b| b / 1e6).unwrap_or(f64::INFINITY);
+                return upper_s.min(self.max_secs());
             }
         }
         self.max_secs()
     }
+}
+
+/// Fleet-scale streaming aggregate: one `Digest` summarizes an
+/// i64-valued metric *across satellites* (one observation per node) in
+/// fixed space, replacing unbounded `.<node>`-suffixed gauge families
+/// past the `telemetry.per_node_limit` cutoff.  min/mean/max are exact;
+/// p50/p99 come from log2 buckets clamped to the observed range.  All
+/// state is atomic and every update commutes (adds, min, max), so
+/// concurrent observation from shard workers renders identically
+/// regardless of arrival order — digests are barrier-merge deterministic
+/// by construction.
+pub struct Digest {
+    /// Bucket 0: values ≤ 0; bucket i ≥ 1: `2^(i-1) <= v < 2^i`, with
+    /// values ≥ 2^31 clamped into the last bucket.
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum: AtomicI64,
+    min: AtomicI64,
+    max: AtomicI64,
+}
+
+const DIGEST_BUCKETS: usize = 33;
+
+impl Default for Digest {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Digest {
+    pub fn new() -> Digest {
+        Digest {
+            buckets: (0..DIGEST_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum: AtomicI64::new(0),
+            min: AtomicI64::new(i64::MAX),
+            max: AtomicI64::new(i64::MIN),
+        }
+    }
+
+    pub fn observe(&self, v: i64) {
+        let idx = if v <= 0 {
+            0
+        } else {
+            (64 - (v as u64).leading_zeros() as usize).min(DIGEST_BUCKETS - 1)
+        };
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.min.fetch_min(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn min(&self) -> i64 {
+        if self.count() == 0 {
+            0
+        } else {
+            self.min.load(Ordering::Relaxed)
+        }
+    }
+
+    pub fn max(&self) -> i64 {
+        if self.count() == 0 {
+            0
+        } else {
+            self.max.load(Ordering::Relaxed)
+        }
+    }
+
+    pub fn mean(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            0.0
+        } else {
+            self.sum.load(Ordering::Relaxed) as f64 / c as f64
+        }
+    }
+
+    /// Approximate quantile: the target bucket's upper bound, clamped to
+    /// the exact observed `[min, max]` — so a single-observation digest
+    /// reports that observation at every quantile.
+    pub fn quantile(&self, q: f64) -> i64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let target = (q.clamp(0.0, 1.0) * total as f64).ceil() as u64;
+        let mut acc = 0u64;
+        for (idx, b) in self.buckets.iter().enumerate() {
+            acc += b.load(Ordering::Relaxed);
+            if acc >= target {
+                let upper = if idx == 0 { 0 } else { (1i64 << idx) - 1 };
+                return upper.clamp(self.min(), self.max());
+            }
+        }
+        self.max()
+    }
+}
+
+/// Whether per-satellite `.<node>`-suffixed gauges should be registered
+/// at this fleet size.  At or below the limit (inclusive — exactly
+/// `per_node_limit` satellites still get exact gauges) the pre-digest
+/// output is preserved bit-for-bit; above it only [`Digest`] aggregates
+/// are recorded, so telemetry cardinality stays fixed as fleets scale to
+/// 100k satellites.
+pub fn per_node_gauges_enabled(n_sats: usize, per_node_limit: usize) -> bool {
+    n_sats <= per_node_limit
 }
 
 /// Named metric registry.
@@ -128,6 +291,7 @@ impl Histogram {
 pub struct Registry {
     counters: Mutex<BTreeMap<String, std::sync::Arc<Counter>>>,
     gauges: Mutex<BTreeMap<String, std::sync::Arc<Gauge>>>,
+    digests: Mutex<BTreeMap<String, std::sync::Arc<Digest>>>,
     histograms: Mutex<BTreeMap<String, std::sync::Arc<Histogram>>>,
 }
 
@@ -163,6 +327,33 @@ impl Registry {
             .clone()
     }
 
+    /// Like [`Registry::histogram`] but a first registration uses the
+    /// given [`Histogram::with_range`] layout — for virtual-time metrics
+    /// whose spans run hours.  A name already registered keeps its
+    /// existing layout (callers must agree, like they must on units).
+    pub fn histogram_with_range(
+        &self,
+        name: &str,
+        first_bound_s: f64,
+        n_buckets: usize,
+    ) -> std::sync::Arc<Histogram> {
+        self.histograms
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_insert_with(|| std::sync::Arc::new(Histogram::with_range(first_bound_s, n_buckets)))
+            .clone()
+    }
+
+    pub fn digest(&self, name: &str) -> std::sync::Arc<Digest> {
+        self.digests
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
     /// Render all metrics as stable, sorted text (for logs + tests).
     pub fn render(&self) -> String {
         let mut out = String::new();
@@ -171,6 +362,17 @@ impl Registry {
         }
         for (name, g) in self.gauges.lock().unwrap().iter() {
             out.push_str(&format!("gauge {name} {}\n", g.get()));
+        }
+        for (name, d) in self.digests.lock().unwrap().iter() {
+            out.push_str(&format!(
+                "digest {name} n={} min={} mean={:.3} max={} p50={} p99={}\n",
+                d.count(),
+                d.min(),
+                d.mean(),
+                d.max(),
+                d.quantile(0.5),
+                d.quantile(0.99)
+            ));
         }
         for (name, h) in self.histograms.lock().unwrap().iter() {
             out.push_str(&format!(
@@ -273,5 +475,175 @@ mod tests {
             h.join().unwrap();
         }
         assert_eq!(r.counter("hits").get(), 8000);
+    }
+
+    #[test]
+    fn single_sample_quantile_is_exact() {
+        // Regression: a single 0.25 s observation lands in the
+        // 0.262144 s (2^18 µs) bucket; the per-bucket clamp to max_secs
+        // must return the observation itself at every quantile, never
+        // the bucket's upper edge.  (0.25 s is exactly representable
+        // down through the µs conversion, so equality is exact.)
+        let h = Histogram::new();
+        h.observe_secs(0.25);
+        assert_eq!(h.quantile_secs(0.5), 0.25);
+        assert_eq!(h.quantile_secs(0.99), 0.25);
+        assert_eq!(h.quantile_secs(1.0), 0.25);
+        assert_eq!(h.quantile_secs(0.5), h.max_secs());
+    }
+
+    #[test]
+    fn quantile_never_exceeds_max() {
+        let h = Histogram::new();
+        for v in [0.0017, 0.9, 3.3, 700.0] {
+            h.observe_secs(v);
+        }
+        for q in [0.1, 0.5, 0.9, 0.99, 1.0] {
+            assert!(h.quantile_secs(q) <= h.max_secs() + 1e-12);
+        }
+    }
+
+    #[test]
+    fn with_range_resolves_two_hour_spans() {
+        // Regression for the virtual-time range bug: new()'s 31 log2
+        // buckets from 1 µs top out at ~17.9 min, so a 1 h and a 2 h
+        // observation both saturate the overflow bucket and p50 == max.
+        let short = Histogram::new();
+        short.observe_secs(3600.0);
+        short.observe_secs(7200.0);
+        assert_eq!(short.quantile_secs(0.5), short.max_secs(), "overflow bucket saturates");
+        // with_range(1 ms, 40 buckets) reaches ~17 years: the 1 h sample
+        // resolves into its own bucket and p50 stops riding the max.
+        let long = Histogram::with_range(1e-3, 40);
+        long.observe_secs(3600.0);
+        long.observe_secs(7200.0);
+        let p50 = long.quantile_secs(0.5);
+        assert!(p50 >= 3600.0, "p50 at least the smaller sample, got {p50}");
+        assert!(p50 < 7200.0, "p50 must resolve below the 2 h max, got {p50}");
+        assert_eq!(long.quantile_secs(1.0), 7200.0);
+        // default-range equivalence: with_range(1e-6, 31) is new()
+        let a = Histogram::new();
+        let b = Histogram::with_range(1e-6, 31);
+        a.observe_secs(0.25);
+        b.observe_secs(0.25);
+        assert_eq!(a.quantile_secs(0.5), b.quantile_secs(0.5));
+    }
+
+    #[test]
+    fn concurrent_histogram_observes_reconcile() {
+        // Fleet-load shape: 8 shard workers observing one histogram must
+        // reconcile count and sum exactly (atomics, no lost updates).
+        let r = std::sync::Arc::new(Registry::new());
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let r = r.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..1000u64 {
+                    r.histogram("wait").observe_secs(i as f64 * 1e-4);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let h = r.histogram("wait");
+        assert_eq!(h.count(), 8000, "no observation lost across 8 threads");
+        // every thread observes the same ramp (mean 49.95 ms); the µs
+        // quantization in observe_secs allows ≤1 µs per sample
+        let expect_mean = 49_950_000.0 / 1000.0 / 1e6;
+        assert!((h.mean_secs() - expect_mean).abs() < 1e-5);
+        assert!((h.max_secs() - 0.0999).abs() < 1e-6);
+    }
+
+    #[test]
+    fn histogram_merge_reconciles_shards() {
+        let a = Histogram::with_range(1e-3, 40);
+        let b = Histogram::with_range(1e-3, 40);
+        a.observe_secs(10.0);
+        a.observe_secs(20.0);
+        b.observe_secs(4000.0);
+        a.merge(&b);
+        assert_eq!(a.count(), 3);
+        assert!((a.mean_secs() - 4030.0 / 3.0).abs() < 1e-6);
+        assert_eq!(a.max_secs(), 4000.0);
+        assert!(a.quantile_secs(0.99) <= a.max_secs());
+    }
+
+    #[test]
+    fn digest_single_observation_is_exact_everywhere() {
+        let d = Digest::new();
+        d.observe(37);
+        assert_eq!(d.count(), 1);
+        assert_eq!(d.min(), 37);
+        assert_eq!(d.max(), 37);
+        assert_eq!(d.mean(), 37.0);
+        assert_eq!(d.quantile(0.5), 37, "range clamp makes one sample exact");
+        assert_eq!(d.quantile(0.99), 37);
+    }
+
+    #[test]
+    fn digest_summarizes_spread_and_clamps_quantiles() {
+        let d = Digest::new();
+        for v in [0, 3, 5, 9, 100] {
+            d.observe(v);
+        }
+        assert_eq!(d.count(), 5);
+        assert_eq!(d.min(), 0);
+        assert_eq!(d.max(), 100);
+        assert!((d.mean() - 23.4).abs() < 1e-12);
+        let p50 = d.quantile(0.5);
+        assert!((3..=9).contains(&p50), "p50 within the middle buckets, got {p50}");
+        assert_eq!(d.quantile(1.0), 100);
+        // negatives land in bucket 0 and min stays exact
+        let n = Digest::new();
+        n.observe(-5);
+        n.observe(-2);
+        assert_eq!(n.min(), -5);
+        assert_eq!(n.quantile(0.5), -2, "bucket-0 upper bound clamps to max");
+    }
+
+    #[test]
+    fn digest_render_is_order_invariant() {
+        // Commuting updates: observing the same multiset in different
+        // orders (the shard-arrival nondeterminism) renders identically.
+        let values = [12i64, 900, 3, 47, 47, 0, 255];
+        let ra = Registry::new();
+        let rb = Registry::new();
+        for v in values {
+            ra.digest("power.soc_pct").observe(v);
+        }
+        for v in values.iter().rev() {
+            rb.digest("power.soc_pct").observe(*v);
+        }
+        assert_eq!(ra.render(), rb.render());
+    }
+
+    #[test]
+    fn render_interleaves_digests_stably() {
+        let r = Registry::new();
+        r.counter("a.count").inc();
+        r.gauge("b.depth").set(2);
+        r.digest("c.soc").observe(81);
+        r.digest("c.soc").observe(40);
+        r.histogram("d.lat").observe_secs(0.5);
+        let text = r.render();
+        // one line type block each, digests between gauges and histograms
+        let c_pos = text.find("counter a.count").unwrap();
+        let g_pos = text.find("gauge b.depth").unwrap();
+        let d_pos = text.find("digest c.soc").unwrap();
+        let h_pos = text.find("histogram d.lat").unwrap();
+        assert!(c_pos < g_pos && g_pos < d_pos && d_pos < h_pos);
+        assert!(text.contains("digest c.soc n=2 min=40 mean=60.500 max=81 p50=40 p99=81"));
+        // rendering twice is stable
+        assert_eq!(text, r.render());
+    }
+
+    #[test]
+    fn per_node_cutoff_is_inclusive_at_limit() {
+        assert!(per_node_gauges_enabled(64, 64), "exactly at the limit keeps exact gauges");
+        assert!(!per_node_gauges_enabled(65, 64), "one past the limit switches to digests");
+        assert!(per_node_gauges_enabled(1, 64));
+        assert!(!per_node_gauges_enabled(10_000, 64));
+        assert!(per_node_gauges_enabled(0, 0));
     }
 }

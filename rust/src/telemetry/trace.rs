@@ -1,0 +1,456 @@
+//! Mission flight recorder: deterministic virtual-time spans and events.
+//!
+//! The paper's platform layer must "monitor and manage the operational
+//! status and applications" in orbit (§3.1).  End-of-run report structs
+//! answer *what* happened; this module records *why*: every governed
+//! shed, skipped round, drained slice, and dropped byte becomes a typed
+//! [`TraceRecord`] keyed by **mission time** — no wallclock anywhere —
+//! so a trace is a deterministic function of config + seed.
+//!
+//! Recording discipline (the same pinned-ordering argument as
+//! [`crate::sim::fleet`]):
+//!
+//! * Each shard worker appends to its own bounded ring buffer behind an
+//!   uncontended per-shard mutex ([`TraceSink`]).  A satellite's records
+//!   all land in its owning shard, in the satellite's own mission order
+//!   (shard workers step each machine's events in virtual-time order).
+//! * At the post-join barrier, [`TraceSink::merge`] concatenates the
+//!   rings and **stably** sorts by `(t_start, sat_id, kind)`.  The key
+//!   orders records of *different* satellites totally; records of the
+//!   *same* satellite that tie on the key keep their per-satellite
+//!   emission order under the stable sort — which is the satellite's
+//!   mission order regardless of which shard held them.  The merged
+//!   stream is therefore **bit-identical across shard counts and
+//!   admission caps** (pinned by `tests/trace_determinism.rs`), as long
+//!   as no ring evicted (eviction is per-shard and shard populations
+//!   differ with the shard count; [`TraceLog::evicted`] reports it).
+//!
+//! Export: JSONL (one [`crate::util::json::Json`] object per line) and
+//! the Chrome `trace_event` array format, so a mission renders as a
+//! flamegraph in `chrome://tracing` / Perfetto with one track (`tid`)
+//! per satellite.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Mutex};
+
+use crate::util::json::Json;
+
+/// What kind of mission activity a record describes.  The discriminant
+/// is the final tie-break of the merge ordering, so it is explicit and
+/// frozen — reordering variants would reorder merged traces.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum SpanKind {
+    /// Scene capture (span: capture time → capture + overhead).
+    Capture = 0,
+    /// Cloud filter outcome for a scene (event; payload = tiles kept).
+    Filter = 1,
+    /// Onboard inference over a scene's kept tiles (span over busy time).
+    OnboardInfer = 2,
+    /// Ground re-inference of delivered tiles (event at delivery).
+    GroundInfer = 3,
+    /// One contact-window drain slice (span: slice start → end).
+    DownlinkSlice = 4,
+    /// Federated round (span: due → due + training burst).
+    TrainingRound = 5,
+    /// Governor shed a capture (event; payload = SoC).
+    Shed = 6,
+    /// Governor deferred downlink drains (event; payload = SoC).
+    Defer = 7,
+    /// Downlink queue dropped bytes after repeated window failures.
+    Drop = 8,
+}
+
+impl SpanKind {
+    /// Every kind in discriminant order — the per-kind summary order.
+    pub const ALL: [SpanKind; 9] = [
+        SpanKind::Capture,
+        SpanKind::Filter,
+        SpanKind::OnboardInfer,
+        SpanKind::GroundInfer,
+        SpanKind::DownlinkSlice,
+        SpanKind::TrainingRound,
+        SpanKind::Shed,
+        SpanKind::Defer,
+        SpanKind::Drop,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::Capture => "capture",
+            SpanKind::Filter => "filter",
+            SpanKind::OnboardInfer => "onboard_infer",
+            SpanKind::GroundInfer => "ground_infer",
+            SpanKind::DownlinkSlice => "downlink_slice",
+            SpanKind::TrainingRound => "training_round",
+            SpanKind::Shed => "shed",
+            SpanKind::Defer => "defer",
+            SpanKind::Drop => "drop",
+        }
+    }
+}
+
+/// Outcome of a federated round, for [`TracePayload::Verdict`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RoundVerdict {
+    Participated,
+    SkippedPower,
+}
+
+impl RoundVerdict {
+    pub fn name(self) -> &'static str {
+        match self {
+            RoundVerdict::Participated => "participated",
+            RoundVerdict::SkippedPower => "skipped_power",
+        }
+    }
+}
+
+/// Small typed payload carried by a record.  One variant per question
+/// the chaos/serving layers will ask of a trace; deliberately not a
+/// grab-bag map, so records stay `Copy` and rings stay flat.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum TracePayload {
+    None,
+    /// Bytes moved (downlink slices) or lost (drops).
+    Bytes(u64),
+    /// Battery state of charge, integer percent.
+    Soc(i64),
+    /// Tile / batch count.
+    Batch(usize),
+    /// Federated round outcome.
+    Verdict(RoundVerdict),
+}
+
+/// One span or instantaneous event in mission time.  Events are spans
+/// with `t_end == t_start`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TraceRecord {
+    pub kind: SpanKind,
+    pub sat_id: usize,
+    /// Virtual mission seconds.
+    pub t_start: f64,
+    pub t_end: f64,
+    pub payload: TracePayload,
+}
+
+impl TraceRecord {
+    fn payload_pair(&self) -> Option<(&'static str, Json)> {
+        match self.payload {
+            TracePayload::None => None,
+            TracePayload::Bytes(b) => Some(("bytes", Json::num(b as f64))),
+            TracePayload::Soc(p) => Some(("soc_pct", Json::num(p as f64))),
+            TracePayload::Batch(n) => Some(("batch", Json::num(n as f64))),
+            TracePayload::Verdict(v) => Some(("verdict", Json::str(v.name()))),
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("kind", Json::str(self.kind.name())),
+            ("sat", Json::num(self.sat_id as f64)),
+            ("t0", Json::num(self.t_start)),
+            ("t1", Json::num(self.t_end)),
+        ];
+        if let Some(p) = self.payload_pair() {
+            pairs.push(p);
+        }
+        Json::obj(pairs)
+    }
+
+    /// Chrome `trace_event` complete event: `ts`/`dur` in microseconds,
+    /// one `tid` track per satellite.
+    fn to_chrome(&self) -> Json {
+        let mut args = Vec::new();
+        if let Some(p) = self.payload_pair() {
+            args.push(p);
+        }
+        Json::obj(vec![
+            ("name", Json::str(self.kind.name())),
+            ("cat", Json::str("mission")),
+            ("ph", Json::str("X")),
+            ("ts", Json::num(self.t_start * 1e6)),
+            ("dur", Json::num((self.t_end - self.t_start).max(0.0) * 1e6)),
+            ("pid", Json::num(0.0)),
+            ("tid", Json::num(self.sat_id as f64)),
+            ("args", Json::obj(args)),
+        ])
+    }
+}
+
+struct Ring {
+    buf: VecDeque<TraceRecord>,
+    evicted: u64,
+}
+
+/// Per-shard bounded ring buffers for trace records.  "Lock-free-ish":
+/// each ring sits behind its own mutex, and by construction only the
+/// shard worker that owns those satellites writes to it — the lock is
+/// uncontended until the single merge at the post-join barrier.
+pub struct TraceSink {
+    shards: Vec<Mutex<Ring>>,
+    ring_cap: usize,
+}
+
+impl TraceSink {
+    /// `shards` ring buffers, each holding at most `ring_cap` records
+    /// (oldest evicted first, counted in [`TraceLog::evicted`]).
+    pub fn new(shards: usize, ring_cap: usize) -> TraceSink {
+        assert!(shards >= 1, "trace sink needs at least one shard");
+        assert!(ring_cap >= 1, "trace ring cap must be at least 1");
+        TraceSink {
+            shards: (0..shards)
+                .map(|_| Mutex::new(Ring { buf: VecDeque::new(), evicted: 0 }))
+                .collect(),
+            ring_cap,
+        }
+    }
+
+    /// A recording handle for one satellite, writing to `shard`'s ring.
+    /// All of a satellite's records must go through one tracer (= one
+    /// shard) or the merge-order guarantee above does not hold.
+    pub fn tracer(self: &Arc<Self>, shard: usize, sat_id: usize) -> SatTracer {
+        SatTracer { sink: Arc::clone(self), shard: shard % self.shards.len(), sat_id }
+    }
+
+    fn record(&self, shard: usize, rec: TraceRecord) {
+        let mut ring = self.shards[shard].lock().unwrap();
+        if ring.buf.len() == self.ring_cap {
+            ring.buf.pop_front();
+            ring.evicted += 1;
+        }
+        ring.buf.push_back(rec);
+    }
+
+    /// Barrier merge: concatenate every ring, then **stable**-sort by
+    /// `(t_start, sat_id, kind)` (`total_cmp` on time, like the event
+    /// scheduler).  See the module doc for why the result is invariant
+    /// under shard count whenever `evicted == 0`.
+    pub fn merge(&self) -> TraceLog {
+        let mut records = Vec::new();
+        let mut evicted = 0u64;
+        for s in &self.shards {
+            let ring = s.lock().unwrap();
+            records.extend(ring.buf.iter().copied());
+            evicted += ring.evicted;
+        }
+        records.sort_by(|a, b| {
+            a.t_start
+                .total_cmp(&b.t_start)
+                .then_with(|| a.sat_id.cmp(&b.sat_id))
+                .then_with(|| (a.kind as u8).cmp(&(b.kind as u8)))
+        });
+        TraceLog { records, evicted }
+    }
+}
+
+/// A satellite's recording handle: cheap to clone, `None`-able at every
+/// instrumentation site (tracing disabled ⇒ the `Option` is `None` and
+/// the site costs one predictable branch).
+#[derive(Clone)]
+pub struct SatTracer {
+    sink: Arc<TraceSink>,
+    shard: usize,
+    sat_id: usize,
+}
+
+impl SatTracer {
+    pub fn span(&self, kind: SpanKind, t_start: f64, t_end: f64, payload: TracePayload) {
+        self.sink.record(
+            self.shard,
+            TraceRecord { kind, sat_id: self.sat_id, t_start, t_end, payload },
+        );
+    }
+
+    /// Instantaneous event: a span with `t_end == t_start`.
+    pub fn event(&self, kind: SpanKind, t: f64, payload: TracePayload) {
+        self.span(kind, t, t, payload);
+    }
+
+    pub fn sat_id(&self) -> usize {
+        self.sat_id
+    }
+}
+
+/// The merged, `(time, sat_id, kind)`-sorted trace of a mission.
+#[derive(Clone, Debug, Default)]
+pub struct TraceLog {
+    records: Vec<TraceRecord>,
+    evicted: u64,
+}
+
+impl TraceLog {
+    pub fn records(&self) -> &[TraceRecord] {
+        &self.records
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// Records lost to ring eviction across all shards.  Non-zero means
+    /// the trace is a suffix-ish sample, and shard-count invariance no
+    /// longer holds — raise `trace.ring_cap`.
+    pub fn evicted(&self) -> u64 {
+        self.evicted
+    }
+
+    /// Count per kind, in [`SpanKind::ALL`] order (zeros included, so
+    /// summaries are fixed-shape).
+    pub fn kind_counts(&self) -> Vec<(SpanKind, usize)> {
+        let mut counts = [0usize; SpanKind::ALL.len()];
+        for r in &self.records {
+            counts[r.kind as usize] += 1;
+        }
+        SpanKind::ALL.iter().copied().zip(counts).collect()
+    }
+
+    /// One JSON object per line, in merged order — the byte stream the
+    /// determinism test pins.
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        for r in &self.records {
+            out.push_str(&r.to_json().to_string());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Chrome `trace_event` JSON array for chrome://tracing / Perfetto.
+    pub fn to_chrome(&self) -> String {
+        Json::Arr(self.records.iter().map(|r| r.to_chrome()).collect()).to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(kind: SpanKind, sat: usize, t0: f64, t1: f64) -> TraceRecord {
+        TraceRecord { kind, sat_id: sat, t_start: t0, t_end: t1, payload: TracePayload::None }
+    }
+
+    #[test]
+    fn merge_sorts_by_time_sat_kind() {
+        let sink = Arc::new(TraceSink::new(2, 64));
+        let a = sink.tracer(0, 0);
+        let b = sink.tracer(1, 1);
+        b.event(SpanKind::Capture, 10.0, TracePayload::None);
+        a.event(SpanKind::Capture, 10.0, TracePayload::None);
+        a.event(SpanKind::Filter, 10.0, TracePayload::None);
+        a.event(SpanKind::Capture, 5.0, TracePayload::None);
+        let log = sink.merge();
+        let keys: Vec<(f64, usize, SpanKind)> =
+            log.records().iter().map(|r| (r.t_start, r.sat_id, r.kind)).collect();
+        assert_eq!(
+            keys,
+            vec![
+                (5.0, 0, SpanKind::Capture),
+                (10.0, 0, SpanKind::Capture),
+                (10.0, 0, SpanKind::Filter),
+                (10.0, 1, SpanKind::Capture),
+            ]
+        );
+        assert_eq!(log.evicted(), 0);
+    }
+
+    #[test]
+    fn same_key_records_keep_emission_order() {
+        // Two records of one satellite with identical (t, kind) must
+        // keep their emission order (stable sort): payloads tell them
+        // apart.
+        let sink = Arc::new(TraceSink::new(1, 64));
+        let t = sink.tracer(0, 3);
+        t.event(SpanKind::Drop, 7.0, TracePayload::Bytes(1));
+        t.event(SpanKind::Drop, 7.0, TracePayload::Bytes(2));
+        let log = sink.merge();
+        assert_eq!(log.records()[0].payload, TracePayload::Bytes(1));
+        assert_eq!(log.records()[1].payload, TracePayload::Bytes(2));
+    }
+
+    #[test]
+    fn ring_eviction_drops_oldest_and_counts() {
+        let sink = Arc::new(TraceSink::new(1, 2));
+        let t = sink.tracer(0, 0);
+        t.event(SpanKind::Capture, 1.0, TracePayload::None);
+        t.event(SpanKind::Capture, 2.0, TracePayload::None);
+        t.event(SpanKind::Capture, 3.0, TracePayload::None);
+        let log = sink.merge();
+        assert_eq!(log.len(), 2);
+        assert_eq!(log.evicted(), 1);
+        assert_eq!(log.records()[0].t_start, 2.0, "oldest record evicted first");
+    }
+
+    #[test]
+    fn jsonl_format_is_stable() {
+        let sink = Arc::new(TraceSink::new(1, 8));
+        let t = sink.tracer(0, 2);
+        t.span(SpanKind::DownlinkSlice, 100.0, 160.5, TracePayload::Bytes(4096));
+        t.event(SpanKind::Shed, 200.0, TracePayload::Soc(19));
+        let log = sink.merge();
+        assert_eq!(
+            log.to_jsonl(),
+            "{\"bytes\":4096,\"kind\":\"downlink_slice\",\"sat\":2,\"t0\":100,\"t1\":160.5}\n\
+             {\"kind\":\"shed\",\"sat\":2,\"soc_pct\":19,\"t0\":200,\"t1\":200}\n"
+        );
+    }
+
+    #[test]
+    fn chrome_export_is_valid_json_with_one_track_per_sat() {
+        let sink = Arc::new(TraceSink::new(2, 8));
+        sink.tracer(0, 0).span(SpanKind::Capture, 0.0, 2.0, TracePayload::Batch(64));
+        sink.tracer(1, 1).span(SpanKind::TrainingRound, 900.0, 930.0, {
+            TracePayload::Verdict(RoundVerdict::Participated)
+        });
+        let log = sink.merge();
+        let parsed = Json::parse(&log.to_chrome()).unwrap();
+        let events = parsed.as_arr().unwrap();
+        assert_eq!(events.len(), 2);
+        assert_eq!(events[0].get("ph").unwrap().as_str(), Some("X"));
+        assert_eq!(events[0].get("tid").unwrap().as_f64(), Some(0.0));
+        assert_eq!(events[0].get("dur").unwrap().as_f64(), Some(2e6));
+        assert_eq!(events[1].get("tid").unwrap().as_f64(), Some(1.0));
+        assert_eq!(
+            events[1].get("args").unwrap().get("verdict").unwrap().as_str(),
+            Some("participated")
+        );
+    }
+
+    #[test]
+    fn kind_counts_are_fixed_shape() {
+        let sink = Arc::new(TraceSink::new(1, 8));
+        let t = sink.tracer(0, 0);
+        t.event(SpanKind::Capture, 1.0, TracePayload::None);
+        t.event(SpanKind::Capture, 2.0, TracePayload::None);
+        t.event(SpanKind::Drop, 3.0, TracePayload::Bytes(9));
+        let counts = sink.merge().kind_counts();
+        assert_eq!(counts.len(), SpanKind::ALL.len());
+        assert_eq!(counts[0], (SpanKind::Capture, 2));
+        assert_eq!(counts[8], (SpanKind::Drop, 1));
+        assert_eq!(counts[5], (SpanKind::TrainingRound, 0), "zero kinds still listed");
+    }
+
+    #[test]
+    fn merged_stream_invariant_under_shard_split() {
+        // The same per-sat record streams pushed through 1-shard and
+        // 3-shard sinks must merge to the identical byte stream.
+        let emit = |sink: &Arc<TraceSink>, shards: usize| {
+            for sat in 0..6usize {
+                let t = sink.tracer(sat % shards, sat);
+                for i in 0..5 {
+                    let at = (i * (sat + 1)) as f64;
+                    t.event(SpanKind::Capture, at, TracePayload::Batch(i));
+                    t.event(SpanKind::Filter, at, TracePayload::Batch(i / 2));
+                }
+            }
+        };
+        let one = Arc::new(TraceSink::new(1, 1024));
+        emit(&one, 1);
+        let three = Arc::new(TraceSink::new(3, 1024));
+        emit(&three, 3);
+        assert_eq!(one.merge().to_jsonl(), three.merge().to_jsonl());
+    }
+}

@@ -1,0 +1,119 @@
+//! Flight-recorder determinism, artifact-free.
+//!
+//! The trace tentpole's contract: `fleet.shards` and
+//! `fleet.max_events_in_flight` are parallelism dials, and the merged
+//! trace — like the mission reports — must be **byte-for-byte**
+//! identical across them.  Each satellite records into the single-writer
+//! ring of the shard that steps it; the post-join merge concatenates the
+//! rings and stably sorts by `(t_start, sat_id, kind)`, so as long as no
+//! ring evicted, the stream is a pure function of the missions.  These
+//! tests drive [`StubSat`] fleets (real [`Timeline`]s, synthetic
+//! workload, no inference artifacts) and pin the JSONL export across
+//! shard counts and admission caps, and pin that tracing itself never
+//! perturbs results.
+
+use std::sync::Arc;
+
+use tiansuan::sim::{run_sharded, StubReport, StubSat};
+use tiansuan::telemetry::trace::{SpanKind, TraceSink};
+
+const N_SATS: usize = 52;
+const SCENES: usize = 6;
+const HORIZON_S: f64 = 43_200.0;
+const SEED: u64 = 7;
+
+fn plain_fleet(shards: usize, cap: usize) -> Vec<StubReport> {
+    let (reports, _) =
+        run_sharded(N_SATS, shards, cap, |id| Ok(StubSat::new(id, SEED, SCENES, HORIZON_S)))
+            .unwrap();
+    reports
+}
+
+fn traced_fleet(shards: usize, cap: usize) -> (Vec<StubReport>, Arc<TraceSink>) {
+    // ring-per-shard, exactly as run_fleet sizes it (clamped shard count)
+    let shards_effective = shards.max(1).min(N_SATS);
+    let sink = Arc::new(TraceSink::new(shards_effective, 1 << 16));
+    let sink_ref = &sink;
+    let (reports, _) = run_sharded(N_SATS, shards, cap, |id| {
+        Ok(StubSat::new(id, SEED, SCENES, HORIZON_S).with_trace(sink_ref.tracer(id, id)))
+    })
+    .unwrap();
+    (reports, sink)
+}
+
+#[test]
+fn merged_trace_is_bit_identical_across_shards_and_caps() {
+    let (base_reports, base_sink) = traced_fleet(1, 0);
+    let base = base_sink.merge();
+    assert_eq!(base.evicted(), 0, "rings must not evict at this ring_cap");
+    assert!(!base.is_empty(), "a 52-sat mission must record something");
+    let base_jsonl = base.to_jsonl();
+    let base_chrome = base.to_chrome();
+    for shards in [1usize, 4, 13] {
+        for cap in [1usize, 64] {
+            let (reports, sink) = traced_fleet(shards, cap);
+            let log = sink.merge();
+            assert_eq!(log.evicted(), 0, "shards={shards} cap={cap}");
+            assert_eq!(
+                base_jsonl,
+                log.to_jsonl(),
+                "merged JSONL diverged at shards={shards} cap={cap}"
+            );
+            assert_eq!(
+                base_chrome,
+                log.to_chrome(),
+                "chrome export diverged at shards={shards} cap={cap}"
+            );
+            assert_eq!(base_reports, reports, "reports diverged at shards={shards} cap={cap}");
+        }
+    }
+}
+
+#[test]
+fn tracing_is_result_neutral() {
+    // trace-off (no tracer attached) and trace-on missions are
+    // bit-identical in their reports, at every shard count
+    for shards in [1usize, 4, 13] {
+        let plain = plain_fleet(shards, 0);
+        let (traced, _) = traced_fleet(shards, 0);
+        assert_eq!(plain, traced, "tracing perturbed results at shards={shards}");
+    }
+}
+
+#[test]
+fn trace_off_records_nothing() {
+    // a sink nobody was handed stays empty — the zero-record guarantee
+    // behind the `trace.enabled=false` default
+    let sink = Arc::new(TraceSink::new(4, 1 << 10));
+    let _ = plain_fleet(4, 0);
+    let log = sink.merge();
+    assert!(log.is_empty());
+    assert_eq!(log.evicted(), 0);
+    assert_eq!(log.to_jsonl(), "");
+}
+
+#[test]
+fn merged_stream_accounts_for_every_mission() {
+    let (_, sink) = traced_fleet(4, 0);
+    let log = sink.merge();
+    // every (kind, count) pair sums back to the stream length
+    let counts = log.kind_counts();
+    let total: usize = counts.iter().map(|(_, n)| n).sum();
+    assert_eq!(total, log.len());
+    // one Capture event per scene per satellite
+    let captures = counts
+        .iter()
+        .find(|(k, _)| *k == SpanKind::Capture)
+        .map(|(_, n)| *n)
+        .unwrap_or(0);
+    assert_eq!(captures, N_SATS * SCENES);
+    // contact passes recorded for the whole fleet
+    let slices = counts
+        .iter()
+        .find(|(k, _)| *k == SpanKind::DownlinkSlice)
+        .map(|(_, n)| *n)
+        .unwrap_or(0);
+    assert!(slices > 0, "12 h of mission must include downlink slices");
+    // JSONL is one line per record
+    assert_eq!(log.to_jsonl().lines().count(), log.len());
+}
