@@ -26,6 +26,11 @@ echo "== determinism: merged flight-recorder trace across shard counts =="
 # pins the trace stream byte-for-byte across shards × admission caps
 cargo test -q --test trace_determinism
 
+echo "== contact plane: multi-station scheduling invariants =="
+# disjoint station-tagged plans, per-station byte attribution, and the
+# single-station bit-identity of the layout refactor
+cargo test -q --test station_scheduling
+
 if [[ "${1:-}" == "fast" ]]; then
   exit 0
 fi
@@ -97,5 +102,16 @@ echo "{\"bench\":\"run\",\"commit\":\"$(git rev-parse --short HEAD 2>/dev/null |
 grep '^{"bench"' "$bench_log" >> ../BENCH_observability.json || true
 rm -f "$bench_log"
 echo "BENCH_observability.json now holds $(wc -l < ../BENCH_observability.json) records"
+
+echo "== bench artifact: perf_stations -> BENCH_stations.json =="
+# artifact-free (orbital geometry + contact scheduling + ARQ drain over
+# synthetic backlogs): always recorded; asserts multi-station yield beats
+# the best single station
+bench_log=$(mktemp)
+cargo bench --bench perf_stations | tee "$bench_log"
+echo "{\"bench\":\"run\",\"commit\":\"$(git rev-parse --short HEAD 2>/dev/null || echo unknown)\",\"date\":\"$(date -u +%FT%TZ)\"}" >> ../BENCH_stations.json
+grep '^{"bench"' "$bench_log" >> ../BENCH_stations.json || true
+rm -f "$bench_log"
+echo "BENCH_stations.json now holds $(wc -l < ../BENCH_stations.json) records"
 
 echo "ci: all gates passed"

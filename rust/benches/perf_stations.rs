@@ -1,0 +1,222 @@
+//! Station-count sweep: what does adding ground stations buy a 1k-sat
+//! plane over one day?
+//!
+//! For 1, 3 and 8 stations this measures, per configuration:
+//!
+//! * contact minutes per satellite per day on the *scheduled* (disjoint,
+//!   one-transmitter) track,
+//! * bytes actually delivered by draining a fixed per-satellite backlog
+//!   through the ARQ link over the scheduled windows, against the best
+//!   any single station of the set manages alone,
+//! * scheduler planning throughput (strategy decisions per second).
+//!
+//! The byte drain uses a deliberately constrained 1 Mbps transmitter so
+//! airtime — not the sensor — is the binding resource and the packet-level
+//! ARQ sim stays at ~10^7 packets.  Ratios across station counts are what
+//! matter and those are rate-independent.  ci.sh records the
+//! `{"bench":...}` lines into BENCH_stations.json; the multi-vs-best-single
+//! comparison is the PR's acceptance criterion and is asserted here.
+
+use std::time::Duration;
+
+use tiansuan::config::{Config, StationConfig};
+use tiansuan::coordinator::downlink::{DownlinkItem, DownlinkQueue, ItemKind};
+use tiansuan::coordinator::{
+    plane_satellite, station_network, ContactScheduler, SchedulerStats, CONTACT_SCAN_STEP_S,
+};
+use tiansuan::link::{Link, LinkConfig, LossProfile};
+use tiansuan::orbit::ContactWindow;
+use tiansuan::util::bench;
+
+const DAY_S: f64 = 86_400.0;
+const SATS: usize = 1000;
+/// Satellites whose backlog is actually drained through the packet-level
+/// link sim (every `SATS / DRAIN_SATS`-th plane slot).  Draining all 1k
+/// would simulate ~10^9 packets for no extra signal; the subsample is
+/// printed so the cap is never silent.
+const DRAIN_SATS: usize = 25;
+
+fn station(name: &str, lat_deg: f64, lon_deg: f64) -> StationConfig {
+    StationConfig { name: name.to_string(), lat_deg, lon_deg, min_elevation_deg: 10.0 }
+}
+
+/// First `n` of a fixed global roster.  Index 0 is the paper's Beijing
+/// station (the config default); 3 stations is the Beijing/Kashi/Sanya
+/// domestic triangle; 8 adds a commercial polar-and-southern spread.
+fn station_set(n: usize) -> Vec<StationConfig> {
+    let roster = vec![
+        StationConfig::default(), // Beijing
+        station("Kashi", 39.47, 75.98),
+        station("Sanya", 18.23, 109.50),
+        station("Kiruna", 67.86, 20.96),
+        station("Svalbard", 78.23, 15.39),
+        station("Perth", -31.80, 115.89),
+        station("Santiago", -33.13, -70.67),
+        station("Fairbanks", 64.80, -147.50),
+    ];
+    assert!(n <= roster.len());
+    roster.into_iter().take(n).collect()
+}
+
+fn sweep_config(n_stations: usize) -> Config {
+    let mut cfg = Config::default();
+    cfg.constellation.satellites = SATS;
+    cfg.constellation.horizon_s = DAY_S;
+    cfg.stations = station_set(n_stations);
+    cfg
+}
+
+/// Constrained transmitter for the byte drain (see module doc).
+fn drain_link() -> LinkConfig {
+    LinkConfig { rate_bps: 1e6, mtu: 1400, loss: LossProfile::stable(), max_tries: 8 }
+}
+
+/// One day of observations: a 1 MB image every 2 minutes (720 MB), about
+/// 2x what one station's daily airtime carries at the drain-link rate —
+/// so extra stations turn directly into extra delivered bytes.
+fn day_backlog() -> Vec<DownlinkItem> {
+    (0..720)
+        .map(|i| DownlinkItem {
+            kind: ItemKind::Image,
+            bytes: 1_000_000,
+            ready_at: i as f64 * 120.0,
+            tag: i,
+        })
+        .collect()
+}
+
+/// Drain the standard backlog over `windows`; returns total delivered
+/// bytes.  `seed` keeps the Gilbert–Elliott chain deterministic per
+/// satellite while decorrelating satellites.
+fn drained_bytes(windows: &[ContactWindow], seed: u64) -> u64 {
+    let mut queue = DownlinkQueue::new();
+    for item in day_backlog() {
+        queue.push(item);
+    }
+    let mut link = Link::new(drain_link(), seed);
+    for w in windows {
+        queue.drain_window(&mut link, w);
+    }
+    queue.stats.total_bytes()
+}
+
+struct SweepRow {
+    stations: usize,
+    contact_min_per_sat: f64,
+    scheduled_bytes: u64,
+    best_single_bytes: u64,
+    decisions_per_s: f64,
+    fleet: SchedulerStats,
+}
+
+fn sweep(n_stations: usize) -> SweepRow {
+    let cfg = sweep_config(n_stations);
+    let net = station_network(&cfg);
+    let scheduler = ContactScheduler::greedy();
+
+    let mut all_tracks = Vec::with_capacity(SATS);
+    let mut fleet = SchedulerStats::default();
+    let mut scheduled_s = 0.0;
+    let mut scheduled_bytes = 0u64;
+    let mut single_bytes = vec![0u64; n_stations];
+    let drain_stride = SATS / DRAIN_SATS;
+
+    for i in 0..SATS {
+        let sat = plane_satellite(&cfg, i, &format!("bench-{i}"));
+        let tracks = net.contact_tracks(&sat, 0.0, DAY_S, CONTACT_SCAN_STEP_S);
+        let (plan, stats) = scheduler.plan(&tracks);
+        scheduled_s += plan.iter().map(ContactWindow::duration_s).sum::<f64>();
+        fleet.absorb(&stats);
+        if i % drain_stride == 0 {
+            scheduled_bytes += drained_bytes(&plan, i as u64);
+            // each station alone, same backlog and seed: its raw track is
+            // exactly what a single-station mission over that site sees
+            for (s, track) in tracks.iter().enumerate() {
+                single_bytes[s] += drained_bytes(track, i as u64);
+            }
+        }
+        all_tracks.push(tracks);
+    }
+
+    let decisions_per_replan = fleet.decisions;
+    let timed = bench::run(
+        &format!("perf_stations.plan_{n_stations}st_{SATS}sat"),
+        3,
+        Duration::from_millis(300),
+        || {
+            for tracks in &all_tracks {
+                std::hint::black_box(scheduler.plan(tracks));
+            }
+        },
+    );
+    let decisions_per_s = decisions_per_replan as f64 / timed.median.as_secs_f64();
+
+    SweepRow {
+        stations: n_stations,
+        contact_min_per_sat: scheduled_s / 60.0 / SATS as f64,
+        scheduled_bytes,
+        best_single_bytes: single_bytes.iter().copied().max().unwrap_or(0),
+        decisions_per_s,
+        fleet,
+    }
+}
+
+fn main() {
+    println!(
+        "perf_stations: {SATS} satellites, 1-day horizon, \
+         byte drain over {DRAIN_SATS} sampled satellites at 1 Mbps"
+    );
+    let mut rows = Vec::new();
+    for n in [1usize, 3, 8] {
+        let row = sweep(n);
+        println!(
+            "{} station(s): {:.1} contact min/sat/day  \
+             delivered {:.1} MB (best single station {:.1} MB)  \
+             {:.0} decisions/s  clipped {} shadowed {}",
+            row.stations,
+            row.contact_min_per_sat,
+            row.scheduled_bytes as f64 / 1e6,
+            row.best_single_bytes as f64 / 1e6,
+            row.decisions_per_s,
+            row.fleet.clipped,
+            row.fleet.shadowed,
+        );
+        bench::json_line(
+            "perf_stations.sweep",
+            &[
+                ("stations", row.stations as f64),
+                ("sats", SATS as f64),
+                ("drain_sats", DRAIN_SATS as f64),
+                ("contact_min_per_sat_day", row.contact_min_per_sat),
+                ("bytes_delivered", row.scheduled_bytes as f64),
+                ("best_single_station_bytes", row.best_single_bytes as f64),
+                ("decisions_per_s", row.decisions_per_s),
+                ("clipped", row.fleet.clipped as f64),
+                ("shadowed", row.fleet.shadowed as f64),
+            ],
+        );
+        rows.push(row);
+    }
+
+    // Acceptance: any >= 2-station network must deliver strictly more
+    // bytes than the best single station of its set manages alone.
+    for row in rows.iter().filter(|r| r.stations >= 2) {
+        assert!(
+            row.scheduled_bytes > row.best_single_bytes,
+            "{} stations delivered {} bytes, not more than best single station's {}",
+            row.stations,
+            row.scheduled_bytes,
+            row.best_single_bytes
+        );
+    }
+    // More stations never shrink the scheduled contact plane.
+    for pair in rows.windows(2) {
+        assert!(
+            pair[1].contact_min_per_sat >= pair[0].contact_min_per_sat,
+            "contact minutes fell from {} to {} stations",
+            pair[0].stations,
+            pair[1].stations
+        );
+    }
+    println!("perf_stations: multi-station yield exceeds best single station — ok");
+}

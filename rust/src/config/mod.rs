@@ -485,6 +485,65 @@ impl Default for ConstellationConfig {
     }
 }
 
+/// One ground station of the mission's ground segment.  The default is
+/// the paper's Beijing station — the single-station network every
+/// pre-multi-station result was measured against.
+#[derive(Clone, Debug)]
+pub struct StationConfig {
+    pub name: String,
+    pub lat_deg: f64,
+    pub lon_deg: f64,
+    /// Minimum usable elevation, degrees (terrain + RF mask).
+    pub min_elevation_deg: f64,
+}
+
+impl StationConfig {
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(
+            (-90.0..=90.0).contains(&self.lat_deg),
+            "station {:?}: lat_deg must be in [-90, 90], got {}",
+            self.name,
+            self.lat_deg
+        );
+        anyhow::ensure!(
+            (-180.0..=180.0).contains(&self.lon_deg),
+            "station {:?}: lon_deg must be in [-180, 180], got {}",
+            self.name,
+            self.lon_deg
+        );
+        anyhow::ensure!(
+            (0.0..90.0).contains(&self.min_elevation_deg),
+            "station {:?}: min_elevation_deg must be in [0, 90), got {}",
+            self.name,
+            self.min_elevation_deg
+        );
+        Ok(())
+    }
+}
+
+impl Default for StationConfig {
+    fn default() -> StationConfig {
+        // must stay bit-identical to crate::orbit::beijing_station()
+        StationConfig {
+            name: "Beijing".into(),
+            lat_deg: 39.96,
+            lon_deg: 116.35,
+            min_elevation_deg: 10.0,
+        }
+    }
+}
+
+/// The whole ground segment must validate and be non-empty (a mission
+/// with no station has no downlink at all; `StationNetwork::new` would
+/// also reject it, but the surface error names the config key).
+fn validate_stations(stations: &[StationConfig]) -> Result<()> {
+    anyhow::ensure!(!stations.is_empty(), "stations must list at least one ground station");
+    for s in stations {
+        s.validate()?;
+    }
+    Ok(())
+}
+
 /// Full experiment config.
 #[derive(Clone, Debug)]
 pub struct Config {
@@ -499,6 +558,9 @@ pub struct Config {
     pub fleet: FleetConfig,
     pub trace: TraceConfig,
     pub telemetry: TelemetryConfig,
+    /// Ground segment: one entry per station, indexed by `station_id`.
+    /// Defaults to the single Beijing station.
+    pub stations: Vec<StationConfig>,
     /// Scene size in 64-px cells.
     pub scene_cells: usize,
     /// Fragment edge length in px for the splitter.
@@ -547,6 +609,7 @@ impl Default for Config {
             fleet: FleetConfig::default(),
             trace: TraceConfig::default(),
             telemetry: TelemetryConfig::default(),
+            stations: vec![StationConfig::default()],
             scene_cells: 8,
             fragment_px: 64,
             loss_profile: "stable".into(),
@@ -786,6 +849,28 @@ impl Config {
                     .unwrap_or(cfg.telemetry.per_node_limit),
             };
         }
+        if let Some(arr) = j.get("stations").and_then(|v| v.as_arr()) {
+            cfg.stations = arr
+                .iter()
+                .enumerate()
+                .map(|(i, s)| {
+                    let d = StationConfig::default();
+                    StationConfig {
+                        name: s
+                            .get("name")
+                            .and_then(|v| v.as_str())
+                            .map(|n| n.to_string())
+                            .unwrap_or_else(|| format!("station-{i}")),
+                        lat_deg: s.get("lat_deg").and_then(|v| v.as_f64()).unwrap_or(d.lat_deg),
+                        lon_deg: s.get("lon_deg").and_then(|v| v.as_f64()).unwrap_or(d.lon_deg),
+                        min_elevation_deg: s
+                            .get("min_elevation_deg")
+                            .and_then(|v| v.as_f64())
+                            .unwrap_or(d.min_elevation_deg),
+                    }
+                })
+                .collect();
+        }
         if let Some(v) = j.get("scene_cells").and_then(|v| v.as_usize()) {
             cfg.scene_cells = v;
         }
@@ -804,6 +889,7 @@ impl Config {
         cfg.federated.validate().context("federated config")?;
         cfg.fleet.validate().context("fleet config")?;
         cfg.trace.validate().context("trace config")?;
+        validate_stations(&cfg.stations).context("stations config")?;
         cfg.validate_cross().context("config cross-checks")?;
         Ok(cfg)
     }
@@ -1050,6 +1136,43 @@ mod tests {
         // zero-capacity ring fails at parse, but only when tracing is on
         assert!(Config::parse(r#"{"trace": {"enabled": true, "ring_cap": 0}}"#).is_err());
         assert!(Config::parse(r#"{"trace": {"ring_cap": 0}}"#).is_ok());
+    }
+
+    #[test]
+    fn parse_stations_section() {
+        let c = Config::parse(
+            r#"{"stations": [
+                 {"name": "Beijing", "lat_deg": 39.96, "lon_deg": 116.35,
+                  "min_elevation_deg": 10},
+                 {"name": "Kashi", "lat_deg": 39.47, "lon_deg": 75.98,
+                  "min_elevation_deg": 5},
+                 {"lat_deg": -33.0, "lon_deg": 151.0}]}"#,
+        )
+        .unwrap();
+        assert_eq!(c.stations.len(), 3);
+        assert_eq!(c.stations[1].name, "Kashi");
+        assert_eq!(c.stations[1].min_elevation_deg, 5.0);
+        // unnamed entries get an index name, missing keys fall back to
+        // the Beijing defaults
+        assert_eq!(c.stations[2].name, "station-2");
+        assert_eq!(c.stations[2].lat_deg, -33.0);
+        assert_eq!(c.stations[2].min_elevation_deg, 10.0);
+        // the default section is exactly one Beijing station
+        let d = Config::default();
+        assert_eq!(d.stations.len(), 1);
+        assert_eq!(d.stations[0].name, "Beijing");
+        assert_eq!(d.stations[0].lat_deg, 39.96);
+        assert_eq!(d.stations[0].lon_deg, 116.35);
+        assert_eq!(d.stations[0].min_elevation_deg, 10.0);
+    }
+
+    #[test]
+    fn invalid_stations_fail_at_parse() {
+        assert!(Config::parse(r#"{"stations": []}"#).is_err(), "empty ground segment");
+        assert!(Config::parse(r#"{"stations": [{"lat_deg": 95}]}"#).is_err());
+        assert!(Config::parse(r#"{"stations": [{"lon_deg": 200}]}"#).is_err());
+        assert!(Config::parse(r#"{"stations": [{"min_elevation_deg": 90}]}"#).is_err());
+        assert!(Config::parse(r#"{"stations": [{"min_elevation_deg": -1}]}"#).is_err());
     }
 
     #[test]

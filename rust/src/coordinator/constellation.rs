@@ -1,6 +1,7 @@
 //! Constellation-scale scenario runner: N satellites, one ground segment.
 //!
-//! Each satellite runs a staged pipeline on its own mission [`Timeline`]:
+//! Each satellite runs a staged pipeline on its own mission
+//! [`crate::sim::Timeline`]:
 //! a capture source thread feeds onboard stage workers (split · filter ·
 //! batch · TinyDet · route — the same [`super::engine`] stage bodies the
 //! single-satellite engine runs), so capture, filtering, and onboard
@@ -90,17 +91,18 @@ use crate::config::Config;
 use crate::data::{Tile, Version};
 use crate::detect::Detection;
 use crate::link::{Link, LinkConfig, LinkStats};
-use crate::orbit::{baoyun, beijing_station};
+use crate::orbit::StationNetwork;
 use crate::power::{PowerState, PowerVerdict};
 use crate::runtime::{Model, Runtime};
 use crate::sedna::federated::{self, FedScheduler, RoundDecision};
 use crate::sedna::{GlobalManager, LocalController, TaskKind, TaskPhase, TaskSpec};
-use crate::sim::{scene_timing, DutyCycles, Timeline};
+use crate::sim::{scene_timing, DutyCycles};
 use crate::telemetry::trace::{SatTracer, SpanKind, TraceLog, TracePayload, TraceSink};
 use crate::telemetry::{per_node_gauges_enabled, Counter, Gauge, Registry};
 
 use super::downlink::{Delivered, DownlinkItem, DownlinkQueue, DownlinkStats, ItemKind};
 use super::engine::{trace_onboard, worker_loop, Envelope, OnboardDone, OnboardStage, SceneJob};
+use super::layout::{mission_timeline, plane_satellite, station_network};
 use super::pipeline::{
     Pipeline, ProcessedTile, ScenarioAccumulator, ScenarioResult, RESULT_HEADER_BYTES,
 };
@@ -209,10 +211,11 @@ pub fn run_constellation(rt: &Runtime, cfg: &Config, version: Version) -> Result
     cfg.power.validate()?;
     cfg.federated.validate()?;
     cfg.validate_cross()?;
+    anyhow::ensure!(!cfg.stations.is_empty(), "stations must list at least one ground station");
     let n_sats = cfg.constellation.satellites.max(1);
     let scenes = cfg.constellation.scenes_per_satellite;
     let metrics = Registry::new();
-    let gs = beijing_station();
+    let net = station_network(cfg);
 
     // control plane: node registry + Sedna JointInference task
     let ground_node = NodeId::new("ground-1");
@@ -277,11 +280,11 @@ pub fn run_constellation(rt: &Runtime, cfg: &Config, version: Version) -> Result
             let tx = ground_tx.clone();
             let registry = &registry;
             let gm = &gm;
-            let gs = &gs;
+            let net = &net;
             let tracer = trace_sink.as_ref().map(|t| t.tracer(i, i));
             handles.push(s.spawn(move || -> Result<SatelliteReport> {
                 run_satellite(
-                    rt, cfg, version, i, node, tx, registry, gm, task, gs, metrics_ref, scenes,
+                    rt, cfg, version, i, node, tx, registry, gm, task, net, metrics_ref, scenes,
                     tracer, per_node,
                 )
             }));
@@ -547,7 +550,7 @@ fn run_satellite(
     registry: &Mutex<NodeRegistry>,
     gm: &Mutex<GlobalManager>,
     task: &str,
-    gs: &crate::orbit::GroundStation,
+    net: &StationNetwork,
     metrics: &Registry,
     scenes: usize,
     tracer: Option<SatTracer>,
@@ -559,16 +562,11 @@ fn run_satellite(
 
     // one orbital plane per satellite, phased around the constellation;
     // the timeline owns this satellite's contact windows + eclipse phases
-    let mut sat = baoyun();
-    sat.name = node.to_string();
-    sat.raan_rad = index as f64 * cfg.constellation.raan_step_rad;
-    sat.phase_rad = index as f64 * std::f64::consts::TAU / cfg.constellation.satellites.max(1) as f64;
+    // (seeding + timeline construction shared with the fleet engine via
+    // `coordinator::layout`)
+    let sat = plane_satellite(cfg, index, &node.to_string());
     let horizon = cfg.constellation.horizon_s;
-    let mut timeline = if cfg.constellation.ideal_contact {
-        Timeline::degenerate(&cfg.timing, horizon)
-    } else {
-        Timeline::orbital(&cfg.timing, &sat, gs, horizon, 10.0)
-    };
+    let mut timeline = mission_timeline(cfg, &sat, net);
 
     let mut sat_cfg = cfg.clone();
     sat_cfg.seed = cfg.seed.wrapping_add(1 + index as u64 * 101);
@@ -1072,7 +1070,7 @@ fn run_satellite(
         index,
         name: node.to_string(),
         result,
-        downlink: queue.stats,
+        downlink: queue.stats.clone(),
         link: link.stats,
         windows: timeline.n_contacts(),
         contact_s: timeline.contact_total_s(),

@@ -35,7 +35,7 @@ pub struct DownlinkItem {
     pub tag: u64,
 }
 
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Debug, Default)]
 pub struct DownlinkStats {
     pub results_bytes: u64,
     pub image_bytes: u64,
@@ -50,11 +50,27 @@ pub struct DownlinkStats {
     /// Sum + count of (delivery - ready) latencies for delivered items.
     pub latency_sum_s: f64,
     pub latency_count: u64,
+    /// Delivered bytes by ground station (indexed by `station_id`, grown
+    /// on demand).  Invariant: the entries sum to [`Self::total_bytes`].
+    pub station_bytes: Vec<u64>,
 }
 
 impl DownlinkStats {
     pub fn total_bytes(&self) -> u64 {
         self.results_bytes + self.image_bytes + self.weights_bytes
+    }
+
+    /// Bytes delivered through one station (0 for stations this queue
+    /// never transmitted to).
+    pub fn station_bytes(&self, station_id: usize) -> u64 {
+        self.station_bytes.get(station_id).copied().unwrap_or(0)
+    }
+
+    fn add_station_bytes(&mut self, station_id: usize, bytes: u64) {
+        if self.station_bytes.len() <= station_id {
+            self.station_bytes.resize(station_id + 1, 0);
+        }
+        self.station_bytes[station_id] += bytes;
     }
 
     pub fn mean_latency_s(&self) -> f64 {
@@ -184,6 +200,7 @@ impl DownlinkQueue {
                     ItemKind::Image => self.stats.image_bytes += item.bytes,
                     ItemKind::Weights => self.stats.weights_bytes += item.bytes,
                 }
+                self.stats.add_station_bytes(window.station_id, item.bytes);
                 self.stats.items_delivered += 1;
                 self.stats.latency_sum_s += now - item.ready_at;
                 self.stats.latency_count += 1;
@@ -224,7 +241,10 @@ impl DownlinkQueue {
             SpanKind::DownlinkSlice,
             window.aos,
             window.los,
-            TracePayload::Bytes(self.stats.total_bytes() - delivered_before),
+            TracePayload::StationBytes {
+                station: window.station_id as u32,
+                bytes: self.stats.total_bytes() - delivered_before,
+            },
         );
         let dropped = self.stats.bytes_dropped - dropped_before;
         if dropped > 0 {
@@ -268,7 +288,11 @@ mod tests {
     use crate::link::{LinkConfig, LossProfile};
 
     fn win(aos: f64, los: f64) -> ContactWindow {
-        ContactWindow { aos, los, max_elevation_deg: 45.0, truncated: false }
+        win_at(aos, los, 0)
+    }
+
+    fn win_at(aos: f64, los: f64, station_id: usize) -> ContactWindow {
+        ContactWindow { aos, los, max_elevation_deg: 45.0, truncated: false, station_id }
     }
 
     fn link(seed: u64) -> Link {
@@ -437,7 +461,7 @@ mod tests {
         let slices: Vec<_> =
             log.records().iter().filter(|r| r.kind == SpanKind::DownlinkSlice).collect();
         assert_eq!(slices.len(), 4, "one span per slice");
-        assert_eq!(slices[0].payload, TracePayload::Bytes(160));
+        assert_eq!(slices[0].payload, TracePayload::StationBytes { station: 0, bytes: 160 });
         assert_eq!(slices[0].t_start, 0.0);
         assert_eq!(slices[0].t_end, 60.0);
         let drops: Vec<_> = log.records().iter().filter(|r| r.kind == SpanKind::Drop).collect();
@@ -450,6 +474,25 @@ mod tests {
         q2.drain_window_sliced_traced(&mut link(8), &win(0.0, 60.0), true, None);
         assert!(quiet.merge().is_empty());
         assert_eq!(q2.stats.results_bytes, q.stats.results_bytes);
+    }
+
+    #[test]
+    fn station_bytes_attribute_deliveries_and_sum_to_total() {
+        let mut q = DownlinkQueue::new();
+        q.push(item(ItemKind::Results, 160, 0.0, 1));
+        q.push(item(ItemKind::Image, 12_288, 0.0, 2));
+        q.push(item(ItemKind::Weights, 36, 0.0, 3));
+        // first pass over station 2, second over station 0
+        let got = q.drain_window(&mut link(50), &win_at(0.0, 0.05, 2));
+        assert!(!got.is_empty(), "short pass still delivers the small results item");
+        q.drain_window(&mut link(51), &win_at(100.0, 160.0, 0));
+        assert_eq!(q.pending(), 0);
+        assert_eq!(q.stats.station_bytes.len(), 3, "grown to cover station 2");
+        assert_eq!(q.stats.station_bytes(1), 0, "never transmitted to station 1");
+        assert_eq!(q.stats.station_bytes(9), 0, "out-of-range reads are 0, not a panic");
+        let sum: u64 = q.stats.station_bytes.iter().sum();
+        assert_eq!(sum, q.stats.total_bytes(), "per-station bytes must sum to the total");
+        assert!(q.stats.station_bytes(2) >= 36, "weights head went through station 2");
     }
 
     #[test]

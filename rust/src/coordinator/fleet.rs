@@ -55,7 +55,7 @@ use crate::config::Config;
 use crate::data::{SceneGen, Tile, Version};
 use crate::detect::Detection;
 use crate::link::{Link, LinkConfig};
-use crate::orbit::{baoyun, beijing_station, GroundStation};
+use crate::orbit::StationNetwork;
 use crate::power::{PowerState, PowerVerdict};
 use crate::runtime::{Model, Runtime};
 use crate::sedna::federated::{self, FedScheduler};
@@ -73,6 +73,7 @@ use super::constellation::{
 };
 use super::downlink::{Delivered, DownlinkItem, DownlinkQueue, ItemKind};
 use super::engine::{trace_onboard, OnboardStage, SceneJob, Stage};
+use super::layout::{mission_timeline, plane_satellite, station_network};
 use super::pipeline::{Pipeline, ScenarioAccumulator, RESULT_HEADER_BYTES};
 use super::router::{reroute, LinkSnapshot, LossTracker};
 use super::TileFate;
@@ -86,7 +87,7 @@ struct FleetShared<'a, 'rt> {
     version: Version,
     scenes: usize,
     horizon: f64,
-    gs: GroundStation,
+    net: StationNetwork,
     /// Shared ground HeavyDet segment — one pipeline, called inline
     /// from shard workers, serialized by the runtime's per-model lock.
     ground_pipe: Pipeline<'rt>,
@@ -160,17 +161,10 @@ impl<'a, 'rt> FleetSat<'a, 'rt> {
         sh.gm.lock().unwrap().report(sh.task, &node, TaskPhase::Running)?;
 
         // one orbital plane per satellite, phased around the
-        // constellation — identical seeding to the thread driver
-        let mut sat = baoyun();
-        sat.name = node.to_string();
-        sat.raan_rad = index as f64 * cfg.constellation.raan_step_rad;
-        sat.phase_rad =
-            index as f64 * std::f64::consts::TAU / cfg.constellation.satellites.max(1) as f64;
-        let timeline = if cfg.constellation.ideal_contact {
-            Timeline::degenerate(&cfg.timing, sh.horizon)
-        } else {
-            Timeline::orbital(&cfg.timing, &sat, &sh.gs, sh.horizon, 10.0)
-        };
+        // constellation — the same `coordinator::layout` helpers as the
+        // thread driver, so the engines cannot drift apart
+        let sat = plane_satellite(cfg, index, &node.to_string());
+        let timeline = mission_timeline(cfg, &sat, &sh.net);
 
         let mut sat_cfg = cfg.clone();
         sat_cfg.seed = cfg.seed.wrapping_add(1 + index as u64 * 101);
@@ -702,7 +696,7 @@ impl<'a, 'rt> FleetSat<'a, 'rt> {
             index: self.index,
             name: self.node.to_string(),
             result,
-            downlink: self.queue.stats,
+            downlink: self.queue.stats.clone(),
             link: self.link.stats,
             windows: self.timeline.n_contacts(),
             contact_s: self.timeline.contact_total_s(),
@@ -747,6 +741,7 @@ pub fn run_fleet(rt: &Runtime, cfg: &Config, version: Version) -> Result<Constel
     cfg.federated.validate()?;
     cfg.fleet.validate()?;
     cfg.validate_cross()?;
+    anyhow::ensure!(!cfg.stations.is_empty(), "stations must list at least one ground station");
     let n_sats = cfg.constellation.satellites.max(1);
     let scenes = cfg.constellation.scenes_per_satellite;
     let metrics = Registry::new();
@@ -789,7 +784,7 @@ pub fn run_fleet(rt: &Runtime, cfg: &Config, version: Version) -> Result<Constel
         version,
         scenes,
         horizon: cfg.constellation.horizon_s,
-        gs: beijing_station(),
+        net: station_network(cfg),
         ground_pipe: Pipeline::new(rt, cfg.clone()),
         registry,
         gm,

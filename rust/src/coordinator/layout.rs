@@ -1,0 +1,178 @@
+//! Config-driven constellation layout, shared by both engines.
+//!
+//! `run_constellation` (thread driver) and `run_fleet` (event machine)
+//! must fly *the same* mission for the same config — the `fleet_parity`
+//! tests pin their reports bit-for-bit.  Before this module each engine
+//! hardcoded its own copy of the satellite seeding (`baoyun()` plus
+//! per-index RAAN/phase spread) and the ground segment
+//! (`beijing_station()`); any drift between the copies would silently
+//! break parity.  Now both call one helper set:
+//!
+//! * [`plane_satellite`] — the per-index orbital-plane seeding;
+//! * [`station_network`] — the ground segment from `cfg.stations`
+//!   (defaults to the single Beijing station, preserving every pre-
+//!   multi-station result);
+//! * [`mission_timeline`] — timeline construction: degenerate for
+//!   `ideal_contact`, the legacy single-station orbital scan for one
+//!   station (bit-identical path), or scheduler-arbitrated per-station
+//!   tracks for a real network.
+
+use crate::config::Config;
+use crate::orbit::{baoyun, GroundStation, Propagator, Satellite, StationNetwork};
+use crate::sim::{scan_spans, Timeline};
+
+use super::scheduler::ContactScheduler;
+
+/// Coarse contact/eclipse scan step both engines have always used.
+pub const CONTACT_SCAN_STEP_S: f64 = 10.0;
+
+/// Satellite `index` of the constellation: the Baoyun platform spread
+/// across orbital planes by `raan_step_rad` and phased evenly around
+/// the orbit.  Exactly the seeding both engines previously inlined.
+pub fn plane_satellite(cfg: &Config, index: usize, name: &str) -> Satellite {
+    let mut sat = baoyun();
+    sat.name = name.to_string();
+    sat.raan_rad = index as f64 * cfg.constellation.raan_step_rad;
+    sat.phase_rad =
+        index as f64 * std::f64::consts::TAU / cfg.constellation.satellites.max(1) as f64;
+    sat
+}
+
+/// The ground segment described by `cfg.stations` (validated non-empty;
+/// the default is the single Beijing station).
+pub fn station_network(cfg: &Config) -> StationNetwork {
+    StationNetwork::new(
+        cfg.stations
+            .iter()
+            .map(|s| GroundStation {
+                name: s.name.clone(),
+                lat_deg: s.lat_deg,
+                lon_deg: s.lon_deg,
+                min_elevation_deg: s.min_elevation_deg,
+            })
+            .collect(),
+    )
+}
+
+/// One satellite's mission timeline over the ground segment.
+///
+/// * `ideal_contact` → the degenerate always-in-contact timeline
+///   (single-satellite scenario parity path).
+/// * one station → the legacy single-station orbital construction,
+///   bit-for-bit identical to the pre-multi-station code.
+/// * N stations → per-station visibility tracks arbitrated by the
+///   greedy [`ContactScheduler`] into a disjoint merged view.
+pub fn mission_timeline<P: Propagator + ?Sized>(
+    cfg: &Config,
+    sat: &P,
+    net: &StationNetwork,
+) -> Timeline {
+    let horizon = cfg.constellation.horizon_s;
+    if cfg.constellation.ideal_contact {
+        return Timeline::degenerate(&cfg.timing, horizon);
+    }
+    if net.len() == 1 {
+        return Timeline::orbital(&cfg.timing, sat, net.station(0), horizon, CONTACT_SCAN_STEP_S);
+    }
+    let tracks = net.contact_tracks(sat, 0.0, horizon, CONTACT_SCAN_STEP_S);
+    let (merged, _stats) = ContactScheduler::greedy().plan(&tracks);
+    let sunlit = scan_spans(|t| !sat.in_eclipse(t), 0.0, horizon, CONTACT_SCAN_STEP_S);
+    Timeline::from_tracks(&cfg.timing, tracks, merged, Some(sunlit), horizon)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::StationConfig;
+    use crate::orbit::beijing_station;
+
+    #[test]
+    fn default_network_is_exactly_the_beijing_station() {
+        let cfg = Config::default();
+        let net = station_network(&cfg);
+        assert_eq!(net.len(), 1);
+        let gs = net.station(0);
+        let legacy = beijing_station();
+        assert_eq!(gs.name, legacy.name);
+        assert_eq!(gs.lat_deg.to_bits(), legacy.lat_deg.to_bits());
+        assert_eq!(gs.lon_deg.to_bits(), legacy.lon_deg.to_bits());
+        assert_eq!(gs.min_elevation_deg.to_bits(), legacy.min_elevation_deg.to_bits());
+    }
+
+    #[test]
+    fn plane_satellite_matches_legacy_inline_seeding() {
+        let mut cfg = Config::default();
+        cfg.constellation.satellites = 4;
+        for index in 0..4 {
+            let sat = plane_satellite(&cfg, index, "sat-x");
+            let mut legacy = baoyun();
+            legacy.name = "sat-x".to_string();
+            legacy.raan_rad = index as f64 * cfg.constellation.raan_step_rad;
+            legacy.phase_rad = index as f64 * std::f64::consts::TAU / 4.0;
+            assert_eq!(sat.name, legacy.name);
+            assert_eq!(sat.altitude_km.to_bits(), legacy.altitude_km.to_bits());
+            assert_eq!(sat.inclination_rad.to_bits(), legacy.inclination_rad.to_bits());
+            assert_eq!(sat.raan_rad.to_bits(), legacy.raan_rad.to_bits());
+            assert_eq!(sat.phase_rad.to_bits(), legacy.phase_rad.to_bits());
+        }
+    }
+
+    #[test]
+    fn single_station_timeline_matches_legacy_orbital_construction() {
+        let mut cfg = Config::default();
+        cfg.constellation.horizon_s = 21_600.0;
+        let sat = plane_satellite(&cfg, 1, "parity");
+        let net = station_network(&cfg);
+        let tl = mission_timeline(&cfg, &sat, &net);
+        let legacy =
+            Timeline::orbital(&cfg.timing, &sat, &beijing_station(), 21_600.0, 10.0);
+        assert_eq!(tl.n_contacts(), legacy.n_contacts());
+        assert_eq!(tl.contact_total_s().to_bits(), legacy.contact_total_s().to_bits());
+        assert_eq!(tl.n_stations(), 1);
+    }
+
+    #[test]
+    fn multi_station_timeline_schedules_disjoint_tagged_windows() {
+        let mut cfg = Config::default();
+        cfg.constellation.horizon_s = 86_400.0;
+        cfg.stations = vec![
+            StationConfig::default(),
+            StationConfig {
+                name: "Kashi".into(),
+                lat_deg: 39.47,
+                lon_deg: 75.98,
+                min_elevation_deg: 10.0,
+            },
+            StationConfig {
+                name: "Sanya".into(),
+                lat_deg: 18.23,
+                lon_deg: 109.5,
+                min_elevation_deg: 10.0,
+            },
+        ];
+        let sat = plane_satellite(&cfg, 0, "multi");
+        let net = station_network(&cfg);
+        let mut tl = mission_timeline(&cfg, &sat, &net);
+        assert_eq!(tl.n_stations(), 3);
+        // the scheduled view sees at least as much contact as any single
+        // station's raw track, and never more than their sum
+        let best: f64 = (0..3)
+            .map(|i| tl.station_contact_total_s(i))
+            .fold(0.0, f64::max);
+        let sum: f64 = (0..3).map(|i| tl.station_contact_total_s(i)).sum();
+        let merged = tl.contact_total_s();
+        assert!(merged >= best - 1e-9, "merged {merged} < best single {best}");
+        assert!(merged <= sum + 1e-9, "merged {merged} exceeds union bound {sum}");
+        // every consumed slice is tagged with a real station and slices
+        // never overlap
+        let slices = tl.remaining_contacts();
+        assert!(!slices.is_empty());
+        for s in &slices {
+            assert!(s.window.station_id < 3);
+            assert!(s.window.duration_s() > 0.0);
+        }
+        for pair in slices.windows(2) {
+            assert!(pair[0].window.los <= pair[1].window.aos);
+        }
+    }
+}

@@ -32,6 +32,11 @@
 //!   machines ([`crate::sim::run_sharded`]): thread count = shard
 //!   count, not satellite count, so missions scale to 10k–100k
 //!   satellites while reproducing the thread driver's report.
+//!
+//! Shared mission geometry: [`layout`] holds the config-driven
+//! constellation seeding + ground-segment construction both execution
+//! paths use, and [`scheduler`] arbitrates multi-station contact
+//! overlap into the disjoint merged track a timeline consumes.
 
 pub mod batcher;
 pub mod cloudfilter;
@@ -39,13 +44,17 @@ pub mod constellation;
 pub mod downlink;
 pub mod engine;
 pub mod fleet;
+pub mod layout;
 pub mod pipeline;
 pub mod router;
+pub mod scheduler;
 
 pub use constellation::{run_constellation, ConstellationReport, SatelliteReport};
 pub use engine::StagedEngine;
 pub use fleet::run_fleet;
+pub use layout::{mission_timeline, plane_satellite, station_network, CONTACT_SCAN_STEP_S};
 pub use pipeline::{Pipeline, ScenarioAccumulator, ScenarioResult};
+pub use scheduler::{ContactScheduler, ContactStrategy, GreedyMaxElevation, SchedulerStats};
 
 /// Where a tile ended up — the router's conservation invariant is that
 /// every split tile is assigned exactly one of these.

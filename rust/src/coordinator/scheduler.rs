@@ -1,0 +1,351 @@
+//! Contact scheduling: which station does a satellite spend battery and
+//! backlog on when several can see it at once?
+//!
+//! Per-station visibility tracks (from
+//! [`crate::orbit::StationNetwork::contact_tracks`]) may overlap in
+//! time, but the spacecraft has one transmitter.  The
+//! [`ContactScheduler`] arbitrates the overlaps *at plan time* — before
+//! the mission runs — producing one sorted, pairwise-disjoint sequence
+//! of station-tagged windows that [`crate::sim::Timeline`] consumes as
+//! its merged view.  Disjointness by construction is what makes the
+//! system-wide invariant "one satellite never transmits to two stations
+//! simultaneously" structural rather than policed.
+//!
+//! The decision rule is pluggable ([`ContactStrategy`]); the default
+//! [`GreedyMaxElevation`] picks, at each pass AOS, the candidate pass
+//! with the highest peak elevation (higher culmination ⇒ shorter slant
+//! range ⇒ better link budget), breaking ties toward the lower station
+//! index for determinism.
+//!
+//! For a single-station network the plan is the identity function on
+//! the track — bit-for-bit, flags included — which is how the default
+//! Beijing-only configuration keeps every pre-refactor report and
+//! golden test unchanged.
+
+use crate::orbit::ContactWindow;
+
+/// A pluggable pass-selection rule.  `choose` receives the non-empty
+/// set of candidate windows open at the decision instant and returns
+/// the index of the one to commit the transmitter to.
+pub trait ContactStrategy {
+    fn choose(&self, candidates: &[&ContactWindow]) -> usize;
+
+    /// Strategy name for reports and bench labels.
+    fn name(&self) -> &'static str;
+}
+
+/// Default strategy: highest peak elevation wins; ties break toward the
+/// lower `station_id` so plans are deterministic.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct GreedyMaxElevation;
+
+impl ContactStrategy for GreedyMaxElevation {
+    fn choose(&self, candidates: &[&ContactWindow]) -> usize {
+        let mut best = 0;
+        for (i, w) in candidates.iter().enumerate().skip(1) {
+            let b = candidates[best];
+            if w.max_elevation_deg > b.max_elevation_deg
+                || (w.max_elevation_deg == b.max_elevation_deg && w.station_id < b.station_id)
+            {
+                best = i;
+            }
+        }
+        best
+    }
+
+    fn name(&self) -> &'static str {
+        "greedy-max-elevation"
+    }
+}
+
+/// Plan accounting, per satellite (sum across a fleet with [`absorb`]).
+///
+/// [`absorb`]: SchedulerStats::absorb
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SchedulerStats {
+    /// Strategy invocations (one per committed plan segment).
+    pub decisions: u64,
+    /// Committed segments whose start was clipped because another
+    /// station's pass held the transmitter at their AOS.
+    pub clipped: u64,
+    /// Windows never used at all: fully covered by segments awarded to
+    /// other stations.
+    pub shadowed: u64,
+    /// Committed segments per station (index = `station_id`).
+    pub per_station_passes: Vec<u64>,
+    /// Committed seconds per station (index = `station_id`).
+    pub per_station_seconds: Vec<f64>,
+}
+
+impl SchedulerStats {
+    fn sized(n_stations: usize) -> SchedulerStats {
+        SchedulerStats {
+            per_station_passes: vec![0; n_stations],
+            per_station_seconds: vec![0.0; n_stations],
+            ..SchedulerStats::default()
+        }
+    }
+
+    /// Fold another satellite's plan accounting into this one.
+    pub fn absorb(&mut self, other: &SchedulerStats) {
+        self.decisions += other.decisions;
+        self.clipped += other.clipped;
+        self.shadowed += other.shadowed;
+        if self.per_station_passes.len() < other.per_station_passes.len() {
+            self.per_station_passes.resize(other.per_station_passes.len(), 0);
+            self.per_station_seconds.resize(other.per_station_seconds.len(), 0.0);
+        }
+        for (i, p) in other.per_station_passes.iter().enumerate() {
+            self.per_station_passes[i] += p;
+        }
+        for (i, s) in other.per_station_seconds.iter().enumerate() {
+            self.per_station_seconds[i] += s;
+        }
+    }
+}
+
+/// Plans the merged contact sequence for one satellite from its
+/// per-station visibility tracks.
+#[derive(Clone, Debug, Default)]
+pub struct ContactScheduler<S: ContactStrategy = GreedyMaxElevation> {
+    strategy: S,
+}
+
+impl ContactScheduler {
+    /// The default scheduler: [`GreedyMaxElevation`].  (A named
+    /// constructor because `Self::default()` cannot infer the strategy
+    /// parameter in expression position.)
+    pub fn greedy() -> ContactScheduler {
+        ContactScheduler { strategy: GreedyMaxElevation }
+    }
+}
+
+impl<S: ContactStrategy> ContactScheduler<S> {
+    pub fn with_strategy(strategy: S) -> ContactScheduler<S> {
+        ContactScheduler { strategy }
+    }
+
+    pub fn strategy_name(&self) -> &'static str {
+        self.strategy.name()
+    }
+
+    /// Arbitrate per-station tracks into one sorted, pairwise-disjoint,
+    /// station-tagged window sequence.
+    ///
+    /// Greedy sweep: maintain a cursor at the end of the last committed
+    /// segment.  At each decision instant (the earliest moment any
+    /// unconsumed window is live past the cursor), hand the strategy
+    /// every window open at that instant; commit the winner from
+    /// `max(aos, cursor)` to its LOS; windows the commitment fully
+    /// covers are shadowed, partially-covered ones compete again for
+    /// their remainder.  A scheduler-clipped start sets `truncated`
+    /// (the clamp-not-a-crossing semantics `ContactWindow` already
+    /// defines).  Every committed segment is strictly positive — the
+    /// zero-length-slice regression the tests pin.
+    pub fn plan(&self, tracks: &[Vec<ContactWindow>]) -> (Vec<ContactWindow>, SchedulerStats) {
+        let mut stats = SchedulerStats::sized(tracks.len());
+        let mut pool: Vec<&ContactWindow> = tracks.iter().flatten().collect();
+        pool.sort_by(|a, b| a.aos.total_cmp(&b.aos).then(a.station_id.cmp(&b.station_id)));
+        let mut used = vec![false; pool.len()];
+        let mut merged: Vec<ContactWindow> = Vec::new();
+        let mut cursor = f64::NEG_INFINITY;
+        let mut i = 0;
+        loop {
+            // skip consumed windows and ones fully shadowed by the plan
+            while i < pool.len() && (used[i] || pool[i].los <= cursor) {
+                if !used[i] {
+                    stats.shadowed += 1;
+                }
+                i += 1;
+            }
+            if i >= pool.len() {
+                break;
+            }
+            // decision instant: earliest moment a remaining window is live
+            let t = pool[i].aos.max(cursor);
+            // every unconsumed window open at t competes (pool is sorted
+            // by AOS, so the scan stops at the first later opener)
+            let mut cand_idx = Vec::new();
+            for (j, w) in pool.iter().enumerate().skip(i) {
+                if w.aos > t {
+                    break;
+                }
+                if !used[j] && w.los > t {
+                    cand_idx.push(j);
+                }
+            }
+            let cands: Vec<&ContactWindow> = cand_idx.iter().map(|&j| pool[j]).collect();
+            stats.decisions += 1;
+            let choice = self.strategy.choose(&cands);
+            debug_assert!(choice < cands.len(), "strategy returned an out-of-range index");
+            let pick_j = cand_idx[choice];
+            used[pick_j] = true;
+            let pick = pool[pick_j];
+            let start = pick.aos.max(cursor);
+            let clipped = start > pick.aos;
+            if clipped {
+                stats.clipped += 1;
+            }
+            stats.per_station_passes[pick.station_id] += 1;
+            stats.per_station_seconds[pick.station_id] += pick.los - start;
+            merged.push(ContactWindow {
+                aos: start,
+                los: pick.los,
+                max_elevation_deg: pick.max_elevation_deg,
+                truncated: pick.truncated || clipped,
+                station_id: pick.station_id,
+            });
+            cursor = pick.los;
+        }
+        (merged, stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn w(aos: f64, los: f64, el: f64, id: usize) -> ContactWindow {
+        ContactWindow { aos, los, max_elevation_deg: el, truncated: false, station_id: id }
+    }
+
+    fn assert_disjoint_sorted_positive(plan: &[ContactWindow]) {
+        for pair in plan.windows(2) {
+            assert!(pair[1].aos >= pair[0].los, "overlap/backtrack: {pair:?}");
+        }
+        for seg in plan {
+            assert!(seg.duration_s() > 0.0, "zero-length segment {seg:?}");
+        }
+    }
+
+    #[test]
+    fn single_station_plan_is_the_identity() {
+        // The bit-parity cornerstone: one station in, the exact same
+        // windows out — boundaries, elevations, and flags untouched.
+        let track = vec![w(100.0, 200.0, 23.0, 0), w(5800.0, 6200.0, 67.5, 0)];
+        let (plan, stats) = ContactScheduler::greedy().plan(&[track.clone()]);
+        assert_eq!(plan, track);
+        assert_eq!(stats.decisions, 2);
+        assert_eq!(stats.clipped, 0);
+        assert_eq!(stats.shadowed, 0);
+        assert_eq!(stats.per_station_passes, vec![2]);
+        assert!((stats.per_station_seconds[0] - 500.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn higher_elevation_station_wins_overlap() {
+        // Station 1 culminates higher during the overlap; it gets the
+        // middle, station 0 keeps its flanks.
+        let tracks = vec![
+            vec![w(100.0, 300.0, 30.0, 0)],
+            vec![w(150.0, 250.0, 80.0, 1)],
+        ];
+        let (plan, stats) = ContactScheduler::greedy().plan(&tracks);
+        assert_disjoint_sorted_positive(&plan);
+        // at t=100 only station 0 is live → commit [100, 300)?  No:
+        // the greedy sweep commits whole passes; station 0 wins its AOS
+        // and holds to LOS.  Station 1's pass is fully shadowed.
+        assert_eq!(plan.len(), 1);
+        assert_eq!(plan[0].station_id, 0);
+        assert_eq!(stats.shadowed, 1);
+
+        // if station 1 is already up at station 0's AOS, elevation wins
+        let tracks = vec![
+            vec![w(100.0, 300.0, 30.0, 0)],
+            vec![w(100.0, 250.0, 80.0, 1)],
+        ];
+        let (plan, stats) = ContactScheduler::greedy().plan(&tracks);
+        assert_disjoint_sorted_positive(&plan);
+        assert_eq!(plan.len(), 2, "{plan:?}");
+        assert_eq!(plan[0].station_id, 1);
+        assert_eq!((plan[0].aos, plan[0].los), (100.0, 250.0));
+        assert_eq!(plan[1].station_id, 0);
+        assert_eq!((plan[1].aos, plan[1].los), (250.0, 300.0));
+        assert!(plan[1].truncated, "clipped start is a clamp, flagged");
+        assert_eq!(stats.clipped, 1);
+        assert_eq!(stats.per_station_passes, vec![1, 1]);
+    }
+
+    #[test]
+    fn ties_break_toward_lower_station_id() {
+        let tracks = vec![
+            vec![w(100.0, 200.0, 45.0, 0)],
+            vec![w(100.0, 200.0, 45.0, 1)],
+        ];
+        let (plan, stats) = ContactScheduler::greedy().plan(&tracks);
+        assert_eq!(plan.len(), 1);
+        assert_eq!(plan[0].station_id, 0);
+        assert_eq!(stats.shadowed, 1);
+    }
+
+    #[test]
+    fn identical_overlaps_never_produce_zero_length_segments() {
+        // Regression: two stations seeing near-identical passes (e.g. a
+        // co-located wide-mask pair) must not emit zero-length slivers
+        // at the shared boundaries.
+        let tracks = vec![
+            vec![w(100.0, 200.0, 50.0, 0), w(6000.0, 6400.0, 20.0, 0)],
+            vec![w(100.0, 200.0, 60.0, 1), w(6000.0, 6500.0, 25.0, 1)],
+        ];
+        let (plan, _) = ContactScheduler::greedy().plan(&tracks);
+        assert_disjoint_sorted_positive(&plan);
+        // first pass: station 1 wins outright, station 0 shadowed (los
+        // equal → remainder empty).  second pass: station 1 again (25 >
+        // 20), station 0's window fully covered.
+        assert_eq!(plan.len(), 2, "{plan:?}");
+        assert!(plan.iter().all(|s| s.station_id == 1));
+    }
+
+    #[test]
+    fn chained_overlaps_hand_off_in_sequence() {
+        // Three stations with staggered passes: each hand-off happens at
+        // the previous LOS, remainders stay positive, nothing is lost.
+        let tracks = vec![
+            vec![w(0.0, 100.0, 40.0, 0)],
+            vec![w(50.0, 150.0, 30.0, 1)],
+            vec![w(120.0, 260.0, 20.0, 2)],
+        ];
+        let (plan, stats) = ContactScheduler::greedy().plan(&tracks);
+        assert_disjoint_sorted_positive(&plan);
+        assert_eq!(plan.len(), 3);
+        assert_eq!(
+            plan.iter().map(|s| (s.station_id, s.aos, s.los)).collect::<Vec<_>>(),
+            vec![(0, 0.0, 100.0), (1, 100.0, 150.0), (2, 150.0, 260.0)]
+        );
+        assert_eq!(stats.clipped, 2, "both hand-offs clip a start");
+        let planned: f64 = plan.iter().map(|s| s.duration_s()).sum();
+        assert!((planned - 260.0).abs() < 1e-12, "full union covered: {planned}");
+    }
+
+    #[test]
+    fn stats_absorb_accumulates_across_satellites() {
+        let tracks_a = vec![vec![w(0.0, 100.0, 40.0, 0)], vec![w(50.0, 150.0, 30.0, 1)]];
+        let tracks_b = vec![vec![w(10.0, 90.0, 10.0, 0)], vec![]];
+        let sched = ContactScheduler::greedy();
+        let (_, sa) = sched.plan(&tracks_a);
+        let (_, sb) = sched.plan(&tracks_b);
+        let mut total = SchedulerStats::default();
+        total.absorb(&sa);
+        total.absorb(&sb);
+        assert_eq!(total.decisions, sa.decisions + sb.decisions);
+        assert_eq!(total.per_station_passes.len(), 2);
+        assert_eq!(total.per_station_passes[0], 2);
+        assert!(
+            (total.per_station_seconds[0]
+                - (sa.per_station_seconds[0] + sb.per_station_seconds[0]))
+                .abs()
+                < 1e-12
+        );
+    }
+
+    #[test]
+    fn empty_and_contactless_tracks_plan_to_nothing() {
+        let (plan, stats) = ContactScheduler::greedy().plan(&[]);
+        assert!(plan.is_empty());
+        assert_eq!(stats.decisions, 0);
+        let (plan, stats) = ContactScheduler::greedy().plan(&[vec![], vec![]]);
+        assert!(plan.is_empty());
+        assert_eq!(stats.decisions, 0);
+        assert_eq!(stats.per_station_passes, vec![0, 0]);
+    }
+}

@@ -2,20 +2,62 @@
 //!
 //! The paper's handover "only occurs during the contact time between the
 //! satellite and the ground" (§IV).  The coordinator therefore needs
-//! satellite↔ground-station visibility as a function of time.  A circular
-//! Keplerian orbit at the Baoyun altitude (500 km, Table 1) reproduces
-//! window cadence and duration to minutes-level fidelity — sufficient
-//! because the offload policy only observes windows + rates (DESIGN.md
-//! substitution table).
+//! satellite↔ground-station visibility as a function of time.  Two
+//! position models live behind the [`Propagator`] trait:
+//!
+//! * [`Satellite`] — a circular Keplerian orbit at the Baoyun altitude
+//!   (500 km, Table 1), which reproduces window cadence and duration to
+//!   minutes-level fidelity — sufficient because the offload policy only
+//!   observes windows + rates (DESIGN.md substitution table).  This is
+//!   the default and keeps every pre-TLE result bit-identical.
+//! * [`TlePropagator`] — parsed two-line elements ([`tle`]) propagated
+//!   with Kepler + J2 secular drift for real-catalog geometry.
+//!
+//! Visibility generalizes from one hardcoded station to a
+//! [`StationNetwork`]: N [`GroundStation`]s with per-station elevation
+//! masks, producing per-station [`ContactWindow`] tracks tagged with
+//! `station_id` for the coordinator's contact scheduler.
 
+pub mod tle;
 mod window;
 
-pub use window::{contact_windows, ContactWindow};
+pub use tle::{Tle, TlePropagator};
+pub use window::{contact_windows, contact_windows_tagged, ContactWindow, StationNetwork};
 
 /// Earth constants (km, s).
 pub const EARTH_RADIUS_KM: f64 = 6371.0;
 pub const MU_KM3_S2: f64 = 398_600.441_8;
 pub const EARTH_ROT_RAD_S: f64 = 7.292_115_9e-5;
+
+/// A position model: anything that can place a spacecraft in ECI
+/// coordinates as a function of mission time.  [`GroundStation`]
+/// visibility, `contact_windows`, and `sim::Timeline` construction are
+/// generic over this, so the circular [`Satellite`] and the TLE-driven
+/// [`TlePropagator`] are interchangeable.
+pub trait Propagator {
+    /// ECI position at time t (seconds since epoch), km.
+    fn position_eci(&self, t: f64) -> [f64; 3];
+
+    /// Orbital period, seconds.
+    fn period_s(&self) -> f64;
+
+    /// Cylindrical Earth-shadow eclipse test (sun fixed at +X ECI; the
+    /// sun moves < 0.05°/h, negligible over mission horizons of hours).
+    fn in_eclipse(&self, t: f64) -> bool {
+        eclipsed(self.position_eci(t))
+    }
+}
+
+/// Shared shadow-cylinder test: eclipsed when on the anti-sun side of
+/// Earth and inside the shadow cylinder of radius `EARTH_RADIUS_KM`.
+fn eclipsed(p: [f64; 3]) -> bool {
+    let along_sun = p[0]; // dot(p, sun_dir) with sun_dir = +X
+    if along_sun >= 0.0 {
+        return false;
+    }
+    let perp2 = dot(&p, &p) - along_sun * along_sun;
+    perp2 < EARTH_RADIUS_KM * EARTH_RADIUS_KM
+}
 
 /// Circular-orbit satellite.
 #[derive(Clone, Debug)]
@@ -58,20 +100,21 @@ impl Satellite {
         ]
     }
 
-    /// Cylindrical Earth-shadow eclipse test with the sun fixed at the
-    /// epoch direction (+X ECI; the sun moves < 0.05°/h, negligible over
-    /// mission horizons of hours).  The satellite is eclipsed when it is
-    /// on the anti-sun side of Earth and inside the shadow cylinder —
-    /// the event source behind the timeline's illumination phases and
-    /// duty-cycled camera/solar modeling.
+    /// Cylindrical Earth-shadow eclipse test — the event source behind
+    /// the timeline's illumination phases and duty-cycled camera/solar
+    /// modeling.  (Also available through [`Propagator::in_eclipse`].)
     pub fn in_eclipse(&self, t: f64) -> bool {
-        let p = self.position_eci(t);
-        let along_sun = p[0]; // dot(p, sun_dir) with sun_dir = +X
-        if along_sun >= 0.0 {
-            return false;
-        }
-        let perp2 = dot(&p, &p) - along_sun * along_sun;
-        perp2 < EARTH_RADIUS_KM * EARTH_RADIUS_KM
+        eclipsed(self.position_eci(t))
+    }
+}
+
+impl Propagator for Satellite {
+    fn position_eci(&self, t: f64) -> [f64; 3] {
+        Satellite::position_eci(self, t)
+    }
+
+    fn period_s(&self) -> f64 {
+        Satellite::period_s(self)
     }
 }
 
@@ -100,7 +143,7 @@ impl GroundStation {
     }
 
     /// Elevation angle of `sat` above this station's horizon at t, radians.
-    pub fn elevation_rad(&self, sat: &Satellite, t: f64) -> f64 {
+    pub fn elevation_rad<P: Propagator + ?Sized>(&self, sat: &P, t: f64) -> f64 {
         let s = sat.position_eci(t);
         let g = self.position_eci(t);
         let rel = [s[0] - g[0], s[1] - g[1], s[2] - g[2]];
@@ -111,13 +154,13 @@ impl GroundStation {
         std::f64::consts::FRAC_PI_2 - cosz.clamp(-1.0, 1.0).acos()
     }
 
-    pub fn visible(&self, sat: &Satellite, t: f64) -> bool {
+    pub fn visible<P: Propagator + ?Sized>(&self, sat: &P, t: f64) -> bool {
         self.elevation_rad(sat, t) >= self.min_elevation_deg.to_radians()
     }
 
     /// Slant range to the satellite, km (drives free-space path loss and
     /// thus the achievable downlink rate).
-    pub fn slant_range_km(&self, sat: &Satellite, t: f64) -> f64 {
+    pub fn slant_range_km<P: Propagator + ?Sized>(&self, sat: &P, t: f64) -> f64 {
         let s = sat.position_eci(t);
         let g = self.position_eci(t);
         norm(&[s[0] - g[0], s[1] - g[1], s[2] - g[2]])
@@ -260,6 +303,22 @@ mod tests {
             if sat.position_eci(t)[0] >= 0.0 {
                 assert!(!sat.in_eclipse(t), "sun-side eclipse at t={t}");
             }
+        }
+    }
+
+    #[test]
+    fn propagator_trait_matches_inherent_satellite_model() {
+        // the trait path is what generic code (windows, timelines) uses;
+        // it must be the inherent model verbatim, bit-for-bit
+        fn via_trait<P: Propagator>(p: &P, t: f64) -> ([f64; 3], f64, bool) {
+            (p.position_eci(t), p.period_s(), p.in_eclipse(t))
+        }
+        let sat = baoyun();
+        for t in [0.0, 977.0, 5000.0, 86_399.0] {
+            let (pos, period, ecl) = via_trait(&sat, t);
+            assert_eq!(pos, sat.position_eci(t));
+            assert_eq!(period.to_bits(), sat.period_s().to_bits());
+            assert_eq!(ecl, sat.in_eclipse(t));
         }
     }
 

@@ -1,8 +1,9 @@
-//! Contact-window computation: coarse scan + bisection refinement.
+//! Contact-window computation: coarse scan + bisection refinement,
+//! generalized over [`Propagator`]s and multi-station networks.
 
-use super::{GroundStation, Satellite};
+use super::{GroundStation, Propagator};
 
-/// One AOS→LOS visibility interval.
+/// One AOS→LOS visibility interval, tagged with the station that sees it.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ContactWindow {
     /// Acquisition of signal, seconds since epoch.
@@ -14,10 +15,14 @@ pub struct ContactWindow {
     /// elevation mask.
     pub max_elevation_deg: f64,
     /// True when the scan clipped this pass at a boundary of `[t0, t1]`
-    /// — already open at `t0` or still open at `t1`.  The clipped end is
-    /// a clamp time, not a bisected horizon crossing, so `duration_s`
-    /// understates the physical pass.
+    /// — already open at `t0` or still open at `t1` — or when the
+    /// contact scheduler clipped it against another station's pass.  The
+    /// clipped end is a clamp time, not a bisected horizon crossing, so
+    /// `duration_s` understates the physical pass.
     pub truncated: bool,
+    /// Index of the observing station in its [`StationNetwork`] (0 for
+    /// the single-station legacy path and stub timelines).
+    pub station_id: usize,
 }
 
 impl ContactWindow {
@@ -30,18 +35,33 @@ impl ContactWindow {
     }
 }
 
-/// Compute all contact windows in [t0, t1].
+/// Compute all contact windows in [t0, t1] for one station, tagged with
+/// `station_id: 0` (the single-station legacy path).
 ///
 /// Coarse scan at `step_s` (10 s catches every >20 s pass at LEO angular
-/// rates), then bisect each boundary to ±0.1 s.
-pub fn contact_windows(
-    sat: &Satellite,
+/// rates), then bisect each boundary to within [`bisect_tolerance`].
+pub fn contact_windows<P: Propagator + ?Sized>(
+    sat: &P,
     gs: &GroundStation,
     t0: f64,
     t1: f64,
     step_s: f64,
 ) -> Vec<ContactWindow> {
+    contact_windows_tagged(sat, gs, 0, t0, t1, step_s)
+}
+
+/// [`contact_windows`] with an explicit station tag — the per-station
+/// building block [`StationNetwork::contact_tracks`] fans out over.
+pub fn contact_windows_tagged<P: Propagator + ?Sized>(
+    sat: &P,
+    gs: &GroundStation,
+    station_id: usize,
+    t0: f64,
+    t1: f64,
+    step_s: f64,
+) -> Vec<ContactWindow> {
     assert!(t1 > t0 && step_s > 0.0);
+    let tol = bisect_tolerance(step_s);
     let mut windows = Vec::new();
     let mut t = t0;
     let mut prev_vis = gs.visible(sat, t0);
@@ -53,11 +73,11 @@ pub fn contact_windows(
         let tn = (t + step_s).min(t1);
         let vis = gs.visible(sat, tn);
         if vis && !prev_vis {
-            aos = Some(bisect(sat, gs, t, tn));
+            aos = Some(bisect(sat, gs, t, tn, tol));
         } else if !vis && prev_vis {
-            let los = bisect(sat, gs, t, tn);
+            let los = bisect(sat, gs, t, tn, tol);
             if let Some(a) = aos.take() {
-                windows.push(finish(sat, gs, a, los, clipped_at_start));
+                windows.push(finish(sat, gs, station_id, a, los, clipped_at_start));
                 clipped_at_start = false;
             }
         }
@@ -66,15 +86,34 @@ pub fn contact_windows(
     }
     if let Some(a) = aos {
         // still visible at t1: los = t1 is a clamp, not a real LOS
-        windows.push(finish(sat, gs, a, t1, true));
+        windows.push(finish(sat, gs, station_id, a, t1, true));
     }
     windows
 }
 
-fn bisect(sat: &Satellite, gs: &GroundStation, mut lo: f64, mut hi: f64) -> f64 {
+/// Bisection stopping width for a coarse scan step of `step_s`.
+///
+/// Historically a fixed 0.1 s — fine for 10 s steps, but a sub-second
+/// scan (fast TLE passes over a high-mask station) would then refine
+/// boundaries *coarser* than its own sampling grid.  Scaling as
+/// `step_s / 100` keeps refinement two orders tighter than the scan
+/// while the default 10 s step still yields exactly 0.1 (the division
+/// rounds to the same f64 as the old literal, preserving every
+/// pre-refactor boundary bit-for-bit).
+fn bisect_tolerance(step_s: f64) -> f64 {
+    (step_s / 100.0).clamp(1e-6, 0.1)
+}
+
+fn bisect<P: Propagator + ?Sized>(
+    sat: &P,
+    gs: &GroundStation,
+    mut lo: f64,
+    mut hi: f64,
+    tol: f64,
+) -> f64 {
     // invariant: visibility differs at lo and hi
     let lo_vis = gs.visible(sat, lo);
-    while hi - lo > 0.1 {
+    while hi - lo > tol {
         let mid = 0.5 * (lo + hi);
         if gs.visible(sat, mid) == lo_vis {
             lo = mid;
@@ -85,9 +124,10 @@ fn bisect(sat: &Satellite, gs: &GroundStation, mut lo: f64, mut hi: f64) -> f64 
     0.5 * (lo + hi)
 }
 
-fn finish(
-    sat: &Satellite,
+fn finish<P: Propagator + ?Sized>(
+    sat: &P,
     gs: &GroundStation,
+    station_id: usize,
     aos: f64,
     los: f64,
     truncated: bool,
@@ -98,13 +138,71 @@ fn finish(
         let t = aos + (los - aos) * i as f64 / n as f64;
         max_el = max_el.max(gs.elevation_rad(sat, t).to_degrees());
     }
-    ContactWindow { aos, los, max_elevation_deg: max_el, truncated }
+    ContactWindow { aos, los, max_elevation_deg: max_el, truncated, station_id }
+}
+
+/// A configurable set of ground stations with per-station elevation
+/// masks.  `station_id` everywhere in the system is an index into this
+/// network's station list.
+#[derive(Clone, Debug)]
+pub struct StationNetwork {
+    stations: Vec<GroundStation>,
+}
+
+impl StationNetwork {
+    /// A network must have at least one station (the degenerate
+    /// zero-station mission has no downlink at all and is rejected at
+    /// config validation too).
+    pub fn new(stations: Vec<GroundStation>) -> StationNetwork {
+        assert!(!stations.is_empty(), "a station network needs at least one station");
+        StationNetwork { stations }
+    }
+
+    /// The single-station legacy shape.
+    pub fn single(gs: GroundStation) -> StationNetwork {
+        StationNetwork::new(vec![gs])
+    }
+
+    pub fn len(&self) -> usize {
+        self.stations.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.stations.is_empty()
+    }
+
+    pub fn stations(&self) -> &[GroundStation] {
+        &self.stations
+    }
+
+    pub fn station(&self, id: usize) -> &GroundStation {
+        &self.stations[id]
+    }
+
+    /// Per-station contact tracks over `[t0, t1]`: `tracks[i]` holds the
+    /// windows station `i` sees, each tagged `station_id = i`.  Tracks
+    /// from different stations may overlap in time — arbitrating who
+    /// gets the transmitter is the contact scheduler's job, not the
+    /// geometry layer's.
+    pub fn contact_tracks<P: Propagator + ?Sized>(
+        &self,
+        sat: &P,
+        t0: f64,
+        t1: f64,
+        step_s: f64,
+    ) -> Vec<Vec<ContactWindow>> {
+        self.stations
+            .iter()
+            .enumerate()
+            .map(|(id, gs)| contact_windows_tagged(sat, gs, id, t0, t1, step_s))
+            .collect()
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::orbit::{baoyun, beijing_station};
+    use crate::orbit::{baoyun, beijing_station, EARTH_ROT_RAD_S};
 
     const DAY: f64 = 86_400.0;
 
@@ -127,6 +225,7 @@ mod tests {
         }
         for win in &w {
             assert!(win.duration_s() > 0.0);
+            assert_eq!(win.station_id, 0, "legacy path tags station 0");
         }
     }
 
@@ -194,5 +293,144 @@ mod tests {
         assert!(last.truncated, "pass open at t1 must be flagged");
         assert_eq!(last.los, mid, "los clamps to the scan end");
         assert!((last.aos - w0.aos).abs() < 0.3);
+    }
+
+    /// A synthetic propagator with exactly controllable visibility: it
+    /// parks directly overhead the reference station during
+    /// `[on_at, off_at)` (elevation 90°) and at the antipode otherwise
+    /// (elevation −90°) — so AOS/LOS are knowable to machine precision
+    /// and bisection accuracy can be asserted exactly.
+    struct SquareWavePass {
+        on_at: f64,
+        off_at: f64,
+    }
+
+    impl Propagator for SquareWavePass {
+        fn position_eci(&self, t: f64) -> [f64; 3] {
+            let g = beijing_station().position_eci(t);
+            let k = if t >= self.on_at && t < self.off_at { 2.0 } else { -2.0 };
+            [k * g[0], k * g[1], k * g[2]]
+        }
+
+        fn period_s(&self) -> f64 {
+            std::f64::consts::TAU / EARTH_ROT_RAD_S
+        }
+    }
+
+    #[test]
+    fn bisection_refines_to_tolerance_of_true_edges() {
+        let gs = beijing_station();
+        // edges deliberately off the coarse grid
+        let sat = SquareWavePass { on_at: 95.3, off_at: 173.7 };
+        for (step, tol) in [(10.0, 0.1), (2.0, 0.02), (0.5, 0.005)] {
+            let w = contact_windows(&sat, &gs, 0.0, 400.0, step);
+            assert_eq!(w.len(), 1, "step {step}: {w:?}");
+            assert!(!w[0].truncated);
+            assert!(
+                (w[0].aos - 95.3).abs() <= tol,
+                "step {step}: aos {} vs 95.3 (tol {tol})",
+                w[0].aos
+            );
+            assert!(
+                (w[0].los - 173.7).abs() <= tol,
+                "step {step}: los {} vs 173.7 (tol {tol})",
+                w[0].los
+            );
+        }
+    }
+
+    #[test]
+    fn edges_on_exact_step_boundaries() {
+        // AOS/LOS landing exactly on coarse-scan sample points: the scan
+        // samples visibility half-open (visible at 100, dark at 200), so
+        // the transition is still bracketed and bisected to tolerance.
+        let gs = beijing_station();
+        let sat = SquareWavePass { on_at: 100.0, off_at: 200.0 };
+        let w = contact_windows(&sat, &gs, 0.0, 400.0, 10.0);
+        assert_eq!(w.len(), 1);
+        assert!((w[0].aos - 100.0).abs() <= 0.1, "aos {}", w[0].aos);
+        assert!((w[0].los - 200.0).abs() <= 0.1, "los {}", w[0].los);
+        assert!(!w[0].truncated);
+
+        // scan starting exactly at AOS: clamp semantics, flagged truncated
+        let w = contact_windows(&sat, &gs, 100.0, 400.0, 10.0);
+        assert_eq!(w.len(), 1);
+        assert_eq!(w[0].aos, 100.0);
+        assert!(w[0].truncated);
+
+        // scan ending exactly at LOS: the sample at t1 = 200 is already
+        // dark (half-open window), so the LOS is a real bisected edge
+        let w = contact_windows(&sat, &gs, 0.0, 200.0, 10.0);
+        assert_eq!(w.len(), 1);
+        assert!((w[0].los - 200.0).abs() <= 0.1, "los {}", w[0].los);
+    }
+
+    #[test]
+    fn tolerance_scales_with_step_but_keeps_legacy_default() {
+        assert_eq!(bisect_tolerance(10.0), 0.1, "default step keeps the historical 0.1 s");
+        assert_eq!(bisect_tolerance(1000.0), 0.1, "capped above");
+        assert!((bisect_tolerance(1.0) - 0.01).abs() < 1e-15);
+        assert_eq!(bisect_tolerance(1e-9), 1e-6, "floored below");
+    }
+
+    #[test]
+    fn network_tracks_are_tagged_and_positive() {
+        // Beijing plus a co-located wide-mask station: every Beijing
+        // window nests strictly inside a station-1 window, so the two
+        // tracks overlap heavily — the geometry layer must still report
+        // both, tagged, each with positive duration.
+        let sat = baoyun();
+        let wide = GroundStation {
+            name: "Beijing-wide".into(),
+            lat_deg: 39.96,
+            lon_deg: 116.35,
+            min_elevation_deg: 5.0,
+        };
+        let net = StationNetwork::new(vec![beijing_station(), wide]);
+        assert_eq!(net.len(), 2);
+        let tracks = net.contact_tracks(&sat, 0.0, DAY, 10.0);
+        assert_eq!(tracks.len(), 2);
+        for (id, track) in tracks.iter().enumerate() {
+            assert!(!track.is_empty(), "station {id} sees no passes");
+            for w in track {
+                assert_eq!(w.station_id, id);
+                assert!(w.duration_s() > 0.0, "zero-length window {w:?}");
+            }
+        }
+        // the wider mask sees the satellite for strictly longer
+        let t0: f64 = tracks[0].iter().map(ContactWindow::duration_s).sum();
+        let t1: f64 = tracks[1].iter().map(ContactWindow::duration_s).sum();
+        assert!(t1 > t0, "wide mask {t1} s should exceed 10° mask {t0} s");
+        // and every 10°-mask pass is covered by some 5°-mask pass
+        for w in &tracks[0] {
+            let mid = 0.5 * (w.aos + w.los);
+            assert!(
+                tracks[1].iter().any(|v| v.contains(mid)),
+                "no station-1 window covers t={mid}"
+            );
+        }
+    }
+
+    #[test]
+    fn tle_propagator_produces_plausible_windows() {
+        // A TLE for the Baoyun-like SSO plane drops into the same scan.
+        let sat = baoyun();
+        let windows = contact_windows(&sat, &beijing_station(), 0.0, DAY, 10.0);
+        let tle_sat = crate::orbit::TlePropagator::new(
+            &crate::orbit::Tle::parse(
+                "ISS",
+                "1 25544U 98067A   08264.51782528 -.00002182  00000-0 -11606-4 0  2927",
+                "2 25544  51.6416 247.4627 0006703 130.5360 325.0288 15.72125391563537",
+            )
+            .unwrap(),
+        );
+        let tle_windows = contact_windows(&tle_sat, &beijing_station(), 0.0, DAY, 10.0);
+        // both orbits pass over a 40°N station a handful of times a day
+        assert!((1..=12).contains(&windows.len()));
+        assert!((1..=12).contains(&tle_windows.len()), "TLE passes {}", tle_windows.len());
+        for w in &tle_windows {
+            // grazing passes can be brief; the ceiling is what matters
+            assert!(w.duration_s() > 0.0 && w.duration_s() < 900.0, "duration {}", w.duration_s());
+        }
     }
 }

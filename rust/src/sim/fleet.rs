@@ -393,6 +393,7 @@ impl StubSat {
                 los: (aos + pass).min(horizon_s),
                 max_elevation_deg: 45.0,
                 truncated: aos + pass > horizon_s,
+                station_id: 0,
             });
             aos += period;
         }

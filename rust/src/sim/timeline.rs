@@ -26,7 +26,7 @@
 //! double-spend window airtime.
 
 use crate::config::TimingConfig;
-use crate::orbit::{ContactWindow, GroundStation, Satellite};
+use crate::orbit::{ContactWindow, GroundStation, Propagator};
 
 use super::MissionClock;
 
@@ -119,8 +119,19 @@ pub struct ContactSlice {
 
 /// One satellite's mission timeline.
 ///
-/// Contact consumption is tracked by `consumed_to` alone: windows are
-/// sorted by AOS and pairwise disjoint (`next.aos >= prev.los`), so a
+/// Contact geometry lives in two layers:
+///
+/// * `tracks` — per-station window lists (index = `station_id`), the raw
+///   visibility each station has of this satellite.  Tracks from
+///   different stations may overlap in time.
+/// * `contacts` — the *scheduled merged view*: one sorted, pairwise
+///   disjoint sequence of tagged windows (for a single station this is
+///   the track verbatim; for a multi-station network it is the contact
+///   scheduler's arbitration of the overlaps).  All consumption
+///   (`due_contacts`) and the indexed lookups run against this view.
+///
+/// Contact consumption is tracked by `consumed_to` alone: merged windows
+/// are sorted by AOS and pairwise disjoint (`next.aos >= prev.los`), so a
 /// window is fully spent exactly when `los <= consumed_to`, and the
 /// resume point is an O(log windows) `partition_point` query instead of
 /// a stored linear cursor — what lets a 100k-satellite fleet step
@@ -129,6 +140,9 @@ pub struct ContactSlice {
 pub struct Timeline {
     clock: MissionClock,
     timing: TimingConfig,
+    /// Per-station visibility tracks (index = `station_id`).
+    tracks: Vec<Vec<ContactWindow>>,
+    /// Scheduled merged view: sorted, disjoint, station-tagged.
     contacts: Vec<ContactWindow>,
     /// Contact time at or before this instant has been handed out.
     consumed_to: f64,
@@ -148,16 +162,19 @@ impl Timeline {
             los: horizon_s,
             max_elevation_deg: 90.0,
             truncated: false,
+            station_id: 0,
         }];
         Timeline::from_parts(timing, contacts, None, horizon_s)
     }
 
-    /// Timeline for one orbital plane over a ground station: contact
-    /// windows from visibility geometry, illumination phases from the
-    /// cylindrical Earth-shadow model.
-    pub fn orbital(
+    /// Timeline for one orbital plane over a single ground station:
+    /// contact windows from visibility geometry, illumination phases
+    /// from the cylindrical Earth-shadow model.  (Multi-station
+    /// timelines go through [`Timeline::from_tracks`] with a scheduler-
+    /// arbitrated merged view.)
+    pub fn orbital<P: Propagator + ?Sized>(
         timing: &TimingConfig,
-        sat: &Satellite,
+        sat: &P,
         gs: &GroundStation,
         horizon_s: f64,
         step_s: f64,
@@ -173,16 +190,42 @@ impl Timeline {
     /// pairwise disjoint (`next.aos >= prev.los`), and `sunlit` spans
     /// likewise (use `None` for always-sunlit), matching what
     /// [`crate::orbit::contact_windows`] / [`scan_spans`] produce —
-    /// the invariants the indexed lookups rely on.
+    /// the invariants the indexed lookups rely on.  The windows double
+    /// as the single per-station track (`station_id` 0 by convention).
     pub fn from_parts(
         timing: &TimingConfig,
         contacts: Vec<ContactWindow>,
         sunlit: Option<Vec<Span>>,
         horizon_s: f64,
     ) -> Timeline {
+        Timeline::from_tracks(timing, vec![contacts.clone()], contacts, sunlit, horizon_s)
+    }
+
+    /// The multi-station constructor: per-station visibility `tracks`
+    /// (index = `station_id`, overlaps allowed *between* tracks) plus
+    /// the scheduler's `merged` arbitration — sorted, pairwise disjoint,
+    /// each window tagged with the station it was awarded to.  The
+    /// merged view is what `due_contacts` consumes; disjointness is what
+    /// makes "one satellite never transmits to two stations at once"
+    /// true by construction.
+    pub fn from_tracks(
+        timing: &TimingConfig,
+        tracks: Vec<Vec<ContactWindow>>,
+        merged: Vec<ContactWindow>,
+        sunlit: Option<Vec<Span>>,
+        horizon_s: f64,
+    ) -> Timeline {
         debug_assert!(
-            contacts.windows(2).all(|w| w[1].aos >= w[0].los),
-            "contact windows must be sorted and disjoint"
+            merged.windows(2).all(|w| w[1].aos >= w[0].los),
+            "merged contact windows must be sorted and disjoint"
+        );
+        debug_assert!(
+            merged.iter().all(|w| w.station_id < tracks.len().max(1)),
+            "merged window tagged with an unknown station"
+        );
+        debug_assert!(
+            tracks.iter().all(|t| t.windows(2).all(|w| w[1].aos >= w[0].los)),
+            "each per-station track must be sorted and disjoint"
         );
         if let Some(spans) = &sunlit {
             debug_assert!(
@@ -193,7 +236,8 @@ impl Timeline {
         Timeline {
             clock: MissionClock::new(),
             timing: timing.clone(),
-            contacts,
+            tracks,
+            contacts: merged,
             consumed_to: 0.0,
             sunlit,
             horizon_s,
@@ -217,12 +261,32 @@ impl Timeline {
         self.clock.advance(dt_s)
     }
 
+    /// Windows in the scheduled merged view.
     pub fn n_contacts(&self) -> usize {
         self.contacts.len()
     }
 
+    /// Seconds of scheduled contact (merged view).
     pub fn contact_total_s(&self) -> f64 {
         self.contacts.iter().map(|w| w.duration_s()).sum()
+    }
+
+    /// Number of per-station tracks (1 for all single-station paths).
+    pub fn n_stations(&self) -> usize {
+        self.tracks.len()
+    }
+
+    /// Raw visibility track for one station (before scheduling).
+    pub fn station_contacts(&self, station_id: usize) -> &[ContactWindow] {
+        &self.tracks[station_id]
+    }
+
+    /// Seconds of raw visibility for one station.  Across stations these
+    /// may sum to more than [`Timeline::contact_total_s`]: overlap the
+    /// scheduler arbitrated away is visible here but not in the merged
+    /// view.
+    pub fn station_contact_total_s(&self, station_id: usize) -> f64 {
+        self.tracks[station_id].iter().map(|w| w.duration_s()).sum()
     }
 
     pub fn in_contact(&self, t: f64) -> bool {
@@ -294,6 +358,7 @@ impl Timeline {
                         // slices inherit the source pass's flag; being a
                         // mid-pass clip is what `closes_pass` expresses
                         truncated: w.truncated,
+                        station_id: w.station_id,
                     },
                     closes_pass,
                 });
@@ -408,6 +473,7 @@ mod tests {
             los,
             max_elevation_deg: 45.0,
             truncated: false,
+            station_id: 0,
         };
         Timeline::from_parts(&timing(), vec![w(100.0, 200.0), w(200.0, 300.0)], None, 400.0)
     }
@@ -477,6 +543,7 @@ mod tests {
             los,
             max_elevation_deg: 30.0,
             truncated: false,
+            station_id: 0,
         };
         let contacts: Vec<ContactWindow> =
             (0..200).map(|i| w(i as f64 * 100.0, i as f64 * 100.0 + 40.0)).collect();
@@ -503,6 +570,57 @@ mod tests {
             total += s.window.duration_s();
         }
         assert!((total - 200.0 * 40.0).abs() < 1e-9, "consumed {total} of 8000 s");
+    }
+
+    #[test]
+    fn from_tracks_merged_view_keeps_station_tags_and_tracks() {
+        // Two stations with overlapping visibility; the (pre-arbitrated)
+        // merged view hands station 1 the middle of station 0's pass.
+        let w = |aos: f64, los: f64, id: usize| ContactWindow {
+            aos,
+            los,
+            max_elevation_deg: 40.0,
+            truncated: false,
+            station_id: id,
+        };
+        let tracks = vec![
+            vec![w(100.0, 300.0, 0), w(500.0, 600.0, 0)],
+            vec![w(150.0, 250.0, 1)],
+        ];
+        let merged =
+            vec![w(100.0, 150.0, 0), w(150.0, 250.0, 1), w(250.0, 300.0, 0), w(500.0, 600.0, 0)];
+        let mut tl = Timeline::from_tracks(&timing(), tracks, merged, None, 1000.0);
+
+        assert_eq!(tl.n_stations(), 2);
+        assert_eq!(tl.station_contacts(0).len(), 2);
+        assert_eq!(tl.station_contacts(1).len(), 1);
+        assert!((tl.station_contact_total_s(0) - 300.0).abs() < 1e-12);
+        assert!((tl.station_contact_total_s(1) - 100.0).abs() < 1e-12);
+        // raw visibility exceeds the scheduled merged time: the overlap
+        // was arbitrated away, not double-counted
+        assert!((tl.contact_total_s() - 300.0).abs() < 1e-12);
+        assert_eq!(tl.n_contacts(), 4);
+
+        // consumption walks the merged view, slices keep their tags and
+        // never overlap in time (pairwise — the no-double-transmit
+        // invariant at the timeline level)
+        let mut slices = Vec::new();
+        for t in [120.0, 200.0, 275.0, 1000.0] {
+            slices.extend(tl.due_contacts(t));
+        }
+        assert_eq!(slices.len(), 7, "{slices:?}");
+        for pair in slices.windows(2) {
+            assert!(pair[0].window.los <= pair[1].window.aos, "overlapping slices {pair:?}");
+        }
+        let by_station = |id: usize| -> f64 {
+            slices
+                .iter()
+                .filter(|s| s.window.station_id == id)
+                .map(|s| s.window.duration_s())
+                .sum()
+        };
+        assert!((by_station(0) - 200.0).abs() < 1e-9);
+        assert!((by_station(1) - 100.0).abs() < 1e-9);
     }
 
     #[test]

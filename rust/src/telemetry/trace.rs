@@ -113,6 +113,9 @@ pub enum TracePayload {
     None,
     /// Bytes moved (downlink slices) or lost (drops).
     Bytes(u64),
+    /// Bytes moved through a specific ground station (tagged downlink
+    /// slices in a multi-station mission).
+    StationBytes { station: u32, bytes: u64 },
     /// Battery state of charge, integer percent.
     Soc(i64),
     /// Tile / batch count.
@@ -134,13 +137,17 @@ pub struct TraceRecord {
 }
 
 impl TraceRecord {
-    fn payload_pair(&self) -> Option<(&'static str, Json)> {
+    fn payload_pairs(&self, pairs: &mut Vec<(&'static str, Json)>) {
         match self.payload {
-            TracePayload::None => None,
-            TracePayload::Bytes(b) => Some(("bytes", Json::num(b as f64))),
-            TracePayload::Soc(p) => Some(("soc_pct", Json::num(p as f64))),
-            TracePayload::Batch(n) => Some(("batch", Json::num(n as f64))),
-            TracePayload::Verdict(v) => Some(("verdict", Json::str(v.name()))),
+            TracePayload::None => {}
+            TracePayload::Bytes(b) => pairs.push(("bytes", Json::num(b as f64))),
+            TracePayload::StationBytes { station, bytes } => {
+                pairs.push(("bytes", Json::num(bytes as f64)));
+                pairs.push(("station", Json::num(station as f64)));
+            }
+            TracePayload::Soc(p) => pairs.push(("soc_pct", Json::num(p as f64))),
+            TracePayload::Batch(n) => pairs.push(("batch", Json::num(n as f64))),
+            TracePayload::Verdict(v) => pairs.push(("verdict", Json::str(v.name()))),
         }
     }
 
@@ -151,9 +158,7 @@ impl TraceRecord {
             ("t0", Json::num(self.t_start)),
             ("t1", Json::num(self.t_end)),
         ];
-        if let Some(p) = self.payload_pair() {
-            pairs.push(p);
-        }
+        self.payload_pairs(&mut pairs);
         Json::obj(pairs)
     }
 
@@ -161,9 +166,7 @@ impl TraceRecord {
     /// one `tid` track per satellite.
     fn to_chrome(&self) -> Json {
         let mut args = Vec::new();
-        if let Some(p) = self.payload_pair() {
-            args.push(p);
-        }
+        self.payload_pairs(&mut args);
         Json::obj(vec![
             ("name", Json::str(self.kind.name())),
             ("cat", Json::str("mission")),
@@ -388,13 +391,17 @@ mod tests {
     fn jsonl_format_is_stable() {
         let sink = Arc::new(TraceSink::new(1, 8));
         let t = sink.tracer(0, 2);
-        t.span(SpanKind::DownlinkSlice, 100.0, 160.5, TracePayload::Bytes(4096));
+        t.span(SpanKind::DownlinkSlice, 100.0, 160.5, {
+            TracePayload::StationBytes { station: 1, bytes: 4096 }
+        });
         t.event(SpanKind::Shed, 200.0, TracePayload::Soc(19));
+        t.event(SpanKind::Drop, 300.0, TracePayload::Bytes(512));
         let log = sink.merge();
         assert_eq!(
             log.to_jsonl(),
-            "{\"bytes\":4096,\"kind\":\"downlink_slice\",\"sat\":2,\"t0\":100,\"t1\":160.5}\n\
-             {\"kind\":\"shed\",\"sat\":2,\"soc_pct\":19,\"t0\":200,\"t1\":200}\n"
+            "{\"bytes\":4096,\"kind\":\"downlink_slice\",\"sat\":2,\"station\":1,\"t0\":100,\"t1\":160.5}\n\
+             {\"kind\":\"shed\",\"sat\":2,\"soc_pct\":19,\"t0\":200,\"t1\":200}\n\
+             {\"bytes\":512,\"kind\":\"drop\",\"sat\":2,\"t0\":300,\"t1\":300}\n"
         );
     }
 

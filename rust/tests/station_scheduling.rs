@@ -1,0 +1,297 @@
+//! Multi-station contact plane: scheduling + byte-attribution invariants.
+//!
+//! Two invariant families, explicitly gated by `ci.sh`:
+//!
+//! * **Structural** (artifact-free): the planned merged track is sorted,
+//!   pairwise-disjoint, station-tagged, and free of zero-length slices —
+//!   so "one satellite never transmits to two stations simultaneously"
+//!   holds by construction, for circular and TLE-propagated geometry
+//!   alike.  The default single-station configuration plans to the
+//!   identity and keeps the legacy timeline bit-for-bit.
+//! * **Accounting** (engine runs, skipped without `artifacts/`): every
+//!   satellite's per-station delivered bytes sum to its
+//!   `DownlinkStats` total in both constellation engines, the two
+//!   engines agree on the attribution, and the fleet engine's
+//!   attribution is invariant under the shard count.
+
+use tiansuan::config::{Config, StationConfig};
+use tiansuan::coordinator::downlink::{DownlinkItem, DownlinkQueue, ItemKind};
+use tiansuan::coordinator::{
+    mission_timeline, plane_satellite, run_constellation, run_fleet, station_network,
+    ConstellationReport, ContactScheduler, CONTACT_SCAN_STEP_S,
+};
+use tiansuan::data::Version;
+use tiansuan::link::{Link, LinkConfig, LossProfile};
+use tiansuan::orbit::{beijing_station, ContactWindow, Tle, TlePropagator};
+use tiansuan::runtime::Runtime;
+use tiansuan::sim::Timeline;
+
+fn rt() -> Option<Runtime> {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    if !std::path::Path::new(dir).join("manifest.json").exists() {
+        eprintln!("skipping: artifacts/ not built");
+        return None;
+    }
+    Some(Runtime::open(dir).unwrap())
+}
+
+fn station(name: &str, lat: f64, lon: f64, mask: f64) -> StationConfig {
+    StationConfig { name: name.into(), lat_deg: lat, lon_deg: lon, min_elevation_deg: mask }
+}
+
+/// Beijing plus two well-separated Chinese stations — a ground segment
+/// with both disjoint passes and genuine overlap windows.
+fn three_station_cfg() -> Config {
+    let mut cfg = Config::default();
+    cfg.stations = vec![
+        StationConfig::default(),
+        station("Kashi", 39.47, 75.98, 10.0),
+        station("Sanya", 18.23, 109.5, 10.0),
+    ];
+    cfg
+}
+
+fn assert_disjoint_tagged(windows: &[ContactWindow], n_stations: usize, ctx: &str) {
+    for w in windows {
+        assert!(w.station_id < n_stations, "{ctx}: untagged window {w:?}");
+        assert!(w.duration_s() > 0.0, "{ctx}: zero-length slice {w:?}");
+    }
+    for pair in windows.windows(2) {
+        assert!(
+            pair[1].aos >= pair[0].los,
+            "{ctx}: overlapping commitments {:?} / {:?} — one transmitter, two stations",
+            pair[0],
+            pair[1]
+        );
+    }
+}
+
+#[test]
+fn planned_track_never_overlaps_for_any_geometry() {
+    let cfg = three_station_cfg();
+    let net = station_network(&cfg);
+    for index in 0..4 {
+        let sat = plane_satellite(&cfg, index, &format!("sat-{index}"));
+        let tracks = net.contact_tracks(&sat, 0.0, 86_400.0, CONTACT_SCAN_STEP_S);
+        let (plan, stats) = ContactScheduler::greedy().plan(&tracks);
+        assert_disjoint_tagged(&plan, 3, &format!("sat {index}"));
+        assert!(!plan.is_empty(), "sat {index}: a day over 3 stations must have passes");
+        assert_eq!(stats.decisions as usize, plan.len());
+        // the plan covers at least as much airtime as the best single
+        // station and at most the raw union
+        let best = tracks
+            .iter()
+            .map(|t| t.iter().map(|w| w.duration_s()).sum::<f64>())
+            .fold(0.0, f64::max);
+        let sum: f64 = tracks.iter().flatten().map(|w| w.duration_s()).sum();
+        let planned: f64 = plan.iter().map(|w| w.duration_s()).sum();
+        assert!(planned >= best - 1e-9, "sat {index}: planned {planned} < best single {best}");
+        assert!(planned <= sum + 1e-9, "sat {index}: planned {planned} > union bound {sum}");
+    }
+}
+
+#[test]
+fn tle_geometry_schedules_cleanly_too() {
+    // The scheduler must be propagator-agnostic: plan a day of the ISS
+    // (canonical TLE) over the three-station segment.
+    let tle = Tle::parse(
+        "ISS (ZARYA)",
+        "1 25544U 98067A   08264.51782528 -.00002182  00000-0 -11606-4 0  2927",
+        "2 25544  51.6416 247.4627 0006703 130.5360 325.0288 15.72125391563537",
+    )
+    .unwrap();
+    let prop = TlePropagator::new(&tle);
+    let cfg = three_station_cfg();
+    let net = station_network(&cfg);
+    let tracks = net.contact_tracks(&prop, 0.0, 86_400.0, CONTACT_SCAN_STEP_S);
+    let (plan, _) = ContactScheduler::greedy().plan(&tracks);
+    assert_disjoint_tagged(&plan, 3, "iss");
+    assert!(!plan.is_empty(), "an ISS day over China must contain passes");
+}
+
+#[test]
+fn colocated_overlapping_stations_produce_no_zero_length_slices() {
+    // Regression: a co-located wide-mask pair sees near-identical passes;
+    // the shared boundaries must not leak zero-length slivers into the
+    // plan or the consumed slices.
+    let mut cfg = Config::default();
+    cfg.stations = vec![
+        StationConfig::default(),
+        station("Beijing-wide", 39.96, 116.35, 5.0),
+    ];
+    cfg.constellation.horizon_s = 86_400.0;
+    let sat = plane_satellite(&cfg, 0, "colocated");
+    let net = station_network(&cfg);
+    let mut tl = mission_timeline(&cfg, &sat, &net);
+    let slices = tl.remaining_contacts();
+    assert!(!slices.is_empty());
+    for s in &slices {
+        assert!(s.window.duration_s() > 0.0, "zero-length slice {:?}", s.window);
+        assert!(s.window.station_id < 2);
+    }
+    for pair in slices.windows(2) {
+        assert!(pair[0].window.los <= pair[1].window.aos, "overlap: {pair:?}");
+    }
+}
+
+#[test]
+fn default_single_station_timeline_is_bit_identical_to_legacy() {
+    let cfg = Config::default();
+    assert_eq!(cfg.stations.len(), 1, "default ground segment is Beijing alone");
+    let sat = plane_satellite(&cfg, 2, "parity-sat");
+    let net = station_network(&cfg);
+    let tl = mission_timeline(&cfg, &sat, &net);
+    let legacy = Timeline::orbital(
+        &cfg.timing,
+        &sat,
+        &beijing_station(),
+        cfg.constellation.horizon_s,
+        10.0,
+    );
+    assert_eq!(tl.n_contacts(), legacy.n_contacts());
+    assert_eq!(tl.contact_total_s().to_bits(), legacy.contact_total_s().to_bits());
+    assert_eq!(
+        tl.sunlit_s(0.0, cfg.constellation.horizon_s).to_bits(),
+        legacy.sunlit_s(0.0, cfg.constellation.horizon_s).to_bits()
+    );
+}
+
+#[test]
+fn synthetic_drains_attribute_bytes_per_station_exactly() {
+    // Station attribution at the queue level, no engines involved: items
+    // drain through windows tagged with different stations; per-station
+    // bytes must partition the delivered total.
+    let win = |aos: f64, los: f64, id: usize| ContactWindow {
+        aos,
+        los,
+        max_elevation_deg: 45.0,
+        truncated: false,
+        station_id: id,
+    };
+    let mut q = DownlinkQueue::new();
+    let mut link = Link::new(LinkConfig::downlink(LossProfile::stable()), 42);
+    for i in 0..30u64 {
+        q.push(DownlinkItem {
+            kind: if i % 3 == 0 { ItemKind::Results } else { ItemKind::Image },
+            bytes: 40_000 + i * 1000,
+            ready_at: 0.0,
+            tag: i,
+        });
+    }
+    // alternate short passes over stations 0/1/2 until the queue is dry
+    // (~0.08 s at 40 Mbps ≈ 400 KB: a handful of items per pass, so the
+    // backlog visibly spreads across the segment)
+    let mut t = 0.0;
+    let mut pass = 0usize;
+    while q.pending() > 0 && pass < 60 {
+        q.drain_window(&mut link, &win(t, t + 0.08, pass % 3));
+        t += 600.0;
+        pass += 1;
+    }
+    assert_eq!(q.pending(), 0, "queue must drain within the allotted passes");
+    let total_attributed: u64 = q.stats.station_bytes.iter().sum();
+    assert_eq!(total_attributed, q.stats.total_bytes(), "attribution must partition the total");
+    let used = q.stats.station_bytes.iter().filter(|&&b| b > 0).count();
+    assert!(used >= 2, "alternating passes must touch several stations, got {used}");
+}
+
+// ---- engine-level accounting (needs artifacts/) ----------------------
+
+fn multi_station_cfg() -> Config {
+    let mut cfg = three_station_cfg();
+    cfg.scene_cells = 4;
+    cfg.constellation.satellites = 3;
+    cfg.constellation.scenes_per_satellite = 2;
+    cfg
+}
+
+fn assert_station_accounting(report: &ConstellationReport, n_stations: usize, ctx: &str) {
+    for sat in &report.satellites {
+        let dl = &sat.downlink;
+        assert!(
+            dl.station_bytes.len() <= n_stations,
+            "{ctx} sat {}: attribution to unknown station {:?}",
+            sat.index,
+            dl.station_bytes
+        );
+        let sum: u64 = dl.station_bytes.iter().sum();
+        assert_eq!(
+            sum,
+            dl.total_bytes(),
+            "{ctx} sat {}: per-station bytes must sum to the delivered total",
+            sat.index
+        );
+    }
+}
+
+#[test]
+fn thread_engine_station_bytes_sum_to_totals() {
+    let Some(rt) = rt() else { return };
+    let cfg = multi_station_cfg();
+    let report = run_constellation(&rt, &cfg, Version::V2).unwrap();
+    assert_station_accounting(&report, 3, "threads");
+}
+
+#[test]
+fn fleet_engine_matches_thread_engine_station_attribution() {
+    let Some(rt) = rt() else { return };
+    let cfg = multi_station_cfg();
+    let threads = run_constellation(&rt, &cfg, Version::V2).unwrap();
+    let fleet = run_fleet(&rt, &cfg, Version::V2).unwrap();
+    assert_station_accounting(&fleet, 3, "fleet");
+    assert_eq!(threads.satellites.len(), fleet.satellites.len());
+    for (a, b) in threads.satellites.iter().zip(&fleet.satellites) {
+        assert_eq!(a.downlink.items_delivered, b.downlink.items_delivered, "sat {}", a.index);
+        assert_eq!(a.downlink.total_bytes(), b.downlink.total_bytes(), "sat {}", a.index);
+        assert_eq!(
+            a.downlink.station_bytes, b.downlink.station_bytes,
+            "sat {}: engines disagree on station attribution",
+            a.index
+        );
+        assert_eq!(a.windows, b.windows, "sat {}", a.index);
+        assert_eq!(a.contact_s.to_bits(), b.contact_s.to_bits(), "sat {}", a.index);
+    }
+}
+
+#[test]
+fn fleet_station_attribution_is_invariant_under_shard_count() {
+    let Some(rt) = rt() else { return };
+    let mut cfg = multi_station_cfg();
+    cfg.constellation.satellites = 4;
+    cfg.fleet.shards = 1;
+    let one = run_fleet(&rt, &cfg, Version::V2).unwrap();
+    assert_station_accounting(&one, 3, "1-shard");
+    for shards in [2, 4, 8] {
+        cfg.fleet.shards = shards;
+        let many = run_fleet(&rt, &cfg, Version::V2).unwrap();
+        for (a, b) in one.satellites.iter().zip(&many.satellites) {
+            assert_eq!(
+                a.downlink.station_bytes, b.downlink.station_bytes,
+                "sat {}: attribution changed with shards={shards}",
+                a.index
+            );
+            assert_eq!(a.downlink.total_bytes(), b.downlink.total_bytes(), "sat {}", a.index);
+        }
+    }
+}
+
+#[test]
+fn default_config_reports_are_unchanged_by_the_station_refactor() {
+    // The whole refactor rides behind the default single-Beijing config:
+    // both engines must produce single-entry (or empty) station vectors
+    // whose one entry is the total.
+    let Some(rt) = rt() else { return };
+    let mut cfg = Config::default();
+    cfg.scene_cells = 4;
+    cfg.constellation.satellites = 2;
+    cfg.constellation.scenes_per_satellite = 2;
+    for report in [
+        run_constellation(&rt, &cfg, Version::V2).unwrap(),
+        run_fleet(&rt, &cfg, Version::V2).unwrap(),
+    ] {
+        for sat in &report.satellites {
+            assert!(sat.downlink.station_bytes.len() <= 1, "sat {}", sat.index);
+            assert_eq!(sat.downlink.station_bytes(0), sat.downlink.total_bytes());
+        }
+    }
+}
