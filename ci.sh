@@ -31,6 +31,11 @@ echo "== contact plane: multi-station scheduling invariants =="
 # single-station bit-identity of the layout refactor
 cargo test -q --test station_scheduling
 
+echo "== chaos: fault-plan determinism, ARQ reconciliation, crash recovery =="
+# seeded fault plans are pure functions of (seed, sat); every rejected
+# byte reconciles; zero-rate chaos is bit-identical to disabled
+cargo test -q --test chaos_invariants
+
 if [[ "${1:-}" == "fast" ]]; then
   exit 0
 fi
@@ -113,5 +118,16 @@ echo "{\"bench\":\"run\",\"commit\":\"$(git rev-parse --short HEAD 2>/dev/null |
 grep '^{"bench"' "$bench_log" >> ../BENCH_stations.json || true
 rm -f "$bench_log"
 echo "BENCH_stations.json now holds $(wc -l < ../BENCH_stations.json) records"
+
+echo "== bench artifact: perf_chaos -> BENCH_chaos.json =="
+# artifact-free (fault-plan compilation + gated backlog drains at 0/1/10%
+# fault rates over 1k satellites): always recorded; asserts the zero-rate
+# lane is bitwise identical to the plain drain before timing anything
+bench_log=$(mktemp)
+cargo bench --bench perf_chaos | tee "$bench_log"
+echo "{\"bench\":\"run\",\"commit\":\"$(git rev-parse --short HEAD 2>/dev/null || echo unknown)\",\"date\":\"$(date -u +%FT%TZ)\"}" >> ../BENCH_chaos.json
+grep '^{"bench"' "$bench_log" >> ../BENCH_chaos.json || true
+rm -f "$bench_log"
+echo "BENCH_chaos.json now holds $(wc -l < ../BENCH_chaos.json) records"
 
 echo "ci: all gates passed"

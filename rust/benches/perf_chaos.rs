@@ -1,0 +1,182 @@
+//! Perf: the chaos fault-injection layer — what deterministic fault
+//! plans and the ARQ retry loop cost on the downlink hot path.
+//!
+//! Artifact-free by design: the measured work is plan compilation
+//! (Poisson window scheduling) and windowed backlog drains through
+//! `drain_window_sliced_chaos` at three fault intensities (0%, 1%, 10%
+//! per-transfer frame-fault probability, with crash/dropout rates
+//! scaled alongside) over a 1 000-satellite sweep.  Before timing
+//! anything it pins the zero-rate lane bitwise against the plain
+//! `drain_window_sliced` path: a compiled-but-silent fault plan must
+//! cost only the gate branches and change not a single byte of the
+//! books.  Emits the standard bench JSON that `ci.sh` greps into
+//! `BENCH_chaos.json`.
+
+use std::hint::black_box;
+use std::time::Duration;
+
+use tiansuan::config::ChaosConfig;
+use tiansuan::coordinator::downlink::{DownlinkItem, DownlinkQueue, DownlinkStats, ItemKind};
+use tiansuan::link::{Link, LinkConfig, LinkStats, LossProfile};
+use tiansuan::orbit::ContactWindow;
+use tiansuan::sim::FaultPlan;
+use tiansuan::util::bench;
+
+const SATS: usize = 1000;
+const ITEMS: usize = 8;
+const WINDOWS: usize = 4;
+const HORIZON_S: f64 = 6.0 * 3600.0;
+
+/// One fault-intensity lane: `rate` is the total per-transfer
+/// frame-fault probability; crash/dropout Poisson rates scale with it
+/// so every class is live on the non-zero lanes.
+fn lane_cfg(rate: f64) -> ChaosConfig {
+    ChaosConfig {
+        enabled: true,
+        seed: 0xBE7C4,
+        crash_rate_per_hour: rate * 25.0,
+        frame_corrupt_rate: rate * 0.7,
+        frame_truncate_rate: rate * 0.3,
+        seu_rate: rate,
+        dropout_rate_per_hour: rate * 20.0,
+        ..ChaosConfig::default()
+    }
+}
+
+/// Drain one satellite's backlog across its contact windows; `chaos:
+/// None` is the plain pre-chaos drain, `Some` compiles the fault plan
+/// and goes through the gated path (blackout check + ARQ injector).
+fn run_backlog(chaos: Option<&ChaosConfig>, sat: usize) -> (LinkStats, DownlinkStats, usize) {
+    let mut link = Link::new(LinkConfig::downlink(LossProfile::stable()), 7 + sat as u64);
+    let mut queue = DownlinkQueue::new();
+    for i in 0..ITEMS {
+        queue.push(DownlinkItem {
+            kind: if i % 2 == 0 { ItemKind::Results } else { ItemKind::Image },
+            bytes: 20_000 + (i as u64 * 7919) % 50_000,
+            ready_at: 0.0,
+            tag: i as u64,
+        });
+    }
+    let mut plan = chaos.map(|c| FaultPlan::compile(c, sat, HORIZON_S, 16));
+    let mut delivered = 0usize;
+    for k in 0..WINDOWS {
+        let aos = k as f64 * 1800.0 + 300.0;
+        let w = ContactWindow {
+            aos,
+            los: aos + 60.0,
+            max_elevation_deg: 45.0,
+            truncated: false,
+            station_id: k % 2,
+        };
+        match plan.as_mut() {
+            Some(p) => {
+                if p.crashed_at(w.aos) {
+                    continue; // blacked out: the pass never happens
+                }
+                let arq = p.arq;
+                delivered += queue
+                    .drain_window_sliced_chaos(&mut link, &w, true, None, &arq, &mut || {
+                        p.next_frame_fault()
+                    })
+                    .len();
+            }
+            None => delivered += queue.drain_window_sliced(&mut link, &w, true).len(),
+        }
+    }
+    (link.stats, queue.stats.clone(), delivered)
+}
+
+fn assert_link_bits(a: &LinkStats, b: &LinkStats, sat: usize) {
+    assert_eq!(a.bytes_offered, b.bytes_offered, "sat {sat}: bytes_offered");
+    assert_eq!(a.bytes_delivered, b.bytes_delivered, "sat {sat}: bytes_delivered");
+    assert_eq!(a.packets_sent, b.packets_sent, "sat {sat}: packets_sent");
+    assert_eq!(a.packets_lost, b.packets_lost, "sat {sat}: packets_lost");
+    assert_eq!(a.retransmissions, b.retransmissions, "sat {sat}: retransmissions");
+    assert_eq!(a.transfers_aborted, b.transfers_aborted, "sat {sat}: transfers_aborted");
+    assert_eq!(a.busy_s.to_bits(), b.busy_s.to_bits(), "sat {sat}: busy_s");
+    assert_eq!(b.frames_corrupted, 0, "sat {sat}: zero-rate lane corrupted a frame");
+    assert_eq!(b.frames_truncated, 0, "sat {sat}: zero-rate lane truncated a frame");
+    assert_eq!(b.retries, 0, "sat {sat}: zero-rate lane retried");
+    assert_eq!(b.gave_up, 0, "sat {sat}: zero-rate lane gave up");
+    assert_eq!(b.bytes_rejected, 0, "sat {sat}: zero-rate lane rejected bytes");
+}
+
+fn main() {
+    // correctness pin before any timing: a zero-rate fault plan must be
+    // bitwise inert against the plain drain, backlog for backlog
+    let zero = lane_cfg(0.0);
+    for sat in 0..32 {
+        let (la, qa, da) = run_backlog(None, sat);
+        let (lb, qb, db) = run_backlog(Some(&zero), sat);
+        assert_eq!(da, db, "sat {sat}: delivered count drifted");
+        assert_link_bits(&la, &lb, sat);
+        assert_eq!(qa.items_delivered, qb.items_delivered, "sat {sat}: items_delivered");
+        assert_eq!(qa.items_dropped, qb.items_dropped, "sat {sat}: items_dropped");
+        assert_eq!(qa.bytes_dropped, qb.bytes_dropped, "sat {sat}: bytes_dropped");
+        assert_eq!(qa.total_bytes(), qb.total_bytes(), "sat {sat}: total_bytes");
+        assert_eq!(
+            qa.latency_sum_s.to_bits(),
+            qb.latency_sum_s.to_bits(),
+            "sat {sat}: latency_sum_s"
+        );
+        assert_eq!(qa.station_bytes, qb.station_bytes, "sat {sat}: station attribution");
+    }
+    println!("zero-rate chaos lane bitwise identical to the plain drain over 32 backlogs");
+
+    // plan compilation throughput at the heaviest lane
+    let heavy = lane_cfg(0.10);
+    let compile = bench::run(
+        &format!("fault plan compile x{SATS}"),
+        3,
+        Duration::from_secs(1),
+        || {
+            for sat in 0..SATS {
+                black_box(FaultPlan::compile(&heavy, sat, HORIZON_S, 16));
+            }
+        },
+    );
+    bench::json_line(
+        "perf_chaos.plan_compile",
+        &[
+            ("plans", SATS as f64),
+            ("median_ms", compile.median.as_secs_f64() * 1e3),
+            ("plans_per_s", SATS as f64 / compile.median.as_secs_f64()),
+        ],
+    );
+
+    // backlog drains at each fault intensity
+    for (label, rate) in [("0pct", 0.0), ("1pct", 0.01), ("10pct", 0.10)] {
+        let cfg = lane_cfg(rate);
+        let mut totals = (0u64, 0u64, 0u64, 0usize); // retries, gave_up, rejected, delivered
+        let stats = bench::run(
+            &format!("chaos drain {label} x{SATS} sats"),
+            3,
+            Duration::from_secs(2),
+            || {
+                let mut t = (0u64, 0u64, 0u64, 0usize);
+                for sat in 0..SATS {
+                    let (l, _q, d) = run_backlog(Some(&cfg), sat);
+                    t.0 += l.retries;
+                    t.1 += l.gave_up;
+                    t.2 += l.bytes_rejected;
+                    t.3 += d;
+                }
+                totals = black_box(t);
+            },
+        );
+        bench::json_line(
+            "perf_chaos.drain",
+            &[
+                ("fault_rate_pct", rate * 100.0),
+                ("sats", SATS as f64),
+                ("items_per_sat", ITEMS as f64),
+                ("median_ms", stats.median.as_secs_f64() * 1e3),
+                ("sats_per_s", SATS as f64 / stats.median.as_secs_f64()),
+                ("delivered", totals.3 as f64),
+                ("retries", totals.0 as f64),
+                ("gave_up", totals.1 as f64),
+                ("bytes_rejected", totals.2 as f64),
+            ],
+        );
+    }
+}

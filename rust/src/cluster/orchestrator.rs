@@ -52,6 +52,10 @@ pub struct ReconcileActions {
     pub restarted: usize,
     pub updated: usize,
     pub removed: usize,
+    /// Pods evicted from Offline (or unregistered) nodes this pass; the
+    /// same pass's scale-up replaces them wherever a Ready node of the
+    /// right role exists.
+    pub failed_over: usize,
 }
 
 pub struct Orchestrator {
@@ -111,6 +115,23 @@ impl Orchestrator {
         let specs = &self.specs;
         self.pods.retain(|p| specs.contains_key(&p.app));
         acts.removed += before - self.pods.len();
+
+        // fail over pods stranded on dead nodes: the registry's belief
+        // says the node is gone (Offline, or never registered), so its
+        // pods cannot be serving.  Evicting them *before* the per-spec
+        // loop lets the same pass's scale-up replace each one on a Ready
+        // node — rescheduled exactly once, and a second reconcile at the
+        // same `now` finds nothing left to evict (idempotent).  NotReady
+        // nodes keep their pods: transient heartbeat silence (a contact
+        // gap) must not thrash placements.
+        let before = self.pods.len();
+        self.pods.retain(|p| {
+            matches!(
+                registry.status(&p.node, now),
+                Some(NodeStatus::Ready) | Some(NodeStatus::NotReady)
+            )
+        });
+        acts.failed_over += before - self.pods.len();
 
         let candidates: Vec<(NodeId, NodeRole)> = registry
             .nodes()
@@ -268,6 +289,62 @@ mod tests {
         let acts = o.reconcile(&reg, 100);
         assert_eq!(acts.removed, 2);
         assert!(o.pods("detector").is_empty());
+    }
+
+    #[test]
+    fn crashed_node_pods_fail_over_exactly_once() {
+        let (mut o, mut reg) = setup();
+        reg.register(NodeId::new("baoxing"), NodeRole::Edge, 4000, 8192, 0);
+        o.apply(detector_spec("tinydet:v1", 1));
+        o.reconcile(&reg, 0);
+        let first_node = o.pods("detector")[0].node.clone();
+        // the hosting node crashes (silent past eviction); the spare
+        // edge node keeps heartbeating
+        let now = 100_000;
+        let spare = if first_node == NodeId::new("baoyun") { "baoxing" } else { "baoyun" };
+        reg.heartbeat(&NodeId::new(spare), now);
+        let acts = o.reconcile(&reg, now);
+        assert_eq!(acts.failed_over, 1, "stranded pod evicted");
+        assert_eq!(acts.started, 1, "and replaced in the same pass");
+        assert_eq!(o.running("detector"), 1);
+        assert_eq!(o.pods("detector")[0].node, NodeId::new(spare));
+        // idempotent: a second reconcile at the same `now` does nothing
+        let again = o.reconcile(&reg, now);
+        assert_eq!(again, ReconcileActions::default(), "no duplicate reschedule");
+        assert_eq!(o.running("detector"), 1);
+    }
+
+    #[test]
+    fn failover_without_target_leaves_pod_pending() {
+        let (mut o, reg) = setup();
+        o.apply(detector_spec("tinydet:v1", 1));
+        o.reconcile(&reg, 0);
+        assert_eq!(o.running("detector"), 1);
+        // every node dark: the pod is evicted once, nothing replaces it
+        let acts = o.reconcile(&reg, 10_000_000);
+        assert_eq!(acts.failed_over, 1);
+        assert_eq!(acts.started, 0);
+        assert_eq!(o.running("detector"), 0);
+        let again = o.reconcile(&reg, 10_000_000);
+        assert_eq!(again, ReconcileActions::default(), "eviction happens exactly once");
+        // the node comes back: the pending pod is finally placed
+        let mut reg = reg;
+        reg.heartbeat(&NodeId::new("baoyun"), 10_000_000);
+        let back = o.reconcile(&reg, 10_000_001);
+        assert_eq!(back.started, 1);
+        assert_eq!(o.running("detector"), 1);
+    }
+
+    #[test]
+    fn notready_node_keeps_its_pods() {
+        let (mut o, reg) = setup();
+        o.apply(detector_spec("tinydet:v1", 1));
+        o.reconcile(&reg, 0);
+        // silence past grace but short of eviction: NotReady, pods stay
+        let acts = o.reconcile(&reg, 30_000);
+        assert_eq!(acts.failed_over, 0, "transient silence must not thrash placement");
+        assert_eq!(o.running("detector"), 1);
+        assert_eq!(o.pods("detector")[0].node, NodeId::new("baoyun"));
     }
 
     #[test]

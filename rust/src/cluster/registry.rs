@@ -60,6 +60,16 @@ impl Registry {
         }
     }
 
+    /// Cloud-side belief about a node's health at `now`.
+    ///
+    /// Boundary semantics are **inclusive** on both thresholds, so every
+    /// silence maps to exactly one status with no dead millisecond:
+    /// `silence <= grace_ms` is `Ready`, `grace_ms < silence <=
+    /// eviction_ms` is `NotReady`, and `silence > eviction_ms` is
+    /// `Offline`.  A node heard from exactly `grace_ms` ago is still
+    /// Ready; exactly `eviction_ms` ago is still NotReady — degradation
+    /// happens strictly *after* each threshold.  A heartbeat in the
+    /// future of `now` saturates to zero silence (Ready), never panics.
     pub fn status(&self, id: &NodeId, now: Millis) -> Option<NodeStatus> {
         self.nodes.get(id).map(|n| {
             let silence = now.saturating_sub(n.last_heartbeat);
@@ -124,6 +134,35 @@ mod tests {
         assert_eq!(r.status(&edge("baoyun"), 100_000), Some(NodeStatus::Offline));
         assert!(r.heartbeat(&edge("baoyun"), 100_000));
         assert_eq!(r.status(&edge("baoyun"), 100_001), Some(NodeStatus::Ready));
+    }
+
+    #[test]
+    fn status_boundaries_are_inclusive() {
+        // grace 10_000, eviction 60_000, last heartbeat at 0: both
+        // thresholds keep the milder status at exact equality and
+        // degrade strictly after it
+        let r = reg();
+        let sat = edge("baoyun");
+        assert_eq!(r.status(&sat, 10_000), Some(NodeStatus::Ready), "silence == grace_ms");
+        assert_eq!(r.status(&sat, 10_001), Some(NodeStatus::NotReady), "grace_ms + 1");
+        assert_eq!(r.status(&sat, 60_000), Some(NodeStatus::NotReady), "silence == eviction_ms");
+        assert_eq!(r.status(&sat, 60_001), Some(NodeStatus::Offline), "eviction_ms + 1");
+        // a future-dated heartbeat saturates: silence 0, still Ready
+        let mut r = reg();
+        r.heartbeat(&sat, 50_000);
+        assert_eq!(r.status(&sat, 40_000), Some(NodeStatus::Ready));
+    }
+
+    #[test]
+    fn notready_node_recovers_to_ready_on_heartbeat() {
+        let mut r = reg();
+        let sat = edge("baoyun");
+        // silent past grace but short of eviction: NotReady, not gone
+        assert_eq!(r.status(&sat, 30_000), Some(NodeStatus::NotReady));
+        assert!(r.heartbeat(&sat, 30_000));
+        assert_eq!(r.status(&sat, 30_000), Some(NodeStatus::Ready), "recovery is immediate");
+        assert_eq!(r.status(&sat, 40_000), Some(NodeStatus::Ready));
+        assert!(r.ready_nodes(30_000).contains(&sat));
     }
 
     #[test]

@@ -410,6 +410,124 @@ impl Default for TraceConfig {
     }
 }
 
+/// Deterministic chaos engine ([`crate::sim::chaos`]): seeded fault
+/// injection across both constellation engines — node crashes, downlink
+/// frame corruption/truncation recovered by the ARQ layer, SEU bit-flips
+/// in pixel buffers, and registry heartbeat dropouts.  Disabled by
+/// default — no `FaultPlan` is compiled, no chaos RNG stream exists, and
+/// every existing result stays bit-identical.
+#[derive(Clone, Copy, Debug)]
+pub struct ChaosConfig {
+    /// Master switch: off ⇒ no fault plan is compiled and every
+    /// injection site is one `Option` branch on `None`.
+    pub enabled: bool,
+    /// Chaos RNG seed.  Fault plans are a pure function of
+    /// `(seed, satellite index)` — independent of engine, shard count,
+    /// and admission cap — so the same seed reproduces the identical
+    /// fault plan everywhere.
+    pub seed: u64,
+    /// Expected `NodeCrash` events per satellite per mission hour
+    /// (Poisson-scheduled at plan compile time).
+    pub crash_rate_per_hour: f64,
+    /// Seconds a crashed satellite stays dark (no captures, no drains,
+    /// no heartbeats) before it recovers.
+    pub crash_recovery_s: f64,
+    /// Per-transfer probability that a downlink frame arrives corrupted
+    /// (checksum fails, ARQ retries the whole transfer).
+    pub frame_corrupt_rate: f64,
+    /// Per-transfer probability that a downlink frame arrives truncated
+    /// (same receiver-side rejection path as corruption).
+    pub frame_truncate_rate: f64,
+    /// Per-scene probability of an SEU striking the checked-out pixel
+    /// buffer between capture and filtering.
+    pub seu_rate: f64,
+    /// Bits flipped per SEU event.
+    pub seu_flips: u32,
+    /// Expected `RegistryDropout` events per satellite per mission hour
+    /// (heartbeats suppressed, data plane unaffected).
+    pub dropout_rate_per_hour: f64,
+    /// Seconds each dropout suppresses heartbeats for.
+    pub dropout_silence_s: f64,
+    /// Transfer-level ARQ retries after a rejected frame before the
+    /// link gives up on the item for this window.
+    pub arq_max_retries: u32,
+    /// First retry backoff, seconds; doubles per retry.
+    pub arq_backoff_initial_s: f64,
+    /// Exponential backoff cap, seconds.
+    pub arq_backoff_cap_s: f64,
+}
+
+impl ChaosConfig {
+    /// Hard invariants, checked at parse time and again at the top of
+    /// both engines, like [`PowerConfig::validate`].
+    pub fn validate(&self) -> Result<()> {
+        if !self.enabled {
+            return Ok(());
+        }
+        for (k, v) in [
+            ("chaos.crash_rate_per_hour", self.crash_rate_per_hour),
+            ("chaos.dropout_rate_per_hour", self.dropout_rate_per_hour),
+        ] {
+            anyhow::ensure!(v >= 0.0 && v.is_finite(), "{k} must be non-negative, got {v}");
+        }
+        for (k, v) in [
+            ("chaos.frame_corrupt_rate", self.frame_corrupt_rate),
+            ("chaos.frame_truncate_rate", self.frame_truncate_rate),
+            ("chaos.seu_rate", self.seu_rate),
+        ] {
+            anyhow::ensure!((0.0..=1.0).contains(&v), "{k} must be in [0, 1], got {v}");
+        }
+        anyhow::ensure!(
+            self.frame_corrupt_rate + self.frame_truncate_rate <= 1.0,
+            "chaos.frame_corrupt_rate + frame_truncate_rate must not exceed 1, got {}",
+            self.frame_corrupt_rate + self.frame_truncate_rate
+        );
+        anyhow::ensure!(
+            self.crash_recovery_s > 0.0 && self.crash_recovery_s.is_finite(),
+            "chaos.crash_recovery_s must be positive, got {}",
+            self.crash_recovery_s
+        );
+        anyhow::ensure!(
+            self.dropout_silence_s > 0.0 && self.dropout_silence_s.is_finite(),
+            "chaos.dropout_silence_s must be positive, got {}",
+            self.dropout_silence_s
+        );
+        anyhow::ensure!(self.seu_flips >= 1, "chaos.seu_flips must be at least 1");
+        anyhow::ensure!(
+            self.arq_backoff_initial_s > 0.0 && self.arq_backoff_initial_s.is_finite(),
+            "chaos.arq_backoff_initial_s must be positive, got {}",
+            self.arq_backoff_initial_s
+        );
+        anyhow::ensure!(
+            self.arq_backoff_cap_s >= self.arq_backoff_initial_s,
+            "chaos.arq_backoff_cap_s ({}) must be at least arq_backoff_initial_s ({})",
+            self.arq_backoff_cap_s,
+            self.arq_backoff_initial_s
+        );
+        Ok(())
+    }
+}
+
+impl Default for ChaosConfig {
+    fn default() -> ChaosConfig {
+        ChaosConfig {
+            enabled: false,
+            seed: 7,
+            crash_rate_per_hour: 0.0,
+            crash_recovery_s: 600.0,
+            frame_corrupt_rate: 0.0,
+            frame_truncate_rate: 0.0,
+            seu_rate: 0.0,
+            seu_flips: 3,
+            dropout_rate_per_hour: 0.0,
+            dropout_silence_s: 120.0,
+            arq_max_retries: 4,
+            arq_backoff_initial_s: 0.05,
+            arq_backoff_cap_s: 1.0,
+        }
+    }
+}
+
 /// Telemetry cardinality policy ([`crate::telemetry`]).
 #[derive(Clone, Copy, Debug)]
 pub struct TelemetryConfig {
@@ -557,6 +675,7 @@ pub struct Config {
     pub federated: FederatedConfig,
     pub fleet: FleetConfig,
     pub trace: TraceConfig,
+    pub chaos: ChaosConfig,
     pub telemetry: TelemetryConfig,
     /// Ground segment: one entry per station, indexed by `station_id`.
     /// Defaults to the single Beijing station.
@@ -608,6 +727,7 @@ impl Default for Config {
             federated: FederatedConfig::default(),
             fleet: FleetConfig::default(),
             trace: TraceConfig::default(),
+            chaos: ChaosConfig::default(),
             telemetry: TelemetryConfig::default(),
             stations: vec![StationConfig::default()],
             scene_cells: 8,
@@ -841,6 +961,36 @@ impl Config {
                     .unwrap_or(cfg.trace.ring_cap),
             };
         }
+        if let Some(c) = j.get("chaos") {
+            let n = |k: &str, d: f64| c.get(k).and_then(|v| v.as_f64()).unwrap_or(d);
+            cfg.chaos = ChaosConfig {
+                enabled: c.get("enabled").and_then(|v| v.as_bool()).unwrap_or(cfg.chaos.enabled),
+                seed: c
+                    .get("seed")
+                    .and_then(|v| v.as_f64())
+                    .map(|x| x as u64)
+                    .unwrap_or(cfg.chaos.seed),
+                crash_rate_per_hour: n("crash_rate_per_hour", cfg.chaos.crash_rate_per_hour),
+                crash_recovery_s: n("crash_recovery_s", cfg.chaos.crash_recovery_s),
+                frame_corrupt_rate: n("frame_corrupt_rate", cfg.chaos.frame_corrupt_rate),
+                frame_truncate_rate: n("frame_truncate_rate", cfg.chaos.frame_truncate_rate),
+                seu_rate: n("seu_rate", cfg.chaos.seu_rate),
+                seu_flips: c
+                    .get("seu_flips")
+                    .and_then(|v| v.as_usize())
+                    .map(|x| x as u32)
+                    .unwrap_or(cfg.chaos.seu_flips),
+                dropout_rate_per_hour: n("dropout_rate_per_hour", cfg.chaos.dropout_rate_per_hour),
+                dropout_silence_s: n("dropout_silence_s", cfg.chaos.dropout_silence_s),
+                arq_max_retries: c
+                    .get("arq_max_retries")
+                    .and_then(|v| v.as_usize())
+                    .map(|x| x as u32)
+                    .unwrap_or(cfg.chaos.arq_max_retries),
+                arq_backoff_initial_s: n("arq_backoff_initial_s", cfg.chaos.arq_backoff_initial_s),
+                arq_backoff_cap_s: n("arq_backoff_cap_s", cfg.chaos.arq_backoff_cap_s),
+            };
+        }
         if let Some(t) = j.get("telemetry") {
             cfg.telemetry = TelemetryConfig {
                 per_node_limit: t
@@ -889,6 +1039,7 @@ impl Config {
         cfg.federated.validate().context("federated config")?;
         cfg.fleet.validate().context("fleet config")?;
         cfg.trace.validate().context("trace config")?;
+        cfg.chaos.validate().context("chaos config")?;
         validate_stations(&cfg.stations).context("stations config")?;
         cfg.validate_cross().context("config cross-checks")?;
         Ok(cfg)
@@ -960,6 +1111,7 @@ mod tests {
         assert!(!c.power.enabled, "power subsystem must default off");
         assert!(!c.federated.enabled, "federated scheduling must default off");
         assert!(!c.trace.enabled, "flight recorder must default off");
+        assert!(!c.chaos.enabled, "chaos engine must default off");
         assert_eq!(c.telemetry.per_node_limit, 64);
     }
 
@@ -1136,6 +1288,61 @@ mod tests {
         // zero-capacity ring fails at parse, but only when tracing is on
         assert!(Config::parse(r#"{"trace": {"enabled": true, "ring_cap": 0}}"#).is_err());
         assert!(Config::parse(r#"{"trace": {"ring_cap": 0}}"#).is_ok());
+    }
+
+    #[test]
+    fn parse_chaos_section() {
+        let c = Config::parse(
+            r#"{"chaos": {"enabled": true, "seed": 99, "crash_rate_per_hour": 0.5,
+                          "crash_recovery_s": 300, "frame_corrupt_rate": 0.02,
+                          "frame_truncate_rate": 0.01, "seu_rate": 0.05,
+                          "seu_flips": 5, "dropout_rate_per_hour": 1.5,
+                          "dropout_silence_s": 90, "arq_max_retries": 6,
+                          "arq_backoff_initial_s": 0.1, "arq_backoff_cap_s": 2}}"#,
+        )
+        .unwrap();
+        assert!(c.chaos.enabled);
+        assert_eq!(c.chaos.seed, 99);
+        assert_eq!(c.chaos.crash_rate_per_hour, 0.5);
+        assert_eq!(c.chaos.crash_recovery_s, 300.0);
+        assert_eq!(c.chaos.frame_corrupt_rate, 0.02);
+        assert_eq!(c.chaos.frame_truncate_rate, 0.01);
+        assert_eq!(c.chaos.seu_rate, 0.05);
+        assert_eq!(c.chaos.seu_flips, 5);
+        assert_eq!(c.chaos.dropout_rate_per_hour, 1.5);
+        assert_eq!(c.chaos.dropout_silence_s, 90.0);
+        assert_eq!(c.chaos.arq_max_retries, 6);
+        assert_eq!(c.chaos.arq_backoff_initial_s, 0.1);
+        assert_eq!(c.chaos.arq_backoff_cap_s, 2.0);
+        // partial override keeps the other defaults
+        let p = Config::parse(r#"{"chaos": {"enabled": true, "seu_rate": 0.2}}"#).unwrap();
+        assert_eq!(p.chaos.seu_rate, 0.2);
+        assert_eq!(p.chaos.arq_max_retries, ChaosConfig::default().arq_max_retries);
+        assert_eq!(p.chaos.seed, ChaosConfig::default().seed);
+    }
+
+    #[test]
+    fn invalid_chaos_section_fails_only_when_enabled() {
+        assert!(Config::parse(r#"{"chaos": {"enabled": true, "seu_rate": 1.5}}"#).is_err());
+        assert!(
+            Config::parse(r#"{"chaos": {"enabled": true, "crash_rate_per_hour": -1}}"#).is_err()
+        );
+        assert!(
+            Config::parse(r#"{"chaos": {"enabled": true, "crash_recovery_s": 0}}"#).is_err()
+        );
+        assert!(Config::parse(r#"{"chaos": {"enabled": true, "seu_flips": 0}}"#).is_err());
+        assert!(Config::parse(
+            r#"{"chaos": {"enabled": true, "frame_corrupt_rate": 0.6,
+                          "frame_truncate_rate": 0.6}}"#
+        )
+        .is_err());
+        assert!(Config::parse(
+            r#"{"chaos": {"enabled": true, "arq_backoff_initial_s": 0.5,
+                          "arq_backoff_cap_s": 0.1}}"#
+        )
+        .is_err());
+        // disabled chaos is never validated: the section is inert
+        assert!(Config::parse(r#"{"chaos": {"seu_rate": 9}}"#).is_ok());
     }
 
     #[test]

@@ -91,12 +91,12 @@ use crate::config::Config;
 use crate::data::{Tile, Version};
 use crate::detect::Detection;
 use crate::link::{Link, LinkConfig, LinkStats};
-use crate::orbit::StationNetwork;
+use crate::orbit::{ContactWindow, StationNetwork};
 use crate::power::{PowerState, PowerVerdict};
 use crate::runtime::{Model, Runtime};
 use crate::sedna::federated::{self, FedScheduler, RoundDecision};
 use crate::sedna::{GlobalManager, LocalController, TaskKind, TaskPhase, TaskSpec};
-use crate::sim::{scene_timing, DutyCycles};
+use crate::sim::{apply_seu, scene_timing, ChaosStats, DutyCycles, FaultPlan};
 use crate::telemetry::trace::{SatTracer, SpanKind, TraceLog, TracePayload, TraceSink};
 use crate::telemetry::{per_node_gauges_enabled, Counter, Gauge, Registry};
 
@@ -140,9 +140,15 @@ pub struct SatelliteReport {
     pub power: Option<crate::power::PowerStats>,
     /// Federated round accounting — per-round participation plus the
     /// counters that must reconcile (`rounds_completed +
-    /// rounds_skipped_power == rounds_scheduled`).  `None` when
-    /// `federated.enabled` is off.
+    /// rounds_skipped_power + rounds_skipped_crash ==
+    /// rounds_scheduled`).  `None` when `federated.enabled` is off.
     pub federated: Option<federated::FederatedStats>,
+    /// Injected-fault ledger for this satellite's seeded fault plan:
+    /// scenes lost to crashes, blacked-out drain slices, SEU strikes,
+    /// suppressed heartbeats.  Reconciles with the scene fold
+    /// (`result` scenes + shed + `lost_to_crash` == scenes) and with
+    /// the ARQ counters in `link`.  `None` when `chaos.enabled` is off.
+    pub chaos: Option<ChaosStats>,
 }
 
 pub struct ConstellationReport {
@@ -210,6 +216,7 @@ pub fn run_constellation(rt: &Runtime, cfg: &Config, version: Version) -> Result
     cfg.energy.validate()?;
     cfg.power.validate()?;
     cfg.federated.validate()?;
+    cfg.chaos.validate()?;
     cfg.validate_cross()?;
     anyhow::ensure!(!cfg.stations.is_empty(), "stations must list at least one ground station");
     let n_sats = cfg.constellation.satellites.max(1);
@@ -457,6 +464,78 @@ pub(super) fn apply_fed_rounds(
     }
 }
 
+/// Poll the federated scheduler with the chaos crash gate when a fault
+/// plan is live — rounds due while the satellite is dark are skipped as
+/// their own class (`rounds_skipped_crash`).  With no plan this is
+/// exactly [`FedScheduler::poll`].  Shared by both engines so the gate
+/// cannot drift between them.
+pub(super) fn poll_fed_gated(
+    f: &mut FedScheduler,
+    chaos: Option<&FaultPlan>,
+    t: f64,
+    soc: Option<f64>,
+) -> Vec<RoundDecision> {
+    match chaos {
+        Some(c) => f.poll_gated(t, soc, |due| c.crashed_at(due)),
+        None => f.poll(t, soc),
+    }
+}
+
+/// The chaos gate for one drain slice, shared verbatim by both engines:
+///
+/// * satellite dark at AOS → the slice is blacked out (`None`): no
+///   heartbeat, no drain, no per-head failure charge — from the
+///   ground's point of view the pass never happens;
+/// * registry dropout at AOS → the heartbeat is suppressed (only the
+///   cloud-side belief degrades) but the drain proceeds;
+/// * otherwise the heartbeat fires and, with a plan live, the drain
+///   runs under the ARQ retry loop fed by the plan's frame-fault
+///   stream, with rejected bytes recorded as a `FaultFrame` event.
+///
+/// With no plan this is exactly heartbeat + the traced drain — the
+/// default-off bit-identity hinges on that branch staying bare.
+#[allow(clippy::too_many_arguments)] // internal plumbing shared by both engines
+pub(super) fn chaos_gated_drain(
+    chaos: &mut Option<FaultPlan>,
+    stats: &mut ChaosStats,
+    queue: &mut DownlinkQueue,
+    link: &mut Link,
+    window: &ContactWindow,
+    closes_pass: bool,
+    tracer: Option<&SatTracer>,
+    heartbeat: impl FnOnce(),
+) -> Option<Vec<Delivered>> {
+    let Some(c) = chaos.as_mut() else {
+        heartbeat();
+        return Some(queue.drain_window_sliced_traced(link, window, closes_pass, tracer));
+    };
+    if c.crashed_at(window.aos) {
+        stats.slices_blacked_out += 1;
+        stats.heartbeats_suppressed += 1;
+        return None;
+    }
+    if c.dropout_at(window.aos) {
+        stats.heartbeats_suppressed += 1;
+        if let Some(tr) = tracer {
+            tr.event(SpanKind::FaultDropout, window.aos, TracePayload::None);
+        }
+    } else {
+        heartbeat();
+    }
+    let rejected_before = link.stats.bytes_rejected;
+    let arq = c.arq;
+    let got = queue.drain_window_sliced_chaos(link, window, closes_pass, tracer, &arq, &mut || {
+        c.next_frame_fault()
+    });
+    let rejected = link.stats.bytes_rejected - rejected_before;
+    if rejected > 0 {
+        if let Some(tr) = tracer {
+            tr.event(SpanKind::FaultFrame, window.los, TracePayload::Bytes(rejected));
+        }
+    }
+    Some(got)
+}
+
 /// Apply one ground reply: fill the (scene, tile) slots it answers and
 /// release those tiles' outstanding counts.
 fn apply_ground_reply(
@@ -622,6 +701,14 @@ fn run_satellite(
         }
     });
 
+    // seeded chaos: the fault plan is a pure function of (chaos.seed,
+    // sat index, horizon, scene count) — identical across engines and
+    // shard counts — and `None` when disabled, so the nominal path
+    // never consults it (default-off stays bit-identical)
+    let mut chaos =
+        cfg.chaos.enabled.then(|| FaultPlan::compile(&cfg.chaos, index, horizon, scenes));
+    let mut chaos_stats = ChaosStats::default();
+
     let mut pending: BTreeMap<usize, PendingScene> = BTreeMap::new();
     let mut inflight: Vec<GroundInflight> = Vec::new();
     // capture indices the governor shed: no scene exists to fold there
@@ -683,10 +770,22 @@ fn run_satellite(
         // capture source: one deterministic RNG stream, its own thread,
         // so scene k+1's capture overlaps scene k's onboard inference
         let produced = metrics.counter("constellation.capture.items");
+        // chaos: per-scene SEU strikes were decided at plan compile
+        // (pure in seed + sat index), so the capture thread applies
+        // them from its own copy without sharing the plan the driver
+        // mutates — the fleet machine applies the same slots inline
+        let seu_strikes: Option<(Vec<Option<u64>>, u32)> = chaos
+            .as_ref()
+            .map(|c| ((0..scenes).map(|i| c.seu_for_scene(i)).collect(), c.seu_flips()));
         s.spawn(move || {
             let mut gen = gen;
             for idx in 0..scenes {
-                let scene = gen.capture();
+                let mut scene = gen.capture();
+                if let Some((seeds, flips)) = &seu_strikes {
+                    if let Some(seed) = seeds[idx] {
+                        apply_seu(&mut scene.pixels, *seed, *flips);
+                    }
+                }
                 produced.inc();
                 if tx_scene.send(Envelope::new(SceneJob { idx, scene })).is_err() {
                     break;
@@ -724,6 +823,49 @@ fn run_satellite(
         for env in rx_onboard.iter() {
             held.insert(env.inner.idx, env.inner);
             while let Some(mut d) = held.remove(&next_drive) {
+                // chaos: a satellite dark at this capture instant loses
+                // the scene outright — the camera never fires, nothing
+                // is queued or folded, and the period's contact time
+                // passes unused (a recovering node has nothing to
+                // send).  Checked before the power verdict: a dead bus
+                // outranks a low battery.  Like the shed path, the
+                // onboard stage already paid the discarded inference in
+                // simulator wallclock, not mission energy.
+                if chaos.as_ref().map(|c| c.crashed_at(timeline.now_s())).unwrap_or(false) {
+                    let t_crash = timeline.now_s();
+                    if let Some(tr) = &tracer {
+                        tr.event(SpanKind::FaultCrash, t_crash, TracePayload::None);
+                    }
+                    chaos_stats.lost_to_crash += 1;
+                    drop(d);
+                    let (_, period) = scene_timing(timeline.timing(), 0);
+                    let t = timeline.advance(period);
+                    let blacked = timeline.due_contacts(t).len() as u64;
+                    chaos_stats.slices_blacked_out += blacked;
+                    chaos_stats.heartbeats_suppressed += blacked;
+                    let duties = DutyCycles::default();
+                    acc.extend_mission(period, duties);
+                    if let Some(p) = power.as_mut() {
+                        p.advance_period(period, duties, timeline.sunlit_s(t_crash, t));
+                        if let Some((soc, _, _)) = &power_metrics {
+                            soc.set(p.soc_pct());
+                        }
+                    }
+                    if let Some(f) = fed.as_mut() {
+                        let decisions =
+                            poll_fed_gated(f, chaos.as_ref(), t, power.as_ref().map(|p| p.soc_frac()));
+                        let wire = f.wire_bytes();
+                        apply_fed_rounds(
+                            decisions, wire, fed_train_s, &mut queue, &mut power, &mut acc,
+                            &fed_metrics, tracer.as_ref(),
+                        );
+                    }
+                    shed_idx.insert(next_drive);
+                    next_drive += 1;
+                    poll_ground(&mut inflight, &mut pending, false)?;
+                    fold_ready(&mut pending, &mut shed_idx, &mut next_fold, &mut acc, false);
+                    continue;
+                }
                 // the power governor speaks at this scene's virtual
                 // capture time; SoC is pure mission-time history, so
                 // governed runs stay deterministic
@@ -764,7 +906,8 @@ fn run_satellite(
                     // below soc_critical they land under min_soc (the
                     // validate_cross invariant) and skip
                     if let Some(f) = fed.as_mut() {
-                        let decisions = f.poll(t, power.as_ref().map(|p| p.soc_frac()));
+                        let decisions =
+                            poll_fed_gated(f, chaos.as_ref(), t, power.as_ref().map(|p| p.soc_frac()));
                         let wire = f.wire_bytes();
                         apply_fed_rounds(
                             decisions, wire, fed_train_s, &mut queue, &mut power, &mut acc,
@@ -803,6 +946,21 @@ fn run_satellite(
 
                 let (busy, period) = scene_timing(timeline.timing(), d.processed.len());
                 let t_capture = timeline.now_s();
+                // chaos: record the SEU that struck this scene's buffer
+                // (the flips were applied on the capture thread,
+                // pre-filter; the NaN-guarded fold degrades gracefully)
+                if let Some(c) = chaos.as_ref() {
+                    if c.seu_for_scene(next_drive).is_some() {
+                        chaos_stats.seu_scenes += 1;
+                        if let Some(tr) = &tracer {
+                            tr.event(
+                                SpanKind::FaultSeu,
+                                t_capture,
+                                TracePayload::Batch(c.seu_flips() as usize),
+                            );
+                        }
+                    }
+                }
                 if let Some(tr) = &tracer {
                     trace_onboard(tr, &d, t_capture, timeline.timing().capture_overhead_s, busy);
                 }
@@ -860,13 +1018,19 @@ fn run_satellite(
                 } else {
                     for slice in timeline.due_contacts(t) {
                         let at_ms = (slice.window.aos * 1000.0) as u64;
-                        registry.lock().unwrap().heartbeat(&node, at_ms);
-                        let got = queue.drain_window_sliced_traced(
+                        let got = chaos_gated_drain(
+                            &mut chaos,
+                            &mut chaos_stats,
+                            &mut queue,
                             &mut link,
                             &slice.window,
                             slice.closes_pass,
                             tracer.as_ref(),
+                            || {
+                                registry.lock().unwrap().heartbeat(&node, at_ms);
+                            },
                         );
+                        let Some(got) = got else { continue }; // blacked out
                         dispatch_ground(got, &pending, &mut inflight, slice.window.los)?;
                     }
                 }
@@ -890,7 +1054,8 @@ fn run_satellite(
                 // the SoC the period's flows left behind; their weights
                 // queue for the next drain (possibly this period's tail)
                 if let Some(f) = fed.as_mut() {
-                    let decisions = f.poll(t, power.as_ref().map(|p| p.soc_frac()));
+                    let decisions =
+                        poll_fed_gated(f, chaos.as_ref(), t, power.as_ref().map(|p| p.soc_frac()));
                     let wire = f.wire_bytes();
                     apply_fed_rounds(
                         decisions, wire, fed_train_s, &mut queue, &mut power, &mut acc,
@@ -935,7 +1100,8 @@ fn run_satellite(
                         );
                         power_cursor = power_cursor.max(target);
                     }
-                    let decisions = f.poll(due, power.as_ref().map(|p| p.soc_frac()));
+                    let decisions =
+                        poll_fed_gated(f, chaos.as_ref(), due, power.as_ref().map(|p| p.soc_frac()));
                     let wire = f.wire_bytes();
                     apply_fed_rounds(
                         decisions, wire, fed_train_s, &mut queue, &mut power, &mut acc,
@@ -957,14 +1123,22 @@ fn run_satellite(
                 }
             }
             let at_ms = (slice.window.aos * 1000.0) as u64;
-            registry.lock().unwrap().heartbeat(&node, at_ms);
             let busy_before = link.stats.busy_s;
-            let got = queue.drain_window_sliced_traced(
+            let got = chaos_gated_drain(
+                &mut chaos,
+                &mut chaos_stats,
+                &mut queue,
                 &mut link,
                 &slice.window,
                 slice.closes_pass,
                 tracer.as_ref(),
+                || {
+                    registry.lock().unwrap().heartbeat(&node, at_ms);
+                },
             );
+            // blacked out: the pass never happens; AOS→LOS integrates
+            // as idle from `power_cursor`, exactly like the shed branch
+            let Some(got) = got else { continue };
             dispatch_ground(got, &pending, &mut inflight, slice.window.los)?;
             if let Some(p) = power.as_mut() {
                 let comm = link.stats.busy_s - busy_before;
@@ -990,7 +1164,8 @@ fn run_satellite(
                     );
                     power_cursor = power_cursor.max(due);
                 }
-                let decisions = f.poll(due, power.as_ref().map(|p| p.soc_frac()));
+                let decisions =
+                    poll_fed_gated(f, chaos.as_ref(), due, power.as_ref().map(|p| p.soc_frac()));
                 let wire = f.wire_bytes();
                 apply_fed_rounds(
                     decisions, wire, fed_train_s, &mut queue, &mut power, &mut acc,
@@ -1024,19 +1199,28 @@ fn run_satellite(
     if let Some(e) = errs.into_inner().unwrap().into_iter().next() {
         return Err(e);
     }
+    // plan-level totals land once the mission is over; the per-event
+    // counters above accumulated as faults fired
+    if let Some(c) = &chaos {
+        chaos_stats.crashes = c.crash_windows().len() as u64;
+        chaos_stats.dropouts = c.dropout_windows().len() as u64;
+    }
     let shed = power.as_ref().map(|p| p.stats.scenes_shed as usize).unwrap_or(0);
+    let lost = chaos_stats.lost_to_crash as usize;
     anyhow::ensure!(
-        acc.scenes() + shed == scenes,
-        "satellite {index} lost scenes: folded {} + shed {shed} of {scenes}",
+        acc.scenes() + shed + lost == scenes,
+        "satellite {index} lost scenes: folded {} + shed {shed} + crashed {lost} of {scenes}",
         acc.scenes()
     );
 
     if let Some(f) = &fed {
         anyhow::ensure!(
-            f.stats.rounds_completed + f.stats.rounds_skipped_power == f.stats.rounds_scheduled,
-            "satellite {index} lost federated rounds: {} + {} of {}",
+            f.stats.rounds_completed + f.stats.rounds_skipped_power + f.stats.rounds_skipped_crash
+                == f.stats.rounds_scheduled,
+            "satellite {index} lost federated rounds: {} + {} + {} of {}",
             f.stats.rounds_completed,
             f.stats.rounds_skipped_power,
+            f.stats.rounds_skipped_crash,
             f.stats.rounds_scheduled
         );
     }
@@ -1077,5 +1261,6 @@ fn run_satellite(
         sunlit_s: timeline.sunlit_s(0.0, horizon),
         power: power_stats,
         federated: fed_stats,
+        chaos: chaos.is_some().then_some(chaos_stats),
     })
 }

@@ -8,7 +8,7 @@
 
 use std::collections::VecDeque;
 
-use crate::link::Link;
+use crate::link::{ArqPolicy, FrameFault, Link, Transfer};
 use crate::orbit::ContactWindow;
 use crate::telemetry::trace::{SatTracer, SpanKind, TracePayload};
 
@@ -157,6 +157,21 @@ impl DownlinkQueue {
         window: &ContactWindow,
         closes_pass: bool,
     ) -> Vec<Delivered> {
+        self.drain_core(link, window, closes_pass, |l, bytes, budget| l.transmit(bytes, budget))
+    }
+
+    /// The one drain loop, parameterized over the transfer primitive so
+    /// the nominal path ([`crate::link::Link::transmit`]) and the chaos
+    /// path ([`crate::link::Link::transmit_checked`]) share byte-for-byte
+    /// scheduling: head selection, readiness, min-airtime precheck, and
+    /// failure charging are identical in both.
+    fn drain_core(
+        &mut self,
+        link: &mut Link,
+        window: &ContactWindow,
+        closes_pass: bool,
+        mut transmit: impl FnMut(&mut Link, u64, f64) -> Transfer,
+    ) -> Vec<Delivered> {
         let mut now = window.aos;
         let mut out = Vec::new();
         loop {
@@ -185,7 +200,7 @@ impl DownlinkQueue {
                 }
                 break;
             }
-            let t = link.transmit(bytes, budget);
+            let t = transmit(link, bytes, budget);
             now = start + t.elapsed_s;
             if t.completed {
                 let item = if queue_is_results {
@@ -249,6 +264,54 @@ impl DownlinkQueue {
         let dropped = self.stats.bytes_dropped - dropped_before;
         if dropped > 0 {
             tr.event(SpanKind::Drop, window.los, TracePayload::Bytes(dropped));
+        }
+        out
+    }
+
+    /// Chaos-path drain: identical scheduling to
+    /// [`Self::drain_window_sliced_traced`], but every transfer goes
+    /// through [`crate::link::Link::transmit_checked`] — `inject` draws
+    /// the frame verdict for each completed attempt (one draw per
+    /// attempt, so both engines consume the fault stream in the same
+    /// order) and `arq` bounds the retry/backoff loop inside the
+    /// remaining slice budget.  With an inject that always returns
+    /// `None`, `transmit_checked` is byte-for-byte `transmit`, so the
+    /// zero-fault chaos drain is bit-identical to the nominal drain —
+    /// the property `tests/chaos_invariants.rs` pins.
+    ///
+    /// Crash recovery rides on the no-resume ARQ model for free: a
+    /// blacked-out slice is simply never drained, the unacknowledged
+    /// heads stay queued (no failure charge — the satellite was dark,
+    /// not the channel bad), and the next healthy window replays them
+    /// from byte zero with delivery counted exactly once.
+    pub fn drain_window_sliced_chaos(
+        &mut self,
+        link: &mut Link,
+        window: &ContactWindow,
+        closes_pass: bool,
+        tracer: Option<&SatTracer>,
+        arq: &ArqPolicy,
+        inject: &mut impl FnMut() -> Option<FrameFault>,
+    ) -> Vec<Delivered> {
+        let delivered_before = self.stats.total_bytes();
+        let dropped_before = self.stats.bytes_dropped;
+        let out = self.drain_core(link, window, closes_pass, |l, bytes, budget| {
+            l.transmit_checked(bytes, budget, arq, &mut *inject)
+        });
+        if let Some(tr) = tracer {
+            tr.span(
+                SpanKind::DownlinkSlice,
+                window.aos,
+                window.los,
+                TracePayload::StationBytes {
+                    station: window.station_id as u32,
+                    bytes: self.stats.total_bytes() - delivered_before,
+                },
+            );
+            let dropped = self.stats.bytes_dropped - dropped_before;
+            if dropped > 0 {
+                tr.event(SpanKind::Drop, window.los, TracePayload::Bytes(dropped));
+            }
         }
         out
     }
@@ -493,6 +556,109 @@ mod tests {
         let sum: u64 = q.stats.station_bytes.iter().sum();
         assert_eq!(sum, q.stats.total_bytes(), "per-station bytes must sum to the total");
         assert!(q.stats.station_bytes(2) >= 36, "weights head went through station 2");
+    }
+
+    fn arq() -> ArqPolicy {
+        ArqPolicy { max_retries: 4, backoff_initial_s: 0.05, backoff_cap_s: 1.0 }
+    }
+
+    #[test]
+    fn chaos_drain_without_faults_is_bitwise_nominal() {
+        let items = [
+            item(ItemKind::Results, 160, 0.0, 1),
+            item(ItemKind::Image, 500_000, 0.0, 2),
+            item(ItemKind::Weights, 36, 10.0, 3),
+            item(ItemKind::Image, 2_000_000, 20.0, 4),
+        ];
+        let mut nominal = DownlinkQueue::new();
+        let mut chaos = DownlinkQueue::new();
+        for it in &items {
+            nominal.push(it.clone());
+            chaos.push(it.clone());
+        }
+        let mut la = link(60);
+        let mut lb = link(60);
+        let mut none = || None;
+        for (k, closes) in [(0usize, false), (1, true), (2, true)] {
+            let w = win(k as f64 * 100.0, k as f64 * 100.0 + 2.0);
+            let a = nominal.drain_window_sliced(&mut la, &w, closes);
+            let b = chaos.drain_window_sliced_chaos(&mut lb, &w, closes, None, &arq(), &mut none);
+            assert_eq!(a.len(), b.len(), "slice {k}");
+            for (x, y) in a.iter().zip(b.iter()) {
+                assert_eq!(x.item.tag, y.item.tag);
+                assert_eq!(x.at.to_bits(), y.at.to_bits(), "delivery time must match bitwise");
+            }
+        }
+        assert_eq!(nominal.stats.total_bytes(), chaos.stats.total_bytes());
+        assert_eq!(nominal.stats.items_delivered, chaos.stats.items_delivered);
+        assert_eq!(la.stats.bytes_delivered, lb.stats.bytes_delivered);
+        assert_eq!(la.stats.packets_sent, lb.stats.packets_sent);
+        assert_eq!(la.stats.packets_lost, lb.stats.packets_lost);
+        assert_eq!(
+            la.stats.busy_s.to_bits(),
+            lb.stats.busy_s.to_bits(),
+            "zero-fault ARQ leaves the link books untouched"
+        );
+        assert_eq!(lb.stats.retries, 0);
+        assert_eq!(lb.stats.bytes_rejected, 0);
+    }
+
+    #[test]
+    fn chaos_drain_retries_corrupt_frames_and_reconciles_bytes() {
+        let mut q = DownlinkQueue::new();
+        q.push(item(ItemKind::Results, 10_000, 0.0, 1));
+        let mut l = link(61);
+        // first completed attempt arrives corrupt, retry delivers
+        let mut verdicts = [Some(FrameFault::Corrupt), None].into_iter();
+        let mut inject = move || verdicts.next().flatten();
+        let got = q.drain_window_sliced_chaos(&mut l, &win(0.0, 30.0), true, None, &arq(), &mut inject);
+        assert_eq!(got.len(), 1);
+        assert_eq!(l.stats.retries, 1);
+        assert_eq!(l.stats.frames_corrupted, 1);
+        assert_eq!(l.stats.bytes_rejected, 10_000, "rejected frame's bytes leave the delivered books");
+        assert_eq!(l.stats.bytes_delivered, 10_000, "exactly one accepted copy");
+        assert_eq!(q.stats.results_bytes, 10_000, "queue counts the item once");
+        assert_eq!(q.stats.items_delivered, 1);
+    }
+
+    #[test]
+    fn chaos_drain_gives_up_then_replays_without_double_count() {
+        let mut q = DownlinkQueue::new();
+        q.push(item(ItemKind::Results, 10_000, 0.0, 7));
+        let mut l = link(62);
+        // every attempt in the first pass is truncated: ARQ exhausts its
+        // retries, the head stays queued with one failed window charged
+        let mut always = || Some(FrameFault::Truncate);
+        let got = q.drain_window_sliced_chaos(&mut l, &win(0.0, 30.0), true, None, &arq(), &mut always);
+        assert!(got.is_empty());
+        assert_eq!(l.stats.gave_up, 1);
+        assert_eq!(q.pending(), 1, "unacknowledged item stays queued for replay");
+        assert_eq!(q.stats.items_delivered, 0);
+        // next healthy pass replays it from byte zero, delivered once
+        let mut none = || None;
+        let got = q.drain_window_sliced_chaos(&mut l, &win(100.0, 130.0), true, None, &arq(), &mut none);
+        assert_eq!(got.len(), 1);
+        assert_eq!(q.stats.items_delivered, 1, "replay must not double-count");
+        assert_eq!(q.stats.results_bytes, 10_000);
+        assert_eq!(l.stats.bytes_delivered, 10_000, "only the accepted copy stays in delivered");
+        assert_eq!(l.stats.bytes_rejected, 5 * 10_000, "five truncated frames rejected");
+    }
+
+    #[test]
+    fn chaos_drain_traces_slices_like_nominal() {
+        use crate::telemetry::trace::TraceSink;
+        use std::sync::Arc;
+        let sink = Arc::new(TraceSink::new(1, 64));
+        let tr = sink.tracer(0, 3);
+        let mut q = DownlinkQueue::new();
+        q.push(item(ItemKind::Results, 160, 0.0, 1));
+        let mut none = || None;
+        q.drain_window_sliced_chaos(&mut link(63), &win(0.0, 60.0), true, Some(&tr), &arq(), &mut none);
+        let log = sink.merge();
+        let slices: Vec<_> =
+            log.records().iter().filter(|r| r.kind == SpanKind::DownlinkSlice).collect();
+        assert_eq!(slices.len(), 1);
+        assert_eq!(slices[0].payload, TracePayload::StationBytes { station: 0, bytes: 160 });
     }
 
     #[test]

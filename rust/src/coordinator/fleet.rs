@@ -61,15 +61,16 @@ use crate::runtime::{Model, Runtime};
 use crate::sedna::federated::{self, FedScheduler};
 use crate::sedna::{GlobalManager, LocalController, TaskKind, TaskPhase, TaskSpec};
 use crate::sim::{
-    run_sharded, scene_timing, ContactSlice, DutyCycles, EventKind, MachineStep, SatMachine,
-    Timeline, ADMISSION_WAIT_BUCKETS, ADMISSION_WAIT_FIRST_BOUND_S,
+    apply_seu, run_sharded, scene_timing, ChaosStats, ContactSlice, DutyCycles, EventKind,
+    FaultPlan, MachineStep, SatMachine, Timeline, ADMISSION_WAIT_BUCKETS,
+    ADMISSION_WAIT_FIRST_BOUND_S,
 };
 use crate::telemetry::trace::{SatTracer, SpanKind, TracePayload, TraceSink};
 use crate::telemetry::{per_node_gauges_enabled, Counter, Gauge, Histogram, Registry};
 
 use super::constellation::{
-    apply_fed_rounds, fleet_fed_report, fold_ready, set_fleet_power_gauges, ConstellationReport,
-    PendingScene, SatelliteReport, TAG_STRIDE,
+    apply_fed_rounds, chaos_gated_drain, fleet_fed_report, fold_ready, poll_fed_gated,
+    set_fleet_power_gauges, ConstellationReport, PendingScene, SatelliteReport, TAG_STRIDE,
 };
 use super::downlink::{Delivered, DownlinkItem, DownlinkQueue, ItemKind};
 use super::engine::{trace_onboard, OnboardStage, SceneJob, Stage};
@@ -140,6 +141,12 @@ struct FleetSat<'a, 'rt> {
     power_metrics: Option<(Arc<Gauge>, Arc<Counter>, Arc<Counter>)>,
     fed: Option<FedScheduler>,
     fed_metrics: Option<(Arc<Counter>, Arc<Counter>)>,
+    /// Seeded fault plan (`None` when `chaos.enabled` is off) plus the
+    /// per-satellite fault ledger it fills.  The plan is a pure
+    /// function of (chaos.seed, sat index, horizon, scenes), so it is
+    /// identical to the thread driver's whatever the shard count.
+    chaos_plan: Option<FaultPlan>,
+    chaos_stats: ChaosStats,
     pending: BTreeMap<usize, PendingScene>,
     shed_idx: BTreeSet<usize>,
     next_fold: usize,
@@ -199,6 +206,8 @@ impl<'a, 'rt> FleetSat<'a, 'rt> {
                 (Arc::new(Counter::default()), Arc::new(Counter::default()))
             }
         });
+        let chaos_plan =
+            cfg.chaos.enabled.then(|| FaultPlan::compile(&cfg.chaos, index, sh.horizon, sh.scenes));
         // ring index: `tracer` reduces it modulo the sink's shard count,
         // which run_fleet sized to the scheduler's effective shard
         // count, so each satellite records into the ring owned by the
@@ -220,6 +229,8 @@ impl<'a, 'rt> FleetSat<'a, 'rt> {
             power_metrics,
             fed,
             fed_metrics,
+            chaos_plan,
+            chaos_stats: ChaosStats::default(),
             pending: BTreeMap::new(),
             shed_idx: BTreeSet::new(),
             next_fold: 0,
@@ -287,7 +298,12 @@ impl<'a, 'rt> FleetSat<'a, 'rt> {
     /// driver inlines at every decision point.
     fn fed_poll(&mut self, t: f64) {
         if let Some(f) = self.fed.as_mut() {
-            let decisions = f.poll(t, self.power.as_ref().map(|p| p.soc_frac()));
+            let decisions = poll_fed_gated(
+                f,
+                self.chaos_plan.as_ref(),
+                t,
+                self.power.as_ref().map(|p| p.soc_frac()),
+            );
             let wire = f.wire_bytes();
             apply_fed_rounds(
                 decisions,
@@ -307,8 +323,51 @@ impl<'a, 'rt> FleetSat<'a, 'rt> {
     /// either the next capture or the mission tail.
     fn on_capture(&mut self) -> Result<MachineStep> {
         let idx = self.next_drive;
-        let scene = self.gen.capture();
+        let mut scene = self.gen.capture();
+        // chaos: SEU strikes hit the freshly captured buffer,
+        // pre-filter — the same plan slots the thread driver's capture
+        // thread applies, so the pixels are bit-identical
+        if let Some(c) = self.chaos_plan.as_ref() {
+            if let Some(seed) = c.seu_for_scene(idx) {
+                apply_seu(&mut scene.pixels, seed, c.seu_flips());
+            }
+        }
         self.sh.produced.inc();
+        // chaos: dark at this capture instant — the scene is lost
+        // outright, checked before the power verdict (a dead bus
+        // outranks a low battery).  Like the shed path, the capture RNG
+        // advanced (stream parity) and the onboard stage is skipped.
+        if self
+            .chaos_plan
+            .as_ref()
+            .map(|c| c.crashed_at(self.timeline.now_s()))
+            .unwrap_or(false)
+        {
+            let t_crash = self.timeline.now_s();
+            if let Some(tr) = &self.tracer {
+                tr.event(SpanKind::FaultCrash, t_crash, TracePayload::None);
+            }
+            self.chaos_stats.lost_to_crash += 1;
+            drop(scene);
+            let (_, period) = scene_timing(self.timeline.timing(), 0);
+            let t = self.timeline.advance(period);
+            let blacked = self.timeline.due_contacts(t).len() as u64;
+            self.chaos_stats.slices_blacked_out += blacked;
+            self.chaos_stats.heartbeats_suppressed += blacked;
+            let duties = DutyCycles::default();
+            self.acc.extend_mission(period, duties);
+            if let Some(p) = self.power.as_mut() {
+                p.advance_period(period, duties, self.timeline.sunlit_s(t_crash, t));
+                if let Some((soc, _, _)) = &self.power_metrics {
+                    soc.set(p.soc_pct());
+                }
+            }
+            self.fed_poll(t);
+            self.shed_idx.insert(idx);
+            self.next_drive += 1;
+            fold_ready(&mut self.pending, &mut self.shed_idx, &mut self.next_fold, &mut self.acc, false);
+            return self.after_scene();
+        }
         let verdict = self.power.as_ref().map(|p| p.verdict()).unwrap_or(PowerVerdict::Nominal);
         // governed verdicts are flight-recorder events, stamped with the
         // SoC the governor read at this capture's virtual time
@@ -373,6 +432,20 @@ impl<'a, 'rt> FleetSat<'a, 'rt> {
 
         let (busy, period) = scene_timing(self.timeline.timing(), d.processed.len());
         let t_capture = self.timeline.now_s();
+        // chaos: record the SEU that struck this scene's buffer — the
+        // same (stat, trace) pair the thread driver emits here
+        if let Some(c) = self.chaos_plan.as_ref() {
+            if c.seu_for_scene(idx).is_some() {
+                self.chaos_stats.seu_scenes += 1;
+                if let Some(tr) = &self.tracer {
+                    tr.event(
+                        SpanKind::FaultSeu,
+                        t_capture,
+                        TracePayload::Batch(c.seu_flips() as usize),
+                    );
+                }
+            }
+        }
         if let Some(tr) = &self.tracer {
             trace_onboard(tr, &d, t_capture, self.timeline.timing().capture_overhead_s, busy);
         }
@@ -423,13 +496,19 @@ impl<'a, 'rt> FleetSat<'a, 'rt> {
         } else {
             for slice in self.timeline.due_contacts(t) {
                 let at_ms = (slice.window.aos * 1000.0) as u64;
-                self.sh.registry.lock().unwrap().heartbeat(&self.node, at_ms);
-                let got = self.queue.drain_window_sliced_traced(
+                let got = chaos_gated_drain(
+                    &mut self.chaos_plan,
+                    &mut self.chaos_stats,
+                    &mut self.queue,
                     &mut self.link,
                     &slice.window,
                     slice.closes_pass,
                     self.tracer.as_ref(),
+                    || {
+                        self.sh.registry.lock().unwrap().heartbeat(&self.node, at_ms);
+                    },
                 );
+                let Some(got) = got else { continue }; // blacked out
                 self.ground_round_trip(got, slice.window.los)?;
             }
         }
@@ -519,7 +598,12 @@ impl<'a, 'rt> FleetSat<'a, 'rt> {
                     );
                     tail.power_cursor = tail.power_cursor.max(target);
                 }
-                let decisions = f.poll(due, self.power.as_ref().map(|p| p.soc_frac()));
+                let decisions = poll_fed_gated(
+                    f,
+                    self.chaos_plan.as_ref(),
+                    due,
+                    self.power.as_ref().map(|p| p.soc_frac()),
+                );
                 let wire = f.wire_bytes();
                 apply_fed_rounds(
                     decisions,
@@ -559,14 +643,27 @@ impl<'a, 'rt> FleetSat<'a, 'rt> {
             }
         }
         let at_ms = (slice.window.aos * 1000.0) as u64;
-        self.sh.registry.lock().unwrap().heartbeat(&self.node, at_ms);
         let busy_before = self.link.stats.busy_s;
-        let got = self.queue.drain_window_sliced_traced(
+        let got = chaos_gated_drain(
+            &mut self.chaos_plan,
+            &mut self.chaos_stats,
+            &mut self.queue,
             &mut self.link,
             &slice.window,
             slice.closes_pass,
             self.tracer.as_ref(),
+            || {
+                self.sh.registry.lock().unwrap().heartbeat(&self.node, at_ms);
+            },
         );
+        let Some(got) = got else {
+            // blacked out: the pass never happens; AOS→LOS integrates
+            // as idle from `power_cursor`, exactly like the thread
+            // driver's `continue` past a blacked-out tail slice
+            self.tail = Some(tail);
+            let (t, kind) = self.next_tail_key();
+            return Ok(MachineStep::Yield(t, kind));
+        };
         self.tail = Some(tail);
         self.ground_round_trip(got, slice.window.los)?;
         let mut tail = self.tail.take().expect("tail state");
@@ -599,7 +696,12 @@ impl<'a, 'rt> FleetSat<'a, 'rt> {
             );
             tail.power_cursor = tail.power_cursor.max(due);
         }
-        let decisions = f.poll(due, self.power.as_ref().map(|p| p.soc_frac()));
+        let decisions = poll_fed_gated(
+            f,
+            self.chaos_plan.as_ref(),
+            due,
+            self.power.as_ref().map(|p| p.soc_frac()),
+        );
         let wire = f.wire_bytes();
         apply_fed_rounds(
             decisions,
@@ -648,20 +750,31 @@ impl<'a, 'rt> FleetSat<'a, 'rt> {
     /// post-scope accounting, verbatim.
     fn into_report(mut self) -> Result<SatelliteReport> {
         let scenes = self.sh.scenes;
+        // plan-level totals land once the mission is over, same as the
+        // thread driver's post-scope accounting
+        if let Some(c) = &self.chaos_plan {
+            self.chaos_stats.crashes = c.crash_windows().len() as u64;
+            self.chaos_stats.dropouts = c.dropout_windows().len() as u64;
+        }
         let shed = self.power.as_ref().map(|p| p.stats.scenes_shed as usize).unwrap_or(0);
+        let lost = self.chaos_stats.lost_to_crash as usize;
         anyhow::ensure!(
-            self.acc.scenes() + shed == scenes,
-            "satellite {} lost scenes: folded {} + shed {shed} of {scenes}",
+            self.acc.scenes() + shed + lost == scenes,
+            "satellite {} lost scenes: folded {} + shed {shed} + crashed {lost} of {scenes}",
             self.index,
             self.acc.scenes()
         );
         if let Some(f) = &self.fed {
             anyhow::ensure!(
-                f.stats.rounds_completed + f.stats.rounds_skipped_power == f.stats.rounds_scheduled,
-                "satellite {} lost federated rounds: {} + {} of {}",
+                f.stats.rounds_completed
+                    + f.stats.rounds_skipped_power
+                    + f.stats.rounds_skipped_crash
+                    == f.stats.rounds_scheduled,
+                "satellite {} lost federated rounds: {} + {} + {} of {}",
                 self.index,
                 f.stats.rounds_completed,
                 f.stats.rounds_skipped_power,
+                f.stats.rounds_skipped_crash,
                 f.stats.rounds_scheduled
             );
         }
@@ -703,6 +816,7 @@ impl<'a, 'rt> FleetSat<'a, 'rt> {
             sunlit_s: self.timeline.sunlit_s(0.0, self.sh.horizon),
             power: power_stats,
             federated: fed_stats,
+            chaos: self.chaos_plan.is_some().then_some(self.chaos_stats),
         })
     }
 }
@@ -740,6 +854,7 @@ pub fn run_fleet(rt: &Runtime, cfg: &Config, version: Version) -> Result<Constel
     cfg.power.validate()?;
     cfg.federated.validate()?;
     cfg.fleet.validate()?;
+    cfg.chaos.validate()?;
     cfg.validate_cross()?;
     anyhow::ensure!(!cfg.stations.is_empty(), "stations must list at least one ground station");
     let n_sats = cfg.constellation.satellites.max(1);

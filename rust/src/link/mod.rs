@@ -66,6 +66,22 @@ pub struct LinkStats {
     pub retransmissions: u64,
     pub transfers_aborted: u64,
     pub busy_s: f64,
+    /// Completed transfers whose frame arrived corrupted (receiver
+    /// checksum failed; injected by the chaos engine).
+    pub frames_corrupted: u64,
+    /// Completed transfers whose frame arrived truncated (same
+    /// receiver-side rejection path).
+    pub frames_truncated: u64,
+    /// Transfer-level ARQ retries after a rejected frame
+    /// ([`Link::transmit_checked`]).
+    pub retries: u64,
+    /// Transfers the ARQ layer gave up on — retry budget or window
+    /// budget exhausted with the frame still failing its checksum.
+    pub gave_up: u64,
+    /// Bytes that crossed the channel but failed the transfer checksum
+    /// and were rejected by the receiver (moved out of
+    /// `bytes_delivered`; the airtime stays in `busy_s`).
+    pub bytes_rejected: u64,
 }
 
 impl LinkStats {
@@ -93,6 +109,40 @@ impl LinkStats {
         self.retransmissions += other.retransmissions;
         self.transfers_aborted += other.transfers_aborted;
         self.busy_s += other.busy_s;
+        self.frames_corrupted += other.frames_corrupted;
+        self.frames_truncated += other.frames_truncated;
+        self.retries += other.retries;
+        self.gave_up += other.gave_up;
+        self.bytes_rejected += other.bytes_rejected;
+    }
+}
+
+/// Receiver-side frame verdict an injector can return for a completed
+/// transfer: the whole frame arrived, but its transfer checksum fails
+/// (corrupted payload) or the byte count comes up short (truncated).
+/// Either way the receiver rejects the bytes and the ARQ layer decides
+/// whether to retry.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FrameFault {
+    Corrupt,
+    Truncate,
+}
+
+/// Transfer-level ARQ retry policy for [`Link::transmit_checked`]:
+/// capped exponential backoff between whole-transfer retries after a
+/// rejected frame.  Retry `r` (0-based) waits
+/// `min(backoff_initial_s * 2^r, backoff_cap_s)` of window time — the
+/// channel is idle during backoff, so it costs budget but not `busy_s`.
+#[derive(Clone, Copy, Debug)]
+pub struct ArqPolicy {
+    pub max_retries: u32,
+    pub backoff_initial_s: f64,
+    pub backoff_cap_s: f64,
+}
+
+impl ArqPolicy {
+    pub fn backoff_s(&self, retry: u32) -> f64 {
+        (self.backoff_initial_s * f64::powi(2.0, retry.min(62) as i32)).min(self.backoff_cap_s)
     }
 }
 
@@ -206,6 +256,73 @@ impl Link {
         self.stats.bytes_delivered += delivered;
         Transfer { bytes_requested: bytes, bytes_delivered: delivered, elapsed_s: elapsed, completed: true }
     }
+
+    /// [`Self::transmit`] with a receiver-side transfer checksum and
+    /// transfer-level ARQ.  `inject` is consulted once per completed
+    /// transfer attempt (the chaos engine's seeded fault stream; `None`
+    /// = frame verifies).  A rejected frame moves its bytes from
+    /// `bytes_delivered` to `bytes_rejected` — the airtime was genuinely
+    /// spent, the payload was not received — then the transfer retries
+    /// after capped exponential backoff until it verifies, the retry
+    /// budget runs out, or the window budget cannot fit the backoff
+    /// (`gave_up`).  With `inject` always returning `None` this is
+    /// byte-for-byte `transmit`: one attempt, same RNG draws, same
+    /// stats — the zero-fault lane of a chaos run stays bit-identical
+    /// to a chaos-disabled run.
+    ///
+    /// Underlying packet-level failures (window budget or per-packet
+    /// `max_tries` exhausted inside `transmit`) pass through unchanged:
+    /// there is no complete frame to checksum and the packet layer
+    /// already gave up, so the ARQ layer never masks them.
+    pub fn transmit_checked(
+        &mut self,
+        bytes: u64,
+        budget_s: f64,
+        arq: &ArqPolicy,
+        mut inject: impl FnMut() -> Option<FrameFault>,
+    ) -> Transfer {
+        let mut elapsed = 0.0;
+        let mut retries_used = 0u32;
+        loop {
+            let t = self.transmit(bytes, budget_s - elapsed);
+            elapsed += t.elapsed_s;
+            if !t.completed {
+                return Transfer {
+                    bytes_requested: bytes,
+                    bytes_delivered: t.bytes_delivered,
+                    elapsed_s: elapsed,
+                    completed: false,
+                };
+            }
+            let Some(fault) = inject() else {
+                return Transfer {
+                    bytes_requested: bytes,
+                    bytes_delivered: t.bytes_delivered,
+                    elapsed_s: elapsed,
+                    completed: true,
+                };
+            };
+            match fault {
+                FrameFault::Corrupt => self.stats.frames_corrupted += 1,
+                FrameFault::Truncate => self.stats.frames_truncated += 1,
+            }
+            self.stats.bytes_delivered -= t.bytes_delivered;
+            self.stats.bytes_rejected += t.bytes_delivered;
+            let backoff = arq.backoff_s(retries_used);
+            if retries_used >= arq.max_retries || elapsed + backoff >= budget_s {
+                self.stats.gave_up += 1;
+                return Transfer {
+                    bytes_requested: bytes,
+                    bytes_delivered: 0,
+                    elapsed_s: elapsed,
+                    completed: false,
+                };
+            }
+            elapsed += backoff;
+            self.stats.retries += 1;
+            retries_used += 1;
+        }
+    }
 }
 
 #[cfg(test)]
@@ -309,9 +426,135 @@ mod tests {
     #[test]
     fn stats_merge_adds_fields() {
         let mut a = LinkStats { bytes_offered: 10, ..Default::default() };
-        let b = LinkStats { bytes_offered: 5, packets_sent: 2, ..Default::default() };
+        let b = LinkStats {
+            bytes_offered: 5,
+            packets_sent: 2,
+            frames_corrupted: 1,
+            frames_truncated: 2,
+            retries: 3,
+            gave_up: 1,
+            bytes_rejected: 400,
+            ..Default::default()
+        };
         a.merge(&b);
         assert_eq!(a.bytes_offered, 15);
         assert_eq!(a.packets_sent, 2);
+        assert_eq!(a.frames_corrupted, 1);
+        assert_eq!(a.frames_truncated, 2);
+        assert_eq!(a.retries, 3);
+        assert_eq!(a.gave_up, 1);
+        assert_eq!(a.bytes_rejected, 400);
+    }
+
+    #[test]
+    fn empty_stats_rates_are_zero_not_nan() {
+        // a chaos run can kill a link before its first transmit; rates
+        // over zero frames / zero seconds must be 0.0, never NaN
+        let s = LinkStats::default();
+        assert_eq!(s.loss_rate(), 0.0);
+        assert!(s.loss_rate().is_finite());
+        assert_eq!(s.goodput_bps(), 0.0);
+        assert!(s.goodput_bps().is_finite());
+        // delivered bytes but no recorded airtime (degenerate merge
+        // input) must not divide by zero either
+        let odd = LinkStats { bytes_delivered: 4096, ..Default::default() };
+        assert_eq!(odd.goodput_bps(), 0.0);
+        let lossy = LinkStats { packets_lost: 3, ..Default::default() };
+        assert_eq!(lossy.loss_rate(), 0.0);
+    }
+
+    fn no_fault() -> Option<FrameFault> {
+        None
+    }
+
+    fn arq() -> ArqPolicy {
+        ArqPolicy { max_retries: 4, backoff_initial_s: 0.05, backoff_cap_s: 1.0 }
+    }
+
+    #[test]
+    fn checked_transmit_without_faults_is_bitwise_transmit() {
+        // same seed, same offered sequence: the checked path with a
+        // silent injector must reproduce plain transmit exactly —
+        // stats, elapsed bits, and RNG stream position
+        let mut plain = Link::new(LinkConfig::downlink(LossProfile::weak()), 11);
+        let mut checked = Link::new(LinkConfig::downlink(LossProfile::weak()), 11);
+        for i in 0..30u64 {
+            let bytes = 5_000 + i * 997;
+            let a = plain.transmit(bytes, 0.8);
+            let b = checked.transmit_checked(bytes, 0.8, &arq(), no_fault);
+            assert_eq!(a.bytes_delivered, b.bytes_delivered, "transfer {i}");
+            assert_eq!(a.completed, b.completed, "transfer {i}");
+            assert_eq!(a.elapsed_s.to_bits(), b.elapsed_s.to_bits(), "transfer {i}");
+        }
+        assert_eq!(plain.stats.bytes_delivered, checked.stats.bytes_delivered);
+        assert_eq!(plain.stats.packets_sent, checked.stats.packets_sent);
+        assert_eq!(plain.stats.packets_lost, checked.stats.packets_lost);
+        assert_eq!(plain.stats.busy_s.to_bits(), checked.stats.busy_s.to_bits());
+        assert_eq!(checked.stats.retries, 0);
+        assert_eq!(checked.stats.gave_up, 0);
+        assert_eq!(checked.stats.bytes_rejected, 0);
+    }
+
+    #[test]
+    fn corrupt_frame_retries_then_delivers() {
+        let mut link = Link::new(LinkConfig::downlink(LossProfile::lossless()), 12);
+        let mut faults_left = 2u32;
+        let t = link.transmit_checked(100_000, 60.0, &arq(), || {
+            if faults_left > 0 {
+                faults_left -= 1;
+                Some(FrameFault::Corrupt)
+            } else {
+                None
+            }
+        });
+        assert!(t.completed);
+        assert_eq!(t.bytes_delivered, 100_000);
+        assert_eq!(link.stats.retries, 2);
+        assert_eq!(link.stats.frames_corrupted, 2);
+        assert_eq!(link.stats.gave_up, 0);
+        // the two rejected attempts moved out of delivered accounting
+        assert_eq!(link.stats.bytes_rejected, 200_000);
+        assert_eq!(link.stats.bytes_delivered, 100_000);
+        // elapsed covers three airtimes plus the two backoffs
+        let airtime = 3.0 * (100_000f64 / 1400.0).ceil() * 1400.0 * 8.0 / 40e6;
+        let backoffs = 0.05 + 0.10;
+        assert!((t.elapsed_s - airtime - backoffs).abs() < 1e-9, "{}", t.elapsed_s);
+    }
+
+    #[test]
+    fn persistent_faults_exhaust_retries_and_give_up() {
+        let mut link = Link::new(LinkConfig::downlink(LossProfile::lossless()), 13);
+        let t = link.transmit_checked(50_000, 600.0, &arq(), || Some(FrameFault::Truncate));
+        assert!(!t.completed);
+        assert_eq!(t.bytes_delivered, 0);
+        assert_eq!(link.stats.gave_up, 1);
+        assert_eq!(link.stats.retries, 4);
+        assert_eq!(link.stats.frames_truncated, 5); // initial attempt + 4 retries
+        assert_eq!(link.stats.bytes_delivered, 0);
+        assert_eq!(link.stats.bytes_rejected, 5 * 50_000);
+    }
+
+    #[test]
+    fn arq_respects_window_budget() {
+        // a tight window: the first rejection's backoff does not fit, so
+        // the ARQ layer gives up instead of overrunning the contact
+        let mut link = Link::new(LinkConfig::downlink(LossProfile::lossless()), 14);
+        let airtime = (50_000f64 / 1400.0).ceil() * 1400.0 * 8.0 / 40e6;
+        let budget = airtime + 0.01; // < airtime + backoff_initial_s
+        let t = link.transmit_checked(50_000, budget, &arq(), || Some(FrameFault::Corrupt));
+        assert!(!t.completed);
+        assert_eq!(link.stats.gave_up, 1);
+        assert_eq!(link.stats.retries, 0);
+        assert!(t.elapsed_s <= budget + 1e-9);
+    }
+
+    #[test]
+    fn backoff_doubles_and_caps() {
+        let p = arq();
+        assert_eq!(p.backoff_s(0), 0.05);
+        assert_eq!(p.backoff_s(1), 0.10);
+        assert_eq!(p.backoff_s(2), 0.20);
+        assert_eq!(p.backoff_s(10), 1.0, "capped");
+        assert_eq!(p.backoff_s(u32::MAX), 1.0, "no overflow at huge retry counts");
     }
 }

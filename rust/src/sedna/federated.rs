@@ -268,9 +268,9 @@ pub fn run_federated(
 }
 
 /// Per-satellite federated scheduling outcome — the counters that must
-/// reconcile (`rounds_completed + rounds_skipped_power ==
-/// rounds_scheduled`) and the per-round participant record the fleet
-/// aggregation replays.
+/// reconcile (`rounds_completed + rounds_skipped_power +
+/// rounds_skipped_crash == rounds_scheduled`) and the per-round
+/// participant record the fleet aggregation replays.
 #[derive(Clone, Debug, Default)]
 pub struct FederatedStats {
     /// Rounds the mission horizon schedules (one per `round_interval_s`).
@@ -279,6 +279,11 @@ pub struct FederatedStats {
     pub rounds_completed: u64,
     /// Rounds skipped because SoC sat below the `min_soc` gate.
     pub rounds_skipped_power: u64,
+    /// Rounds skipped because the satellite was dark (chaos `NodeCrash`)
+    /// when the round came due.  A crashed round never trains and never
+    /// uplinks — it is reported as its own skip class rather than
+    /// corrupting the global with a partial contribution.
+    pub rounds_skipped_crash: u64,
     /// Weight bytes queued for uplink (`wire_bytes` per completed round).
     pub uplink_bytes: u64,
     /// Per-round participation, indexed by round.
@@ -291,16 +296,21 @@ pub struct RoundDecision {
     pub round: usize,
     pub due_s: f64,
     pub participated: bool,
+    /// The satellite was crashed at `due_s` — takes precedence over the
+    /// power gate (a dark satellite cannot even read its SoC).
+    pub crashed: bool,
 }
 
 impl RoundDecision {
     /// Flight-recorder verdict for this round: the payload of the
     /// `TrainingRound` span the drivers emit (due time → due + the
     /// training burst for participated rounds, instantaneous for
-    /// power-skipped ones).
+    /// skipped ones).
     pub fn trace_verdict(&self) -> crate::telemetry::trace::RoundVerdict {
         if self.participated {
             crate::telemetry::trace::RoundVerdict::Participated
+        } else if self.crashed {
+            crate::telemetry::trace::RoundVerdict::SkippedCrash
         } else {
             crate::telemetry::trace::RoundVerdict::SkippedPower
         }
@@ -366,9 +376,24 @@ impl FedScheduler {
     /// Decide every round due by mission time `t` with the SoC observed
     /// now (`None` = no power subsystem, nothing skips).
     pub fn poll(&mut self, t: f64, soc: Option<f64>) -> Vec<RoundDecision> {
+        self.poll_gated(t, soc, |_| false)
+    }
+
+    /// [`Self::poll`] with a chaos crash gate: `crashed(due_s)` reports
+    /// whether the satellite was dark at the round's due time.  The
+    /// per-due-time query (rather than a single flag) keeps decisions a
+    /// pure function of mission time, so a poll that flushes several
+    /// overdue rounds classifies each against its own due instant.  The
+    /// nominal [`Self::poll`] is this with an always-false gate.
+    pub fn poll_gated(
+        &mut self,
+        t: f64,
+        soc: Option<f64>,
+        crashed: impl Fn(f64) -> bool,
+    ) -> Vec<RoundDecision> {
         let mut out = Vec::new();
         while let Some(due) = self.due_next().filter(|d| *d <= t) {
-            out.push(self.decide(due, soc));
+            out.push(self.decide(due, soc, crashed(due)));
         }
         out
     }
@@ -376,29 +401,43 @@ impl FedScheduler {
     /// Decide every round still outstanding — the end-of-mission flush,
     /// immune to f64 rounding at the horizon boundary.
     pub fn finish(&mut self, soc: Option<f64>) -> Vec<RoundDecision> {
+        self.finish_gated(soc, |_| false)
+    }
+
+    /// [`Self::finish`] with a chaos crash gate (see
+    /// [`Self::poll_gated`]).
+    pub fn finish_gated(
+        &mut self,
+        soc: Option<f64>,
+        crashed: impl Fn(f64) -> bool,
+    ) -> Vec<RoundDecision> {
         let mut out = Vec::new();
         while let Some(due) = self.due_next() {
-            out.push(self.decide(due, soc));
+            out.push(self.decide(due, soc, crashed(due)));
         }
         out
     }
 
-    fn decide(&mut self, due_s: f64, soc: Option<f64>) -> RoundDecision {
-        // `None` = no power subsystem: the gate is inert
-        let participated = match soc {
-            Some(s) => s >= self.min_soc,
-            None => true,
-        };
+    fn decide(&mut self, due_s: f64, soc: Option<f64>, crashed: bool) -> RoundDecision {
+        // crash precedence: a dark satellite never consults the power
+        // gate; `None` soc = no power subsystem, that gate is inert
+        let participated = !crashed
+            && match soc {
+                Some(s) => s >= self.min_soc,
+                None => true,
+            };
         let round = self.next_round;
         self.next_round += 1;
         self.stats.participated.push(participated);
         if participated {
             self.stats.rounds_completed += 1;
             self.stats.uplink_bytes += self.wire_bytes;
+        } else if crashed {
+            self.stats.rounds_skipped_crash += 1;
         } else {
             self.stats.rounds_skipped_power += 1;
         }
-        RoundDecision { round, due_s, participated }
+        RoundDecision { round, due_s, participated, crashed }
     }
 }
 
@@ -479,7 +518,7 @@ mod tests {
         assert_eq!(d2.len(), 5);
         assert!(d2.iter().all(|d| d.participated));
         assert_eq!(
-            s.stats.rounds_completed + s.stats.rounds_skipped_power,
+            s.stats.rounds_completed + s.stats.rounds_skipped_power + s.stats.rounds_skipped_crash,
             s.stats.rounds_scheduled
         );
         assert_eq!(s.stats.participated.len() as u64, s.stats.rounds_scheduled);
@@ -506,10 +545,44 @@ mod tests {
     #[test]
     fn round_decisions_map_to_trace_verdicts() {
         use crate::telemetry::trace::RoundVerdict;
-        let went = RoundDecision { round: 0, due_s: 100.0, participated: true };
-        let skipped = RoundDecision { round: 1, due_s: 200.0, participated: false };
+        let went = RoundDecision { round: 0, due_s: 100.0, participated: true, crashed: false };
+        let skipped = RoundDecision { round: 1, due_s: 200.0, participated: false, crashed: false };
+        let dark = RoundDecision { round: 2, due_s: 300.0, participated: false, crashed: true };
         assert_eq!(went.trace_verdict(), RoundVerdict::Participated);
         assert_eq!(skipped.trace_verdict(), RoundVerdict::SkippedPower);
+        assert_eq!(dark.trace_verdict(), RoundVerdict::SkippedCrash);
+    }
+
+    #[test]
+    fn crash_gate_reports_its_own_skip_class() {
+        let fed = FederatedConfig {
+            enabled: true,
+            round_interval_s: 100.0,
+            ..FederatedConfig::default()
+        };
+        let mut s = FedScheduler::new(&fed, 1000.0);
+        // dark for rounds due in [200, 500): rounds 2-4 crash-skip even
+        // though SoC is healthy; crash takes precedence over power
+        let crashed = |due: f64| (200.0..500.0).contains(&due);
+        let d = s.poll_gated(600.0, Some(fed.min_soc - 0.1), crashed);
+        assert_eq!(d.len(), 6);
+        let crash_skipped: Vec<usize> =
+            d.iter().filter(|x| x.crashed).map(|x| x.round).collect();
+        assert_eq!(crash_skipped, vec![1, 2, 3], "rounds due at 200/300/400 were dark");
+        assert!(d.iter().filter(|x| x.crashed).all(|x| !x.participated));
+        // healthy SoC for the flush: the remaining rounds participate
+        let d2 = s.finish_gated(Some(fed.min_soc + 0.1), |_| false);
+        assert_eq!(d2.len(), 4);
+        assert!(d2.iter().all(|x| x.participated));
+        assert_eq!(s.stats.rounds_skipped_crash, 3);
+        assert_eq!(s.stats.rounds_skipped_power, 3, "rounds due at 100/500/600 power-skipped");
+        assert_eq!(s.stats.rounds_completed, 4);
+        assert_eq!(
+            s.stats.rounds_completed + s.stats.rounds_skipped_power + s.stats.rounds_skipped_crash,
+            s.stats.rounds_scheduled
+        );
+        // crashed rounds queue no uplink bytes
+        assert_eq!(s.stats.uplink_bytes, 4 * s.wire_bytes());
     }
 
     #[test]

@@ -1,0 +1,414 @@
+//! Deterministic chaos engine: seeded fault injection for both
+//! constellation engines.
+//!
+//! The paper's Tiansuan deployment survives a hostile environment —
+//! lossy downlinks, radiation upsets, nodes that die mid-pass — and the
+//! related constellation-scale work (arXiv:2111.12769's power-limited
+//! node churn, the On-Orbit Space AI robustness arguments) insists that
+//! fleet algorithms be validated under faults, not just nominal runs.
+//! This module compiles a per-satellite [`FaultPlan`] at mission start
+//! from the validated `chaos` config section and hands both engines the
+//! same typed fault schedule.
+//!
+//! Determinism contract: a plan is a pure function of
+//! `(chaos.seed, satellite index, horizon, scene count)` — never of the
+//! engine, shard count, or admission cap.  Crash and dropout windows
+//! are Poisson-scheduled at compile time; SEU strikes are decided per
+//! scene index up front; frame faults are drawn from a dedicated
+//! per-satellite stream consumed once per completed transfer attempt,
+//! which both engines execute in the identical virtual order.  The
+//! same seed therefore reproduces the identical fault plan, trace
+//! stream, and report everywhere (`tests/chaos_invariants.rs`).
+//!
+//! Fault taxonomy ([`FaultKind`]):
+//!
+//! * `NodeCrash` — the satellite goes dark for `crash_recovery_s`:
+//!   captures in the window are lost (counted `lost_to_crash`, the
+//!   scene-conservation term), contact slices opening in the window
+//!   are skipped without draining *or* charging a window failure (the
+//!   queue replays the items in the next healthy window — crash-safe
+//!   recovery with no double-count), heartbeats stop (the registry
+//!   walks the node through `NotReady` → `Offline` and the
+//!   orchestrator fails its pods over), and federated rounds due in
+//!   the window are reported as `rounds_skipped_crash`.
+//! * `FrameCorrupt` / `FrameTruncate` — a completed downlink transfer
+//!   arrives garbled or short; the receiver's transfer checksum rejects
+//!   it and [`crate::link::Link::transmit_checked`] retries under the
+//!   capped-exponential-backoff ARQ policy.
+//! * `SeuBitFlip` — bits flip in the checked-out pixel buffer between
+//!   capture and filtering ([`apply_seu`]); the pipeline is NaN-safe
+//!   downstream (quantizer maps NaN→0, NMS orders by `total_cmp`), so
+//!   the scene still folds.
+//! * `RegistryDropout` — heartbeats are suppressed for
+//!   `dropout_silence_s` while the data plane keeps flowing; the
+//!   control plane sees `NotReady`/eviction and recovery.
+
+use crate::config::ChaosConfig;
+use crate::link::{ArqPolicy, FrameFault};
+use crate::util::rng::Rng;
+
+/// Typed fault classes the plan schedules.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    NodeCrash,
+    FrameCorrupt,
+    FrameTruncate,
+    SeuBitFlip,
+    RegistryDropout,
+}
+
+impl FaultKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultKind::NodeCrash => "node_crash",
+            FaultKind::FrameCorrupt => "frame_corrupt",
+            FaultKind::FrameTruncate => "frame_truncate",
+            FaultKind::SeuBitFlip => "seu_bit_flip",
+            FaultKind::RegistryDropout => "registry_dropout",
+        }
+    }
+}
+
+/// Per-satellite chaos accounting, surfaced on the satellite report and
+/// bit-compared between engines by the parity suite.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ChaosStats {
+    /// Crash windows in this satellite's plan.
+    pub crashes: u64,
+    /// Scenes never captured because the satellite was dark.
+    pub lost_to_crash: u64,
+    /// Contact slices skipped (not drained, not failure-charged)
+    /// because they opened inside a crash window.
+    pub slices_blacked_out: u64,
+    /// Scenes whose pixel buffer took an SEU strike.
+    pub seu_scenes: u64,
+    /// Dropout windows in this satellite's plan.
+    pub dropouts: u64,
+    /// Heartbeats suppressed by crash or dropout windows.
+    pub heartbeats_suppressed: u64,
+}
+
+/// Compiled, per-satellite fault schedule.  See the module docs for the
+/// determinism contract.
+#[derive(Clone, Debug)]
+pub struct FaultPlan {
+    crash_windows: Vec<(f64, f64)>,
+    dropout_windows: Vec<(f64, f64)>,
+    /// Per scene index: `Some(seed)` = SEU strike, applied with
+    /// [`apply_seu`] right after capture.
+    seu: Vec<Option<u64>>,
+    seu_flips: u32,
+    frame_rng: Rng,
+    frame_corrupt_rate: f64,
+    frame_truncate_rate: f64,
+    /// Transfer-level retry policy for the chaos drain path.
+    pub arq: ArqPolicy,
+}
+
+/// Poisson-schedule `rate_per_hour` events over the horizon, each
+/// lasting `dur_s`, merging overlaps into maximal windows.
+fn poisson_windows(rng: &mut Rng, rate_per_hour: f64, horizon_s: f64, dur_s: f64) -> Vec<(f64, f64)> {
+    let lambda = rate_per_hour * horizon_s / 3600.0;
+    if lambda <= 0.0 || horizon_s <= 0.0 {
+        return Vec::new();
+    }
+    let n = rng.poisson(lambda);
+    let mut starts: Vec<f64> = (0..n).map(|_| rng.range_f64(0.0, horizon_s)).collect();
+    starts.sort_by(f64::total_cmp);
+    let mut out: Vec<(f64, f64)> = Vec::new();
+    for s in starts {
+        let e = s + dur_s;
+        match out.last_mut() {
+            Some(last) if s <= last.1 => last.1 = last.1.max(e),
+            _ => out.push((s, e)),
+        }
+    }
+    out
+}
+
+fn in_windows(windows: &[(f64, f64)], t: f64) -> bool {
+    // half-open [start, end): a satellite recovers exactly at window end
+    windows.iter().any(|&(s, e)| t >= s && t < e)
+}
+
+impl FaultPlan {
+    /// Compile the plan for one satellite.  Pure in
+    /// `(cfg.seed, sat_index, horizon_s, scenes)`; the four fault
+    /// classes draw from independent forked streams so changing one
+    /// rate never reshuffles another class's schedule.
+    pub fn compile(cfg: &ChaosConfig, sat_index: usize, horizon_s: f64, scenes: usize) -> FaultPlan {
+        let mut root = Rng::new(
+            cfg.seed
+                .wrapping_add(0x51_C4A0_5EED)
+                .wrapping_add((sat_index as u64).wrapping_mul(0x9E3779B97F4A7C15)),
+        );
+        let mut crash_rng = root.fork(1);
+        let mut dropout_rng = root.fork(2);
+        let mut seu_rng = root.fork(3);
+        let frame_rng = root.fork(4);
+        let crash_windows =
+            poisson_windows(&mut crash_rng, cfg.crash_rate_per_hour, horizon_s, cfg.crash_recovery_s);
+        let dropout_windows = poisson_windows(
+            &mut dropout_rng,
+            cfg.dropout_rate_per_hour,
+            horizon_s,
+            cfg.dropout_silence_s,
+        );
+        let seu = (0..scenes)
+            .map(|_| if seu_rng.bool(cfg.seu_rate) { Some(seu_rng.next_u64()) } else { None })
+            .collect();
+        FaultPlan {
+            crash_windows,
+            dropout_windows,
+            seu,
+            seu_flips: cfg.seu_flips,
+            frame_rng,
+            frame_corrupt_rate: cfg.frame_corrupt_rate,
+            frame_truncate_rate: cfg.frame_truncate_rate,
+            arq: ArqPolicy {
+                max_retries: cfg.arq_max_retries,
+                backoff_initial_s: cfg.arq_backoff_initial_s,
+                backoff_cap_s: cfg.arq_backoff_cap_s,
+            },
+        }
+    }
+
+    /// Is the satellite dark at mission time `t`?
+    pub fn crashed_at(&self, t: f64) -> bool {
+        in_windows(&self.crash_windows, t)
+    }
+
+    /// The crash window containing `t`, for trace emission.
+    pub fn crash_window_at(&self, t: f64) -> Option<(f64, f64)> {
+        self.crash_windows.iter().copied().find(|&(s, e)| t >= s && t < e)
+    }
+
+    /// Are heartbeats suppressed at `t`?  True during crashes (the node
+    /// is dark) and during pure control-plane dropouts.
+    pub fn heartbeat_suppressed_at(&self, t: f64) -> bool {
+        self.crashed_at(t) || in_windows(&self.dropout_windows, t)
+    }
+
+    /// Is `t` inside a dropout window (control plane only)?
+    pub fn dropout_at(&self, t: f64) -> bool {
+        in_windows(&self.dropout_windows, t)
+    }
+
+    /// SEU seed for scene `idx`, if the plan strikes it.
+    pub fn seu_for_scene(&self, idx: usize) -> Option<u64> {
+        self.seu.get(idx).copied().flatten()
+    }
+
+    /// Bits flipped per SEU strike.
+    pub fn seu_flips(&self) -> u32 {
+        self.seu_flips
+    }
+
+    /// Draw the frame verdict for one completed transfer attempt.
+    /// Consumes exactly one stream draw per call; both engines call it
+    /// in the same virtual order, keeping the stream aligned.
+    pub fn next_frame_fault(&mut self) -> Option<FrameFault> {
+        let u = self.frame_rng.f64();
+        if u < self.frame_corrupt_rate {
+            Some(FrameFault::Corrupt)
+        } else if u < self.frame_corrupt_rate + self.frame_truncate_rate {
+            Some(FrameFault::Truncate)
+        } else {
+            None
+        }
+    }
+
+    pub fn crash_windows(&self) -> &[(f64, f64)] {
+        &self.crash_windows
+    }
+
+    pub fn dropout_windows(&self) -> &[(f64, f64)] {
+        &self.dropout_windows
+    }
+
+    /// Scheduled faults as `(time, kind)` pairs — the window starts plus
+    /// per-scene SEU indices (frame faults are per-transfer draws, not
+    /// pre-scheduled).  For reporting and tests.
+    pub fn scheduled(&self) -> Vec<(f64, FaultKind)> {
+        let mut out: Vec<(f64, FaultKind)> = self
+            .crash_windows
+            .iter()
+            .map(|&(s, _)| (s, FaultKind::NodeCrash))
+            .chain(self.dropout_windows.iter().map(|&(s, _)| (s, FaultKind::RegistryDropout)))
+            .collect();
+        out.sort_by(|a, b| a.0.total_cmp(&b.0));
+        out
+    }
+}
+
+/// Flip `flips` random bits in a checked-out pixel buffer — the SEU
+/// model.  Pure in `(seed, flips, buffer length)`: both engines apply
+/// the identical strike to the identical capture.  Flips can produce
+/// NaN/inf pixels; downstream consumers are NaN-safe (the i8 quantizer
+/// maps NaN→0, NMS sorts with `total_cmp`), so a struck scene degrades
+/// instead of wedging the pipeline.
+pub fn apply_seu(pixels: &mut [f32], seed: u64, flips: u32) {
+    if pixels.is_empty() {
+        return;
+    }
+    let mut rng = Rng::new(seed);
+    for _ in 0..flips {
+        let i = rng.below(pixels.len() as u64) as usize;
+        let bit = rng.below(32) as u32;
+        pixels[i] = f32::from_bits(pixels[i].to_bits() ^ (1u32 << bit));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn chaotic() -> ChaosConfig {
+        ChaosConfig {
+            enabled: true,
+            seed: 17,
+            crash_rate_per_hour: 1.0,
+            crash_recovery_s: 400.0,
+            frame_corrupt_rate: 0.1,
+            frame_truncate_rate: 0.05,
+            seu_rate: 0.3,
+            seu_flips: 3,
+            dropout_rate_per_hour: 2.0,
+            dropout_silence_s: 120.0,
+            ..ChaosConfig::default()
+        }
+    }
+
+    #[test]
+    fn plan_is_a_pure_function_of_seed_and_sat() {
+        let cfg = chaotic();
+        let mut a = FaultPlan::compile(&cfg, 3, 21_600.0, 16);
+        let mut b = FaultPlan::compile(&cfg, 3, 21_600.0, 16);
+        assert_eq!(a.crash_windows, b.crash_windows);
+        assert_eq!(a.dropout_windows, b.dropout_windows);
+        assert_eq!(a.seu, b.seu);
+        for _ in 0..200 {
+            assert_eq!(a.next_frame_fault(), b.next_frame_fault());
+        }
+        // a different satellite draws a different plan
+        let c = FaultPlan::compile(&cfg, 4, 21_600.0, 16);
+        assert!(
+            a.crash_windows != c.crash_windows
+                || a.dropout_windows != c.dropout_windows
+                || a.seu != c.seu,
+            "sat 3 and sat 4 drew identical plans"
+        );
+    }
+
+    #[test]
+    fn zero_rates_schedule_nothing() {
+        let cfg = ChaosConfig { enabled: true, ..ChaosConfig::default() };
+        let mut p = FaultPlan::compile(&cfg, 0, 21_600.0, 32);
+        assert!(p.crash_windows().is_empty());
+        assert!(p.dropout_windows().is_empty());
+        assert!((0..32).all(|i| p.seu_for_scene(i).is_none()));
+        for _ in 0..100 {
+            assert_eq!(p.next_frame_fault(), None);
+        }
+        assert!(p.scheduled().is_empty());
+    }
+
+    #[test]
+    fn crash_windows_are_sorted_disjoint_and_half_open() {
+        let cfg = ChaosConfig {
+            crash_rate_per_hour: 20.0, // dense: forces merges
+            crash_recovery_s: 500.0,
+            ..chaotic()
+        };
+        let p = FaultPlan::compile(&cfg, 1, 43_200.0, 4);
+        let w = p.crash_windows();
+        assert!(!w.is_empty(), "20/h over 12h must schedule crashes");
+        for pair in w.windows(2) {
+            assert!(pair[0].1 < pair[1].0, "windows must be disjoint after merge: {pair:?}");
+        }
+        for &(s, e) in w {
+            assert!(e - s >= cfg.crash_recovery_s - 1e-9);
+            assert!(p.crashed_at(s), "closed at start");
+            assert!(!p.crashed_at(e), "open at end: the sat recovers exactly at window end");
+        }
+        assert!(!p.crashed_at(-1.0));
+    }
+
+    #[test]
+    fn heartbeats_suppressed_during_crash_and_dropout() {
+        let cfg = chaotic();
+        let p = FaultPlan::compile(&cfg, 2, 43_200.0, 4);
+        for &(s, _) in p.crash_windows() {
+            assert!(p.heartbeat_suppressed_at(s));
+        }
+        for &(s, _) in p.dropout_windows() {
+            assert!(p.heartbeat_suppressed_at(s));
+            assert!(p.dropout_at(s));
+        }
+    }
+
+    #[test]
+    fn frame_fault_stream_matches_rates() {
+        let mut p = FaultPlan::compile(&chaotic(), 0, 21_600.0, 4);
+        let n = 20_000;
+        let (mut corrupt, mut truncate) = (0u32, 0u32);
+        for _ in 0..n {
+            match p.next_frame_fault() {
+                Some(FrameFault::Corrupt) => corrupt += 1,
+                Some(FrameFault::Truncate) => truncate += 1,
+                None => {}
+            }
+        }
+        let (fc, ft) = (corrupt as f64 / n as f64, truncate as f64 / n as f64);
+        assert!((fc - 0.1).abs() < 0.01, "corrupt rate {fc}");
+        assert!((ft - 0.05).abs() < 0.01, "truncate rate {ft}");
+    }
+
+    #[test]
+    fn seu_strikes_follow_rate_and_apply_deterministically() {
+        let p = FaultPlan::compile(&chaotic(), 5, 21_600.0, 1000);
+        let struck = (0..1000).filter(|&i| p.seu_for_scene(i).is_some()).count();
+        assert!((200..400).contains(&struck), "seu_rate 0.3 struck {struck}/1000");
+        // out-of-range scene index: no strike, no panic
+        assert_eq!(p.seu_for_scene(5000), None);
+
+        let seed = p.seu_for_scene((0..1000).find(|&i| p.seu_for_scene(i).is_some()).unwrap());
+        let mut a: Vec<f32> = (0..128).map(|i| i as f32 / 128.0).collect();
+        let mut b = a.clone();
+        apply_seu(&mut a, seed.unwrap(), 3);
+        apply_seu(&mut b, seed.unwrap(), 3);
+        assert_eq!(
+            a.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            b.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            "same seed, same strike"
+        );
+        let changed = a.iter().zip((0..128).map(|i| i as f32 / 128.0)).filter(|(x, y)| x.to_bits() != y.to_bits()).count();
+        assert!(changed >= 1 && changed <= 3, "3 flips touch 1..=3 pixels, got {changed}");
+    }
+
+    #[test]
+    fn apply_seu_handles_empty_buffer() {
+        let mut empty: Vec<f32> = Vec::new();
+        apply_seu(&mut empty, 42, 8);
+        assert!(empty.is_empty());
+    }
+
+    #[test]
+    fn fault_kind_names_are_stable() {
+        assert_eq!(FaultKind::NodeCrash.name(), "node_crash");
+        assert_eq!(FaultKind::FrameCorrupt.name(), "frame_corrupt");
+        assert_eq!(FaultKind::FrameTruncate.name(), "frame_truncate");
+        assert_eq!(FaultKind::SeuBitFlip.name(), "seu_bit_flip");
+        assert_eq!(FaultKind::RegistryDropout.name(), "registry_dropout");
+    }
+
+    #[test]
+    fn scheduled_lists_window_starts_in_time_order() {
+        let p = FaultPlan::compile(&chaotic(), 7, 43_200.0, 4);
+        let sched = p.scheduled();
+        assert_eq!(sched.len(), p.crash_windows().len() + p.dropout_windows().len());
+        for pair in sched.windows(2) {
+            assert!(pair[0].0 <= pair[1].0, "out of order: {pair:?}");
+        }
+    }
+}

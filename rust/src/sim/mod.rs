@@ -14,6 +14,10 @@
 //!   sunlit/eclipse spans, scene cadence ([`scene_timing`]), and duty
 //!   derivation ([`DutyCycles`]).  Degenerate (always-in-contact) for
 //!   single-satellite paths, orbital for the constellation.
+//! * [`chaos`] — deterministic seeded fault injection: per-satellite
+//!   [`FaultPlan`]s (crashes, frame faults, SEUs, registry dropouts)
+//!   compiled at mission start and replayed identically by both
+//!   engines.
 //! * [`fleet`] — the sharded virtual-time event scheduler that steps
 //!   [`SatMachine`] state machines (one per satellite) from per-shard
 //!   binary heaps, making fleet size a data-structure problem instead
@@ -22,10 +26,12 @@
 //! See DESIGN.md §"Mission-time simulation core" for which module
 //! derives which duty cycle, and §"Fleet engine" for the scheduler.
 
+mod chaos;
 mod clock;
 mod fleet;
 mod timeline;
 
+pub use chaos::{apply_seu, ChaosStats, FaultKind, FaultPlan};
 pub use clock::MissionClock;
 pub use fleet::{
     run_sharded, EventKey, EventKind, FleetRunStats, MachineStep, SatMachine, StubReport, StubSat,

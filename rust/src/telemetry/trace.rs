@@ -58,11 +58,25 @@ pub enum SpanKind {
     Defer = 7,
     /// Downlink queue dropped bytes after repeated window failures.
     Drop = 8,
+    /// Chaos: a capture lost while the satellite was dark (event at the
+    /// capture instant).  Appended after the original kinds —
+    /// discriminants are frozen, so chaos-off traces keep their exact
+    /// pre-chaos bytes and ordering.
+    FaultCrash = 9,
+    /// Chaos: ARQ rejected corrupt/truncated frame bytes during a drain
+    /// slice (event at LOS; payload = bytes rejected over the slice).
+    FaultFrame = 10,
+    /// Chaos: SEU bit-flips struck a checked-out pixel buffer (event at
+    /// capture; payload = flips applied).
+    FaultSeu = 11,
+    /// Chaos: a contact-slice heartbeat suppressed by a registry
+    /// dropout (event at AOS; the drain itself proceeds).
+    FaultDropout = 12,
 }
 
 impl SpanKind {
     /// Every kind in discriminant order — the per-kind summary order.
-    pub const ALL: [SpanKind; 9] = [
+    pub const ALL: [SpanKind; 13] = [
         SpanKind::Capture,
         SpanKind::Filter,
         SpanKind::OnboardInfer,
@@ -72,6 +86,10 @@ impl SpanKind {
         SpanKind::Shed,
         SpanKind::Defer,
         SpanKind::Drop,
+        SpanKind::FaultCrash,
+        SpanKind::FaultFrame,
+        SpanKind::FaultSeu,
+        SpanKind::FaultDropout,
     ];
 
     pub fn name(self) -> &'static str {
@@ -85,6 +103,10 @@ impl SpanKind {
             SpanKind::Shed => "shed",
             SpanKind::Defer => "defer",
             SpanKind::Drop => "drop",
+            SpanKind::FaultCrash => "fault_crash",
+            SpanKind::FaultFrame => "fault_frame",
+            SpanKind::FaultSeu => "fault_seu",
+            SpanKind::FaultDropout => "fault_dropout",
         }
     }
 }
@@ -94,6 +116,9 @@ impl SpanKind {
 pub enum RoundVerdict {
     Participated,
     SkippedPower,
+    /// The satellite was dark (chaos `NodeCrash`) when the round came
+    /// due: no training, no uplink, its own skip class.
+    SkippedCrash,
 }
 
 impl RoundVerdict {
@@ -101,6 +126,7 @@ impl RoundVerdict {
         match self {
             RoundVerdict::Participated => "participated",
             RoundVerdict::SkippedPower => "skipped_power",
+            RoundVerdict::SkippedCrash => "skipped_crash",
         }
     }
 }
@@ -438,6 +464,34 @@ mod tests {
         assert_eq!(counts[0], (SpanKind::Capture, 2));
         assert_eq!(counts[8], (SpanKind::Drop, 1));
         assert_eq!(counts[5], (SpanKind::TrainingRound, 0), "zero kinds still listed");
+    }
+
+    #[test]
+    fn fault_kinds_are_appended_with_frozen_discriminants() {
+        // chaos kinds extend the enum strictly after the original nine:
+        // a chaos-off trace's merge ordering (which ties on kind last)
+        // cannot change
+        assert_eq!(SpanKind::Drop as u8, 8);
+        assert_eq!(SpanKind::FaultCrash as u8, 9);
+        assert_eq!(SpanKind::FaultFrame as u8, 10);
+        assert_eq!(SpanKind::FaultSeu as u8, 11);
+        assert_eq!(SpanKind::FaultDropout as u8, 12);
+        assert_eq!(SpanKind::ALL.len(), 13);
+        assert_eq!(SpanKind::FaultCrash.name(), "fault_crash");
+        assert_eq!(SpanKind::FaultFrame.name(), "fault_frame");
+        assert_eq!(SpanKind::FaultSeu.name(), "fault_seu");
+        assert_eq!(SpanKind::FaultDropout.name(), "fault_dropout");
+        assert_eq!(RoundVerdict::SkippedCrash.name(), "skipped_crash");
+        // fault records serialize through the same stable jsonl shape
+        let sink = Arc::new(TraceSink::new(1, 8));
+        let t = sink.tracer(0, 4);
+        t.span(SpanKind::FaultCrash, 500.0, 1100.0, TracePayload::Batch(2));
+        t.event(SpanKind::FaultFrame, 520.0, TracePayload::Bytes(1400));
+        assert_eq!(
+            sink.merge().to_jsonl(),
+            "{\"batch\":2,\"kind\":\"fault_crash\",\"sat\":4,\"t0\":500,\"t1\":1100}\n\
+             {\"bytes\":1400,\"kind\":\"fault_frame\",\"sat\":4,\"t0\":520,\"t1\":520}\n"
+        );
     }
 
     #[test]

@@ -1,0 +1,623 @@
+//! Chaos-engine invariants: seeded fault injection must be
+//! deterministic, byte-reconciled, and bounded.
+//!
+//! Two tiers:
+//!
+//! * **Primitive properties** (always run, no artifacts): fault plans
+//!   are pure functions of `(seed, sat index)`; the ARQ transfer loop
+//!   reconciles every byte it touches and terminates inside its window
+//!   budget; a faulted pass replays unacknowledged items without
+//!   double-counting; SEU strikes are reproducible; suppressed
+//!   heartbeats walk the registry → orchestrator chain to an
+//!   exactly-once failover.
+//! * **Whole-engine laws** (gated on `artifacts/` like the rest of the
+//!   integration suite): a zero-rate chaos run is bit-identical to a
+//!   disabled one on both engines; the same seed reproduces the same
+//!   fault ledger across engines and shard counts; scene and round
+//!   ledgers conserve (`folded + shed + lost_to_crash == scenes`); the
+//!   flight recorder's fault events match the chaos ledger count for
+//!   count.
+
+use tiansuan::cluster::orchestrator::{AppSpec, Orchestrator, Placement, ReconcileActions};
+use tiansuan::cluster::registry::{NodeStatus, Registry};
+use tiansuan::cluster::{NodeId, NodeRole};
+use tiansuan::config::{ChaosConfig, Config};
+use tiansuan::coordinator::downlink::{DownlinkItem, DownlinkQueue, ItemKind};
+use tiansuan::coordinator::{run_constellation, run_fleet, SatelliteReport};
+use tiansuan::data::Version;
+use tiansuan::link::{ArqPolicy, FrameFault, Link, LinkConfig, LossProfile};
+use tiansuan::orbit::ContactWindow;
+use tiansuan::runtime::Runtime;
+use tiansuan::sim::{apply_seu, ChaosStats, FaultPlan};
+use tiansuan::telemetry::trace::SpanKind;
+use tiansuan::util::rng::Rng;
+
+const CASES: usize = 200;
+
+/// A chaos config with every fault class live, for plan-level
+/// properties and the fault-heavy engine runs.
+fn chaos_on() -> ChaosConfig {
+    ChaosConfig {
+        enabled: true,
+        seed: 0xC4A05,
+        crash_rate_per_hour: 1.5,
+        crash_recovery_s: 400.0,
+        frame_corrupt_rate: 0.2,
+        frame_truncate_rate: 0.1,
+        seu_rate: 0.3,
+        seu_flips: 3,
+        dropout_rate_per_hour: 2.0,
+        dropout_silence_s: 120.0,
+        ..ChaosConfig::default()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Primitive properties: no artifacts needed.
+// ---------------------------------------------------------------------
+
+#[test]
+fn fault_plan_is_a_pure_function_of_seed_and_sat_index() {
+    let mut rng = Rng::new(11);
+    let mut diverged = 0usize;
+    for _ in 0..CASES {
+        let mut cfg = chaos_on();
+        cfg.seed = rng.next_u64();
+        let sat = rng.range_usize(0, 64);
+        let horizon = rng.range_f64(1800.0, 86_400.0);
+        let scenes = rng.range_usize(1, 40);
+        let mut a = FaultPlan::compile(&cfg, sat, horizon, scenes);
+        let mut b = FaultPlan::compile(&cfg, sat, horizon, scenes);
+        assert_eq!(a.crash_windows(), b.crash_windows(), "crash schedule not reproducible");
+        assert_eq!(a.dropout_windows(), b.dropout_windows(), "dropout schedule not reproducible");
+        assert_eq!(a.seu_flips(), b.seu_flips());
+        for i in 0..scenes {
+            assert_eq!(a.seu_for_scene(i), b.seu_for_scene(i), "SEU schedule not reproducible");
+        }
+        // a prefix of the frame-fault stream, draw for draw
+        for _ in 0..32 {
+            assert_eq!(a.next_frame_fault(), b.next_frame_fault(), "frame stream diverged");
+        }
+        // out-of-range scene indices are None, never a panic
+        assert_eq!(a.seu_for_scene(scenes + 7), None);
+        // a neighbouring satellite must not share the schedule
+        let c = FaultPlan::compile(&cfg, sat + 1, horizon, scenes);
+        if c.crash_windows() != b.crash_windows() || c.dropout_windows() != b.dropout_windows() {
+            diverged += 1;
+        }
+    }
+    assert!(diverged > CASES / 2, "neighbouring sats share fault plans too often: {diverged}");
+}
+
+#[test]
+fn fault_windows_are_sorted_disjoint_and_inside_the_horizon() {
+    let mut rng = Rng::new(12);
+    for _ in 0..CASES {
+        let mut cfg = chaos_on();
+        cfg.seed = rng.next_u64();
+        let horizon = rng.range_f64(3600.0, 43_200.0);
+        let plan = FaultPlan::compile(&cfg, rng.range_usize(0, 16), horizon, 8);
+        for windows in [plan.crash_windows(), plan.dropout_windows()] {
+            for w in windows {
+                assert!(w.0 >= 0.0 && w.0 < horizon, "start {} outside [0, {horizon})", w.0);
+                assert!(w.1 > w.0, "empty window {w:?}");
+            }
+            for pair in windows.windows(2) {
+                assert!(
+                    pair[0].1 <= pair[1].0,
+                    "windows overlap after merge: {:?} then {:?}",
+                    pair[0],
+                    pair[1]
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn arq_backoff_is_monotone_and_capped() {
+    let arq = ArqPolicy { max_retries: 10, backoff_initial_s: 0.05, backoff_cap_s: 1.0 };
+    let mut prev = 0.0;
+    for r in 0..200 {
+        let b = arq.backoff_s(r);
+        assert!(b >= prev, "backoff not monotone at retry {r}: {b} < {prev}");
+        assert!(b <= arq.backoff_cap_s, "backoff exceeds cap at retry {r}: {b}");
+        prev = b;
+    }
+    assert_eq!(arq.backoff_s(0), 0.05);
+    assert_eq!(arq.backoff_s(1), 0.1);
+    // the retry exponent saturates: huge counts cap out, never overflow
+    assert_eq!(arq.backoff_s(1000), 1.0);
+}
+
+#[test]
+fn transmit_checked_reconciles_bytes_and_bounds_retries() {
+    let arq = ArqPolicy { max_retries: 4, backoff_initial_s: 0.01, backoff_cap_s: 0.1 };
+    let bytes = 200_000u64;
+    for k in 0..=arq.max_retries + 1 {
+        let mut link = Link::new(LinkConfig::downlink(LossProfile::lossless()), 3);
+        let mut faults_left = k;
+        let t = link.transmit_checked(bytes, 60.0, &arq, || {
+            if faults_left > 0 {
+                faults_left -= 1;
+                Some(FrameFault::Corrupt)
+            } else {
+                None
+            }
+        });
+        let s = &link.stats;
+        assert_eq!(s.frames_corrupted, k as u64, "k={k}: every fault is a rejected frame");
+        assert_eq!(s.bytes_rejected, k as u64 * bytes, "k={k}: rejected bytes");
+        if k <= arq.max_retries {
+            assert!(t.completed, "k={k}: should complete after {k} retries");
+            assert_eq!(t.bytes_delivered, bytes, "k={k}");
+            assert_eq!(s.retries, k as u64, "k={k}: one retry per rejected frame");
+            assert_eq!(s.gave_up, 0, "k={k}");
+            assert_eq!(s.bytes_delivered, bytes, "k={k}: net delivered is the final good frame");
+        } else {
+            assert!(!t.completed, "k={k}: retry budget exhausted");
+            assert_eq!(t.bytes_delivered, 0, "k={k}: a give-up acknowledges nothing");
+            assert_eq!(s.retries, arq.max_retries as u64, "k={k}");
+            assert_eq!(s.gave_up, 1, "k={k}");
+            assert_eq!(s.bytes_delivered, 0, "k={k}: delivered rolls back on every rejection");
+        }
+    }
+}
+
+#[test]
+fn zero_fault_checked_transfers_match_plain_transmit_bitwise() {
+    // the zero-fault lane of the ARQ loop must be the identity wrapper:
+    // same RNG consumption, same stats, same transfer outcomes
+    let arq = ArqPolicy { max_retries: 4, backoff_initial_s: 0.05, backoff_cap_s: 1.0 };
+    let mut rng = Rng::new(21);
+    let mut plain = Link::new(LinkConfig::downlink(LossProfile::stable()), 99);
+    let mut checked = Link::new(LinkConfig::downlink(LossProfile::stable()), 99);
+    for _ in 0..CASES {
+        let bytes = rng.below(400_000) + 1;
+        let budget = rng.range_f64(0.001, 0.5);
+        let a = plain.transmit(bytes, budget);
+        let b = checked.transmit_checked(bytes, budget, &arq, || None);
+        assert_eq!(a.bytes_delivered, b.bytes_delivered);
+        assert_eq!(a.completed, b.completed);
+        assert_eq!(a.elapsed_s.to_bits(), b.elapsed_s.to_bits());
+    }
+    let (a, b) = (&plain.stats, &checked.stats);
+    assert_eq!(a.bytes_offered, b.bytes_offered);
+    assert_eq!(a.bytes_delivered, b.bytes_delivered);
+    assert_eq!(a.packets_sent, b.packets_sent);
+    assert_eq!(a.packets_lost, b.packets_lost);
+    assert_eq!(a.retransmissions, b.retransmissions);
+    assert_eq!(a.transfers_aborted, b.transfers_aborted);
+    assert_eq!(a.busy_s.to_bits(), b.busy_s.to_bits());
+    assert_eq!(b.frames_corrupted, 0);
+    assert_eq!(b.frames_truncated, 0);
+    assert_eq!(b.retries, 0);
+    assert_eq!(b.gave_up, 0);
+    assert_eq!(b.bytes_rejected, 0);
+}
+
+#[test]
+fn arq_gives_up_within_the_window_budget() {
+    // an always-faulting stream can never complete, but it must also
+    // never hang or overrun the window: bounded progress
+    let arq = ArqPolicy { max_retries: u32::MAX, backoff_initial_s: 0.05, backoff_cap_s: 1.0 };
+    let mut rng = Rng::new(31);
+    for _ in 0..CASES {
+        let mut link = Link::new(LinkConfig::downlink(LossProfile::lossless()), 5);
+        let bytes = rng.below(100_000) + 1;
+        let budget = rng.range_f64(0.01, 2.0);
+        let t = link.transmit_checked(bytes, budget, &arq, || Some(FrameFault::Truncate));
+        assert!(!t.completed, "an always-faulting frame stream can never complete");
+        assert!(t.elapsed_s <= budget + 1e-9, "elapsed {} overran budget {budget}", t.elapsed_s);
+        // every rejected frame rolled back; only a final budget-starved
+        // partial attempt (never checksummed, so never rejected) remains
+        assert_eq!(link.stats.bytes_delivered, t.bytes_delivered, "delivered-bytes ledger");
+        assert_eq!(link.stats.frames_truncated, link.stats.retries + link.stats.gave_up);
+    }
+}
+
+#[test]
+fn faulted_pass_replays_items_without_double_count() {
+    let arq = ArqPolicy { max_retries: 2, backoff_initial_s: 0.01, backoff_cap_s: 0.1 };
+    let mut queue = DownlinkQueue::new();
+    let mut link = Link::new(LinkConfig::downlink(LossProfile::lossless()), 17);
+    let sizes = [40_000u64, 9_000, 120_000, 3_500, 64_000];
+    for (i, bytes) in sizes.iter().enumerate() {
+        let kind = if i % 2 == 0 { ItemKind::Results } else { ItemKind::Image };
+        queue.push(DownlinkItem { kind, bytes: *bytes, ready_at: 0.0, tag: i as u64 });
+    }
+
+    // pass 1: every frame rejected — the ARQ gives up on the head,
+    // nothing is acknowledged, nothing leaves the queue
+    let w1 = ContactWindow {
+        aos: 0.0,
+        los: 120.0,
+        max_elevation_deg: 45.0,
+        truncated: false,
+        station_id: 0,
+    };
+    let got =
+        queue.drain_window_sliced_chaos(&mut link, &w1, true, None, &arq, &mut || {
+            Some(FrameFault::Corrupt)
+        });
+    assert!(got.is_empty(), "a give-up must not acknowledge the item");
+    assert_eq!(queue.pending(), sizes.len(), "unacked items stay queued for replay");
+    assert_eq!(queue.stats.items_delivered, 0);
+    assert_eq!(link.stats.bytes_delivered, 0, "rejected bytes roll back out of delivered");
+    assert!(link.stats.bytes_rejected > 0, "the channel did carry (and reject) frames");
+    assert_eq!(link.stats.gave_up, 1, "only the head item is charged the failed pass");
+
+    // pass 2: clean link — every item delivered exactly once
+    let w2 = ContactWindow {
+        aos: 200.0,
+        los: 320.0,
+        max_elevation_deg: 50.0,
+        truncated: false,
+        station_id: 1,
+    };
+    let got = queue.drain_window_sliced_chaos(&mut link, &w2, true, None, &arq, &mut || None);
+    let mut tags: Vec<u64> = got.iter().map(|d| d.item.tag).collect();
+    tags.sort_unstable();
+    assert_eq!(tags, vec![0, 1, 2, 3, 4], "each item delivered exactly once after the replay");
+    assert_eq!(queue.pending(), 0);
+    assert_eq!(queue.stats.items_delivered, sizes.len() as u64);
+    assert_eq!(queue.stats.items_dropped, 0, "one failed pass is under the drop threshold");
+    let total: u64 = sizes.iter().sum();
+    assert_eq!(queue.stats.total_bytes(), total, "queue books carry exactly the payload bytes");
+    assert_eq!(queue.stats.station_bytes(1), total, "replayed bytes land on the replay station");
+    assert_eq!(link.stats.bytes_delivered, total, "link books net out to acknowledged bytes");
+}
+
+#[test]
+fn seu_strikes_are_deterministic_and_buffer_safe() {
+    let base: Vec<f32> = (0..256).map(|i| i as f32 * 0.5 - 17.0).collect();
+    let (mut a, mut b, mut c) = (base.clone(), base.clone(), base.clone());
+    apply_seu(&mut a, 42, 3);
+    apply_seu(&mut b, 42, 3);
+    let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+    assert_eq!(bits(&a), bits(&b), "same seed must strike the same bits");
+    apply_seu(&mut c, 43, 3);
+    assert_ne!(bits(&a), bits(&c), "a different seed must strike differently");
+    // at most `flips` lanes change (an odd flip count can never fully
+    // cancel, so at least one lane must differ), the rest are untouched
+    let changed = a.iter().zip(&base).filter(|(x, y)| x.to_bits() != y.to_bits()).count();
+    assert!((1..=3).contains(&changed), "3 flips touched {changed} lanes");
+    // degenerate buffers must not panic
+    let mut empty: Vec<f32> = Vec::new();
+    apply_seu(&mut empty, 42, 3);
+    let mut one = vec![1.0f32];
+    apply_seu(&mut one, 42, 64);
+}
+
+#[test]
+fn crash_silence_walks_the_registry_to_exactly_once_failover_and_recovery() {
+    // hunt (deterministically) for a plan whose first long crash window
+    // outlasts the eviction threshold and has clean margins
+    let mut cfg = chaos_on();
+    cfg.crash_rate_per_hour = 2.0;
+    cfg.crash_recovery_s = 900.0;
+    let horizon = 4.0 * 3600.0;
+    let mut found = None;
+    'hunt: for seed in 0..512u64 {
+        cfg.seed = seed;
+        let plan = FaultPlan::compile(&cfg, 0, horizon, 4);
+        let ws = plan.crash_windows();
+        for (i, &(s, e)) in ws.iter().enumerate() {
+            let next_start = ws.get(i + 1).map(|w| w.0).unwrap_or(f64::INFINITY);
+            if e - s >= 700.0 && s > 120.0 && e + 60.0 < horizon && next_start > e + 60.0 {
+                found = Some((seed, s, e));
+                break 'hunt;
+            }
+        }
+    }
+    let (seed, s, e) = found.expect("no seed in 0..512 yields a long crash window");
+    cfg.seed = seed;
+    let plan = FaultPlan::compile(&cfg, 0, horizon, 4);
+    assert!(plan.crashed_at(s + 300.0), "mid-window the satellite is dark");
+    assert!(plan.heartbeat_suppressed_at(s + 300.0), "a dark satellite sends no heartbeats");
+
+    // two edge nodes; the app's single replica lands on one of them
+    let mut reg = Registry::new(60_000, 600_000);
+    let now_pre = ((s - 5.0) * 1000.0) as u64;
+    reg.register(NodeId::new("sat-a"), NodeRole::Edge, 4000, 8192, now_pre);
+    reg.register(NodeId::new("sat-b"), NodeRole::Edge, 4000, 8192, now_pre);
+    let mut orch = Orchestrator::new();
+    orch.apply(AppSpec {
+        name: "joint-inference".into(),
+        image: "v2".into(),
+        replicas: 1,
+        placement: Placement::Edge,
+    });
+    let first = orch.reconcile(&reg, now_pre);
+    assert_eq!(first.started, 1);
+    let crashed = orch.pods("joint-inference")[0].node.clone();
+    let healthy = if crashed == NodeId::new("sat-a") {
+        NodeId::new("sat-b")
+    } else {
+        NodeId::new("sat-a")
+    };
+
+    // mid-outage: the dark node has missed more than eviction_ms of
+    // heartbeats while the healthy one kept beating
+    let now_mid = ((s + 610.0) * 1000.0) as u64;
+    reg.heartbeat(&healthy, now_mid);
+    assert_eq!(reg.status(&crashed, now_mid), Some(NodeStatus::Offline));
+    assert_eq!(reg.status(&healthy, now_mid), Some(NodeStatus::Ready));
+    let acts = orch.reconcile(&reg, now_mid);
+    assert_eq!(acts.failed_over, 1, "eviction fails the pod over exactly once");
+    assert_eq!(acts.started, 1, "the same pass restarts it on the surviving node");
+    assert_eq!(orch.running("joint-inference"), 1);
+    assert_eq!(orch.pods("joint-inference")[0].node, healthy);
+    // idempotent: a second pass with no state change does nothing
+    assert_eq!(orch.reconcile(&reg, now_mid), ReconcileActions::default());
+
+    // recovery: the node comes back Ready, and the pod does not flap back
+    let now_post = ((e + 5.0) * 1000.0) as u64;
+    reg.heartbeat(&crashed, now_post);
+    reg.heartbeat(&healthy, now_post);
+    assert_eq!(reg.status(&crashed, now_post), Some(NodeStatus::Ready));
+    assert_eq!(orch.reconcile(&reg, now_post), ReconcileActions::default());
+    assert_eq!(orch.pods("joint-inference")[0].node, healthy, "no failback flapping");
+}
+
+#[test]
+fn chaos_config_validation_rejects_bad_knobs() {
+    assert!(chaos_on().validate().is_ok());
+    let mut c = chaos_on();
+    c.crash_rate_per_hour = -1.0;
+    assert!(c.validate().is_err(), "negative rate");
+    let mut c = chaos_on();
+    c.frame_corrupt_rate = 0.7;
+    c.frame_truncate_rate = 0.5;
+    assert!(c.validate().is_err(), "frame fault probabilities sum past 1");
+    let mut c = chaos_on();
+    c.seu_rate = 1.5;
+    assert!(c.validate().is_err(), "probability above 1");
+    let mut c = chaos_on();
+    c.crash_recovery_s = 0.0;
+    assert!(c.validate().is_err(), "zero recovery interval");
+    let mut c = chaos_on();
+    c.seu_flips = 0;
+    assert!(c.validate().is_err(), "an SEU must flip at least one bit");
+    let mut c = chaos_on();
+    c.arq_backoff_cap_s = 0.001;
+    assert!(c.validate().is_err(), "cap below initial backoff");
+    // disabled: nothing is checked, garbage knobs are inert
+    let mut c = chaos_on();
+    c.enabled = false;
+    c.seu_rate = 9.0;
+    assert!(c.validate().is_ok());
+}
+
+// ---------------------------------------------------------------------
+// Whole-engine laws: gated on artifacts/ like the integration suite.
+// ---------------------------------------------------------------------
+
+fn rt() -> Option<Runtime> {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    if !std::path::Path::new(dir).join("manifest.json").exists() {
+        eprintln!("skipping: artifacts/ not built");
+        return None;
+    }
+    Some(Runtime::open(dir).unwrap())
+}
+
+fn small_cfg() -> Config {
+    let mut cfg = Config::default();
+    cfg.scene_cells = 4;
+    cfg.constellation.satellites = 3;
+    cfg.constellation.scenes_per_satellite = 2;
+    cfg
+}
+
+/// The deterministic per-satellite surface, bitwise.  `energy_bits`
+/// follows the same rule as the fleet-parity suite: thread-driver
+/// energy f64s are only comparable when federated rounds are off.
+fn assert_sat_surface(a: &SatelliteReport, b: &SatelliteReport, energy_bits: bool, ctx: &str) {
+    let (ra, rb) = (&a.result, &b.result);
+    assert_eq!(ra.scenes, rb.scenes, "{ctx}: scenes");
+    assert_eq!(ra.tiles_total, rb.tiles_total, "{ctx}: tiles_total");
+    assert_eq!(ra.tiles_filtered, rb.tiles_filtered, "{ctx}: tiles_filtered");
+    assert_eq!(ra.router.onboard_final, rb.router.onboard_final, "{ctx}: onboard_final");
+    assert_eq!(ra.router.offloaded, rb.router.offloaded, "{ctx}: offloaded");
+    assert_eq!(ra.map_collab.to_bits(), rb.map_collab.to_bits(), "{ctx}: map_collab");
+    assert_eq!(ra.bentpipe_bytes, rb.bentpipe_bytes, "{ctx}: bentpipe_bytes");
+    assert_eq!(ra.collab_bytes, rb.collab_bytes, "{ctx}: collab_bytes");
+
+    assert_eq!(a.downlink.items_delivered, b.downlink.items_delivered, "{ctx}: dl delivered");
+    assert_eq!(a.downlink.items_dropped, b.downlink.items_dropped, "{ctx}: dl dropped");
+    assert_eq!(a.downlink.bytes_dropped, b.downlink.bytes_dropped, "{ctx}: dl bytes_dropped");
+    assert_eq!(a.downlink.total_bytes(), b.downlink.total_bytes(), "{ctx}: dl bytes");
+    assert_eq!(a.link.packets_sent, b.link.packets_sent, "{ctx}: packets_sent");
+    assert_eq!(a.link.packets_lost, b.link.packets_lost, "{ctx}: packets_lost");
+    assert_eq!(a.link.bytes_delivered, b.link.bytes_delivered, "{ctx}: link bytes");
+    assert_eq!(a.link.busy_s.to_bits(), b.link.busy_s.to_bits(), "{ctx}: link busy_s");
+    assert_eq!(a.link.frames_corrupted, b.link.frames_corrupted, "{ctx}: frames_corrupted");
+    assert_eq!(a.link.frames_truncated, b.link.frames_truncated, "{ctx}: frames_truncated");
+    assert_eq!(a.link.retries, b.link.retries, "{ctx}: arq retries");
+    assert_eq!(a.link.gave_up, b.link.gave_up, "{ctx}: arq gave_up");
+    assert_eq!(a.link.bytes_rejected, b.link.bytes_rejected, "{ctx}: bytes_rejected");
+
+    assert_eq!(a.windows, b.windows, "{ctx}: windows");
+    assert_eq!(a.contact_s.to_bits(), b.contact_s.to_bits(), "{ctx}: contact_s");
+
+    if let (Some(fa), Some(fb)) = (&a.federated, &b.federated) {
+        assert_eq!(fa.rounds_scheduled, fb.rounds_scheduled, "{ctx}: rounds_scheduled");
+        assert_eq!(fa.rounds_completed, fb.rounds_completed, "{ctx}: rounds_completed");
+        assert_eq!(fa.rounds_skipped_power, fb.rounds_skipped_power, "{ctx}: rounds_skipped");
+        assert_eq!(fa.rounds_skipped_crash, fb.rounds_skipped_crash, "{ctx}: rounds_crashed");
+        assert_eq!(fa.participated, fb.participated, "{ctx}: participation");
+    } else {
+        assert_eq!(a.federated.is_some(), b.federated.is_some(), "{ctx}: fed presence");
+    }
+    if let (Some(pa), Some(pb)) = (&a.power, &b.power) {
+        assert_eq!(pa.scenes_deferred, pb.scenes_deferred, "{ctx}: scenes_deferred");
+        assert_eq!(pa.scenes_shed, pb.scenes_shed, "{ctx}: scenes_shed");
+        if energy_bits {
+            assert_eq!(pa.min_soc_frac.to_bits(), pb.min_soc_frac.to_bits(), "{ctx}: min_soc");
+            assert_eq!(
+                pa.final_soc_frac.to_bits(),
+                pb.final_soc_frac.to_bits(),
+                "{ctx}: final_soc"
+            );
+        }
+    } else {
+        assert_eq!(a.power.is_some(), b.power.is_some(), "{ctx}: power presence");
+    }
+}
+
+#[test]
+fn zero_rate_chaos_is_bit_identical_to_disabled_on_both_engines() {
+    let Some(rt) = rt() else { return };
+    let mut off = small_cfg();
+    off.power.enabled = true;
+    off.federated.enabled = true;
+    let mut zero = off.clone();
+    zero.chaos.enabled = true;
+    zero.chaos.seed = 1234;
+    // every rate stays 0.0: a plan is compiled but schedules nothing,
+    // and the run must not consume one extra random draw anywhere
+
+    let a = run_constellation(&rt, &off, Version::V2).unwrap();
+    let b = run_constellation(&rt, &zero, Version::V2).unwrap();
+    assert_eq!(a.satellites.len(), b.satellites.len());
+    for (sa, sb) in a.satellites.iter().zip(&b.satellites) {
+        // thread driver with rounds on: energy bits aren't comparable
+        assert_sat_surface(sa, sb, false, &format!("thread sat {}", sa.index));
+        assert!(sa.chaos.is_none(), "chaos off ⇒ no ledger");
+        assert_eq!(
+            sb.chaos,
+            Some(ChaosStats::default()),
+            "zero-rate chaos ⇒ a ledger of all zeros"
+        );
+    }
+
+    let a = run_fleet(&rt, &off, Version::V2).unwrap();
+    let b = run_fleet(&rt, &zero, Version::V2).unwrap();
+    for (sa, sb) in a.satellites.iter().zip(&b.satellites) {
+        // fleet runs in pure virtual time: full bit parity
+        assert_sat_surface(sa, sb, true, &format!("fleet sat {}", sa.index));
+        assert!(sa.chaos.is_none());
+        assert_eq!(sb.chaos, Some(ChaosStats::default()));
+    }
+}
+
+#[test]
+fn same_seed_reproduces_the_same_faults_across_engines_and_shards() {
+    let Some(rt) = rt() else { return };
+    let mut cfg = small_cfg();
+    cfg.constellation.satellites = 4;
+    cfg.constellation.scenes_per_satellite = 4;
+    cfg.power.enabled = true;
+    cfg.federated.enabled = true;
+    cfg.chaos = chaos_on();
+
+    let threads = run_constellation(&rt, &cfg, Version::V2).unwrap();
+    cfg.fleet.shards = 1;
+    cfg.fleet.max_events_in_flight = 0;
+    let one = run_fleet(&rt, &cfg, Version::V2).unwrap();
+    assert_eq!(threads.satellites.len(), one.satellites.len());
+    for (sa, sb) in threads.satellites.iter().zip(&one.satellites) {
+        assert_sat_surface(sa, sb, false, &format!("engine sat {}", sa.index));
+        assert_eq!(sa.chaos, sb.chaos, "sat {}: fault ledgers must match bitwise", sa.index);
+    }
+
+    // shard count is a pure parallelism dial: the fault ledger (and
+    // everything else) is invariant under it
+    for shards in [2, 4, 8] {
+        cfg.fleet.shards = shards;
+        let many = run_fleet(&rt, &cfg, Version::V2).unwrap();
+        for (sa, sb) in one.satellites.iter().zip(&many.satellites) {
+            assert_sat_surface(sa, sb, true, &format!("{shards}-shard sat {}", sa.index));
+            assert_eq!(sa.chaos, sb.chaos, "{shards} shards: fault ledger drifted");
+        }
+    }
+
+    // with every class live over a multi-hour mission, some fault
+    // activity must actually have been scheduled — otherwise this
+    // parity run proves nothing
+    let agg: u64 = one
+        .satellites
+        .iter()
+        .filter_map(|s| s.chaos.as_ref())
+        .map(|c| c.crashes + c.dropouts + c.seu_scenes + c.heartbeats_suppressed)
+        .sum();
+    assert!(agg > 0, "no fault activity at all — chaos config too tame for this mission");
+}
+
+#[test]
+fn scene_and_round_ledgers_reconcile_under_faults() {
+    let Some(rt) = rt() else { return };
+    let mut cfg = small_cfg();
+    cfg.constellation.satellites = 4;
+    cfg.constellation.scenes_per_satellite = 4;
+    cfg.power.enabled = true;
+    cfg.federated.enabled = true;
+    cfg.chaos = chaos_on();
+    cfg.chaos.seed = 77;
+
+    for (name, rep) in [
+        ("thread", run_constellation(&rt, &cfg, Version::V2).unwrap()),
+        ("fleet", run_fleet(&rt, &cfg, Version::V2).unwrap()),
+    ] {
+        for sat in &rep.satellites {
+            let chaos = sat.chaos.as_ref().expect("chaos ledger present when enabled");
+            let shed = sat.power.as_ref().map(|p| p.scenes_shed).unwrap_or(0);
+            assert_eq!(
+                sat.result.scenes as u64 + shed + chaos.lost_to_crash,
+                cfg.constellation.scenes_per_satellite as u64,
+                "{name} sat {}: folded + shed + lost_to_crash must cover every scene",
+                sat.index
+            );
+            let f = sat.federated.as_ref().expect("fed stats present when enabled");
+            assert_eq!(
+                f.rounds_completed + f.rounds_skipped_power + f.rounds_skipped_crash,
+                f.rounds_scheduled,
+                "{name} sat {}: round ledger must reconcile",
+                sat.index
+            );
+            assert!(
+                chaos.heartbeats_suppressed >= chaos.slices_blacked_out,
+                "{name} sat {}: every blacked-out slice also suppressed its heartbeat",
+                sat.index
+            );
+        }
+    }
+}
+
+#[test]
+fn trace_fault_events_match_the_chaos_ledger() {
+    let Some(rt) = rt() else { return };
+    let mut cfg = small_cfg();
+    cfg.constellation.satellites = 4;
+    cfg.constellation.scenes_per_satellite = 4;
+    cfg.power.enabled = true;
+    cfg.chaos = chaos_on();
+    cfg.trace.enabled = true;
+    cfg.trace.ring_cap = 1 << 16;
+
+    for (name, rep) in [
+        ("thread", run_constellation(&rt, &cfg, Version::V2).unwrap()),
+        ("fleet", run_fleet(&rt, &cfg, Version::V2).unwrap()),
+    ] {
+        let trace = rep.trace.as_ref().expect("flight recorder on");
+        assert_eq!(trace.evicted(), 0, "{name}: ring too small — counts would be partial");
+        let count = |kind: SpanKind| trace.records().iter().filter(|r| r.kind == kind).count() as u64;
+        let (mut lost, mut seu, mut dropouts_fired) = (0u64, 0u64, 0u64);
+        for sat in &rep.satellites {
+            let c = sat.chaos.as_ref().expect("ledger present");
+            lost += c.lost_to_crash;
+            seu += c.seu_scenes;
+            // per-slice dropouts are the suppressed heartbeats that did
+            // NOT come from a crash blackout
+            dropouts_fired += c.heartbeats_suppressed - c.slices_blacked_out;
+        }
+        assert_eq!(count(SpanKind::FaultCrash), lost, "{name}: one crash event per lost scene");
+        assert_eq!(count(SpanKind::FaultSeu), seu, "{name}: one SEU event per struck scene");
+        assert_eq!(
+            count(SpanKind::FaultDropout),
+            dropouts_fired,
+            "{name}: one dropout event per suppressed (non-blackout) heartbeat"
+        );
+    }
+}

@@ -81,6 +81,18 @@ fn assert_sat_parity(a: &SatelliteReport, b: &SatelliteReport, energy_bits: bool
     assert_eq!(a.link.bytes_delivered, b.link.bytes_delivered, "{ctx}: link bytes");
     assert_eq!(a.link.busy_s.to_bits(), b.link.busy_s.to_bits(), "{ctx}: link busy_s");
 
+    // ARQ + injected-fault ledgers: all integers, bitwise.  Both are
+    // zero with chaos off, so this also pins default-off inertness.
+    assert_eq!(a.link.frames_corrupted, b.link.frames_corrupted, "{ctx}: frames_corrupted");
+    assert_eq!(a.link.frames_truncated, b.link.frames_truncated, "{ctx}: frames_truncated");
+    assert_eq!(a.link.retries, b.link.retries, "{ctx}: arq retries");
+    assert_eq!(a.link.gave_up, b.link.gave_up, "{ctx}: arq gave_up");
+    assert_eq!(a.link.bytes_rejected, b.link.bytes_rejected, "{ctx}: bytes_rejected");
+    assert_eq!(a.chaos.is_some(), b.chaos.is_some(), "{ctx}: chaos presence");
+    if let (Some(ca), Some(cb)) = (&a.chaos, &b.chaos) {
+        assert_eq!(ca, cb, "{ctx}: chaos fault ledger");
+    }
+
     // timeline geometry, bitwise
     assert_eq!(a.windows, b.windows, "{ctx}: windows");
     assert_eq!(a.contact_s.to_bits(), b.contact_s.to_bits(), "{ctx}: contact_s");
@@ -92,6 +104,7 @@ fn assert_sat_parity(a: &SatelliteReport, b: &SatelliteReport, energy_bits: bool
         assert_eq!(fa.rounds_scheduled, fb.rounds_scheduled, "{ctx}: rounds_scheduled");
         assert_eq!(fa.rounds_completed, fb.rounds_completed, "{ctx}: rounds_completed");
         assert_eq!(fa.rounds_skipped_power, fb.rounds_skipped_power, "{ctx}: rounds_skipped");
+        assert_eq!(fa.rounds_skipped_crash, fb.rounds_skipped_crash, "{ctx}: rounds_crashed");
         assert_eq!(fa.participated, fb.participated, "{ctx}: participation");
     }
 
